@@ -1,0 +1,65 @@
+//! Black-box demo (paper Fig. 5 / App. I.7): a simulated "Claude 3.7"
+//! streaming API delivers reasoning chunks with realistic latency; a local
+//! proxy model computes EAT per chunk and stops the stream when the EMA
+//! variance stabilizes — saving simulated remote generation time without
+//! ever seeing the remote model's logits.
+//!
+//!     cargo run --release --example blackbox_claude -- [--questions 8]
+
+use anyhow::Result;
+
+use eat_serve::blackbox::{run_blackbox, LatencyModel};
+use eat_serve::config::ServeConfig;
+use eat_serve::datasets::Dataset;
+use eat_serve::runtime::Runtime;
+use eat_serve::util::cli::Args;
+use eat_serve::util::stats::mean;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let cfg = {
+        let mut c = ServeConfig::default();
+        // chunk-granularity monitoring sees ~4-8x fewer observations than
+        // per-line monitoring, so the EMA window is scaled accordingly
+        // (alpha 0.5) and the variance threshold loosened
+        c.delta = args.f64_or("delta", 5e-2);
+        c.alpha = args.f64_or("alpha", 0.5);
+        c
+    };
+    let n = args.usize_or("questions", 8);
+    let chunk = args.usize_or("chunk", 6);
+    let ds = Dataset::synth_aime(&rt.cfg.vocab, n, 11);
+
+    println!("remote: simulated streaming reasoning API over the {}-param model", rt.main.total_param_elems());
+    println!("local : {}-param proxy computing EAT per received chunk\n", rt.proxy.total_param_elems());
+
+    let mut saved = 0.0;
+    let mut gaps = Vec::new();
+    let mut computes = Vec::new();
+    for q in &ds.questions {
+        let res = run_blackbox(&rt, &cfg, q, LatencyModel::default(), chunk, 3 + q.id as u64)?;
+        for p in &res.points {
+            gaps.push(p.arrival_gap_ms);
+            computes.push(p.proxy_compute_ms);
+        }
+        println!(
+            "q{:<2} stop@chunk {:<4} tokens {:>3}  saved {:>6.1}s  correct={}  ({})",
+            q.id,
+            res.stop_chunk.map(|c| c.to_string()).unwrap_or("-".into()),
+            res.tokens_at_stop,
+            res.saved_ms / 1e3,
+            res.correct,
+            if q.solvable() { "solvable" } else { "unsolvable" },
+        );
+        saved += res.saved_ms;
+    }
+    println!("\ntotal simulated remote time saved: {:.1}s over {n} questions", saved / 1e3);
+    println!(
+        "overlap check (Fig. 5b): mean chunk inter-arrival {:.1} ms vs mean local EAT compute {:.2} ms -> {:.0}x headroom, zero added wall-clock",
+        mean(&gaps),
+        mean(&computes),
+        mean(&gaps) / mean(&computes).max(1e-9)
+    );
+    Ok(())
+}

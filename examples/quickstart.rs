@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT artifacts, serve one reasoning question with
+//! EAT-based early exiting (Alg. 1), and print the monitored trajectory.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` to have been run once (build-time Python);
+//! after that everything here is pure Rust + PJRT.
+
+use anyhow::Result;
+
+use eat_serve::config::ServeConfig;
+use eat_serve::coordinator::{serve_one, MonitorModel};
+use eat_serve::datasets::Dataset;
+use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
+use eat_serve::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load("artifacts")?;
+    println!(
+        "loaded models: main ({} params), proxy ({} params) on {}",
+        rt.main.total_param_elems(),
+        rt.proxy.total_param_elems(),
+        rt.client.platform()
+    );
+
+    let cfg = ServeConfig::default();
+    let ds = Dataset::synth_math500(&rt.cfg.vocab, 5, 7);
+
+    println!("\n--- EAT early exit (alpha={}, delta={}) ---", cfg.alpha, cfg.delta);
+    for q in &ds.questions {
+        let policy = Box::new(EatPolicy::new(cfg.alpha, cfg.delta, cfg.max_think_tokens));
+        let res = serve_one(&rt, &cfg, MonitorModel::SelfModel, q, policy, 1)?;
+        println!(
+            "q{} (n={}): {} reasoning tokens, exit={:?}, correct={}, answer tail: {}",
+            q.id,
+            q.n_ops(),
+            res.reasoning_tokens,
+            res.exit_reason,
+            res.correct,
+            rt.cfg.vocab.detok(&res.answer_tail)
+        );
+    }
+
+    println!("\n--- fixed token budget baseline (T=96) for comparison ---");
+    for q in &ds.questions {
+        let policy = Box::new(TokenBudgetPolicy::new(96));
+        let res = serve_one(&rt, &cfg, MonitorModel::SelfModel, q, policy, 1)?;
+        println!(
+            "q{}: {} reasoning tokens, exit={:?}, correct={}",
+            q.id, res.reasoning_tokens, res.exit_reason, res.correct
+        );
+    }
+
+    println!("\n--- black-box: proxy model monitors the main model ---");
+    for q in ds.questions.iter().take(2) {
+        let policy = Box::new(EatPolicy::new(cfg.alpha, cfg.delta, cfg.max_think_tokens));
+        let res = serve_one(&rt, &cfg, MonitorModel::Proxy, q, policy, 1)?;
+        println!(
+            "q{}: {} reasoning tokens via proxy EAT, correct={}",
+            q.id, res.reasoning_tokens, res.correct
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! a Poisson workload of reasoning requests served through the continuous
+//! batcher with EAT early exiting, reporting latency / throughput /
+//! accuracy / token usage — and the same workload under the fixed-budget
+//! baseline for comparison.
+//!
+//!     cargo run --release --example serve_batch -- \
+//!         [--requests 48] [--slots 4] [--rate 4.0] [--dataset synth-math500-small]
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end serving.
+
+use anyhow::Result;
+
+use eat_serve::config::ServeConfig;
+use eat_serve::coordinator::{Batcher, MonitorModel};
+use eat_serve::datasets::Dataset;
+use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
+use eat_serve::runtime::Runtime;
+use eat_serve::util::cli::Args;
+use eat_serve::util::rng::Rng;
+
+fn run_workload(
+    rt: &Runtime,
+    cfg: &ServeConfig,
+    dataset: &str,
+    n: usize,
+    slots: usize,
+    rate_per_s: f64,
+    policy: &str,
+) -> Result<()> {
+    let ds = Dataset::by_name(dataset, &rt.cfg.vocab, cfg.seed)?;
+    let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
+    let factory: eat_serve::coordinator::batcher::PolicyFactory = match policy {
+        "eat" => Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget))),
+        "token" => Box::new(move || Box::new(TokenBudgetPolicy::new(budget))),
+        other => anyhow::bail!("unknown policy {other}"),
+    };
+    let mut batcher = Batcher::new(rt, cfg.clone(), MonitorModel::SelfModel, slots, factory);
+
+    // Poisson arrivals: submit requests as their (simulated) arrival time
+    // passes, interleaved with scheduler ticks — open-loop load.
+    let mut rng = Rng::new(cfg.seed ^ 0xA221);
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut t = 0.0;
+    for _ in 0..n {
+        t += rng.exponential(rate_per_s);
+        arrivals.push(t);
+    }
+    let started = std::time::Instant::now();
+    let mut next = 0usize;
+    loop {
+        let now = started.elapsed().as_secs_f64();
+        while next < n && arrivals[next] <= now {
+            batcher.submit(ds.questions[next % ds.questions.len()].clone());
+            next += 1;
+        }
+        let advanced = batcher.tick()?;
+        if next >= n && batcher.pending() == 0 && batcher.active_count() == 0 {
+            break;
+        }
+        if advanced == 0 && next < n {
+            // idle until the next arrival
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    println!("=== policy={policy} dataset={dataset} slots={slots} rate={rate_per_s}/s ===");
+    println!("{}", batcher.metrics.report());
+    println!("kv slot peak       {} / {}", batcher.kv_peak(), slots);
+    let mean_tokens = batcher.metrics.reasoning_tokens as f64
+        / batcher.metrics.completed.max(1) as f64;
+    println!("mean reasoning tok {mean_tokens:.1}\n");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let mut cfg = ServeConfig::default();
+    cfg.alpha = args.f64_or("alpha", cfg.alpha);
+    cfg.delta = args.f64_or("delta", cfg.delta);
+    cfg.seed = args.u64_or("seed", 0);
+
+    let dataset = args.str_or("dataset", "synth-math500-small");
+    let n = args.usize_or("requests", 48);
+    let slots = args.usize_or("slots", 4);
+    let rate = args.f64_or("rate", 4.0);
+
+    run_workload(&rt, &cfg, dataset, n, slots, rate, "eat")?;
+    run_workload(&rt, &cfg, dataset, n, slots, rate, "token")?;
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Threshold-sweep demo (paper Fig. 3 in miniature): replay recorded
+//! traces offline across delta / T grids and print the efficiency curves +
+//! headline token saving at iso-accuracy.
+//!
+//!     cargo run --release --example sweep_efficiency -- \
+//!         [--traces results/traces/synth-math500.json]
+//!
+//! Generate traces first: `repro trace --dataset synth-math500`.
+
+use anyhow::Result;
+
+use eat_serve::eval::sweep::{default_deltas, default_token_budgets, sweep_eat, sweep_token};
+use eat_serve::eval::{Signal, TraceSet};
+use eat_serve::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let path = args.str_or("traces", "results/traces/synth-math500.json");
+    let ts = TraceSet::load(std::path::Path::new(path))?;
+    println!("loaded {} traces from {path}\n", ts.traces.len());
+
+    let t_max = args.usize_or("budget", 96);
+    let alpha = args.f64_or("alpha", 0.2);
+    let eat = sweep_eat(&ts, Signal::MainPrefixed, alpha, &default_deltas(), t_max, false, "eat");
+    let proxy = sweep_eat(&ts, Signal::Proxy, alpha, &default_deltas(), t_max, false, "eat-proxy");
+    let tok = sweep_token(&ts, &default_token_budgets(t_max), "token");
+
+    println!("{:<12} {:>12} {:>12} {:>10}", "policy", "threshold", "tokens", "pass@1");
+    for c in [&tok, &eat, &proxy] {
+        for p in &c.points {
+            println!(
+                "{:<12} {:>12.3e} {:>12.0} {:>10.4}",
+                c.label, p.threshold, p.total_tokens, p.agg_pass1
+            );
+        }
+    }
+    println!("\nAUC: eat={:.4} eat-proxy={:.4} token={:.4}", eat.auc(), proxy.auc(), tok.auc());
+
+    let best_tok = tok.points.iter().map(|p| p.agg_pass1).fold(0.0, f64::max);
+    let target = 0.98 * best_tok;
+    if let (Some(te), Some(tt)) = (eat.tokens_at_accuracy(target), tok.tokens_at_accuracy(target)) {
+        println!(
+            "iso-accuracy {:.3}: EAT uses {:.0} tokens vs {:.0} for the fixed budget ({:.1}% saving; paper: 12-22%)",
+            target, te, tt, 100.0 * (1.0 - te / tt)
+        );
+    }
+    Ok(())
+}

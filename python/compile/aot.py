@@ -1,0 +1,169 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* + export weights.
+
+Python runs exactly once (``make artifacts``); afterwards the Rust binary is
+self-contained. Interchange format is HLO text — NOT ``.serialize()`` — the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (under artifacts/):
+  prefill_{m}.hlo.txt  decode_{m}.hlo.txt  probe_{m}.hlo.txt     m in {main,proxy}
+  decode_batch_main.hlo.txt
+  weights_{m}.bin      — concatenated little-endian f32 in manifest order
+  manifest_{m}.json    — [{name, shape, offset, size}] (element offsets)
+  config.json          — model dims + artifact names + entry-point arg specs
+  vocab.json           — token-id layout (single source of truth for Rust)
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--models main,proxy]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen as D
+from . import vocab as V
+from .model import (ModelConfig, decode_batch, decode_step, main_config,
+                    param_specs, prefill, probe, proxy_config)
+from .train import load_checkpoint
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(cfg: ModelConfig, out_dir: str, with_batch: bool) -> dict:
+    """Lower all entry points of one model; returns its config.json stanza."""
+    nparams = len(param_specs(cfg))
+    pspecs = [_spec(shape) for _, shape in param_specs(cfg)]
+    cache = _spec((cfg.n_layer, cfg.n_head, cfg.seq_len, cfg.d_head))
+    i32 = jnp.int32
+
+    def prefill_fn(*args):
+        flat, toks, n = args[:nparams], args[nparams], args[nparams + 1]
+        p = {name: x for (name, _), x in zip(param_specs(cfg), flat)}
+        return prefill(cfg, p, toks, n)
+
+    def decode_fn(*args):
+        flat = args[:nparams]
+        kc, vc, pos, tok = args[nparams:]
+        p = {name: x for (name, _), x in zip(param_specs(cfg), flat)}
+        return decode_step(cfg, p, kc, vc, pos, tok)
+
+    def probe_fn(*args):
+        flat = args[:nparams]
+        kc, vc, pos, suffix, slen = args[nparams:]
+        p = {name: x for (name, _), x in zip(param_specs(cfg), flat)}
+        return probe(cfg, p, kc, vc, pos, suffix, slen)
+
+    def decode_batch_fn(*args):
+        flat = args[:nparams]
+        kc, vc, pos, toks = args[nparams:]
+        p = {name: x for (name, _), x in zip(param_specs(cfg), flat)}
+        return decode_batch(cfg, p, kc, vc, pos, toks)
+
+    entries = {
+        "prefill": (prefill_fn,
+                    pspecs + [_spec((cfg.seq_len,), i32), _spec((), i32)]),
+        "decode": (decode_fn,
+                   pspecs + [cache, cache, _spec((), i32), _spec((), i32)]),
+        "probe": (probe_fn,
+                  pspecs + [cache, cache, _spec((), i32),
+                            _spec((cfg.probe_len,), i32), _spec((), i32)]),
+    }
+    if with_batch:
+        bcache = _spec((cfg.batch, cfg.n_layer, cfg.n_head, cfg.seq_len,
+                        cfg.d_head))
+        entries["decode_batch"] = (
+            decode_batch_fn,
+            pspecs + [bcache, bcache, _spec((cfg.batch,), i32),
+                      _spec((cfg.batch,), i32)])
+
+    files = {}
+    for name, (fn, specs) in entries.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{cfg.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  {fname}: {len(text)} chars")
+        files[name] = fname
+
+    return {
+        "name": cfg.name,
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_head": cfg.n_head,
+        "n_layer": cfg.n_layer, "d_ff": cfg.d_ff, "d_head": cfg.d_head,
+        "seq_len": cfg.seq_len, "probe_len": cfg.probe_len,
+        "batch": cfg.batch,
+        "n_params": nparams,
+        "weights": f"weights_{cfg.name}.bin",
+        "manifest": f"manifest_{cfg.name}.json",
+        "hlo": files,
+    }
+
+
+def export_weights(cfg: ModelConfig, params: dict, out_dir: str) -> None:
+    manifest, offset = [], 0
+    chunks = []
+    for name, shape in param_specs(cfg):
+        arr = np.asarray(params[name], np.float32).reshape(-1)
+        manifest.append({"name": name, "shape": list(shape),
+                         "offset": offset, "size": int(arr.size)})
+        chunks.append(arr)
+        offset += arr.size
+    blob = np.concatenate(chunks)
+    blob.tofile(os.path.join(out_dir, f"weights_{cfg.name}.bin"))
+    with open(os.path.join(out_dir, f"manifest_{cfg.name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  weights_{cfg.name}.bin: {blob.size} f32 ({blob.nbytes} bytes)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="main,proxy")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfgs = {
+        "main": main_config(V.VOCAB, D.SEQ_LEN),
+        "proxy": proxy_config(V.VOCAB, D.SEQ_LEN),
+    }
+    model_stanzas = {}
+    for m in args.models.split(","):
+        cfg = cfgs[m]
+        print(f"[{m}] lowering...")
+        model_stanzas[m] = lower_model(cfg, args.out_dir,
+                                       with_batch=(m == "main"))
+        ckpt = os.path.join(args.out_dir, f"ckpt_{m}.npz")
+        if not os.path.exists(ckpt):
+            raise SystemExit(
+                f"missing {ckpt}: run `python -m compile.train` first "
+                f"(make artifacts does this automatically)")
+        params = load_checkpoint(cfg, ckpt)
+        export_weights(cfg, params, args.out_dir)
+
+    with open(os.path.join(args.out_dir, "config.json"), "w") as f:
+        json.dump({"models": model_stanzas, "seq_len": D.SEQ_LEN}, f,
+                  indent=1)
+    with open(os.path.join(args.out_dir, "vocab.json"), "w") as f:
+        json.dump(V.vocab_json(), f, indent=1)
+    print("wrote config.json, vocab.json")
+
+
+if __name__ == "__main__":
+    main()

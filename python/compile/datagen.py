@@ -1,0 +1,176 @@
+"""Synthetic chain-sum reasoning corpus generator (training side).
+
+The teacher writes traces in the reasoning-model format of the paper
+(Eq. 4). Compute lines accumulate the running sum; verification lines
+re-state earlier partial sums and form the *overthinking* tail that the
+trained model then imitates at inference time — giving the Rust coordinator
+real overthinking to cut with EAT.
+
+The Rust eval harness generates only *questions* (datasets/chainsum.rs);
+reasoning at eval time is produced by the trained model itself.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import vocab as V
+
+SEQ_LEN = 128  # fixed training/serving sequence length (positions 0..127)
+
+
+def question_tokens(ops: list[int], corrupt_at: int | None = None) -> list[int]:
+    """``BOS Q a_1 .. a_n SEP`` — the prompt shared by train and serve."""
+    toks = [V.BOS, V.Q]
+    for i, a in enumerate(ops):
+        toks.append(V.UNK if corrupt_at == i else V.num(a))
+    toks.append(V.SEP)
+    return toks
+
+
+def compute_line(i: int, partial: int, corrupted: bool) -> list[int]:
+    """Reasoning line ``i p_i NL`` (``i UNK NL`` once corruption is hit)."""
+    return [V.num(i), V.UNK if corrupted else V.num(partial), V.NL]
+
+
+def verify_line(j: int, total: int, corrupted: bool) -> list[int]:
+    """Overthinking line ``V j total NL``: the model re-confirms its final
+    answer (like an R1-style "wait, let me double-check... yes, total")
+    while citing some step index j. The restated value is always the
+    *current total* — matching how reasoning models re-verify a conclusion
+    rather than a random intermediate."""
+    return [V.VER, V.num(j), V.UNK if corrupted else V.num(total), V.NL]
+
+
+def answer_tail(ans: int | None, rng: np.random.Generator) -> list[int]:
+    """``</think> FINAL ANS v EOS``; corrupted questions get a random guess."""
+    v = int(rng.integers(0, V.MOD)) if ans is None else ans % V.MOD
+    return [V.ETHINK, V.FINAL, V.ANS, V.num(v), V.EOS]
+
+
+def make_trace(
+    rng: np.random.Generator,
+    n_min: int = 2,
+    n_max: int = 10,
+    p_corrupt: float = 0.08,
+    p_early: float = 0.4,
+    max_verify_factor: float = 2.0,
+) -> list[int]:
+    """One full teacher trace: question + reasoning + answer, <= SEQ_LEN.
+
+    With probability ``p_early`` the trace is an *early-stop* trace: the
+    reasoning is truncated at a random compute line j < n and the answer is
+    still the TRUE total. This is what makes the trained model *calibrated*
+    under forced truncation — the supervision target after a truncated chain
+    is the genuine final sum (which requires summing the n-j remaining
+    operands in a single step, a task whose single-shot difficulty grows
+    with n-j). Without these traces the model would learn the degenerate
+    "copy the last partial sum" rule and be confidently wrong at every
+    truncation point, destroying the paper's calibration premise (App. C).
+    """
+    n = int(rng.integers(n_min, n_max + 1))
+    ops = rng.integers(0, V.MOD, size=n).tolist()
+    corrupt_at = int(rng.integers(0, n)) if rng.random() < p_corrupt else None
+    total = sum(ops) % V.MOD
+
+    toks = question_tokens(ops, corrupt_at)
+    toks.append(V.THINK)
+
+    if corrupt_at is None and rng.random() < p_early:
+        # Early-stop trace: j compute lines, then the true answer. The
+        # remaining-op count r = n - j is drawn skewed toward SMALL values
+        # so the model learns partial lookahead (answering with r ops left
+        # is an r-term one-shot sum, learnable for small r). This is what
+        # produces the paper's *gradual* EAT decline along the chain —
+        # uncertainty shrinks as fewer operands remain — rather than a
+        # flat-uniform plateau followed by a cliff.
+        roll = rng.random()
+        if roll < 0.35:
+            r = 1
+        elif roll < 0.6:
+            r = 2
+        elif roll < 0.8:
+            r = 3
+        else:
+            r = int(rng.integers(1, n + 1))
+        j = max(n - r, 0)
+        s = 0
+        for i in range(j):
+            s = (s + ops[i]) % V.MOD
+            toks.extend(compute_line(i + 1, s, False))
+        toks.extend(answer_tail(total, rng))
+        assert len(toks) <= SEQ_LEN, f"trace too long: {len(toks)}"
+        return toks
+
+    partials, s, corrupted = [], 0, False
+    for i, a in enumerate(ops):
+        if corrupt_at is not None and i >= corrupt_at:
+            corrupted = True
+        s = (s + a) % V.MOD
+        partials.append(None if corrupted else s)
+        toks.extend(compute_line(i + 1, 0 if corrupted else s, corrupted))
+
+    # Overthinking tail: re-verify random prefix sums. Length varies so that
+    # the corpus covers all positions up to SEQ_LEN (late positional
+    # embeddings must be trained) and so EAT has a flat region to detect.
+    budget = SEQ_LEN - len(toks) - 5
+    n_verify = int(rng.integers(0, int(max_verify_factor * n) + 1))
+    if rng.random() < 0.25:  # a quarter of traces fill (train late positions)
+        n_verify = budget // 4
+    for _ in range(min(n_verify, budget // 4)):
+        j = int(rng.integers(1, n + 1))
+        toks.extend(verify_line(j, 0 if corrupted else s, corrupted))
+
+    ans = None if corrupted else s
+    toks.extend(answer_tail(ans, rng))
+    assert len(toks) <= SEQ_LEN, f"trace too long: {len(toks)}"
+    return toks
+
+
+def make_tool_trace(rng: np.random.Generator) -> list[int]:
+    """Tool-calling analogue (App. I.2): answer is copyable from the question
+    (last operand), so reasoning is unnecessary and Pass@1 is high from the
+    start — reproducing the paper's 'reasoning not needed here' finding."""
+    n = int(rng.integers(2, 7))
+    ops = rng.integers(0, V.MOD, size=n).tolist()
+    toks = [V.BOS, V.TOOL]
+    for a in ops:
+        toks.append(V.num(a))
+    toks.append(V.SEP)
+    toks.append(V.THINK)
+    n_lines = int(rng.integers(0, 4))
+    for i in range(n_lines):
+        toks.extend([V.num(i + 1), V.num(ops[-1]), V.NL])
+    toks.extend([V.ETHINK, V.FINAL, V.LBRACK, V.ANS, V.num(ops[-1]), V.EOS])
+    assert len(toks) <= SEQ_LEN
+    return toks
+
+
+def make_batch(
+    rng: np.random.Generator,
+    batch: int,
+    p_tool: float = 0.05,
+    **kw,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Padded (tokens, loss_mask) arrays of shape [batch, SEQ_LEN].
+
+    loss_mask is 1.0 on positions whose *target* (next token) is a real
+    token of the trace, 0.0 on padding.
+    """
+    xs = np.full((batch, SEQ_LEN), V.PAD, dtype=np.int32)
+    mask = np.zeros((batch, SEQ_LEN), dtype=np.float32)
+    for b in range(batch):
+        t = (make_tool_trace(rng) if rng.random() < p_tool
+             else make_trace(rng, **kw))
+        xs[b, : len(t)] = t
+        # position i predicts token i+1; valid while i+1 < len(t)
+        mask[b, : len(t) - 1] = 1.0
+        # up-weight the answer-value prediction (the single token the whole
+        # task is about) so answer accuracy converges faster
+        ans_pos = t.index(V.ANS)
+        mask[b, ans_pos] = 4.0
+    return xs, mask
+
+
+def exact_answer(ops: list[int]) -> int:
+    return sum(ops) % V.MOD

@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#  - entropy.entropy          : fused online softmax-entropy (EAT, Eq. 5)
+#  - attention.decode_attention: single-query flash decode attention
+# Pure-jnp oracles live in ref.py; see python/tests/ for the sweeps.
+from .attention import decode_attention  # noqa: F401
+from .entropy import entropy  # noqa: F401
+from .ref import decode_attention_ref, entropy_ref  # noqa: F401

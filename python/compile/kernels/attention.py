@@ -1,0 +1,102 @@
+"""Pallas kernel: single-query (decode-step) flash attention over a KV cache.
+
+The decode hot-spot of the serving stack: one query vector per head attends
+to all cached positions < valid_len.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA flash-decode design
+splits the KV sequence across threadblocks with shared-memory staging; here
+the HBM->VMEM schedule is expressed with a grid over (head, seq-block).
+Each grid step loads one [blk_s, Dh] KV tile into VMEM, computes q.K^T on
+MXU-friendly tiles, and merges into online-softmax accumulators (m, l,
+acc[Dh]) carried in the per-head output row plus a (1, 2) stats output —
+the same functional accumulation pattern as the entropy kernel, so the
+kernel needs no scratch memory and stays interpret-mode portable.
+
+Length masking (positions >= valid_len) is computed from the grid index and
+an iota inside the tile; valid_len arrives as a (1,) i32 operand.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = -1e30
+
+
+def _decode_attn_kernel(plen_ref, q_ref, k_ref, v_ref, o_ref, stats_ref,
+                        *, blk_s: int, dh: int):
+    """Grid = (H, nblk_s); seq-blocks iterate fastest (row-major)."""
+    j = pl.program_id(1)
+
+    q = q_ref[...].reshape(dh).astype(jnp.float32)          # [Dh]
+    k = k_ref[...].reshape(blk_s, dh).astype(jnp.float32)   # [blk, Dh]
+    v = v_ref[...].reshape(blk_s, dh).astype(jnp.float32)   # [blk, Dh]
+    plen = plen_ref[0]
+
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+    scores = (k @ q) * scale                                  # [blk]
+    pos = j * blk_s + jax.lax.iota(jnp.int32, blk_s)
+    scores = jnp.where(pos < plen, scores, NEG_BIG)
+
+    m_b = jnp.max(scores)
+    w = jnp.exp(scores - m_b)                                 # [blk]
+    l_b = jnp.sum(w)
+    acc_b = w @ v                                             # [Dh]
+
+    @pl.when(j == 0)
+    def _init():
+        stats_ref[0, 0] = m_b
+        stats_ref[0, 1] = l_b
+        o_ref[...] = acc_b.reshape(o_ref.shape)
+
+    @pl.when(j > 0)
+    def _merge():
+        m, l = stats_ref[0, 0], stats_ref[0, 1]
+        m_new = jnp.maximum(m, m_b)
+        c_old = jnp.exp(m - m_new)
+        c_b = jnp.exp(m_b - m_new)
+        stats_ref[0, 0] = m_new
+        stats_ref[0, 1] = l * c_old + l_b * c_b
+        o_ref[...] = o_ref[...] * c_old + (acc_b * c_b).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def decode_attention(
+    q: jnp.ndarray,          # [H, Dh]
+    k: jnp.ndarray,          # [H, S, Dh]
+    v: jnp.ndarray,          # [H, S, Dh]
+    valid_len: jnp.ndarray,  # scalar i32
+    block: int = 64,
+) -> jnp.ndarray:            # [H, Dh]
+    """Single-query attention; positions >= valid_len are masked out."""
+    h, s, dh = k.shape
+    blk_s = min(block, s)
+    assert s % blk_s == 0, f"seq {s} not divisible by block {blk_s}"
+    nblk = s // blk_s
+    plen = jnp.asarray(valid_len, jnp.int32).reshape(1)
+
+    out, stats = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, blk_s=blk_s, dh=dh),
+        grid=(h, nblk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),            # plen
+            pl.BlockSpec((1, dh), lambda i, j: (i, 0)),       # q
+            pl.BlockSpec((1, blk_s, dh), lambda i, j: (i, j, 0)),  # k
+            pl.BlockSpec((1, blk_s, dh), lambda i, j: (i, j, 0)),  # v
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dh), lambda i, j: (i, 0)),       # acc rows
+            pl.BlockSpec((1, 2), lambda i, j: (i, 0)),        # (m, l)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, 2), jnp.float32),
+        ],
+        interpret=True,
+    )(plen, q.astype(jnp.float32), k, v)
+
+    return out / stats[:, 1:2]

@@ -1,0 +1,93 @@
+"""Pallas kernel: fused online softmax-entropy over the vocabulary axis.
+
+This is the paper's signature computation — EAT itself (Eqs. 2 and 5):
+``H(softmax(z))`` for a logits vector ``z`` of vocabulary size V.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): instead of materializing
+``softmax(z)`` in HBM and reducing (two passes over V), the kernel streams
+VMEM-sized vocab tiles through a single pass, carrying the flash-style
+online accumulator (m, Z, S):
+
+    m = running max(z)
+    Z = sum exp(z - m)
+    S = sum (z - m) * exp(z - m)
+
+merged across tiles with the standard rescaling identities, so that at the
+end  H = log(Z) - S / Z.  The accumulator lives in the (1, 3) output block
+that every grid step maps to — the canonical Pallas accumulation pattern.
+
+Compiled with interpret=True: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the BlockSpec structure *is* the TPU schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = -1e30  # padding fill; finite so (z-m)*exp(z-m) stays NaN-free
+
+
+def _entropy_kernel(z_ref, acc_ref):
+    """One vocab tile: merge this tile's (m, Z, S) into the accumulator."""
+    i = pl.program_id(0)
+
+    z = z_ref[...].astype(jnp.float32)  # [1, blk]
+    m_b = jnp.max(z)
+    ez = jnp.exp(z - m_b)
+    z_b = jnp.sum(ez)
+    s_b = jnp.sum((z - m_b) * ez)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0, 0] = m_b
+        acc_ref[0, 1] = z_b
+        acc_ref[0, 2] = s_b
+
+    @pl.when(i > 0)
+    def _merge():
+        m, zz, ss = acc_ref[0, 0], acc_ref[0, 1], acc_ref[0, 2]
+        m_new = jnp.maximum(m, m_b)
+        c_old = jnp.exp(m - m_new)
+        c_b = jnp.exp(m_b - m_new)
+        acc_ref[0, 0] = m_new
+        acc_ref[0, 1] = zz * c_old + z_b * c_b
+        acc_ref[0, 2] = (ss + (m - m_new) * zz) * c_old + (
+            s_b + (m_b - m_new) * z_b
+        ) * c_b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def entropy(logits: jnp.ndarray, block: int = 128) -> jnp.ndarray:
+    """Entropy (nats) of softmax(logits) along the last axis.
+
+    Accepts [V] or any leading batch shape [..., V]; batch dims are handled
+    by vmap over the single-vector kernel.
+    """
+    if logits.ndim > 1:
+        flat = logits.reshape((-1, logits.shape[-1]))
+        out = jax.vmap(lambda z: entropy(z, block=block))(flat)
+        return out.reshape(logits.shape[:-1])
+
+    (v,) = logits.shape
+    blk = min(block, max(v, 8))
+    pad = (-v) % blk
+    z = jnp.pad(logits.astype(jnp.float32), (0, pad),
+                constant_values=NEG_BIG)
+    vp = v + pad
+    nblk = vp // blk
+
+    acc = pl.pallas_call(
+        _entropy_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
+        interpret=True,
+    )(z.reshape(1, vp))
+
+    zz, ss = acc[0, 1], acc[0, 2]
+    return jnp.log(zz) - ss / zz

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest + hypothesis sweep shapes and
+dtypes and assert_allclose the Pallas kernels (interpret=True) against these.
+They are also used directly by the *training* forward pass, where full-batch
+jnp einsum code is what XLA fuses best on CPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def entropy_ref(logits: jnp.ndarray) -> jnp.ndarray:
+    """Shannon entropy (nats) of softmax(logits) along the last axis.
+
+    Numerically stable: H = logsumexp(z) - sum(softmax(z) * z).
+    Works for any leading batch shape.
+    """
+    z = logits.astype(jnp.float32)
+    m = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - m)
+    Z = jnp.sum(ez, axis=-1)
+    S = jnp.sum((z - m) * ez, axis=-1)
+    return jnp.log(Z) - S / Z
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,          # [H, Dh]
+    k: jnp.ndarray,          # [H, S, Dh]
+    v: jnp.ndarray,          # [H, S, Dh]
+    valid_len: jnp.ndarray,  # scalar i32: attend to positions < valid_len
+) -> jnp.ndarray:            # [H, Dh]
+    """Single-query attention over a KV cache with a length mask."""
+    H, S, Dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(Dh, jnp.float32))
+    scores = jnp.einsum("hd,hsd->hs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] < valid_len
+    scores = jnp.where(mask, scores, -1e30)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("hs,hsd->hd", w, v.astype(jnp.float32))

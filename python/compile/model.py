@@ -1,0 +1,245 @@
+"""L2: the reasoning-model compute graph in JAX.
+
+A decoder-only transformer (pre-RMSNorm, MHA, GELU MLP, learned positional
+embeddings, untied LM head) with four jitted entry points that aot.py lowers
+to HLO text for the Rust coordinator:
+
+  * prefill       — full-prompt pass, builds the KV cache, returns logits
+                    at the last prompt position
+  * decode        — one token step against the cache (Pallas decode
+                    attention kernel on the hot path)
+  * decode_batch  — the same, vmapped over B sequences (continuous batching)
+  * probe         — the paper's EAT probe: virtually append a short suffix
+                    (``</think>`` [+ prefix string], Eq. 12/13) *without*
+                    committing it to the cache and return the entropy of the
+                    single next token (Pallas entropy kernel, Eq. 5)
+
+The training forward (``forward_all``) teacher-forces a full sequence with
+plain einsum attention (what XLA fuses best on CPU); consistency between it
+and the prefill/decode path is asserted in python/tests/test_model.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode_attention, entropy
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_head: int
+    n_layer: int
+    d_ff: int
+    seq_len: int
+    probe_len: int = 4   # PK: max suffix slots of the EAT probe
+    batch: int = 4       # B: decode_batch width
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+def main_config(vocab: int, seq_len: int) -> ModelConfig:
+    """The 'reasoning model' theta (stands in for DeepSeek-R1-Qwen3-8B)."""
+    return ModelConfig("main", vocab, d_model=64, n_head=2, n_layer=2,
+                       d_ff=256, seq_len=seq_len)
+
+
+def proxy_config(vocab: int, seq_len: int) -> ModelConfig:
+    """The small proxy phi for black-box EAT (stands in for R1-Qwen-1.5B)."""
+    return ModelConfig("proxy", vocab, d_model=32, n_head=2, n_layer=1,
+                       d_ff=128, seq_len=seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Parameters: canonical flat ordering shared with the Rust weights loader.
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list; the manifest and HLO argument order."""
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs = [("tok_emb", (v, d)), ("pos_emb", (s, d))]
+    for l in range(cfg.n_layer):
+        p = f"layer{l}."
+        specs += [
+            (p + "ln1", (d,)),
+            (p + "wq", (d, d)), (p + "wk", (d, d)),
+            (p + "wv", (d, d)), (p + "wo", (d, d)),
+            (p + "ln2", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    specs += [("ln_f", (d,)), ("head", (d, v))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("b1", "b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            std = fan_in ** -0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict) -> list[jnp.ndarray]:
+    return [params[name] for name, _ in param_specs(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat: list) -> dict:
+    return {name: x for (name, _), x in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _mlp(p: dict, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(x @ p[prefix + "w1"] + p[prefix + "b1"])
+    return h @ p[prefix + "w2"] + p[prefix + "b2"]
+
+
+def _heads(cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """[..., D] -> [..., H, Dh]"""
+    return x.reshape(*x.shape[:-1], cfg.n_head, cfg.d_head)
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill forward (full sequence, einsum attention)
+# ---------------------------------------------------------------------------
+
+
+def forward_all(cfg: ModelConfig, params: dict, tokens: jnp.ndarray):
+    """Teacher-forced forward. tokens [S] -> (logits [S, V], kc, vc).
+
+    Returns the per-layer K/V so prefill can reuse this single pass to
+    populate the cache: kc/vc have shape [L, H, S, Dh].
+    """
+    s = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s]
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scale = cfg.d_head ** -0.5
+    kcs, vcs = [], []
+    for l in range(cfg.n_layer):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = _heads(cfg, h @ params[p + "wq"])  # [S, H, Dh]
+        k = _heads(cfg, h @ params[p + "wk"])
+        v = _heads(cfg, h @ params[p + "wv"])
+        kcs.append(k.transpose(1, 0, 2))       # [H, S, Dh]
+        vcs.append(v.transpose(1, 0, 2))
+        scores = jnp.einsum("ihd,jhd->hij", q, k) * scale
+        scores = jnp.where(causal[None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("hij,jhd->ihd", w, v).reshape(s, cfg.d_model)
+        x = x + att @ params[p + "wo"]
+        x = x + _mlp(params, p, rmsnorm(x, params[p + "ln2"]))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"]
+    return logits, jnp.stack(kcs), jnp.stack(vcs)
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            n: jnp.ndarray):
+    """tokens [S] padded prompt, n = true length.
+
+    Returns (logits at position n-1 [V], kcache, vcache [L, H, S, Dh]).
+    Cache entries past n-1 are garbage; the decode loop overwrites position
+    p before any later position attends to it, so this is safe.
+    """
+    logits, kc, vc = forward_all(cfg, params, tokens)
+    last = jnp.take(logits, n - 1, axis=0)
+    return last, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Decode step (Pallas attention on the hot path)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params: dict, kc: jnp.ndarray,
+                vc: jnp.ndarray, pos: jnp.ndarray, token: jnp.ndarray):
+    """One incremental step: write K/V at `pos`, attend to cache[: pos+1].
+
+    kc, vc: [L, H, S, Dh]; pos, token: i32 scalars.
+    Returns (logits [V], kc', vc').
+    """
+    x = params["tok_emb"][token] + jnp.take(params["pos_emb"], pos, axis=0)
+    for l in range(cfg.n_layer):
+        p = f"layer{l}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = _heads(cfg, h @ params[p + "wq"])        # [H, Dh]
+        k = _heads(cfg, h @ params[p + "wk"])
+        v = _heads(cfg, h @ params[p + "wv"])
+        # k, v are [H, Dh]; the cache slot at (l, :, pos, :) is [1, H, 1, Dh]
+        kc = jax.lax.dynamic_update_slice(
+            kc, k.reshape(1, cfg.n_head, 1, cfg.d_head), (l, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.reshape(1, cfg.n_head, 1, cfg.d_head), (l, 0, pos, 0))
+        att = decode_attention(q, kc[l], vc[l], pos + 1)     # [H, Dh]
+        x = x + att.reshape(cfg.d_model) @ params[p + "wo"]
+        x = x + _mlp(params, p, rmsnorm(x, params[p + "ln2"]))
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["head"], kc, vc
+
+
+def decode_batch(cfg: ModelConfig, params: dict, kc: jnp.ndarray,
+                 vc: jnp.ndarray, pos: jnp.ndarray, tokens: jnp.ndarray):
+    """Continuous-batching step. kc/vc [B, L, H, S, Dh]; pos/tokens [B]."""
+    step = lambda kcb, vcb, p, t: decode_step(cfg, params, kcb, vcb, p, t)
+    return jax.vmap(step)(kc, vc, pos, tokens)
+
+
+# ---------------------------------------------------------------------------
+# EAT probe (Eq. 5 / Alg. 1 line 6)
+# ---------------------------------------------------------------------------
+
+
+def probe(cfg: ModelConfig, params: dict, kc: jnp.ndarray, vc: jnp.ndarray,
+          pos: jnp.ndarray, suffix: jnp.ndarray, slen: jnp.ndarray):
+    """Entropy of the next-token distribution after virtually appending
+    ``suffix[:slen]`` at position ``pos`` — without mutating the caller's
+    cache (the updated cache is simply not returned).
+
+    suffix: [PK] i32 (padded); slen: i32 in [1, PK].
+    Returns (eat f32 scalar, logits [V] after the last active suffix token).
+    """
+    pk = cfg.probe_len
+
+    def body(carry, t):
+        kc, vc, logits = carry
+        tok = suffix[t]
+        lg, kc2, vc2 = decode_step(cfg, params, kc, vc, pos + t, tok)
+        active = t < slen
+        kc = jnp.where(active, kc2, kc)
+        vc = jnp.where(active, vc2, vc)
+        logits = jnp.where(t == slen - 1, lg, logits)
+        return (kc, vc, logits), None
+
+    init = (kc, vc, jnp.zeros((cfg.vocab,), jnp.float32))
+    (kc, vc, logits), _ = jax.lax.scan(body, init, jnp.arange(pk))
+    return entropy(logits), logits

@@ -1,0 +1,164 @@
+"""Trainer for the synthetic reasoning models (build-time only).
+
+Hand-rolled Adam (optax is not available offline) over the causal-LM
+cross-entropy of teacher traces from datagen.py. Trains both the main
+reasoning model and the small proxy, then writes float32 checkpoints to
+``artifacts/ckpt_{main,proxy}.npz`` which aot.py bakes into the serving
+artifacts.
+
+Usage:  python -m compile.train [--steps N] [--model main|proxy|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen as D
+from . import vocab as V
+from .model import (ModelConfig, forward_all, init_params, main_config,
+                    param_specs, proxy_config)
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def sequence_loss(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy over masked positions.
+
+    tokens [B, S] i32; mask [B, S] f32 (1.0 where position i predicts a
+    real target at i+1).
+    """
+    def one(toks):
+        logits, _, _ = forward_all(cfg, params, toks)
+        return logits
+
+    logits = jax.vmap(one)(tokens)                      # [B, S, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)  # predict t+1
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, :-1]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: dict) -> dict:
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+@partial(jax.jit, static_argnums=(0,))
+def adam_step(cfg: ModelConfig, params: dict, opt: dict, tokens, mask,
+              lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+              eps: float = 1e-8):
+    loss, grads = jax.value_and_grad(
+        lambda p: sequence_loss(cfg, p, tokens, mask))(params)
+    t = opt["t"] + 1.0
+    m = jax.tree_util.tree_map(
+        lambda mm, g: b1 * mm + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1.0 - b1 ** t)
+    vhat_scale = 1.0 / (1.0 - b2 ** t)
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm * mhat_scale) /
+        (jnp.sqrt(vv * vhat_scale) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}, loss
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: held-out answer accuracy under teacher forcing
+# ---------------------------------------------------------------------------
+
+
+def eval_answer_accuracy(cfg: ModelConfig, params: dict,
+                         rng: np.random.Generator, n_eval: int = 64) -> float:
+    """Fraction of held-out full traces whose answer token is argmax-correct
+    at the position right after ANS (the single-token answer)."""
+    toks, _ = D.make_batch(rng, n_eval, p_tool=0.0, p_corrupt=0.0,
+                           p_early=0.0)
+    logits = jax.vmap(lambda t: forward_all(cfg, params, t)[0])(
+        jnp.asarray(toks))
+    correct = 0
+    for b in range(n_eval):
+        row = toks[b]
+        ans_pos = int(np.where(row == V.ANS)[0][0])  # predicts row[ans_pos+1]
+        pred = int(jnp.argmax(logits[b, ans_pos]))
+        correct += int(pred == int(row[ans_pos + 1]))
+    return correct / n_eval
+
+
+# ---------------------------------------------------------------------------
+# Training driver
+# ---------------------------------------------------------------------------
+
+
+def train_model(cfg: ModelConfig, steps: int, batch: int, seed: int,
+                lr: float, log_every: int = 50) -> dict:
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        toks, mask = D.make_batch(rng, batch)
+        params, opt, loss = adam_step(cfg, params, opt,
+                                      jnp.asarray(toks), jnp.asarray(mask),
+                                      lr=lr)
+        if step % log_every == 0 or step == 1:
+            acc = eval_answer_accuracy(cfg, params,
+                                       np.random.default_rng(9999))
+            print(f"[{cfg.name}] step {step:5d}  loss {float(loss):.4f}  "
+                  f"ans-acc {acc:.3f}  ({time.time()-t0:.0f}s)", flush=True)
+    return params
+
+
+def save_checkpoint(cfg: ModelConfig, params: dict, path: str) -> None:
+    arrays = {name: np.asarray(params[name], np.float32)
+              for name, _ in param_specs(cfg)}
+    np.savez(path, **arrays)
+    print(f"saved {path} ({sum(a.size for a in arrays.values())} params)")
+
+
+def load_checkpoint(cfg: ModelConfig, path: str) -> dict:
+    data = np.load(path)
+    return {name: jnp.asarray(data[name]) for name, _ in param_specs(cfg)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1200)
+    ap.add_argument("--proxy-steps", type=int, default=800)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model", choices=["main", "proxy", "both"],
+                    default="both")
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    if args.model in ("main", "both"):
+        cfg = main_config(V.VOCAB, D.SEQ_LEN)
+        params = train_model(cfg, args.steps, args.batch, args.seed, args.lr)
+        save_checkpoint(cfg, params, f"{args.out_dir}/ckpt_main.npz")
+    if args.model in ("proxy", "both"):
+        cfg = proxy_config(V.VOCAB, D.SEQ_LEN)
+        params = train_model(cfg, args.proxy_steps, args.batch,
+                             args.seed + 1, args.lr)
+        save_checkpoint(cfg, params, f"{args.out_dir}/ckpt_proxy.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Vocabulary for the synthetic chain-sum reasoning task.
+
+Single source of truth for token ids, shared with the Rust coordinator via
+``artifacts/vocab.json`` (written by aot.py). The task mirrors the structure
+the paper assumes of a reasoning LLM (Eq. 4):
+
+    BOS Q a_1 ... a_n SEP <think> r_1 ... r_m </think> FINAL ANS v EOS
+
+where each reasoning line r_i is either a compute line ``i p_i NL`` (p_i the
+i-th running partial sum mod MOD) or a verification line ``V j p_j NL``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# Token id layout. Keep ids stable: rust reads vocab.json but tests assert the
+# layout to catch accidental drift between trained weights and the tokenizer.
+# ---------------------------------------------------------------------------
+
+PAD = 0          # padding (never predicted; masked in the loss)
+BOS = 1          # beginning of sequence
+EOS = 2          # end of sequence
+THINK = 3        # <think>
+ETHINK = 4       # </think>
+NL = 5           # paragraph separator "\n\n" — ends every reasoning line
+FINAL = 6        # the prefix string "The final answer:" (App. D, Eq. 13)
+ANS = 7          # answer marker; the token after ANS is the answer value
+Q = 8            # question marker
+SEP = 9          # end-of-question separator
+VER = 10         # verification-line marker ("V")
+UNK = 11         # corrupted operand (makes the question unsolvable)
+LBRACK = 12      # "[" — tool-call opener (App. I.2 analogue)
+TOOL = 13        # tool-call question marker (copy task)
+NUM0 = 16        # numbers 0..MOD-1 are tokens NUM0 .. NUM0+MOD-1
+
+MOD = 32         # modulus of the chain-sum task == answer space size
+VOCAB = NUM0 + MOD  # = 48
+
+SPECIAL_NAMES = {
+    PAD: "<pad>", BOS: "<bos>", EOS: "<eos>", THINK: "<think>",
+    ETHINK: "</think>", NL: "\\n\\n", FINAL: "Final answer:", ANS: "A",
+    Q: "Q", SEP: ";", VER: "V", UNK: "?", LBRACK: "[", TOOL: "T",
+}
+
+
+def num(v: int) -> int:
+    """Token id of the number ``v`` (mod MOD)."""
+    return NUM0 + (v % MOD)
+
+
+def is_num(tok: int) -> bool:
+    return NUM0 <= tok < NUM0 + MOD
+
+
+def num_value(tok: int) -> int:
+    assert is_num(tok), f"token {tok} is not a number"
+    return tok - NUM0
+
+
+def detok(tokens) -> str:
+    """Human-readable rendering of a token sequence (for debugging/tests)."""
+    out = []
+    for t in tokens:
+        t = int(t)
+        if is_num(t):
+            out.append(str(num_value(t)))
+        else:
+            out.append(SPECIAL_NAMES.get(t, f"<{t}>"))
+    return " ".join(out)
+
+
+@dataclass(frozen=True)
+class VocabSpec:
+    pad: int = PAD
+    bos: int = BOS
+    eos: int = EOS
+    think: int = THINK
+    ethink: int = ETHINK
+    nl: int = NL
+    final: int = FINAL
+    ans: int = ANS
+    q: int = Q
+    sep: int = SEP
+    ver: int = VER
+    unk: int = UNK
+    lbrack: int = LBRACK
+    tool: int = TOOL
+    num0: int = NUM0
+    mod: int = MOD
+    vocab: int = VOCAB
+
+
+def vocab_json() -> dict:
+    """The dict dumped to artifacts/vocab.json for the Rust tokenizer."""
+    s = VocabSpec()
+    return {
+        "pad": s.pad, "bos": s.bos, "eos": s.eos, "think": s.think,
+        "ethink": s.ethink, "nl": s.nl, "final": s.final, "ans": s.ans,
+        "q": s.q, "sep": s.sep, "ver": s.ver, "unk": s.unk,
+        "lbrack": s.lbrack, "tool": s.tool,
+        "num0": s.num0, "mod": s.mod, "vocab": s.vocab,
+    }

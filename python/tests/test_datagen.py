@@ -1,0 +1,152 @@
+"""Corpus generator invariants: the teacher must emit exactly the reasoning
+format the paper assumes (Eq. 4) and the answers must be arithmetically
+correct — otherwise the trained model learns the wrong task."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import datagen as D
+from compile import vocab as V
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+def _parse(trace):
+    """Split a trace into (ops, corrupt?, lines, answer)."""
+    t = list(trace)
+    assert t[0] == V.BOS
+    sep = t.index(V.SEP)
+    ops = t[2:sep]
+    think = t.index(V.THINK)
+    ethink = t.index(V.ETHINK)
+    body = t[think + 1:ethink]
+    tail = t[ethink:]
+    assert tail[0] == V.ETHINK and tail[1] == V.FINAL
+    ans_i = tail.index(V.ANS)
+    answer = tail[ans_i + 1]
+    assert tail[ans_i + 2] == V.EOS
+    return ops, body, answer
+
+
+@given(seed=st.integers(0, 10_000))
+def test_trace_structure(seed):
+    rng = np.random.default_rng(seed)
+    t = D.make_trace(rng)
+    assert len(t) <= D.SEQ_LEN
+    ops, body, answer = _parse(t)
+    assert 2 <= len(ops) <= 10
+    # body is a sequence of NL-terminated lines
+    if body:
+        assert body[-1] == V.NL
+
+
+@given(seed=st.integers(0, 10_000))
+def test_uncorrupted_answer_is_true_sum(seed):
+    rng = np.random.default_rng(seed)
+    t = D.make_trace(rng, p_corrupt=0.0)
+    ops, _, answer = _parse(t)
+    vals = [V.num_value(o) for o in ops]
+    assert V.num_value(answer) == sum(vals) % V.MOD
+
+
+@given(seed=st.integers(0, 10_000))
+def test_full_trace_partial_sums_correct(seed):
+    """Compute lines carry correct running partial sums."""
+    rng = np.random.default_rng(seed)
+    t = D.make_trace(rng, p_corrupt=0.0, p_early=0.0)
+    ops, body, _ = _parse(t)
+    vals = [V.num_value(o) for o in ops]
+    lines, cur = [], []
+    for tok in body:
+        if tok == V.NL:
+            lines.append(cur); cur = []
+        else:
+            cur.append(tok)
+    compute = [l for l in lines if l[0] != V.VER]
+    assert len(compute) == len(vals)
+    s = 0
+    for i, line in enumerate(compute):
+        s = (s + vals[i]) % V.MOD
+        assert V.num_value(line[0]) == (i + 1) % V.MOD
+        assert V.num_value(line[1]) == s
+    # verify lines re-confirm the final total (R1-style double-checking)
+    total = sum(vals) % V.MOD
+    for l in lines:
+        if l[0] == V.VER:
+            assert 1 <= V.num_value(l[1]) <= len(vals)
+            assert V.num_value(l[2]) == total
+
+
+@given(seed=st.integers(0, 10_000))
+def test_early_stop_trace_answer_is_true_sum(seed):
+    """Even when truncated, the supervised answer is the true total —
+    the calibration-critical property (DESIGN.md §3)."""
+    rng = np.random.default_rng(seed)
+    t = D.make_trace(rng, p_corrupt=0.0, p_early=1.0)
+    ops, body, answer = _parse(t)
+    vals = [V.num_value(o) for o in ops]
+    assert V.num_value(answer) == sum(vals) % V.MOD
+
+
+def test_early_stop_remaining_ops_skewed_small():
+    """Early-stop truncations concentrate on small remaining-op counts r,
+    which is what teaches partial lookahead and produces the paper's
+    gradual EAT decline (DESIGN.md §3)."""
+    rng = np.random.default_rng(0)
+    remaining = []
+    for _ in range(2000):
+        t = D.make_trace(rng, p_corrupt=0.0, p_early=1.0)
+        ops, body, _ = _parse(t)
+        lines = sum(1 for tok in body if tok == V.NL)
+        remaining.append(len(ops) - lines)
+    remaining = np.asarray(remaining)
+    assert (remaining >= 1).all()  # j < n: never a full chain
+    frac_small = np.mean(remaining <= 3)
+    assert frac_small > 0.7, f"r<=3 fraction {frac_small}"
+    assert np.mean(remaining == 1) > 0.25
+
+
+@given(seed=st.integers(0, 10_000))
+def test_corrupted_trace_contains_unk(seed):
+    rng = np.random.default_rng(seed)
+    t = D.make_trace(rng, p_corrupt=1.0, p_early=0.0)
+    assert V.UNK in t
+
+
+def test_batch_shapes_and_mask():
+    rng = np.random.default_rng(0)
+    xs, mask = D.make_batch(rng, 8)
+    assert xs.shape == (8, D.SEQ_LEN) and mask.shape == xs.shape
+    for b in range(8):
+        row, m = xs[b], mask[b]
+        ln = int(np.argmax(row == V.EOS)) + 1
+        assert m[: ln - 1].all() and not m[ln - 1:].any()
+        assert (row[ln:] == V.PAD).all()
+
+
+@given(seed=st.integers(0, 5000))
+def test_tool_trace_answer_is_last_operand(seed):
+    rng = np.random.default_rng(seed)
+    t = D.make_tool_trace(rng)
+    assert t[1] == V.TOOL
+    sep = t.index(V.SEP)
+    last_op = V.num_value(t[sep - 1])
+    ans_i = t.index(V.ANS)
+    assert V.num_value(t[ans_i + 1]) == last_op
+    assert t[t.index(V.ETHINK) + 2] == V.LBRACK  # tool-call opener (Eq. 15)
+
+
+def test_question_tokens_corruption():
+    q = D.question_tokens([1, 2, 3], corrupt_at=1)
+    assert q == [V.BOS, V.Q, V.num(1), V.UNK, V.num(3), V.SEP]
+
+
+def test_vocab_layout_stable():
+    """Token ids are baked into trained checkpoints — they must not drift."""
+    js = V.vocab_json()
+    assert js["pad"] == 0 and js["bos"] == 1 and js["eos"] == 2
+    assert js["think"] == 3 and js["ethink"] == 4 and js["nl"] == 5
+    assert js["final"] == 6 and js["ans"] == 7
+    assert js["num0"] == 16 and js["mod"] == 32 and js["vocab"] == 48

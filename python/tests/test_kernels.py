@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, scales, masks and block sizes; every property is
+an assert_allclose against ref.py — the core correctness signal for the
+compute layer that the Rust coordinator ultimately executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (decode_attention, decode_attention_ref, entropy,
+                             entropy_ref)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# entropy kernel
+# ---------------------------------------------------------------------------
+
+
+@given(v=st.integers(2, 400), scale=st.floats(0.01, 20.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_entropy_matches_ref(v, scale, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(v,)) * scale, jnp.float32)
+    np.testing.assert_allclose(entropy(z), entropy_ref(z),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(v=st.integers(2, 200), blk=st.sampled_from([8, 16, 64, 128, 256]),
+       seed=st.integers(0, 2**31 - 1))
+def test_entropy_block_invariance(v, blk, seed):
+    """The result must not depend on the VMEM tile size."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(v,)) * 5, jnp.float32)
+    np.testing.assert_allclose(entropy(z, block=blk), entropy_ref(z),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(b=st.integers(1, 6), v=st.integers(2, 100),
+       seed=st.integers(0, 2**31 - 1))
+def test_entropy_batched(b, v, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(b, v)) * 3, jnp.float32)
+    np.testing.assert_allclose(entropy(z), entropy_ref(z),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_entropy_uniform_is_log_v():
+    """H(uniform over V) = log V — the analytic anchor."""
+    for v in [2, 48, 333]:
+        z = jnp.zeros((v,), jnp.float32)
+        np.testing.assert_allclose(entropy(z), np.log(v), rtol=1e-5)
+
+
+def test_entropy_onehot_is_zero():
+    """A (near-)deterministic distribution has (near-)zero entropy."""
+    z = jnp.asarray([50.0] + [0.0] * 47, jnp.float32)
+    assert float(entropy(z)) < 1e-4
+
+
+def test_entropy_extreme_logits_stable():
+    """Numerical stability: huge logits must not overflow to NaN/Inf."""
+    z = jnp.asarray([1e4, 1e4 - 5, -1e4, 0.0], jnp.float32)
+    h = float(entropy(z))
+    assert np.isfinite(h)
+    np.testing.assert_allclose(h, float(entropy_ref(z)), atol=1e-4)
+
+
+def test_entropy_shift_invariance():
+    """H(z + c) == H(z) for any constant shift."""
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(48,)) * 4, jnp.float32)
+    np.testing.assert_allclose(entropy(z), entropy(z + 1234.5), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention kernel
+# ---------------------------------------------------------------------------
+
+
+@given(h=st.integers(1, 4), dh=st.sampled_from([8, 16, 32]),
+       s=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 2**31 - 1), data=st.data())
+def test_decode_attention_matches_ref(h, dh, s, seed, data):
+    vl = data.draw(st.integers(1, s))
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(h, s, dh)), jnp.float32)
+    out = decode_attention(q, k, v, vl)
+    ref = decode_attention_ref(q, k, v, vl)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@given(blk=st.sampled_from([16, 32, 64, 128]), seed=st.integers(0, 2**31 - 1))
+def test_decode_attention_block_invariance(blk, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(2, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 16)), jnp.float32)
+    out = decode_attention(q, k, v, 77, block=blk)
+    ref = decode_attention_ref(q, k, v, 77)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_single_valid_position():
+    """With valid_len=1 attention must return exactly v[:, 0, :]."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 32, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 32, 8)), jnp.float32)
+    out = decode_attention(q, k, v, 1)
+    np.testing.assert_allclose(out, v[:, 0, :], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_mask_excludes_future():
+    """Values beyond valid_len must not influence the output."""
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(1, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 8)), jnp.float32)
+    v = np.asarray(rng.normal(size=(1, 64, 8)), np.float32)
+    out1 = decode_attention(q, k, jnp.asarray(v), 10)
+    v2 = v.copy()
+    v2[:, 10:, :] = 1e6  # poison the masked region
+    out2 = decode_attention(q, k, jnp.asarray(v2), 10)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_rejects_indivisible_block():
+    q = jnp.zeros((1, 8), jnp.float32)
+    k = jnp.zeros((1, 48, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        decode_attention(q, k, k, 5, block=32)

@@ -1,0 +1,146 @@
+"""L2 model correctness: prefill/decode/probe consistency and shapes.
+
+The central invariant: the incremental decode path (with Pallas kernels and
+an explicit KV cache) must be numerically consistent with the full
+teacher-forced forward pass — otherwise the serving stack would diverge
+from the trained model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import datagen as D
+from compile import vocab as V
+from compile.kernels import entropy_ref
+from compile.model import (decode_batch, decode_step, forward_all,
+                           init_params, main_config, param_specs, prefill,
+                           probe, proxy_config, unflatten_params,
+                           flatten_params)
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+SEQ = 64  # shorter sequence for test speed
+
+
+@pytest.fixture(scope="module", params=["main", "proxy"])
+def model(request):
+    mk = main_config if request.param == "main" else proxy_config
+    cfg = mk(V.VOCAB, SEQ)
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def _rand_tokens(rng, s):
+    return jnp.asarray(rng.integers(1, V.VOCAB, size=s), jnp.int32)
+
+
+def test_forward_shapes(model):
+    cfg, params = model
+    toks = _rand_tokens(np.random.default_rng(0), SEQ)
+    logits, kc, vc = forward_all(cfg, params, toks)
+    assert logits.shape == (SEQ, cfg.vocab)
+    assert kc.shape == (cfg.n_layer, cfg.n_head, SEQ, cfg.d_head)
+    assert vc.shape == kc.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_matches_forward(model):
+    cfg, params = model
+    toks = _rand_tokens(np.random.default_rng(1), SEQ)
+    logits_all, _, _ = forward_all(cfg, params, toks)
+    for n in [1, 5, SEQ]:
+        last, _, _ = prefill(cfg, params, toks, jnp.int32(n))
+        np.testing.assert_allclose(last, logits_all[n - 1],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@given(n=st.integers(2, 20), steps=st.integers(1, 12),
+       seed=st.integers(0, 1000))
+def test_decode_matches_forward(model, n, steps, seed):
+    """prefill(n) + k decode steps == teacher-forced logits at n-1+k."""
+    cfg, params = model
+    toks = _rand_tokens(np.random.default_rng(seed), SEQ)
+    logits_all, _, _ = forward_all(cfg, params, toks)
+    _, kc, vc = prefill(cfg, params, toks, jnp.int32(n))
+    for p in range(n, min(n + steps, SEQ)):
+        lg, kc, vc = decode_step(cfg, params, kc, vc, jnp.int32(p), toks[p])
+        np.testing.assert_allclose(lg, logits_all[p], rtol=1e-3, atol=1e-3)
+
+
+def test_probe_does_not_commit_suffix(model):
+    """Probing must leave the caller's cache usable: decoding after a probe
+    gives identical logits to decoding without the probe."""
+    cfg, params = model
+    toks = _rand_tokens(np.random.default_rng(2), SEQ)
+    _, kc, vc = prefill(cfg, params, toks, jnp.int32(10))
+    suffix = jnp.asarray([V.ETHINK, V.FINAL, V.ANS, 0], jnp.int32)
+    probe(cfg, params, kc, vc, jnp.int32(10), suffix, jnp.int32(3))
+    # caller's kc/vc were never mutated (functional), so this is trivially
+    # true in jax — the real check is the rust runtime's buffer discipline;
+    # here we check the probe's *logits* equal manual uncommitted decode.
+    lg_direct, _, _ = decode_step(cfg, params, kc, vc, jnp.int32(10),
+                                  suffix[0])
+    eat, lg_probe = probe(cfg, params, kc, vc, jnp.int32(10), suffix,
+                          jnp.int32(1))
+    np.testing.assert_allclose(lg_probe, lg_direct, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(eat, entropy_ref(lg_direct), rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(slen=st.integers(1, 4))
+def test_probe_suffix_length(model, slen):
+    """EAT must equal the entropy after exactly `slen` suffix steps."""
+    cfg, params = model
+    toks = _rand_tokens(np.random.default_rng(3), SEQ)
+    _, kc, vc = prefill(cfg, params, toks, jnp.int32(8))
+    suffix = jnp.asarray([V.ETHINK, V.FINAL, V.ANS, V.NL], jnp.int32)
+    eat, lg_probe = probe(cfg, params, kc, vc, jnp.int32(8), suffix,
+                          jnp.int32(slen))
+    kc2, vc2, lg = kc, vc, None
+    for t in range(slen):
+        lg, kc2, vc2 = decode_step(cfg, params, kc2, vc2, jnp.int32(8 + t),
+                                   suffix[t])
+    np.testing.assert_allclose(lg_probe, lg, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(eat, entropy_ref(lg), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_batch_matches_sequential(model):
+    cfg, params = model
+    rng = np.random.default_rng(4)
+    B = 3
+    kcs, vcs, poss, toks_b, want = [], [], [], [], []
+    for b in range(B):
+        toks = _rand_tokens(rng, SEQ)
+        n = 5 + b
+        _, kc, vc = prefill(cfg, params, toks, jnp.int32(n))
+        lg, kc1, vc1 = decode_step(cfg, params, kc, vc, jnp.int32(n), toks[n])
+        kcs.append(kc); vcs.append(vc); poss.append(n); toks_b.append(toks[n])
+        want.append(lg)
+    lgb, kcb, vcb = decode_batch(cfg, params, jnp.stack(kcs), jnp.stack(vcs),
+                                 jnp.asarray(poss, jnp.int32),
+                                 jnp.stack(toks_b))
+    for b in range(B):
+        np.testing.assert_allclose(lgb[b], want[b], rtol=1e-3, atol=1e-3)
+
+
+def test_param_flatten_roundtrip(model):
+    cfg, params = model
+    flat = flatten_params(cfg, params)
+    back = unflatten_params(cfg, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(params[k], back[k])
+
+
+def test_param_specs_cover_all_layers(model):
+    cfg, _ = model
+    names = [n for n, _ in param_specs(cfg)]
+    assert len(names) == len(set(names)), "duplicate param names"
+    for l in range(cfg.n_layer):
+        assert f"layer{l}.wq" in names
+    assert names[0] == "tok_emb" and names[-1] == "head"

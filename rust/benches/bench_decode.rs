@@ -1,0 +1,93 @@
+//! Serving hot-path microbenchmarks: prefill, decode step, fused batched
+//! decode vs sequential, probe suffix lengths. The fused-vs-sequential
+//! comparison is the continuous-batching ablation recorded in
+//! EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench bench_decode
+
+use eat_serve::datasets::Dataset;
+use eat_serve::runtime::Runtime;
+use eat_serve::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench (artifacts not built): {e}");
+            return Ok(());
+        }
+    };
+    let vocab = rt.cfg.vocab;
+    let ds = Dataset::synth_math500(&vocab, 8, 9);
+    let mut prompt = ds.questions[0].prompt.clone();
+    prompt.push(vocab.think);
+
+    bench("prefill/main", || {
+        rt.main.prefill(&rt.client, &prompt).unwrap();
+    });
+    bench("prefill/proxy", || {
+        rt.proxy.prefill(&rt.client, &prompt).unwrap();
+    });
+
+    let (_lg, cache) = rt.main.prefill(&rt.client, &prompt)?;
+    bench("decode/main_single", || {
+        let mut fork = rt.main.fork_cache(&rt.client, &cache).unwrap();
+        rt.main.decode(&rt.client, &mut fork, vocab.nl).unwrap();
+    });
+    let (_lgp, pcache) = rt.proxy.prefill(&rt.client, &prompt)?;
+    bench("decode/proxy_single", || {
+        let mut fork = rt.proxy.fork_cache(&rt.client, &pcache).unwrap();
+        rt.proxy.decode(&rt.client, &mut fork, vocab.nl).unwrap();
+    });
+
+    // fused batched decode (B=4) vs 4 sequential decodes
+    if rt.main.has_batch() {
+        let b = rt.main.cfg.batch;
+        let mk_caches = || -> anyhow::Result<Vec<_>> {
+            (0..b)
+                .map(|i| {
+                    let mut p = ds.questions[i].prompt.clone();
+                    p.push(vocab.think);
+                    Ok(rt.main.prefill(&rt.client, &p)?.1)
+                })
+                .collect()
+        };
+        // fork fresh caches per iteration (a committed decode advances the
+        // cache; repeated in-place stepping would overflow seq_len) — the
+        // fork cost is identical for both variants, keeping the
+        // comparison fair
+        let templates = mk_caches()?;
+        let toks = vec![vocab.nl; b];
+        let fused = bench("decode/batch4_fused", || {
+            let mut caches: Vec<_> = templates
+                .iter()
+                .map(|c| rt.main.fork_cache(&rt.client, c).unwrap())
+                .collect();
+            rt.main.decode_batch(&rt.client, &mut caches, &toks).unwrap();
+        });
+        let seq = bench("decode/batch4_sequential", || {
+            let mut caches: Vec<_> = templates
+                .iter()
+                .map(|c| rt.main.fork_cache(&rt.client, c).unwrap())
+                .collect();
+            for c in caches.iter_mut() {
+                rt.main.decode(&rt.client, c, vocab.nl).unwrap();
+            }
+        });
+        println!(
+            "\nfused B=4 decode is {:.2}x the latency of 4 sequential steps \
+             (per-token speedup {:.2}x)",
+            fused.mean_ns / seq.mean_ns * 4.0 / 4.0,
+            seq.mean_ns / fused.mean_ns
+        );
+    }
+
+    // probe suffix length scaling (Eq. 12's 1-token vs Eq. 13's 3-token)
+    bench("probe/suffix1", || {
+        rt.main.probe(&rt.client, &cache, &vocab.suffix_plain()).unwrap();
+    });
+    bench("probe/suffix3", || {
+        rt.main.probe(&rt.client, &cache, &vocab.suffix_prefixed()).unwrap();
+    });
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Coordinator-side hot paths that must never bottleneck serving: the EMA
+//! monitor update (runs every reasoning line), policy dispatch, offline
+//! replay throughput, and trace (de)serialization.
+//!
+//!     cargo bench --bench bench_monitor
+
+use eat_serve::exit::{EatPolicy, ExitPolicy, LineObs};
+use eat_serve::eval::{replay, Signal, TraceSet};
+use eat_serve::monitor::{EmaVar, LinePoint, Trace};
+use eat_serve::util::bench::bench;
+use eat_serve::util::json;
+use eat_serve::util::rng::Rng;
+
+fn synthetic_trace(lines: usize) -> Trace {
+    let mut rng = Rng::new(7);
+    Trace {
+        question_id: 0,
+        n_ops: 6,
+        answer: Some(3),
+        prompt_tokens: 9,
+        self_terminated: false,
+        reasoning_tokens: vec![5; lines * 3],
+        points: (1..=lines)
+            .map(|i| LinePoint {
+                line: i,
+                tokens: i * 3,
+                eat: if i > 6 { 0.02 } else { 2.0 + rng.f64() },
+                eat_proxy: Some(0.1),
+                eat_plain: Some(0.0),
+                eat_newline: Some(rng.f64()),
+                vhat: f64::INFINITY,
+                p_correct: if i > 6 { 0.99 } else { 0.05 },
+                pass1_avgk: if i > 6 { 1.0 } else { 0.06 },
+                unique_answers: if i > 6 { 1 } else { 14 },
+                confidence: Some(0.5),
+            })
+            .collect(),
+    }
+}
+
+fn main() {
+    // EMA update: the per-line O(1) core of Alg. 1
+    let mut ema = EmaVar::new(0.2);
+    let mut x = 0.0f64;
+    bench("monitor/ema_update", || {
+        x += 1.0;
+        std::hint::black_box(ema.update((x % 7.0) * 0.3));
+    });
+
+    // policy observe (incl. exit decision)
+    let mut policy = EatPolicy::new(0.2, 1e-9, usize::MAX);
+    let obs = LineObs {
+        tokens: 33,
+        eat: Some(1.5),
+        ..Default::default()
+    };
+    bench("monitor/policy_observe", || {
+        std::hint::black_box(policy.observe(&obs));
+    });
+
+    // full-trace replay (the unit of every sweep point)
+    let trace = synthetic_trace(30);
+    bench("replay/trace30_eat", || {
+        let mut p = EatPolicy::new(0.2, 1e-3, usize::MAX);
+        std::hint::black_box(replay(&trace, &mut p, Signal::MainPrefixed, false));
+    });
+
+    // sweep scale: 500 traces x 24 thresholds happens per figure panel
+    let set = TraceSet {
+        dataset: "bench".into(),
+        traces: (0..100).map(|_| synthetic_trace(25)).collect(),
+    };
+    bench("replay/sweep_100x24", || {
+        for i in 0..24 {
+            let delta = 2f64.powi(-i);
+            for t in &set.traces {
+                let mut p = EatPolicy::new(0.2, delta, usize::MAX);
+                std::hint::black_box(replay(t, &mut p, Signal::MainPrefixed, false));
+            }
+        }
+    });
+
+    // trace JSON round-trip (store/load of the App. H protocol)
+    let js = trace.to_json().to_string();
+    bench("store/trace_to_json", || {
+        std::hint::black_box(trace.to_json().to_string());
+    });
+    bench("store/trace_parse", || {
+        let v = json::parse(&js).unwrap();
+        std::hint::black_box(Trace::from_json(&v).unwrap());
+    });
+}

@@ -1,0 +1,72 @@
+//! Fig. 6c (top) — rollout cost vs EAT probe cost.
+//!
+//! #UA@K and confidence-style signals must *generate* answer rollouts;
+//! the paper measures a single rollout at >50x the EAT evaluation cost.
+//! Here a rollout honestly decodes suffix + answer tokens on a forked
+//! cache through the AOT decode executable.
+//!
+//!     cargo bench --bench bench_rollout
+
+use eat_serve::datasets::Dataset;
+use eat_serve::runtime::Runtime;
+use eat_serve::sampler::Sampler;
+use eat_serve::util::bench::bench;
+use eat_serve::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench (artifacts not built): {e}");
+            return Ok(());
+        }
+    };
+    let vocab = rt.cfg.vocab;
+    let ds = Dataset::synth_aime(&vocab, 1, 5);
+    let mut prompt = ds.questions[0].prompt.clone();
+    prompt.push(vocab.think);
+    let (_lg, mut cache) = rt.main.prefill(&rt.client, &prompt)?;
+    while cache.pos < 64 {
+        rt.main.decode(&rt.client, &mut cache, vocab.nl)?;
+    }
+    let suffix = vocab.suffix_prefixed();
+    let sampler = Sampler::new(0.6, 0.95);
+    let mut rng = Rng::new(0);
+
+    let probe = bench("eat_probe", || {
+        rt.main.probe(&rt.client, &cache, &suffix).unwrap();
+    });
+
+    // one full answer rollout: fork cache, decode suffix, sample to EOS
+    let mut one_rollout = || {
+        let mut fork = rt.main.fork_cache(&rt.client, &cache).unwrap();
+        let mut logits = Vec::new();
+        for &t in &suffix {
+            logits = rt.main.decode(&rt.client, &mut fork, t).unwrap();
+        }
+        for _ in 0..3 {
+            let t = sampler.sample(&logits, &mut rng);
+            if t == vocab.eos {
+                break;
+            }
+            logits = rt.main.decode(&rt.client, &mut fork, t).unwrap();
+        }
+    };
+    let r1 = bench("rollout/k1", &mut one_rollout);
+    let r8 = bench("rollout/k8", || {
+        for _ in 0..8 {
+            one_rollout();
+        }
+    });
+    let r32 = bench("rollout/k32", || {
+        for _ in 0..32 {
+            one_rollout();
+        }
+    });
+
+    println!("\ncost ratios vs one EAT probe (paper Fig. 6c: rollout is >50x at K=32):");
+    println!("  1 rollout : {:.1}x", r1.mean_ns / probe.mean_ns);
+    println!("  8 rollouts: {:.1}x", r8.mean_ns / probe.mean_ns);
+    println!("  32 rollouts: {:.1}x", r32.mean_ns / probe.mean_ns);
+    Ok(())
+}

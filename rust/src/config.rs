@@ -1,0 +1,184 @@
+//! Configuration system: artifact metadata + serving/eval settings.
+//!
+//! `ArtifactsConfig` mirrors `artifacts/config.json` (written by aot.py):
+//! model dimensions, entry-point files and weight manifests. `ServeConfig`
+//! and `EvalConfig` hold the runtime knobs (decoding, exit thresholds,
+//! batching) with the paper's defaults.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+use crate::vocab::Vocab;
+
+/// One model's dimensions + artifact file names, as emitted by aot.py.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub d_ff: usize,
+    pub d_head: usize,
+    pub seq_len: usize,
+    pub probe_len: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub weights: String,
+    pub manifest: String,
+    pub hlo_prefill: String,
+    pub hlo_decode: String,
+    pub hlo_probe: String,
+    pub hlo_decode_batch: Option<String>,
+}
+
+impl ModelConfig {
+    fn from_json(v: &Json) -> anyhow::Result<ModelConfig> {
+        let hlo = v.req("hlo")?;
+        Ok(ModelConfig {
+            name: v.req_str("name")?.to_string(),
+            vocab: v.req_usize("vocab")?,
+            d_model: v.req_usize("d_model")?,
+            n_head: v.req_usize("n_head")?,
+            n_layer: v.req_usize("n_layer")?,
+            d_ff: v.req_usize("d_ff")?,
+            d_head: v.req_usize("d_head")?,
+            seq_len: v.req_usize("seq_len")?,
+            probe_len: v.req_usize("probe_len")?,
+            batch: v.req_usize("batch")?,
+            n_params: v.req_usize("n_params")?,
+            weights: v.req_str("weights")?.to_string(),
+            manifest: v.req_str("manifest")?.to_string(),
+            hlo_prefill: hlo.req_str("prefill")?.to_string(),
+            hlo_decode: hlo.req_str("decode")?.to_string(),
+            hlo_probe: hlo.req_str("probe")?.to_string(),
+            hlo_decode_batch: hlo
+                .get("decode_batch")
+                .as_str()
+                .map(|s| s.to_string()),
+        })
+    }
+
+    /// Total cache elements per sequence: [L, H, S, Dh] f32, K and V.
+    pub fn cache_elems(&self) -> usize {
+        self.n_layer * self.n_head * self.seq_len * self.d_head
+    }
+}
+
+/// The whole artifacts directory: both models + vocab.
+#[derive(Debug, Clone)]
+pub struct ArtifactsConfig {
+    pub dir: PathBuf,
+    pub seq_len: usize,
+    pub main: ModelConfig,
+    pub proxy: ModelConfig,
+    pub vocab: Vocab,
+}
+
+impl ArtifactsConfig {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<ArtifactsConfig> {
+        let dir = dir.as_ref().to_path_buf();
+        let cfg_text = std::fs::read_to_string(dir.join("config.json"))
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "cannot read {}/config.json ({e}); run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        let cfg = json::parse(&cfg_text)?;
+        let models = cfg.req("models")?;
+        let vocab_text = std::fs::read_to_string(dir.join("vocab.json"))?;
+        let vocab = Vocab::from_json(&json::parse(&vocab_text)?)?;
+        Ok(ArtifactsConfig {
+            seq_len: cfg.req_usize("seq_len")?,
+            main: ModelConfig::from_json(models.req("main")?)?,
+            proxy: ModelConfig::from_json(models.req("proxy")?)?,
+            vocab,
+            dir,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelConfig> {
+        match name {
+            "main" => Ok(&self.main),
+            "proxy" => Ok(&self.proxy),
+            other => anyhow::bail!("unknown model `{other}`"),
+        }
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+/// Decoding + serving knobs; defaults follow the paper (§App. H:
+/// temperature 0.6, top-p 0.95; §5.3: T = 10K tokens scaled to our trace
+/// lengths; Alg. 1: alpha = 0.2). The Fig. 13 ablation on our substrate
+/// confirms the paper's default: alpha in [0.01, 0.2] gives the best
+/// accuracy-per-token AUC (the slowly-decaying V-hat transient protects
+/// hard questions from premature exits), degrading monotonically above
+/// 0.4.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub temperature: f32,
+    pub top_p: f32,
+    /// Max thinking tokens T (Alg. 1 input). Our traces are ~25x shorter
+    /// than the paper's (128-token sequences vs 10K budgets).
+    pub max_think_tokens: usize,
+    /// EMA timescale alpha (Eq. 7/8).
+    pub alpha: f64,
+    /// EAT variance threshold delta (Alg. 1 line 9).
+    pub delta: f64,
+    /// Use the "Final answer:" prefix string when probing (Eq. 13).
+    pub prefixed_probe: bool,
+    /// Seed for all sampling.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            temperature: 0.6,
+            top_p: 0.95,
+            max_think_tokens: 96,
+            alpha: 0.2,
+            delta: 1e-3,
+            prefixed_probe: true,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_defaults_match_paper() {
+        let c = ServeConfig::default();
+        assert_eq!(c.temperature, 0.6);
+        assert_eq!(c.top_p, 0.95);
+        assert_eq!(c.alpha, 0.2); // the paper Alg. 1 default
+        assert!(c.prefixed_probe);
+    }
+
+    #[test]
+    fn model_config_parses() {
+        let js = r#"{
+          "name":"main","vocab":48,"d_model":64,"n_head":2,"n_layer":2,
+          "d_ff":256,"d_head":32,"seq_len":128,"probe_len":4,"batch":4,
+          "n_params":26,"weights":"w.bin","manifest":"m.json",
+          "hlo":{"prefill":"p.hlo.txt","decode":"d.hlo.txt",
+                 "probe":"pr.hlo.txt","decode_batch":"db.hlo.txt"}}"#;
+        let m = ModelConfig::from_json(&json::parse(js).unwrap()).unwrap();
+        assert_eq!(m.d_head, 32);
+        assert_eq!(m.cache_elems(), 2 * 2 * 128 * 32);
+        assert_eq!(m.hlo_decode_batch.as_deref(), Some("db.hlo.txt"));
+    }
+
+    #[test]
+    fn model_config_missing_field_errors() {
+        let js = r#"{"name":"x"}"#;
+        assert!(ModelConfig::from_json(&json::parse(js).unwrap()).is_err());
+    }
+}

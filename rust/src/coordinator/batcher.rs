@@ -1,0 +1,176 @@
+//! Continuous batcher: vLLM-style slot scheduling over `ReasoningSession`s.
+//!
+//! Requests arrive with timestamps (the workload generator produces a
+//! Poisson process); the batcher admits them into up to `slots` concurrent
+//! sessions (KV capacity permitting — backpressure otherwise), advances all
+//! active sessions round-robin one decode step per scheduling tick, and
+//! retires finished ones. On 1 CPU core the decode steps of co-resident
+//! requests interleave rather than parallelize; the scheduling, admission,
+//! fairness and accounting logic is identical to the multi-device case.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::{MonitorModel, ReasoningSession, RequestResult};
+use super::kv::{KvSlotManager, SlotId};
+use super::metrics::ServeMetrics;
+use crate::config::ServeConfig;
+use crate::datasets::Question;
+use crate::exit::ExitPolicy;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// A request waiting for admission.
+pub struct QueuedRequest {
+    pub question: Question,
+    pub arrived: Instant,
+}
+
+struct Active<'a> {
+    session: ReasoningSession<'a>,
+    slot: SlotId,
+    arrived: Instant,
+    admitted: Instant,
+}
+
+/// Policy factory: each admitted request gets a fresh policy instance.
+pub type PolicyFactory = Box<dyn Fn() -> Box<dyn ExitPolicy>>;
+
+pub struct Batcher<'a> {
+    rt: &'a Runtime,
+    cfg: ServeConfig,
+    monitor: MonitorModel,
+    make_policy: PolicyFactory,
+    kv: KvSlotManager,
+    queue: VecDeque<QueuedRequest>,
+    active: Vec<Active<'a>>,
+    rng: Rng,
+    pub metrics: ServeMetrics,
+    pub results: Vec<RequestResult>,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        cfg: ServeConfig,
+        monitor: MonitorModel,
+        slots: usize,
+        make_policy: PolicyFactory,
+    ) -> Batcher<'a> {
+        let slot_bytes = rt.cfg.main.cache_elems() * 4 * 2
+            + if monitor == MonitorModel::Proxy {
+                rt.cfg.proxy.cache_elems() * 4 * 2
+            } else {
+                0
+            };
+        let seed = cfg.seed;
+        Batcher {
+            rt,
+            cfg,
+            monitor,
+            make_policy,
+            kv: KvSlotManager::new(slots, slot_bytes),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            rng: Rng::new(seed ^ 0xBA7C4E5),
+            metrics: ServeMetrics::new(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, question: Question) {
+        self.queue.push_back(QueuedRequest {
+            question,
+            arrived: Instant::now(),
+        });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn kv_utilization(&self) -> f64 {
+        self.kv.utilization()
+    }
+
+    pub fn kv_peak(&self) -> usize {
+        self.kv.peak()
+    }
+
+    /// Admit queued requests while KV slots are free (prefill phase).
+    fn admit(&mut self) -> Result<()> {
+        while !self.queue.is_empty() {
+            let Some(slot) = self.kv.acquire() else {
+                break; // backpressure: leave the rest queued
+            };
+            let req = self.queue.pop_front().unwrap();
+            let policy = (self.make_policy)();
+            let session = ReasoningSession::new(
+                self.rt,
+                self.cfg.clone(),
+                self.monitor,
+                req.question,
+                policy,
+                self.rng.fork(),
+            )?;
+            self.active.push(Active {
+                session,
+                slot,
+                arrived: req.arrived,
+                admitted: Instant::now(),
+            });
+        }
+        Ok(())
+    }
+
+    /// One scheduling tick: admit, then advance every active session by a
+    /// single decode step (continuous batching granularity), retiring the
+    /// finished ones. Returns the number of sessions advanced.
+    pub fn tick(&mut self) -> Result<usize> {
+        self.admit()?;
+        let mut advanced = 0;
+        let mut finished_idx = Vec::new();
+        for (i, a) in self.active.iter_mut().enumerate() {
+            let done = a.session.step()?;
+            advanced += 1;
+            if done {
+                finished_idx.push(i);
+            }
+        }
+        // retire in reverse index order to keep indices valid
+        for &i in finished_idx.iter().rev() {
+            let a = self.active.swap_remove(i);
+            self.kv.release(a.slot)?;
+            let queue_ms =
+                a.admitted.duration_since(a.arrived).as_secs_f64() * 1e3;
+            let latency_ms =
+                a.arrived.elapsed().as_secs_f64() * 1e3;
+            let result = a.session.finish();
+            self.metrics.record_completion(
+                result.correct,
+                result.reasoning_tokens,
+                result.probes,
+                result.rollout_tokens,
+                latency_ms,
+                queue_ms,
+                result.exit_reason,
+            );
+            self.results.push(result);
+        }
+        Ok(advanced)
+    }
+
+    /// Drain: run ticks until queue and active set are empty.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while !self.queue.is_empty() || !self.active.is_empty() {
+            self.tick()?;
+        }
+        Ok(())
+    }
+}

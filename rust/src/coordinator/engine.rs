@@ -1,0 +1,339 @@
+//! The serving engine: drives a request through
+//! prefill -> reasoning (line loop + EAT monitoring) -> answer elicitation.
+//!
+//! `ReasoningSession` is a per-request state machine advanced one decode
+//! step at a time, so the continuous batcher can interleave many sessions
+//! (vLLM-style) while the quickstart/eval paths drive a single session to
+//! completion. All model access goes through the AOT artifacts — no Python
+//! anywhere near this path.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::datasets::{check_answer, Question};
+use crate::exit::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+use crate::runtime::{KvCache, ModelRuntime, Runtime};
+use crate::sampler::Sampler;
+use crate::util::rng::Rng;
+
+/// Which model computes EAT (Alg. 1's optional proxy phi).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MonitorModel {
+    /// White-box: the reasoning model's own logits.
+    SelfModel,
+    /// Black-box: a separate small proxy keeps its own KV cache over the
+    /// verbal reasoning stream and supplies the entropy.
+    Proxy,
+}
+
+/// Completed request summary.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub question_id: usize,
+    pub exit_reason: ExitReason,
+    /// Reasoning tokens committed (|R|).
+    pub reasoning_tokens: usize,
+    /// Reasoning lines observed.
+    pub lines: usize,
+    /// EAT probes issued (each costs ~suffix_len decode-equivalents).
+    pub probes: usize,
+    /// Rollout tokens charged by rollout-based signals (#UA@K, confidence).
+    pub rollout_tokens: usize,
+    /// The generated answer tail (after `</think>`).
+    pub answer_tail: Vec<u32>,
+    pub correct: bool,
+    pub wall_ms: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Reasoning,
+    Done,
+}
+
+/// Per-request state machine.
+pub struct ReasoningSession<'a> {
+    rt: &'a Runtime,
+    cfg: ServeConfig,
+    monitor: MonitorModel,
+    pub question: Question,
+    policy: Box<dyn ExitPolicy>,
+    rng: Rng,
+    sampler: Sampler,
+
+    cache: KvCache,
+    proxy_cache: Option<KvCache>,
+    cur_logits: Vec<f32>,
+    phase: Phase,
+
+    reasoning_tokens: Vec<u32>,
+    line_count: usize,
+    probes: usize,
+    rollout_tokens: usize,
+    exit_reason: Option<ExitReason>,
+    answer_tail: Vec<u32>,
+    started: Instant,
+}
+
+impl<'a> ReasoningSession<'a> {
+    /// Prefill the prompt (+`<think>`) on the main model, and on the proxy
+    /// when black-box monitoring is requested.
+    pub fn new(
+        rt: &'a Runtime,
+        cfg: ServeConfig,
+        monitor: MonitorModel,
+        question: Question,
+        policy: Box<dyn ExitPolicy>,
+        rng: Rng,
+    ) -> Result<ReasoningSession<'a>> {
+        let mut prompt = question.prompt.clone();
+        prompt.push(rt.cfg.vocab.think);
+        let (logits, cache) = rt.main.prefill(&rt.client, &prompt)?;
+        let proxy_cache = match monitor {
+            MonitorModel::SelfModel => None,
+            MonitorModel::Proxy => Some(rt.proxy.prefill(&rt.client, &prompt)?.1),
+        };
+        let sampler = Sampler::new(cfg.temperature, cfg.top_p);
+        Ok(ReasoningSession {
+            rt,
+            cfg,
+            monitor,
+            question,
+            policy,
+            rng,
+            sampler,
+            cache,
+            proxy_cache,
+            cur_logits: logits,
+            phase: Phase::Reasoning,
+            reasoning_tokens: Vec::new(),
+            line_count: 0,
+            probes: 0,
+            rollout_tokens: 0,
+            exit_reason: None,
+            answer_tail: Vec::new(),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    pub fn reasoning_len(&self) -> usize {
+        self.reasoning_tokens.len()
+    }
+
+    /// The monitoring model + cache used for probes.
+    fn probe_target(&self) -> (&ModelRuntime, &KvCache) {
+        match (self.monitor, &self.proxy_cache) {
+            (MonitorModel::Proxy, Some(pc)) => (&self.rt.proxy, pc),
+            _ => (&self.rt.main, &self.cache),
+        }
+    }
+
+    /// EAT probe suffix per config (Eq. 12 vs Eq. 13).
+    fn probe_suffix(&self) -> Vec<u32> {
+        if self.cfg.prefixed_probe {
+            self.rt.cfg.vocab.suffix_prefixed()
+        } else {
+            self.rt.cfg.vocab.suffix_plain()
+        }
+    }
+
+    /// Compute the signals the active policy needs at a line boundary.
+    fn line_signals(&mut self, needs: SignalNeeds) -> Result<LineObs> {
+        let mut obs = LineObs {
+            tokens: self.reasoning_tokens.len(),
+            ..Default::default()
+        };
+        if needs.eat {
+            let suffix = self.probe_suffix();
+            let (model, cache) = self.probe_target();
+            let (eat, _logits) = model.probe(&self.rt.client, cache, &suffix)?;
+            self.probes += 1;
+            obs.eat = Some(eat as f64);
+        }
+        if needs.rollouts_k > 0 && self.line_count % needs.rollout_every == 0 {
+            let (ua, toks) = self.sample_unique_answers(needs.rollouts_k)?;
+            obs.unique_answers = Some(ua);
+            self.rollout_tokens += toks;
+        }
+        if needs.confidence {
+            let (conf, toks) = self.confidence_rollout()?;
+            obs.confidence = Some(conf);
+            self.rollout_tokens += toks;
+        }
+        Ok(obs)
+    }
+
+    /// #UA@K: sample K answer rollouts, count unique extracted answers.
+    /// The answer of the chain-sum task is a single token after the forced
+    /// `</think> Final answer: A` suffix, so sampling the probe logits K
+    /// times is *distributionally identical* to K full rollouts; we charge
+    /// the full rollout token cost (suffix + answer + EOS per rollout), as
+    /// the paper does in Fig. 6b.
+    fn sample_unique_answers(&mut self, k: usize) -> Result<(usize, usize)> {
+        let suffix = self.rt.cfg.vocab.suffix_prefixed();
+        let (_eat, logits) = self
+            .rt
+            .main
+            .probe(&self.rt.client, &self.cache, &suffix)?;
+        self.probes += 1;
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..k {
+            seen.insert(self.sampler.sample(&logits, &mut self.rng));
+        }
+        let per_rollout_tokens = suffix.len() + 2; // answer value + EOS
+        Ok((seen.len(), k * per_rollout_tokens))
+    }
+
+    /// Confidence (Eq. 16): greedy rollout of `rollout_len` tokens after
+    /// the answer-inducing suffix on a *forked* cache; returns the
+    /// length-normalized likelihood.
+    fn confidence_rollout(&mut self) -> Result<(f64, usize)> {
+        let suffix = self.rt.cfg.vocab.suffix_prefixed();
+        let mut fork = self.rt.main.fork_cache(&self.rt.client, &self.cache)?;
+        let mut logits = Vec::new();
+        for &t in &suffix {
+            logits = self.rt.main.decode(&self.rt.client, &mut fork, t)?;
+        }
+        let rollout_len = 5usize;
+        let mut logprob_sum = 0.0f64;
+        let mut produced = 0usize;
+        for _ in 0..rollout_len {
+            if fork.pos >= self.rt.cfg.main.seq_len {
+                break;
+            }
+            let tok = crate::sampler::argmax(&logits);
+            logprob_sum += Sampler::logprob(&logits, tok);
+            logits = self.rt.main.decode(&self.rt.client, &mut fork, tok)?;
+            produced += 1;
+        }
+        let conf = (logprob_sum / produced.max(1) as f64).exp();
+        Ok((conf, suffix.len() + produced))
+    }
+
+    /// Advance by one decode step. Returns true when the request finished.
+    pub fn step(&mut self) -> Result<bool> {
+        if self.phase == Phase::Done {
+            return Ok(true);
+        }
+        // room check: leave space for the answer tail (suffix + value + EOS)
+        let room = self.rt.cfg.main.seq_len - self.cache.pos;
+        if room <= 6 {
+            self.exit_reason = Some(ExitReason::TokenBudget);
+            return self.elicit_answer().map(|_| true);
+        }
+
+        let tok = self.sampler.sample(&self.cur_logits, &mut self.rng);
+        let vocab = self.rt.cfg.vocab;
+
+        if tok == vocab.ethink {
+            // the model decided to stop thinking on its own
+            self.policy.observe(&LineObs {
+                tokens: self.reasoning_tokens.len(),
+                self_terminated: true,
+                ..Default::default()
+            });
+            self.exit_reason = Some(ExitReason::SelfTerminated);
+            return self.elicit_answer().map(|_| true);
+        }
+
+        // commit the token to the main cache (and mirror into the proxy)
+        self.cur_logits = self.rt.main.decode(&self.rt.client, &mut self.cache, tok)?;
+        if let Some(pc) = self.proxy_cache.as_mut() {
+            self.rt.proxy.decode(&self.rt.client, pc, tok)?;
+        }
+        self.reasoning_tokens.push(tok);
+
+        if tok == vocab.nl {
+            // line boundary: evaluate the exit policy (Alg. 1 lines 6-9)
+            self.line_count += 1;
+            let needs = self.policy.needs();
+            let obs = self.line_signals(needs)?;
+            if let ExitDecision::Exit(reason) = self.policy.observe(&obs) {
+                self.exit_reason = Some(reason);
+                return self.elicit_answer().map(|_| true);
+            }
+        } else if self.reasoning_tokens.len() >= self.cfg.max_think_tokens {
+            self.exit_reason = Some(ExitReason::TokenBudget);
+            return self.elicit_answer().map(|_| true);
+        }
+        Ok(false)
+    }
+
+    /// Force `</think> Final answer: A` and sample the answer
+    /// (GenTillEoS, Alg. 1 line 11).
+    fn elicit_answer(&mut self) -> Result<()> {
+        let vocab = self.rt.cfg.vocab;
+        let force = [vocab.ethink, vocab.final_, vocab.ans];
+        let mut logits = self.cur_logits.clone();
+        for &t in &force {
+            if self.cache.pos >= self.rt.cfg.main.seq_len {
+                break;
+            }
+            logits = self.rt.main.decode(&self.rt.client, &mut self.cache, t)?;
+            self.answer_tail.push(t);
+        }
+        // sample until EOS or a short cap (answers are value + EOS)
+        for _ in 0..4 {
+            if self.cache.pos >= self.rt.cfg.main.seq_len {
+                break;
+            }
+            let t = self.sampler.sample(&logits, &mut self.rng);
+            self.answer_tail.push(t);
+            if t == vocab.eos {
+                break;
+            }
+            logits = self.rt.main.decode(&self.rt.client, &mut self.cache, t)?;
+        }
+        self.phase = Phase::Done;
+        Ok(())
+    }
+
+    /// Run the session to completion (single-request paths).
+    pub fn run(mut self) -> Result<RequestResult> {
+        while !self.step()? {}
+        Ok(self.finish())
+    }
+
+    /// Summarize a finished session.
+    pub fn finish(self) -> RequestResult {
+        debug_assert_eq!(self.phase, Phase::Done);
+        let correct = check_answer(&self.rt.cfg.vocab, &self.question, &self.answer_tail);
+        RequestResult {
+            question_id: self.question.id,
+            exit_reason: self.exit_reason.unwrap_or(ExitReason::TokenBudget),
+            reasoning_tokens: self.reasoning_tokens.len(),
+            lines: self.line_count,
+            probes: self.probes,
+            rollout_tokens: self.rollout_tokens,
+            answer_tail: self.answer_tail,
+            correct,
+            wall_ms: self.started.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}
+
+/// Convenience wrapper: serve one question end-to-end with a policy.
+pub fn serve_one(
+    rt: &Runtime,
+    cfg: &ServeConfig,
+    monitor: MonitorModel,
+    question: &Question,
+    policy: Box<dyn ExitPolicy>,
+    seed: u64,
+) -> Result<RequestResult> {
+    let session = ReasoningSession::new(
+        rt,
+        cfg.clone(),
+        monitor,
+        question.clone(),
+        policy,
+        Rng::new(seed),
+    )?;
+    session.run()
+}

@@ -1,0 +1,135 @@
+//! Serving metrics: throughput, latency, token accounting, exit reasons.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::exit::ExitReason;
+use crate::util::stats::Summary;
+
+#[derive(Debug)]
+pub struct ServeMetrics {
+    started: Instant,
+    pub completed: usize,
+    pub correct: usize,
+    pub reasoning_tokens: u64,
+    pub probe_count: u64,
+    pub rollout_tokens: u64,
+    pub latency_ms: Summary,
+    pub queue_ms: Summary,
+    pub exit_reasons: BTreeMap<String, usize>,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            started: Instant::now(),
+            completed: 0,
+            correct: 0,
+            reasoning_tokens: 0,
+            probe_count: 0,
+            rollout_tokens: 0,
+            latency_ms: Summary::new(),
+            queue_ms: Summary::new(),
+            exit_reasons: BTreeMap::new(),
+        }
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_completion(
+        &mut self,
+        correct: bool,
+        reasoning_tokens: usize,
+        probes: usize,
+        rollout_tokens: usize,
+        latency_ms: f64,
+        queue_ms: f64,
+        reason: ExitReason,
+    ) {
+        self.completed += 1;
+        self.correct += correct as usize;
+        self.reasoning_tokens += reasoning_tokens as u64;
+        self.probe_count += probes as u64;
+        self.rollout_tokens += rollout_tokens as u64;
+        self.latency_ms.record(latency_ms);
+        self.queue_ms.record(queue_ms);
+        *self
+            .exit_reasons
+            .entry(format!("{reason:?}"))
+            .or_insert(0) += 1;
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.completed.max(1) as f64
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.completed as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.reasoning_tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    /// One-block human report for examples / `repro serve`.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s += &format!(
+            "requests           {:>8}   accuracy {:.3}\n",
+            self.completed,
+            self.accuracy()
+        );
+        s += &format!(
+            "throughput         {:>8.2} req/s   {:.1} reasoning tok/s\n",
+            self.requests_per_s(),
+            self.tokens_per_s()
+        );
+        s += &format!(
+            "latency ms         p50 {:>8.1}  p95 {:>8.1}  max {:>8.1}\n",
+            self.latency_ms.p50(),
+            self.latency_ms.p95(),
+            self.latency_ms.max()
+        );
+        s += &format!(
+            "queueing ms        p50 {:>8.1}  p95 {:>8.1}\n",
+            self.queue_ms.p50(),
+            self.queue_ms.p95()
+        );
+        s += &format!(
+            "tokens             reasoning {}  probes {}  rollout {}\n",
+            self.reasoning_tokens, self.probe_count, self.rollout_tokens
+        );
+        s += "exit reasons       ";
+        for (k, v) in &self.exit_reasons {
+            s += &format!("{k}:{v} ");
+        }
+        s += "\n";
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut m = ServeMetrics::new();
+        m.record_completion(true, 30, 10, 0, 12.0, 1.0, ExitReason::Stable);
+        m.record_completion(false, 90, 30, 0, 40.0, 2.0, ExitReason::TokenBudget);
+        assert_eq!(m.completed, 2);
+        assert!((m.accuracy() - 0.5).abs() < 1e-12);
+        assert_eq!(m.reasoning_tokens, 120);
+        assert_eq!(m.exit_reasons["Stable"], 1);
+        assert_eq!(m.exit_reasons["TokenBudget"], 1);
+        assert!(m.report().contains("requests"));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator — the paper's system contribution: EAT-monitored
+//! early-exit reasoning serving.
+//!
+//!  * `engine`  — per-request reasoning state machine (prefill -> line
+//!    loop with EAT probes -> answer elicitation)
+//!  * `batcher` — continuous batching over sessions with KV admission
+//!  * `kv`      — KV slot manager (capacity + backpressure)
+//!  * `metrics` — serving metrics
+
+pub mod batcher;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+
+pub use batcher::Batcher;
+pub use engine::{serve_one, MonitorModel, ReasoningSession, RequestResult};
+pub use kv::KvSlotManager;
+pub use metrics::ServeMetrics;

@@ -1,0 +1,116 @@
+//! Answer extraction + correctness checking.
+//!
+//! The paper checks Math500/AIME answers with SymPy equivalence and GPQA
+//! with an LLM judge; our synthetic task has a unique single-token answer
+//! so equivalence is exact token identity (DESIGN.md §1). The extraction
+//! logic still has to parse the model's generated answer tail, which (as
+//! in the paper, §5.1) may include summarization tokens before the value.
+
+use super::chainsum::Question;
+use crate::vocab::Vocab;
+
+/// Extract the answer value from a generated answer-tail token sequence:
+/// the first number token after the ANS marker, or — fallback — the first
+/// number token at all (the model "does not necessarily always start with
+/// boxed{}", §5.1).
+pub fn extract_answer(vocab: &Vocab, tail: &[u32]) -> Option<u32> {
+    let mut after_ans = false;
+    for &t in tail {
+        if t == vocab.ans {
+            after_ans = true;
+            continue;
+        }
+        if after_ans {
+            if let Some(v) = vocab.num_value(t) {
+                return Some(v);
+            }
+            if t == vocab.eos {
+                break;
+            }
+        }
+    }
+    // fallback: first number anywhere in the tail
+    tail.iter().find_map(|&t| vocab.num_value(t))
+}
+
+/// Is the generated tail a correct answer to the question?
+/// Unsolvable questions are never "correct" (the paper filters them or
+/// reports them separately — Fig. 20 / App. I.4).
+pub fn check_answer(vocab: &Vocab, q: &Question, tail: &[u32]) -> bool {
+    match (q.answer, extract_answer(vocab, tail)) {
+        (Some(want), Some(got)) => want == got,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::chainsum::{Dataset, Kind};
+
+    fn v() -> Vocab {
+        Vocab::default_layout()
+    }
+
+    fn q_with_answer(ans: u32) -> Question {
+        Question {
+            id: 0,
+            kind: Kind::ChainSum,
+            ops: vec![ans],
+            corrupt_at: None,
+            prompt: vec![],
+            answer: Some(ans),
+        }
+    }
+
+    #[test]
+    fn extracts_after_ans_marker() {
+        let vb = v();
+        let tail = vec![vb.final_, vb.ans, vb.num(13), vb.eos];
+        assert_eq!(extract_answer(&vb, &tail), Some(13));
+    }
+
+    #[test]
+    fn extraction_skips_non_numbers() {
+        let vb = v();
+        // model babbles a VER marker after ANS before the value
+        let tail = vec![vb.ans, vb.ver, vb.num(7), vb.eos];
+        assert_eq!(extract_answer(&vb, &tail), Some(7));
+    }
+
+    #[test]
+    fn fallback_first_number() {
+        let vb = v();
+        // malformed tail without ANS marker
+        let tail = vec![vb.final_, vb.num(21), vb.eos];
+        assert_eq!(extract_answer(&vb, &tail), Some(21));
+    }
+
+    #[test]
+    fn no_number_is_none() {
+        let vb = v();
+        assert_eq!(extract_answer(&vb, &[vb.final_, vb.eos]), None);
+    }
+
+    #[test]
+    fn check_correct_and_incorrect() {
+        let vb = v();
+        let q = q_with_answer(5);
+        assert!(check_answer(&vb, &q, &[vb.ans, vb.num(5), vb.eos]));
+        assert!(!check_answer(&vb, &q, &[vb.ans, vb.num(6), vb.eos]));
+        assert!(!check_answer(&vb, &q, &[vb.eos]));
+    }
+
+    #[test]
+    fn unsolvable_never_correct() {
+        let vb = v();
+        let ds = Dataset::synth_gpqa(&vb, 50, 0);
+        let q = ds
+            .questions
+            .iter()
+            .find(|q| q.kind == Kind::Corrupted)
+            .unwrap();
+        // even if the model emits some number, it cannot be "correct"
+        assert!(!check_answer(&vb, q, &[vb.ans, vb.num(3), vb.eos]));
+    }
+}

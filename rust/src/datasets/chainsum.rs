@@ -1,0 +1,297 @@
+//! Chain-sum question generators.
+//!
+//! Difficulty is the operand count n (the model must execute n sequential
+//! additions). The benchmark analogues:
+//!
+//! | name            | paper benchmark | composition                        |
+//! |-----------------|-----------------|------------------------------------|
+//! | `synth-math500` | MATH-500        | 500 questions, n in 2..=6          |
+//! | `synth-aime`    | AIME-2025       | 30 questions, n in 7..=10          |
+//! | `synth-gpqa`    | GPQA-Diamond    | 100 questions, n in 3..=10, 25%    |
+//! |                 |                 | corrupted (unsolvable) + 10% OOD   |
+//! |                 |                 | length (n in 11..=12)              |
+//! | `synth-tool`    | BFCL subset     | 100 copy-task questions (I.2)      |
+
+use crate::util::rng::Rng;
+use crate::vocab::Vocab;
+
+/// Question category, determining evaluation handling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Standard chain-sum.
+    ChainSum,
+    /// An operand is masked with UNK: unsolvable, answer undeterminable.
+    Corrupted,
+    /// Chain longer than the training distribution (n > 10): the model
+    /// degrades — the paper's "decreasing Pass@1" error class (Fig. 15).
+    OutOfDistribution,
+    /// Tool-calling copy task (answer = last operand; reasoning optional).
+    ToolCall,
+}
+
+#[derive(Debug, Clone)]
+pub struct Question {
+    pub id: usize,
+    pub kind: Kind,
+    /// Operand values (the UNK position holds the original value for
+    /// bookkeeping; it is masked in `prompt`).
+    pub ops: Vec<u32>,
+    pub corrupt_at: Option<usize>,
+    /// Prompt token sequence: `BOS Q a_1 .. a_n SEP` (+THINK appended by
+    /// the engine).
+    pub prompt: Vec<u32>,
+    /// Ground-truth answer value; None when unsolvable.
+    pub answer: Option<u32>,
+}
+
+impl Question {
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn solvable(&self) -> bool {
+        self.answer.is_some()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub questions: Vec<Question>,
+}
+
+fn make_question(
+    vocab: &Vocab,
+    rng: &mut Rng,
+    id: usize,
+    n: usize,
+    kind: Kind,
+) -> Question {
+    let ops: Vec<u32> = (0..n).map(|_| rng.below(vocab.modulus as u64) as u32).collect();
+    let corrupt_at = if kind == Kind::Corrupted {
+        Some(rng.below(n as u64) as usize)
+    } else {
+        None
+    };
+    let marker = if kind == Kind::ToolCall { vocab.tool } else { vocab.q };
+    let mut prompt = vec![vocab.bos, marker];
+    for (i, &a) in ops.iter().enumerate() {
+        prompt.push(if corrupt_at == Some(i) {
+            vocab.unk
+        } else {
+            vocab.num(a)
+        });
+    }
+    prompt.push(vocab.sep);
+    let answer = match kind {
+        Kind::Corrupted => None,
+        Kind::ToolCall => Some(ops[n - 1]),
+        _ => Some(ops.iter().sum::<u32>() % vocab.modulus),
+    };
+    Question {
+        id,
+        kind,
+        ops,
+        corrupt_at,
+        prompt,
+        answer,
+    }
+}
+
+impl Dataset {
+    /// MATH-500 analogue: heavy-tailed difficulty (most questions easy, a
+    /// long tail of hard ones), all solvable. The tail is what makes
+    /// adaptive budgets pay off — a fixed budget must cover the rare hard
+    /// questions and therefore wastes tokens on the easy majority, exactly
+    /// the paper's §1 argument.
+    pub fn synth_math500(vocab: &Vocab, size: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0x4d415448);
+        let questions = (0..size)
+            .map(|id| {
+                let roll = rng.f64();
+                let n = if roll < 0.6 {
+                    rng.range(2, 4) // easy majority
+                } else if roll < 0.9 {
+                    rng.range(5, 7) // medium
+                } else {
+                    rng.range(8, 10) // hard tail
+                } as usize;
+                make_question(vocab, &mut rng, id, n, Kind::ChainSum)
+            })
+            .collect();
+        Dataset {
+            name: "synth-math500".into(),
+            questions,
+        }
+    }
+
+    /// AIME-2025 analogue: hard, long chains, all solvable.
+    pub fn synth_aime(vocab: &Vocab, size: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0x41494d45);
+        let questions = (0..size)
+            .map(|id| {
+                let n = rng.range(6, 10) as usize;
+                make_question(vocab, &mut rng, id, n, Kind::ChainSum)
+            })
+            .collect();
+        Dataset {
+            name: "synth-aime".into(),
+            questions,
+        }
+    }
+
+    /// GPQA-Diamond analogue: mixed difficulty with unsolvable (corrupted)
+    /// and out-of-distribution instances — the error-analysis benchmark.
+    pub fn synth_gpqa(vocab: &Vocab, size: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0x47505141);
+        let questions = (0..size)
+            .map(|id| {
+                let roll = rng.f64();
+                if roll < 0.25 {
+                    let n = rng.range(3, 10) as usize;
+                    make_question(vocab, &mut rng, id, n, Kind::Corrupted)
+                } else if roll < 0.35 {
+                    let n = rng.range(11, 12) as usize;
+                    make_question(vocab, &mut rng, id, n, Kind::OutOfDistribution)
+                } else {
+                    let n = rng.range(3, 10) as usize;
+                    make_question(vocab, &mut rng, id, n, Kind::ChainSum)
+                }
+            })
+            .collect();
+        Dataset {
+            name: "synth-gpqa".into(),
+            questions,
+        }
+    }
+
+    /// Tool-calling subset analogue (App. I.2).
+    pub fn synth_tool(vocab: &Vocab, size: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0x544f4f4c);
+        let questions = (0..size)
+            .map(|id| {
+                let n = rng.range(2, 6) as usize;
+                make_question(vocab, &mut rng, id, n, Kind::ToolCall)
+            })
+            .collect();
+        Dataset {
+            name: "synth-tool".into(),
+            questions,
+        }
+    }
+
+    /// Dataset registry used by the CLI.
+    pub fn by_name(name: &str, vocab: &Vocab, seed: u64) -> anyhow::Result<Dataset> {
+        Ok(match name {
+            "synth-math500" => Dataset::synth_math500(vocab, 500, seed),
+            "synth-math500-small" => Dataset::synth_math500(vocab, 60, seed),
+            "synth-aime" => Dataset::synth_aime(vocab, 30, seed),
+            "synth-gpqa" => Dataset::synth_gpqa(vocab, 100, seed),
+            "synth-gpqa-small" => Dataset::synth_gpqa(vocab, 40, seed),
+            "synth-tool" => Dataset::synth_tool(vocab, 100, seed),
+            other => anyhow::bail!(
+                "unknown dataset `{other}` (synth-math500[-small], \
+                 synth-aime, synth-gpqa[-small], synth-tool)"
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> Vocab {
+        Vocab::default_layout()
+    }
+
+    #[test]
+    fn math500_all_solvable_with_correct_answers() {
+        let ds = Dataset::synth_math500(&v(), 200, 0);
+        assert_eq!(ds.questions.len(), 200);
+        for q in &ds.questions {
+            assert!(q.solvable());
+            assert!((2..=10).contains(&q.n_ops()));
+            let want = q.ops.iter().sum::<u32>() % v().modulus;
+            assert_eq!(q.answer, Some(want));
+        }
+        // heavy tail: easy majority, rare hard questions
+        let easy = ds.questions.iter().filter(|q| q.n_ops() <= 4).count();
+        let hard = ds.questions.iter().filter(|q| q.n_ops() >= 8).count();
+        assert!(easy > 90, "easy={easy}");
+        assert!(hard > 5 && hard < 50, "hard={hard}");
+    }
+
+    #[test]
+    fn aime_is_harder() {
+        let ds = Dataset::synth_aime(&v(), 30, 0);
+        for q in &ds.questions {
+            assert!((6..=10).contains(&q.n_ops()));
+        }
+    }
+
+    #[test]
+    fn gpqa_has_unsolvable_and_ood() {
+        let ds = Dataset::synth_gpqa(&v(), 200, 0);
+        let corrupted = ds
+            .questions
+            .iter()
+            .filter(|q| q.kind == Kind::Corrupted)
+            .count();
+        let ood = ds
+            .questions
+            .iter()
+            .filter(|q| q.kind == Kind::OutOfDistribution)
+            .count();
+        assert!(corrupted > 20, "corrupted={corrupted}");
+        assert!(ood > 5, "ood={ood}");
+        for q in &ds.questions {
+            match q.kind {
+                Kind::Corrupted => {
+                    assert!(!q.solvable());
+                    // prompt contains the UNK mask
+                    assert!(q.prompt.contains(&v().unk));
+                }
+                Kind::OutOfDistribution => assert!(q.n_ops() >= 11),
+                _ => assert!(q.solvable()),
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_structure() {
+        let ds = Dataset::synth_math500(&v(), 5, 3);
+        for q in &ds.questions {
+            assert_eq!(q.prompt[0], v().bos);
+            assert_eq!(q.prompt[1], v().q);
+            assert_eq!(*q.prompt.last().unwrap(), v().sep);
+            assert_eq!(q.prompt.len(), q.n_ops() + 3);
+        }
+    }
+
+    #[test]
+    fn tool_answer_is_last_operand() {
+        let ds = Dataset::synth_tool(&v(), 20, 1);
+        for q in &ds.questions {
+            assert_eq!(q.prompt[1], v().tool);
+            assert_eq!(q.answer, Some(*q.ops.last().unwrap()));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Dataset::synth_math500(&v(), 10, 42);
+        let b = Dataset::synth_math500(&v(), 10, 42);
+        for (qa, qb) in a.questions.iter().zip(&b.questions) {
+            assert_eq!(qa.ops, qb.ops);
+        }
+        let c = Dataset::synth_math500(&v(), 10, 43);
+        assert!(a.questions.iter().zip(&c.questions).any(|(x, y)| x.ops != y.ops));
+    }
+
+    #[test]
+    fn registry() {
+        assert!(Dataset::by_name("synth-aime", &v(), 0).is_ok());
+        assert!(Dataset::by_name("nope", &v(), 0).is_err());
+    }
+}

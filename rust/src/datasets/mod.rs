@@ -1,0 +1,9 @@
+//! Benchmark datasets: synthetic analogues of the paper's MATH-500,
+//! AIME-2025 and GPQA-Diamond (DESIGN.md §1 substitution table), plus the
+//! tool-calling subset (App. I.2).
+
+pub mod answer;
+pub mod chainsum;
+
+pub use answer::check_answer;
+pub use chainsum::{Dataset, Question};

@@ -1,0 +1,14 @@
+//! Evaluation harness: trace generation (App. H simulated early exiting),
+//! persistence, offline replay, threshold sweeps and figure drivers.
+
+pub mod figures;
+pub mod plot;
+pub mod replay;
+pub mod store;
+pub mod sweep;
+pub mod tracegen;
+
+pub use replay::{replay, ReplayOutcome, Signal};
+pub use store::TraceSet;
+pub use sweep::{Curve, CurvePoint};
+pub use tracegen::TraceGen;

@@ -1,0 +1,130 @@
+//! Terminal ASCII plots for trajectories and efficiency curves, so the
+//! figure drivers give immediate visual feedback without a plotting stack
+//! (results/*.csv carry the precise data).
+
+/// Render one or more named series as an ASCII line chart.
+/// Each series is a list of (x, y); x need not be aligned across series.
+pub fn ascii_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.1.iter().cloned()).collect();
+    if all.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        if x.is_finite() {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+        }
+        if y.is_finite() {
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+    }
+    if !x0.is_finite() || !y0.is_finite() {
+        return format!("{title}: (no finite data)\n");
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        // draw with linear interpolation between consecutive points for
+        // continuous-looking lines
+        let mut sorted = pts.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in sorted.windows(2) {
+            let steps = width * 2;
+            for s in 0..=steps {
+                let t = s as f64 / steps as f64;
+                let x = w[0].0 + t * (w[1].0 - w[0].0);
+                let y = w[0].1 + t * (w[1].1 - w[0].1);
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+                let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+                let cy = height - 1 - cy.min(height - 1);
+                grid[cy][cx.min(width - 1)] = mark;
+            }
+        }
+        if sorted.len() == 1 {
+            let (x, y) = sorted[0];
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy.min(height - 1)][cx.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = format!("  {title}\n");
+    for (i, row) in grid.iter().enumerate() {
+        let yv = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+        out += &format!("  {yv:>9.3} |{}|\n", row.iter().collect::<String>());
+    }
+    out += &format!(
+        "  {:>9} +{}+\n  {:>9}  {:<w$.3}{:>r$.3}\n",
+        "",
+        "-".repeat(width),
+        "",
+        x0,
+        x1,
+        w = width / 2,
+        r = width - width / 2
+    );
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+        .collect();
+    out += &format!("  legend: {}\n", legend.join("   "));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic_chart() {
+        let s = ascii_chart(
+            "test",
+            &[("a", vec![(0.0, 0.0), (1.0, 1.0)]), ("b", vec![(0.0, 1.0), (1.0, 0.0)])],
+            40,
+            10,
+        );
+        assert!(s.contains("test"));
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("legend"));
+        assert_eq!(s.lines().count(), 14);
+    }
+
+    #[test]
+    fn handles_empty_and_degenerate() {
+        assert!(ascii_chart("e", &[("x", vec![])], 20, 5).contains("no data"));
+        let s = ascii_chart("c", &[("x", vec![(1.0, 2.0)])], 20, 5);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn ignores_nonfinite() {
+        let s = ascii_chart(
+            "nf",
+            &[("x", vec![(0.0, 1.0), (1.0, f64::INFINITY), (2.0, 2.0)])],
+            20,
+            5,
+        );
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,249 @@
+//! Offline replay: apply any exit policy to a recorded trace and compute
+//! the (tokens used, expected accuracy) outcome — the engine behind every
+//! threshold-sweep figure.
+
+use crate::exit::{ExitDecision, ExitPolicy, ExitReason, LineObs};
+use crate::monitor::Trace;
+
+/// Which recorded entropy stream feeds the policy (models x prefix
+/// variants of the paper's ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    /// Main model, prefix string appended (Eq. 13) — the headline EAT.
+    MainPrefixed,
+    /// Main model, bare `</think>` (Eq. 12).
+    MainPlain,
+    /// Proxy model, prefix string (black-box setting).
+    Proxy,
+    /// Entropy after newline (Eq. 14) — App. F's negative control.
+    Newline,
+}
+
+impl Signal {
+    pub fn extract(&self, p: &crate::monitor::LinePoint) -> Option<f64> {
+        match self {
+            Signal::MainPrefixed => Some(p.eat),
+            Signal::MainPlain => p.eat_plain,
+            Signal::Proxy => p.eat_proxy,
+            Signal::Newline => p.eat_newline,
+        }
+    }
+}
+
+/// Outcome of replaying one policy over one trace.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    /// Line at which the policy exited (None = consumed the whole trace).
+    pub exit_line: Option<usize>,
+    pub exit_reason: ExitReason,
+    /// Reasoning tokens actually spent.
+    pub reasoning_tokens: usize,
+    /// Extra tokens charged for signal evaluation (probes / rollouts).
+    pub overhead_tokens: usize,
+    /// Expected accuracy at the exit point: Pass@1(Avg@K) (Eq. 9).
+    pub accuracy: f64,
+    /// Analytic accuracy (exact probability of the correct answer).
+    pub accuracy_exact: f64,
+}
+
+/// Cost model for signal evaluation, in tokens per evaluation — the
+/// paper's accounting in Figs. 6b/21: an EAT probe costs suffix_len
+/// decode-equivalents; a #UA@K evaluation costs K rollouts of
+/// (suffix + answer + EOS); confidence costs one (suffix + 5) rollout.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub probe_suffix_tokens: usize,
+    pub answer_tokens: usize,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            probe_suffix_tokens: 3, // </think> Final: A
+            answer_tokens: 2,       // value + EOS
+        }
+    }
+}
+
+impl CostModel {
+    pub fn eat_eval(&self) -> usize {
+        // one forward pass over the suffix = suffix_len token-equivalents
+        self.probe_suffix_tokens
+    }
+
+    pub fn ua_eval(&self, k: usize) -> usize {
+        k * (self.probe_suffix_tokens + self.answer_tokens)
+    }
+
+    pub fn confidence_eval(&self) -> usize {
+        self.probe_suffix_tokens + 5
+    }
+}
+
+/// Replay `policy` over `trace`, feeding it the chosen signal stream.
+/// `charge_overhead` adds the signal-evaluation token cost to the outcome
+/// (Fig. 21 curves charge it; Fig. 3 reports raw reasoning tokens like the
+/// paper's main plots).
+pub fn replay(
+    trace: &Trace,
+    policy: &mut dyn ExitPolicy,
+    signal: Signal,
+    charge_overhead: bool,
+) -> ReplayOutcome {
+    policy.reset();
+    let needs = policy.needs();
+    let cost = CostModel::default();
+    let mut overhead = 0usize;
+
+    for (i, p) in trace.points.iter().enumerate() {
+        let mut obs = LineObs {
+            tokens: p.tokens,
+            ..Default::default()
+        };
+        if needs.eat {
+            obs.eat = signal.extract(p);
+            if obs.eat.is_none() {
+                // signal not recorded in this trace; treat as no-exit
+                obs.eat = Some(f64::NAN);
+            }
+            overhead += cost.eat_eval();
+        }
+        if needs.rollouts_k > 0 {
+            obs.unique_answers = Some(p.unique_answers.min(needs.rollouts_k));
+            // strided policies only roll out (and pay) every k-th line
+            if (i + 1) % needs.rollout_every == 0 {
+                overhead += cost.ua_eval(needs.rollouts_k);
+            }
+        }
+        if needs.confidence {
+            obs.confidence = p.confidence;
+            overhead += cost.confidence_eval();
+        }
+        if let ExitDecision::Exit(reason) = policy.observe(&obs) {
+            return ReplayOutcome {
+                exit_line: Some(p.line),
+                exit_reason: reason,
+                reasoning_tokens: p.tokens,
+                overhead_tokens: if charge_overhead { overhead } else { 0 },
+                accuracy: p.pass1_avgk,
+                accuracy_exact: p.p_correct,
+            };
+        }
+        let _ = i;
+    }
+
+    // ran through the whole recorded trace: the model either terminated by
+    // itself or hit the generation budget; outcome is the final point's.
+    let last = trace.points.last();
+    ReplayOutcome {
+        exit_line: None,
+        exit_reason: if trace.self_terminated {
+            ExitReason::SelfTerminated
+        } else {
+            ExitReason::TokenBudget
+        },
+        reasoning_tokens: trace.reasoning_tokens.len(),
+        overhead_tokens: if charge_overhead { overhead } else { 0 },
+        accuracy: last.map(|p| p.pass1_avgk).unwrap_or(0.0),
+        accuracy_exact: last.map(|p| p.p_correct).unwrap_or(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exit::{EatPolicy, TokenBudgetPolicy, UniqueAnswersPolicy};
+    use crate::monitor::LinePoint;
+
+    /// A trace whose EAT stabilizes from line 5 and Pass@1 saturates there.
+    fn synthetic_trace(n_lines: usize, stabilize_at: usize) -> Trace {
+        let points = (1..=n_lines)
+            .map(|i| {
+                let stable = i >= stabilize_at;
+                LinePoint {
+                    line: i,
+                    tokens: i * 3,
+                    eat: if stable { 0.05 } else { 2.5 + ((i % 2) as f64) },
+                    eat_proxy: Some(if stable { 0.1 } else { 2.5 }),
+                    eat_plain: Some(0.01),
+                    eat_newline: Some(1.0),
+                    vhat: f64::INFINITY,
+                    p_correct: if stable { 0.99 } else { 0.05 },
+                    pass1_avgk: if stable { 1.0 } else { 0.06 },
+                    unique_answers: if stable { 1 } else { 12 },
+                    confidence: Some(if stable { 0.95 } else { 0.3 }),
+                }
+            })
+            .collect();
+        Trace {
+            question_id: 0,
+            n_ops: 5,
+            answer: Some(7),
+            prompt_tokens: 8,
+            self_terminated: false,
+            reasoning_tokens: vec![0; n_lines * 3],
+            points,
+        }
+    }
+
+    #[test]
+    fn eat_exits_after_stabilization_with_high_accuracy() {
+        // with alpha=0.2 the post-transition variance spike decays at
+        // ~0.8/line, so a practical delta (0.05) exits ~20 lines after
+        // stabilization on a noisy start
+        let t = synthetic_trace(30, 5);
+        let mut p = EatPolicy::new(0.2, 0.05, 10_000);
+        let out = replay(&t, &mut p, Signal::MainPrefixed, false);
+        let line = out.exit_line.expect("should exit");
+        assert!(line > 5 && line < 30, "line={line}");
+        assert!(out.accuracy > 0.9);
+        assert!(out.reasoning_tokens < 90);
+    }
+
+    #[test]
+    fn token_budget_cuts_at_t() {
+        let t = synthetic_trace(30, 5);
+        let mut p = TokenBudgetPolicy::new(9);
+        let out = replay(&t, &mut p, Signal::MainPrefixed, false);
+        assert_eq!(out.exit_line, Some(3));
+        assert!(out.accuracy < 0.5); // exited before stabilization
+    }
+
+    #[test]
+    fn ua_converges() {
+        let t = synthetic_trace(30, 5);
+        let mut p = UniqueAnswersPolicy::new(32, 1, 10_000);
+        let out = replay(&t, &mut p, Signal::MainPrefixed, false);
+        assert_eq!(out.exit_line, Some(5));
+        assert!(out.accuracy > 0.9);
+    }
+
+    #[test]
+    fn overhead_charged_when_requested() {
+        let t = synthetic_trace(10, 4);
+        let mut p = UniqueAnswersPolicy::new(8, 1, 10_000);
+        let charged = replay(&t, &mut p, Signal::MainPrefixed, true);
+        let free = replay(&t, &mut p, Signal::MainPrefixed, false);
+        assert!(charged.overhead_tokens > 0);
+        assert_eq!(free.overhead_tokens, 0);
+        // #UA@8 charges 8*(3+2)=40 tokens per evaluated line
+        assert_eq!(charged.overhead_tokens, charged.exit_line.unwrap() * 40);
+    }
+
+    #[test]
+    fn proxy_signal_used() {
+        let t = synthetic_trace(30, 5);
+        let mut p = EatPolicy::new(0.2, 1e-2, 10_000);
+        let out = replay(&t, &mut p, Signal::Proxy, false);
+        assert!(out.exit_line.is_some());
+    }
+
+    #[test]
+    fn no_exit_consumes_whole_trace() {
+        let t = synthetic_trace(8, 100); // never stabilizes
+        let mut p = EatPolicy::new(0.2, 1e-12, 10_000);
+        let out = replay(&t, &mut p, Signal::MainPrefixed, false);
+        assert_eq!(out.exit_line, None);
+        assert_eq!(out.reasoning_tokens, 24);
+    }
+}

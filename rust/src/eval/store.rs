@@ -1,0 +1,126 @@
+//! Trace persistence: a dataset's traces in one JSON file so sweeps and
+//! figures replay offline without touching the models (App. H: "saving it
+//! once to disk, and replaying it offline ... at arbitrary thresholds").
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::monitor::Trace;
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct TraceSet {
+    pub dataset: String,
+    pub traces: Vec<Trace>,
+}
+
+impl TraceSet {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let js = Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            (
+                "traces",
+                Json::arr(self.traces.iter().map(|t| t.to_json())),
+            ),
+        ]);
+        std::fs::write(path, js.to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TraceSet> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {} (run `repro trace` first)", path.display()))?;
+        let js = json::parse(&text)?;
+        let traces = js
+            .req("traces")?
+            .as_arr()
+            .context("traces must be an array")?
+            .iter()
+            .map(Trace::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TraceSet {
+            dataset: js.req_str("dataset")?.to_string(),
+            traces,
+        })
+    }
+
+    /// Solvable-subset filter used for the GPQA figures (App. I.4: "only
+    /// kept problems for which the models eventually reached Pass@1 >
+    /// 0.8").
+    pub fn filter_solvable(&self, min_final_pass1: f64) -> TraceSet {
+        TraceSet {
+            dataset: format!("{}-solvable", self.dataset),
+            traces: self
+                .traces
+                .iter()
+                .filter(|t| {
+                    t.points
+                        .last()
+                        .map(|p| p.pass1_avgk > min_final_pass1)
+                        .unwrap_or(false)
+                })
+                .cloned()
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::LinePoint;
+
+    fn mk_trace(id: usize, final_pass1: f64) -> Trace {
+        Trace {
+            question_id: id,
+            n_ops: 3,
+            answer: Some(1),
+            prompt_tokens: 6,
+            self_terminated: false,
+            reasoning_tokens: vec![5, 5],
+            points: vec![LinePoint {
+                line: 1,
+                tokens: 3,
+                eat: 1.0,
+                eat_proxy: None,
+                eat_plain: None,
+                eat_newline: None,
+                vhat: 0.5,
+                p_correct: final_pass1,
+                pass1_avgk: final_pass1,
+                unique_answers: 2,
+                confidence: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ts = TraceSet {
+            dataset: "unit".into(),
+            traces: vec![mk_trace(0, 0.9), mk_trace(1, 0.2)],
+        };
+        let path = std::env::temp_dir().join("eat_traceset_test.json");
+        ts.save(&path).unwrap();
+        let back = TraceSet::load(&path).unwrap();
+        assert_eq!(back.dataset, "unit");
+        assert_eq!(back.traces.len(), 2);
+        assert_eq!(back.traces[1].question_id, 1);
+    }
+
+    #[test]
+    fn solvable_filter() {
+        let ts = TraceSet {
+            dataset: "unit".into(),
+            traces: vec![mk_trace(0, 0.9), mk_trace(1, 0.2)],
+        };
+        let f = ts.filter_solvable(0.8);
+        assert_eq!(f.traces.len(), 1);
+        assert_eq!(f.traces[0].question_id, 0);
+    }
+}

@@ -1,0 +1,322 @@
+//! Threshold sweeps: build the Agg. Pass@1 vs total-token-usage curves of
+//! §5.2/5.3 for every policy family, and the AUC efficiency metric.
+
+use crate::exit::{ConfidencePolicy, EatPolicy, TokenBudgetPolicy, UniqueAnswersPolicy};
+use crate::util::stats::auc_normalized;
+
+use super::replay::{replay, Signal};
+use super::store::TraceSet;
+
+/// One point of an efficiency curve (a threshold setting evaluated over a
+/// whole dataset).
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    /// The threshold that produced this point (delta, T, or Delta).
+    pub threshold: f64,
+    /// Total tokens over the dataset (reasoning + charged overhead).
+    pub total_tokens: f64,
+    /// Agg. Pass@1 (Eq. 11).
+    pub agg_pass1: f64,
+    /// Mean exit line (for diagnostics).
+    pub mean_exit_line: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub label: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    /// AUC of accuracy over normalized token usage (§5.2).
+    pub fn auc(&self) -> f64 {
+        auc_normalized(
+            &self
+                .points
+                .iter()
+                .map(|p| (p.total_tokens, p.agg_pass1))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Tokens needed to reach (within the sweep) at least `acc` accuracy;
+    /// None if never reached. Used for the headline "X% token saving at
+    /// iso-accuracy" numbers.
+    pub fn tokens_at_accuracy(&self, acc: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.agg_pass1 >= acc)
+            .map(|p| p.total_tokens)
+            .fold(None, |m: Option<f64>, t| {
+                Some(m.map_or(t, |m| m.min(t)))
+            })
+    }
+}
+
+fn aggregate(
+    traces: &TraceSet,
+    mut mk: impl FnMut() -> Box<dyn crate::exit::ExitPolicy>,
+    signal: Signal,
+    charge_overhead: bool,
+    threshold: f64,
+) -> CurvePoint {
+    let mut tokens = 0.0;
+    let mut acc = 0.0;
+    let mut lines = 0.0;
+    for t in &traces.traces {
+        let mut policy = mk();
+        let out = replay(t, policy.as_mut(), signal, charge_overhead);
+        tokens += (out.reasoning_tokens + out.overhead_tokens) as f64;
+        acc += out.accuracy;
+        lines += out.exit_line.unwrap_or(t.points.len()) as f64;
+    }
+    let n = traces.traces.len().max(1) as f64;
+    CurvePoint {
+        threshold,
+        total_tokens: tokens,
+        agg_pass1: acc / n,
+        mean_exit_line: lines / n,
+    }
+}
+
+/// EAT sweep over variance thresholds delta (paper: 2^-{0..39}).
+pub fn sweep_eat(
+    traces: &TraceSet,
+    signal: Signal,
+    alpha: f64,
+    deltas: &[f64],
+    max_tokens: usize,
+    charge_overhead: bool,
+    label: &str,
+) -> Curve {
+    let points = deltas
+        .iter()
+        .map(|&d| {
+            aggregate(
+                traces,
+                || Box::new(EatPolicy::new(alpha, d, max_tokens)),
+                signal,
+                charge_overhead,
+                d,
+            )
+        })
+        .collect();
+    Curve {
+        label: label.to_string(),
+        points,
+    }
+}
+
+/// Token-budget sweep over T (paper: 250 * {1..40}).
+pub fn sweep_token(traces: &TraceSet, ts: &[usize], label: &str) -> Curve {
+    let points = ts
+        .iter()
+        .map(|&t| {
+            aggregate(
+                traces,
+                || Box::new(TokenBudgetPolicy::new(t)),
+                Signal::MainPrefixed,
+                false,
+                t as f64,
+            )
+        })
+        .collect();
+    Curve {
+        label: label.to_string(),
+        points,
+    }
+}
+
+/// #UA@K sweep over Delta for one K (paper: Delta in {1,2,3}, K in
+/// {8,16,32}).
+pub fn sweep_ua(
+    traces: &TraceSet,
+    k: usize,
+    thresholds: &[usize],
+    max_tokens: usize,
+    charge_overhead: bool,
+    every: usize,
+    label: &str,
+) -> Curve {
+    let points = thresholds
+        .iter()
+        .map(|&d| {
+            aggregate(
+                traces,
+                || Box::new(UniqueAnswersPolicy::with_stride(k, d, max_tokens, every)),
+                Signal::MainPrefixed,
+                charge_overhead,
+                d as f64,
+            )
+        })
+        .collect();
+    Curve {
+        label: label.to_string(),
+        points,
+    }
+}
+
+/// Confidence sweep over delta (Fig. 4).
+pub fn sweep_confidence(
+    traces: &TraceSet,
+    alpha: f64,
+    deltas: &[f64],
+    max_tokens: usize,
+    charge_overhead: bool,
+    label: &str,
+) -> Curve {
+    let points = deltas
+        .iter()
+        .map(|&d| {
+            aggregate(
+                traces,
+                || Box::new(ConfidencePolicy::new(alpha, d, max_tokens)),
+                Signal::MainPrefixed,
+                charge_overhead,
+                d,
+            )
+        })
+        .collect();
+    Curve {
+        label: label.to_string(),
+        points,
+    }
+}
+
+/// Default delta sweep: 2^0 .. 2^-23 (the paper sweeps to 2^-39; our EAT
+/// floors are higher because the vocab is small).
+pub fn default_deltas() -> Vec<f64> {
+    (0..24).map(|i| 2f64.powi(-i)).collect()
+}
+
+/// Default token budgets: 6 * {1..16} reasoning tokens (scaled from the
+/// paper's 250 * {1..40} against 10K budgets).
+pub fn default_token_budgets(max: usize) -> Vec<usize> {
+    let step = (max / 16).max(1);
+    (1..=16).map(|i| i * step).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::{LinePoint, Trace};
+
+    fn mk_traces() -> TraceSet {
+        // 3 questions of widely-spread difficulty, stabilizing at lines
+        // 2, 10 and 40 of a 60-line trace (adaptivity is what EAT exploits)
+        let traces = [2usize, 10, 40]
+            .iter()
+            .enumerate()
+            .map(|(id, &st)| Trace {
+                question_id: id,
+                n_ops: st,
+                answer: Some(1),
+                prompt_tokens: 6,
+                self_terminated: false,
+                reasoning_tokens: vec![0; 180],
+                points: (1..=60)
+                    .map(|i| LinePoint {
+                        line: i,
+                        tokens: i * 3,
+                        eat: if i >= st { 0.02 } else { 2.0 + (i % 2) as f64 },
+                        eat_proxy: Some(if i >= st { 0.05 } else { 2.2 + (i % 2) as f64 }),
+                        eat_plain: None,
+                        eat_newline: None,
+                        vhat: f64::INFINITY,
+                        p_correct: if i >= st { 0.98 } else { 0.1 },
+                        pass1_avgk: if i >= st { 1.0 } else { 0.1 },
+                        unique_answers: if i >= st { 1 } else { 10 },
+                        confidence: Some(if i >= st { 0.9 } else { 0.2 }),
+                    })
+                    .collect(),
+            })
+            .collect();
+        TraceSet {
+            dataset: "unit".into(),
+            traces,
+        }
+    }
+
+    #[test]
+    fn eat_beats_token_budget_auc() {
+        // The core paper claim in miniature: with per-question adaptive
+        // exits, EAT reaches high accuracy with fewer total tokens than
+        // any fixed budget.
+        let ts = mk_traces();
+        let eat = sweep_eat(
+            &ts,
+            Signal::MainPrefixed,
+            0.2,
+            &default_deltas(),
+            10_000,
+            false,
+            "eat",
+        );
+        let tok = sweep_token(
+            &ts,
+            &(1..=15).map(|i| i * 12).collect::<Vec<_>>(),
+            "token",
+        );
+        assert!(eat.auc() > tok.auc(), "eat={} tok={}", eat.auc(), tok.auc());
+    }
+
+    #[test]
+    fn iso_accuracy_saving() {
+        let ts = mk_traces();
+        let eat = sweep_eat(
+            &ts,
+            Signal::MainPrefixed,
+            0.2,
+            &default_deltas(),
+            10_000,
+            false,
+            "eat",
+        );
+        let tok = sweep_token(&ts, &(1..=60).map(|i| i * 3).collect::<Vec<_>>(), "token");
+        let e = eat.tokens_at_accuracy(0.95).unwrap();
+        let t = tok.tokens_at_accuracy(0.95).unwrap();
+        assert!(e < t, "eat tokens {e} >= budget tokens {t}");
+    }
+
+    #[test]
+    fn ua_charged_overhead_dominates() {
+        // Fig. 6b in miniature: with overhead charged, #UA@32 uses far
+        // more tokens than EAT at the same accuracy.
+        let ts = mk_traces();
+        let ua = sweep_ua(&ts, 32, &[1], 10_000, true, 1, "ua32");
+        let eat = sweep_eat(
+            &ts,
+            Signal::MainPrefixed,
+            0.2,
+            &[1e-4],
+            10_000,
+            true,
+            "eat",
+        );
+        assert!(ua.points[0].total_tokens > 3.0 * eat.points[0].total_tokens);
+    }
+
+    #[test]
+    fn curve_helpers() {
+        let c = Curve {
+            label: "x".into(),
+            points: vec![
+                CurvePoint {
+                    threshold: 1.0,
+                    total_tokens: 10.0,
+                    agg_pass1: 0.5,
+                    mean_exit_line: 2.0,
+                },
+                CurvePoint {
+                    threshold: 0.5,
+                    total_tokens: 20.0,
+                    agg_pass1: 0.9,
+                    mean_exit_line: 4.0,
+                },
+            ],
+        };
+        assert_eq!(c.tokens_at_accuracy(0.8), Some(20.0));
+        assert_eq!(c.tokens_at_accuracy(0.99), None);
+        assert!(c.auc() > 0.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Trace generation — the paper's *simulated early exiting* protocol
+//! (App. H): generate ONE long reasoning chain per question (no exits),
+//! record every per-line signal, and replay offline at arbitrary
+//! thresholds "without re-querying the model".
+//!
+//! Per reasoning line we record: EAT with the prefix string (Eq. 13), EAT
+//! without it (Eq. 12, App. D ablation), entropy-after-newline (Eq. 14,
+//! App. F), proxy-model EAT (black-box setting), the analytic + sampled
+//! Pass@1(Avg@K) (Eq. 9), #UA@K, and the confidence score (Eq. 16).
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::datasets::Question;
+use crate::monitor::{EmaVar, LinePoint, Trace};
+use crate::runtime::{KvCache, Runtime};
+use crate::sampler::Sampler;
+use crate::util::rng::Rng;
+
+/// Rollout count K of Pass@1(Avg@K) / #UA@K (paper: 128).
+pub const AVG_K: usize = 128;
+
+pub struct TraceGen<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: ServeConfig,
+    /// Record the monitor model's EAT alongside (costs a parallel decode).
+    pub with_proxy: bool,
+    /// Record the confidence score (costs a forked 8-step rollout/line).
+    pub with_confidence: bool,
+    /// Swap roles (Fig. 11): the *proxy* model reasons, the *main* model
+    /// monitors. In the emitted trace, `eat` is the reasoner's own entropy
+    /// and `eat_proxy` is the cross-model monitor's.
+    pub swap_models: bool,
+}
+
+impl<'a> TraceGen<'a> {
+    pub fn new(rt: &'a Runtime, cfg: ServeConfig) -> TraceGen<'a> {
+        TraceGen {
+            rt,
+            cfg,
+            with_proxy: true,
+            with_confidence: true,
+            swap_models: false,
+        }
+    }
+
+    /// (reasoner, monitor) model pair per `swap_models`.
+    fn models(&self) -> (&'a crate::runtime::ModelRuntime, &'a crate::runtime::ModelRuntime) {
+        if self.swap_models {
+            (&self.rt.proxy, &self.rt.main)
+        } else {
+            (&self.rt.main, &self.rt.proxy)
+        }
+    }
+
+    /// Generate the monitored trace for one question.
+    pub fn run(&self, q: &Question, seed: u64) -> Result<Trace> {
+        let rt = self.rt;
+        let (reasoner, monitor) = self.models();
+        let vocab = rt.cfg.vocab;
+        let mut rng = Rng::new(seed ^ (q.id as u64).wrapping_mul(0x9E3779B9));
+        let sampler = Sampler::new(self.cfg.temperature, self.cfg.top_p);
+
+        let mut prompt = q.prompt.clone();
+        prompt.push(vocab.think);
+        let (mut logits, mut cache) = reasoner.prefill(&rt.client, &prompt)?;
+        let mut proxy_cache = if self.with_proxy {
+            Some(monitor.prefill(&rt.client, &prompt)?.1)
+        } else {
+            None
+        };
+
+        let mut ema = EmaVar::new(self.cfg.alpha);
+        let mut reasoning = Vec::new();
+        let mut points = Vec::new();
+        let mut line = 0usize;
+        let mut self_terminated = false;
+
+        loop {
+            if reasoning.len() >= self.cfg.max_think_tokens
+                || cache.pos + 8 >= reasoner.cfg.seq_len
+            {
+                break;
+            }
+            let tok = sampler.sample(&logits, &mut rng);
+            if tok == vocab.ethink {
+                self_terminated = true;
+                break;
+            }
+            logits = reasoner.decode(&rt.client, &mut cache, tok)?;
+            if let Some(pc) = proxy_cache.as_mut() {
+                monitor.decode(&rt.client, pc, tok)?;
+            }
+            reasoning.push(tok);
+
+            if tok == vocab.nl {
+                line += 1;
+                let p = self.line_point(
+                    q,
+                    line,
+                    reasoning.len(),
+                    &cache,
+                    proxy_cache.as_ref(),
+                    &mut ema,
+                    &sampler,
+                    &mut rng,
+                )?;
+                points.push(p);
+            }
+        }
+
+        Ok(Trace {
+            question_id: q.id,
+            n_ops: q.n_ops(),
+            answer: q.answer,
+            prompt_tokens: prompt.len(),
+            self_terminated,
+            reasoning_tokens: reasoning,
+            points,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn line_point(
+        &self,
+        q: &Question,
+        line: usize,
+        tokens: usize,
+        cache: &KvCache,
+        proxy_cache: Option<&KvCache>,
+        ema: &mut EmaVar,
+        sampler: &Sampler,
+        rng: &mut Rng,
+    ) -> Result<LinePoint> {
+        let rt = self.rt;
+        let (reasoner, monitor) = self.models();
+        let vocab = rt.cfg.vocab;
+
+        // EAT with prefix string (Eq. 13) — the headline signal; its probe
+        // logits also give the forced-answer distribution for Pass@1.
+        // Tool-calling questions use the Eq. 15 variant: the probe appends
+        // the tool-call opener `[` the way the paper appends it after
+        // </think> (the trained answer format differs for tool calls).
+        let answer_suffix = if q.kind == crate::datasets::chainsum::Kind::ToolCall {
+            vocab.suffix_tool()
+        } else {
+            vocab.suffix_prefixed()
+        };
+        let (eat, ans_logits) = reasoner.probe(&rt.client, cache, &answer_suffix)?;
+        // EAT without prefix (Eq. 12)
+        let (eat_plain, _) =
+            reasoner.probe(&rt.client, cache, &vocab.suffix_plain())?;
+        // entropy after newline (Eq. 14)
+        let (eat_nl, _) =
+            reasoner.probe(&rt.client, cache, &vocab.suffix_newline())?;
+        // cross-model EAT (black-box monitor)
+        let eat_proxy = match proxy_cache {
+            Some(pc) => Some(
+                monitor
+                    .probe(&rt.client, pc, &vocab.suffix_prefixed())?
+                    .0 as f64,
+            ),
+            None => None,
+        };
+
+        let vhat = ema.update(eat as f64);
+
+        // Pass@1(Avg@K), Eq. 9: the answer is the single token after the
+        // forced suffix, so the rollout distribution IS the probed logits
+        // under the serve-time sampler.
+        let probs = sampler.probs(&ans_logits);
+        let p_correct = q
+            .answer
+            .map(|a| probs[vocab.num(a) as usize] as f64)
+            .unwrap_or(0.0);
+        let mut hits = 0usize;
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..AVG_K {
+            let t = sampler.sample(&ans_logits, rng);
+            seen.insert(t);
+            if let (Some(a), Some(v)) = (q.answer, vocab.num_value(t)) {
+                hits += (v == a) as usize;
+            }
+        }
+
+        let confidence = if self.with_confidence {
+            Some(self.confidence(cache)?)
+        } else {
+            None
+        };
+
+        Ok(LinePoint {
+            line,
+            tokens,
+            eat: eat as f64,
+            eat_proxy,
+            eat_plain: Some(eat_plain as f64),
+            eat_newline: Some(eat_nl as f64),
+            vhat,
+            p_correct,
+            pass1_avgk: hits as f64 / AVG_K as f64,
+            unique_answers: seen.len(),
+            confidence,
+        })
+    }
+
+    /// Confidence (Eq. 16): greedy 5-token rollout on a forked cache.
+    fn confidence(&self, cache: &KvCache) -> Result<f64> {
+        let rt = self.rt;
+        let (reasoner, _) = self.models();
+        let suffix = rt.cfg.vocab.suffix_prefixed();
+        let mut fork = reasoner.fork_cache(&rt.client, cache)?;
+        let mut logits = Vec::new();
+        for &t in &suffix {
+            logits = reasoner.decode(&rt.client, &mut fork, t)?;
+        }
+        let mut lp = 0.0f64;
+        let mut n = 0usize;
+        for _ in 0..5 {
+            if fork.pos >= reasoner.cfg.seq_len {
+                break;
+            }
+            let tok = crate::sampler::argmax(&logits);
+            lp += Sampler::logprob(&logits, tok);
+            logits = reasoner.decode(&rt.client, &mut fork, tok)?;
+            n += 1;
+        }
+        Ok((lp / n.max(1) as f64).exp())
+    }
+}

@@ -1,0 +1,112 @@
+//! Confidence baseline (Yang et al. 2025b, Eq. 16): length-normalized
+//! likelihood of a greedy 5-token answer rollout,
+//!
+//!   Conf(R) = exp( (1/T) sum_t log p(a_t | R, a_<t) ),
+//!
+//! stabilized with the same EMA-variance rule as EAT (the paper's Fig. 4
+//! comparison applies identical alpha windows to both signals). Roughly 5x
+//! the evaluation cost of EAT because of the rollout.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+use crate::monitor::EmaVar;
+
+#[derive(Debug, Clone)]
+pub struct ConfidencePolicy {
+    pub alpha: f64,
+    pub delta: f64,
+    pub max_tokens: usize,
+    /// Rollout length T of Eq. 16 (5 in the paper).
+    pub rollout_len: usize,
+    ema: EmaVar,
+}
+
+impl ConfidencePolicy {
+    pub fn new(alpha: f64, delta: f64, max_tokens: usize) -> Self {
+        ConfidencePolicy {
+            alpha,
+            delta,
+            max_tokens,
+            rollout_len: 5,
+            ema: EmaVar::new(alpha),
+        }
+    }
+
+    pub fn vhat(&self) -> f64 {
+        self.ema.debiased_var()
+    }
+}
+
+impl ExitPolicy for ConfidencePolicy {
+    fn name(&self) -> String {
+        format!(
+            "confidence(alpha={},delta={:.3e},T={})",
+            self.alpha, self.delta, self.max_tokens
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        let conf = obs
+            .confidence
+            .expect("ConfidencePolicy requires the confidence signal");
+        let vhat = self.ema.update(conf);
+        if vhat < self.delta {
+            return ExitDecision::Exit(ExitReason::Stable);
+        }
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.ema = EmaVar::new(self.alpha);
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            confidence: true,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tokens: usize, conf: f64) -> LineObs {
+        LineObs {
+            tokens,
+            confidence: Some(conf),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exits_on_stable_confidence() {
+        let mut p = ConfidencePolicy::new(0.2, 1e-5, 10_000);
+        for i in 0..8 {
+            assert!(!p
+                .observe(&obs(i * 3, 0.3 + 0.2 * (i % 2) as f64))
+                .is_exit());
+        }
+        let mut exited = false;
+        for i in 8..60 {
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, 0.97)) {
+                assert_eq!(r, ExitReason::Stable);
+                exited = true;
+                break;
+            }
+        }
+        assert!(exited);
+    }
+
+    #[test]
+    fn needs_confidence_only() {
+        let n = ConfidencePolicy::new(0.2, 1e-4, 10).needs();
+        assert!(n.confidence && !n.eat && n.rollouts_k == 0);
+    }
+}

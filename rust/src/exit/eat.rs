@@ -1,0 +1,157 @@
+//! Alg. 1: EAT-based early exiting via EMA variance thresholding.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+use crate::monitor::EmaVar;
+
+#[derive(Debug, Clone)]
+pub struct EatPolicy {
+    /// EMA timescale alpha (Eq. 7/8); paper default 0.2.
+    pub alpha: f64,
+    /// Variance threshold delta (line 9); swept over 2^-{0..39} in §5.3.
+    pub delta: f64,
+    /// Max thinking tokens T.
+    pub max_tokens: usize,
+    ema: EmaVar,
+}
+
+impl EatPolicy {
+    pub fn new(alpha: f64, delta: f64, max_tokens: usize) -> EatPolicy {
+        EatPolicy {
+            alpha,
+            delta,
+            max_tokens,
+            ema: EmaVar::new(alpha),
+        }
+    }
+
+    /// Current de-biased variance (for traces/figures).
+    pub fn vhat(&self) -> f64 {
+        self.ema.debiased_var()
+    }
+}
+
+impl ExitPolicy for EatPolicy {
+    fn name(&self) -> String {
+        format!(
+            "eat(alpha={},delta={:.3e},T={})",
+            self.alpha, self.delta, self.max_tokens
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        let eat = obs
+            .eat
+            .expect("EatPolicy requires the EAT signal (needs().eat)");
+        let vhat = self.ema.update(eat);
+        if vhat < self.delta {
+            return ExitDecision::Exit(ExitReason::Stable);
+        }
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.ema = EmaVar::new(self.alpha);
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            eat: true,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tokens: usize, eat: f64) -> LineObs {
+        LineObs {
+            tokens,
+            eat: Some(eat),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exits_when_signal_stabilizes() {
+        let mut p = EatPolicy::new(0.2, 1e-4, 1000);
+        // noisy phase: no exit
+        for i in 0..10 {
+            let d = p.observe(&obs(i * 3, 3.0 + (i % 3) as f64));
+            assert_eq!(d, ExitDecision::Continue, "line {i}");
+        }
+        // stable phase: must exit with Stable
+        let mut exited = false;
+        for i in 10..80 {
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, 0.05)) {
+                assert_eq!(r, ExitReason::Stable);
+                exited = true;
+                break;
+            }
+        }
+        assert!(exited);
+    }
+
+    #[test]
+    fn budget_backstop() {
+        let mut p = EatPolicy::new(0.2, 1e-12, 30);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut last = ExitDecision::Continue;
+        for i in 1..=11 {
+            last = p.observe(&obs(i * 3, rng.f64() * 4.0));
+            if last.is_exit() {
+                break;
+            }
+        }
+        assert_eq!(last, ExitDecision::Exit(ExitReason::TokenBudget));
+    }
+
+    #[test]
+    fn self_termination_wins() {
+        let mut p = EatPolicy::new(0.2, 1e-4, 1000);
+        let d = p.observe(&LineObs {
+            tokens: 3,
+            eat: Some(2.0),
+            self_terminated: true,
+            ..Default::default()
+        });
+        assert_eq!(d, ExitDecision::Exit(ExitReason::SelfTerminated));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = EatPolicy::new(0.2, 1e-4, 1000);
+        for i in 0..50 {
+            p.observe(&obs(i, 0.5));
+        }
+        assert!(p.vhat() < 1e-4);
+        p.reset();
+        assert!(p.vhat().is_infinite());
+    }
+
+    #[test]
+    fn smaller_delta_exits_later() {
+        // identical decaying-noise signal; the stricter threshold must
+        // exit at a later line (the paper's compute/performance dial)
+        let signal: Vec<f64> = (0..200)
+            .map(|i| 3.0 * (-(i as f64) / 20.0).exp() * (1.0 + 0.1 * ((i * 7) % 3) as f64))
+            .collect();
+        let exit_line = |delta: f64| -> usize {
+            let mut p = EatPolicy::new(0.2, delta, usize::MAX);
+            for (i, &e) in signal.iter().enumerate() {
+                if p.observe(&obs(i * 3, e)).is_exit() {
+                    return i;
+                }
+            }
+            signal.len()
+        };
+        assert!(exit_line(1e-2) < exit_line(1e-6));
+    }
+}

@@ -1,0 +1,112 @@
+//! Early-exit policies: the paper's contribution (EAT, Alg. 1) and every
+//! baseline it compares against (token budget Alg. 2, #UA@K Alg. 3,
+//! confidence Eq. 16).
+//!
+//! A policy is a pure state machine over per-line observations, so the
+//! same implementation runs both *online* in the serving engine and
+//! *offline* in the replay harness (paper App. H simulated early exiting).
+
+pub mod confidence;
+pub mod eat;
+pub mod stall;
+pub mod token_budget;
+pub mod unique_answers;
+
+pub use confidence::ConfidencePolicy;
+pub use eat::EatPolicy;
+pub use stall::StallAwareEatPolicy;
+pub use token_budget::TokenBudgetPolicy;
+pub use unique_answers::UniqueAnswersPolicy;
+
+/// What a policy sees at each reasoning-line boundary. Fields are optional
+/// because different policies consume different (and differently-priced)
+/// signals; the engine only computes what the active policy needs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LineObs {
+    /// Total reasoning tokens committed so far (|R| in Alg. 1).
+    pub tokens: usize,
+    /// EAT value (Eq. 5) for this line, if probed.
+    pub eat: Option<f64>,
+    /// Number of unique answers among K rollouts, if rolled out.
+    pub unique_answers: Option<usize>,
+    /// Confidence score (Eq. 16), if rolled out.
+    pub confidence: Option<f64>,
+    /// The model generated `</think>` by itself.
+    pub self_terminated: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    /// Signal stabilized (V' < delta) — the adaptive exit.
+    Stable,
+    /// Fixed token budget T exhausted.
+    TokenBudget,
+    /// The model ended its own reasoning with `</think>`.
+    SelfTerminated,
+    /// #UA@K dropped to the Delta threshold (Alg. 3 line 7).
+    AnswersConverged,
+    /// Progress stalled (§6 extension): EAT stuck high or V-hat decaying
+    /// too slowly to ever reach delta — give up instead of burning budget.
+    Stalled,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitDecision {
+    Continue,
+    Exit(ExitReason),
+}
+
+impl ExitDecision {
+    pub fn is_exit(&self) -> bool {
+        matches!(self, ExitDecision::Exit(_))
+    }
+}
+
+/// An early-exit policy.
+pub trait ExitPolicy {
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+    /// Observe one reasoning-line boundary and decide.
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision;
+    /// Reset per-request state (policies are reused across requests).
+    fn reset(&mut self);
+    /// Which signals this policy needs the engine to compute.
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds::default()
+    }
+}
+
+/// Signal requirements, so the engine can skip expensive probes/rollouts
+/// the active policy does not use (the crux of the paper's cost analysis:
+/// EAT needs one probe, #UA@K needs K rollouts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SignalNeeds {
+    pub eat: bool,
+    pub rollouts_k: usize,
+    /// Rollouts are evaluated only every `rollout_every` lines (Fig. 19's
+    /// budget-matched sparse evaluation; 1 = every line as in Alg. 3).
+    pub rollout_every: usize,
+    pub confidence: bool,
+}
+
+impl Default for SignalNeeds {
+    fn default() -> Self {
+        SignalNeeds {
+            eat: false,
+            rollouts_k: 0,
+            rollout_every: 1,
+            confidence: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_helpers() {
+        assert!(!ExitDecision::Continue.is_exit());
+        assert!(ExitDecision::Exit(ExitReason::Stable).is_exit());
+    }
+}

@@ -1,0 +1,214 @@
+//! Stall-detection policy — the paper's §6 future-work extension ("a
+//! complementary lower-threshold mechanism that halts when progress
+//! stalls, e.g., when EAT's variance decays too slowly"; feasibility shown
+//! by the follow-up Wang et al. 2026).
+//!
+//! The failure mode it fixes: on *unsolvable* questions EAT stays high and
+//! noisy, V-hat never crosses delta, and Alg. 1 burns the entire budget
+//! (Fig. 14 / App. I.4). `StallAwareEatPolicy` layers two extra rules on
+//! top of Alg. 1:
+//!
+//!  1. **level stall**: the EMA *mean* of EAT has stayed above
+//!     `high_level` for `patience` consecutive lines — the model is still
+//!     maximally uncertain after substantial reasoning; give up early.
+//!  2. **decay stall**: V-hat's relative decay over the last `patience`
+//!     lines is below `min_decay` — the variance plateaued far above
+//!     delta and will not reach it within the budget; extrapolate and
+//!     give up.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+use crate::monitor::EmaVar;
+
+#[derive(Debug, Clone)]
+pub struct StallAwareEatPolicy {
+    pub alpha: f64,
+    pub delta: f64,
+    pub max_tokens: usize,
+    /// EAT level (nats) considered "still fully uncertain". With a
+    /// 32-answer space, uniform is log(32) = 3.47.
+    pub high_level: f64,
+    /// Consecutive stalled lines before giving up.
+    pub patience: usize,
+    /// Minimum relative V-hat decay per line (e.g. 0.02 = 2%/line).
+    pub min_decay: f64,
+    ema: EmaVar,
+    vhat_history: Vec<f64>,
+    high_streak: usize,
+    min_lines: usize,
+}
+
+impl StallAwareEatPolicy {
+    pub fn new(alpha: f64, delta: f64, max_tokens: usize) -> Self {
+        StallAwareEatPolicy {
+            alpha,
+            delta,
+            max_tokens,
+            high_level: 3.0,
+            patience: 8,
+            min_decay: 0.01,
+            ema: EmaVar::new(alpha),
+            vhat_history: Vec::new(),
+            high_streak: 0,
+            min_lines: 4,
+        }
+    }
+}
+
+impl ExitPolicy for StallAwareEatPolicy {
+    fn name(&self) -> String {
+        format!(
+            "eat-stall(alpha={},delta={:.3e},high={},patience={})",
+            self.alpha, self.delta, self.high_level, self.patience
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        let eat = obs.eat.expect("StallAwareEatPolicy requires EAT");
+        let vhat = self.ema.update(eat);
+        self.vhat_history.push(vhat);
+        let lines = self.vhat_history.len();
+
+        // Alg. 1 core rule
+        if vhat < self.delta {
+            return ExitDecision::Exit(ExitReason::Stable);
+        }
+
+        // extension 1: level stall — still maximally uncertain
+        if self.ema.mean() >= self.high_level {
+            self.high_streak += 1;
+        } else {
+            self.high_streak = 0;
+        }
+        if lines >= self.min_lines && self.high_streak >= self.patience {
+            return ExitDecision::Exit(ExitReason::Stalled);
+        }
+
+        // extension 2: decay stall — V-hat plateaued far above delta
+        if lines >= self.patience + self.min_lines {
+            let past = self.vhat_history[lines - 1 - self.patience];
+            let decay_per_line =
+                1.0 - (vhat / past.max(1e-300)).powf(1.0 / self.patience as f64);
+            if vhat > 100.0 * self.delta && decay_per_line < self.min_decay {
+                return ExitDecision::Exit(ExitReason::Stalled);
+            }
+        }
+
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.ema = EmaVar::new(self.alpha);
+        self.vhat_history.clear();
+        self.high_streak = 0;
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            eat: true,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn obs(tokens: usize, eat: f64) -> LineObs {
+        LineObs {
+            tokens,
+            eat: Some(eat),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn still_exits_stable_on_solvable_signal() {
+        let mut p = StallAwareEatPolicy::new(0.5, 1e-2, 10_000);
+        let mut decided = None;
+        for i in 1..=40 {
+            let e = if i < 5 { 3.4 - 0.4 * i as f64 } else { 0.02 };
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, e)) {
+                decided = Some((i, r));
+                break;
+            }
+        }
+        let (line, reason) = decided.expect("should exit");
+        assert_eq!(reason, ExitReason::Stable);
+        assert!(line < 25, "line={line}");
+    }
+
+    #[test]
+    fn gives_up_on_unsolvable_high_plateau() {
+        // EAT stuck near log(32): baseline Alg.1 would burn all 10k
+        // tokens; the stall rule exits after ~patience lines
+        let mut p = StallAwareEatPolicy::new(0.5, 1e-6, 10_000);
+        let mut rng = Rng::new(3);
+        let mut exit = None;
+        for i in 1..=60 {
+            let e = 3.3 + 0.15 * rng.normal();
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, e)) {
+                exit = Some((i, r));
+                break;
+            }
+        }
+        let (line, reason) = exit.expect("must give up");
+        assert_eq!(reason, ExitReason::Stalled);
+        assert!(line <= 20, "gave up too late: line {line}");
+    }
+
+    #[test]
+    fn gives_up_on_vhat_plateau() {
+        // mid-level noisy EAT (not high enough for the level rule) whose
+        // variance never decays: the decay rule fires
+        let mut p = StallAwareEatPolicy::new(0.5, 1e-9, 10_000);
+        p.high_level = 10.0; // disable the level rule
+        let mut rng = Rng::new(4);
+        let mut exit = None;
+        for i in 1..=200 {
+            let e = 1.5 + 0.8 * rng.normal();
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, e)) {
+                exit = Some((i, r));
+                break;
+            }
+        }
+        let (line, reason) = exit.expect("must give up");
+        assert_eq!(reason, ExitReason::Stalled);
+        assert!(line <= 60, "line={line}");
+    }
+
+    #[test]
+    fn does_not_stall_while_decaying() {
+        // a cleanly decaying variance must NOT trigger the stall rules
+        // before the Stable exit
+        let mut p = StallAwareEatPolicy::new(0.5, 1e-4, 10_000);
+        p.high_level = 10.0;
+        for i in 1..=80 {
+            let e = 3.0 * (0.8f64).powi(i as i32);
+            match p.observe(&obs(i * 3, e)) {
+                ExitDecision::Exit(ExitReason::Stable) => return,
+                ExitDecision::Exit(r) => panic!("wrong exit {r:?} at {i}"),
+                ExitDecision::Continue => {}
+            }
+        }
+        panic!("never exited");
+    }
+
+    #[test]
+    fn reset_clears_stall_state() {
+        let mut p = StallAwareEatPolicy::new(0.5, 1e-6, 10_000);
+        for i in 1..=10 {
+            p.observe(&obs(i * 3, 3.4));
+        }
+        p.reset();
+        assert_eq!(p.high_streak, 0);
+        assert!(p.vhat_history.is_empty());
+    }
+}

@@ -1,0 +1,78 @@
+//! Alg. 2: token-based early exiting — the fixed-budget baseline with "a
+//! clear physical meaning" (§5.2) but no adaptivity.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+
+#[derive(Debug, Clone, Copy)]
+pub struct TokenBudgetPolicy {
+    /// Per-question reasoning budget T.
+    pub t: usize,
+}
+
+impl TokenBudgetPolicy {
+    pub fn new(t: usize) -> TokenBudgetPolicy {
+        TokenBudgetPolicy { t }
+    }
+}
+
+impl ExitPolicy for TokenBudgetPolicy {
+    fn name(&self) -> String {
+        format!("token(T={})", self.t)
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        if obs.self_terminated {
+            ExitDecision::Exit(ExitReason::SelfTerminated)
+        } else if obs.tokens >= self.t {
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        } else {
+            ExitDecision::Continue
+        }
+    }
+
+    fn reset(&mut self) {}
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds::default() // free: consumes no model signals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exits_exactly_at_budget() {
+        let mut p = TokenBudgetPolicy::new(10);
+        assert_eq!(
+            p.observe(&LineObs {
+                tokens: 9,
+                ..Default::default()
+            }),
+            ExitDecision::Continue
+        );
+        assert_eq!(
+            p.observe(&LineObs {
+                tokens: 10,
+                ..Default::default()
+            }),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn self_termination() {
+        let mut p = TokenBudgetPolicy::new(1000);
+        let d = p.observe(&LineObs {
+            tokens: 5,
+            self_terminated: true,
+            ..Default::default()
+        });
+        assert_eq!(d, ExitDecision::Exit(ExitReason::SelfTerminated));
+    }
+
+    #[test]
+    fn needs_nothing() {
+        assert_eq!(TokenBudgetPolicy::new(5).needs(), SignalNeeds::default());
+    }
+}

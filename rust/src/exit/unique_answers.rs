@@ -1,0 +1,161 @@
+//! Alg. 3: #UA@K — early exit when the number of distinct answers among K
+//! sampled rollouts drops to Delta. Adaptive like EAT, but each evaluation
+//! costs K full answer rollouts (the paper's Fig. 6 cost critique).
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+
+#[derive(Debug, Clone, Copy)]
+pub struct UniqueAnswersPolicy {
+    /// Number of rollouts K per evaluation.
+    pub k: usize,
+    /// Unique-answer threshold Delta (exit when #UA <= Delta).
+    pub threshold: usize,
+    /// Max thinking tokens T.
+    pub max_tokens: usize,
+    /// Evaluate only every `every` lines (Fig. 19's budget-matched mode;
+    /// 1 = every line as in Alg. 3).
+    pub every: usize,
+    seen_lines: usize,
+}
+
+impl UniqueAnswersPolicy {
+    pub fn new(k: usize, threshold: usize, max_tokens: usize) -> Self {
+        Self::with_stride(k, threshold, max_tokens, 1)
+    }
+
+    pub fn with_stride(
+        k: usize,
+        threshold: usize,
+        max_tokens: usize,
+        every: usize,
+    ) -> Self {
+        assert!(k > 0 && threshold >= 1 && every >= 1);
+        UniqueAnswersPolicy {
+            k,
+            threshold,
+            max_tokens,
+            every,
+            seen_lines: 0,
+        }
+    }
+
+    /// Does this policy evaluate rollouts at the current line?
+    pub fn evaluates_now(&self) -> bool {
+        (self.seen_lines + 1) % self.every == 0
+    }
+}
+
+impl ExitPolicy for UniqueAnswersPolicy {
+    fn name(&self) -> String {
+        format!(
+            "ua(K={},Delta={},T={},every={})",
+            self.k, self.threshold, self.max_tokens, self.every
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        self.seen_lines += 1;
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        if self.seen_lines % self.every == 0 {
+            let ua = obs
+                .unique_answers
+                .expect("UniqueAnswersPolicy requires rollouts");
+            if ua <= self.threshold {
+                return ExitDecision::Exit(ExitReason::AnswersConverged);
+            }
+        }
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.seen_lines = 0;
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            rollouts_k: self.k,
+            rollout_every: self.every,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tokens: usize, ua: usize) -> LineObs {
+        LineObs {
+            tokens,
+            unique_answers: Some(ua),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exits_when_answers_converge() {
+        let mut p = UniqueAnswersPolicy::new(16, 1, 1000);
+        assert_eq!(p.observe(&obs(3, 9)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(6, 3)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(9, 1)),
+            ExitDecision::Exit(ExitReason::AnswersConverged)
+        );
+    }
+
+    #[test]
+    fn threshold_two() {
+        let mut p = UniqueAnswersPolicy::new(16, 2, 1000);
+        assert_eq!(
+            p.observe(&obs(3, 2)),
+            ExitDecision::Exit(ExitReason::AnswersConverged)
+        );
+    }
+
+    #[test]
+    fn stride_skips_evaluations() {
+        let mut p = UniqueAnswersPolicy::with_stride(32, 1, 1000, 3);
+        // lines 1 and 2: no evaluation (unique_answers may be absent)
+        assert!(!p.evaluates_now());
+        assert_eq!(
+            p.observe(&LineObs {
+                tokens: 3,
+                ..Default::default()
+            }),
+            ExitDecision::Continue
+        );
+        assert_eq!(
+            p.observe(&LineObs {
+                tokens: 6,
+                ..Default::default()
+            }),
+            ExitDecision::Continue
+        );
+        // line 3: evaluates
+        assert!(p.evaluates_now());
+        assert_eq!(
+            p.observe(&obs(9, 1)),
+            ExitDecision::Exit(ExitReason::AnswersConverged)
+        );
+    }
+
+    #[test]
+    fn budget_backstop() {
+        let mut p = UniqueAnswersPolicy::new(8, 1, 6);
+        assert_eq!(p.observe(&obs(3, 5)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(6, 5)),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn needs_k_rollouts() {
+        assert_eq!(UniqueAnswersPolicy::new(32, 1, 10).needs().rollouts_k, 32);
+    }
+}

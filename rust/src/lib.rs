@@ -1,0 +1,36 @@
+//! # eat-serve — EAT: Entropy After `</think>` early-exit reasoning serving
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of "EAT: Entropy After
+//! </Think> for reasoning model early exiting" (2025). The Rust layer is
+//! the serving coordinator (this crate); the JAX/Pallas layers are
+//! build-time only and ship as AOT-compiled HLO artifacts executed through
+//! the PJRT C API.
+//!
+//! Layout (see DESIGN.md):
+//!  * [`runtime`]     — PJRT client, weights, typed model entry points
+//!  * [`coordinator`] — serving engine, continuous batcher, KV manager
+//!  * [`exit`]        — EAT (Alg. 1) + token/#UA@K/confidence baselines
+//!  * [`monitor`]     — EMA variance estimator + trajectory records
+//!  * [`blackbox`]    — streaming-API simulation + local proxy monitoring
+//!  * [`eval`]        — trace generation, offline replay, figure drivers
+//!  * [`datasets`]    — synthetic benchmark analogues
+//!  * [`util`]        — hand-rolled substrates (JSON, CLI, RNG, stats)
+
+pub mod blackbox;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod eval;
+pub mod exit;
+pub mod monitor;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+pub mod vocab;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+/// Default results directory.
+pub const DEFAULT_RESULTS: &str = "results";
+/// Default recorded-traces directory.
+pub const DEFAULT_TRACES: &str = "results/traces";

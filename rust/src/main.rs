@@ -1,0 +1,243 @@
+//! `repro` — the leader CLI of the EAT serving stack.
+//!
+//! Subcommands:
+//!   info                         artifact + model summary
+//!   serve                        continuous-batch serving of a workload
+//!   trace                        generate monitored reasoning traces
+//!   figures                      reproduce the paper's figures
+//!   blackbox                     black-box streaming demo (Fig. 5)
+
+use anyhow::Result;
+
+use eat_serve::config::ServeConfig;
+use eat_serve::coordinator::{Batcher, MonitorModel};
+use eat_serve::datasets::Dataset;
+use eat_serve::eval::figures::{self, FigureCtx};
+use eat_serve::eval::{TraceGen, TraceSet};
+use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
+use eat_serve::runtime::Runtime;
+use eat_serve::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "repro — EAT early-exit reasoning serving (paper reproduction)
+
+USAGE: repro <command> [flags]
+
+COMMANDS
+  info                          artifact inventory + smoke execution
+  serve     --dataset D --requests N [--slots S] [--policy eat|token]
+            [--delta X] [--alpha A] [--budget T] [--proxy] [--seed K]
+  trace     --dataset D [--out FILE] [--max-questions N] [--swap-models]
+            [--no-confidence] [--seed K]
+  figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
+  blackbox  [--questions N] [--chunk C] [--delta X]
+
+FLAG DEFAULTS
+  --artifacts artifacts   --traces-dir results/traces   --out-dir results
+  --alpha 0.2  --delta 1e-3  --budget 96  --slots 4  --seed 0
+"
+    );
+    std::process::exit(2);
+}
+
+fn serve_cfg(args: &Args) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.alpha = args.f64_or("alpha", cfg.alpha);
+    cfg.delta = args.f64_or("delta", cfg.delta);
+    cfg.max_think_tokens = args.usize_or("budget", cfg.max_think_tokens);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.prefixed_probe = !args.has("no-prefix");
+    cfg
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+    println!("platform        {}", rt.client.platform());
+    for m in [&rt.main, &rt.proxy] {
+        println!(
+            "model {:<8} d={} L={} H={} ff={} seq={} params={}",
+            m.cfg.name,
+            m.cfg.d_model,
+            m.cfg.n_layer,
+            m.cfg.n_head,
+            m.cfg.d_ff,
+            m.cfg.seq_len,
+            m.total_param_elems()
+        );
+    }
+    // smoke: answer one easy question
+    let ds = Dataset::synth_math500(&rt.cfg.vocab, 1, 0);
+    let q = &ds.questions[0];
+    let res = eat_serve::coordinator::serve_one(
+        &rt,
+        &ServeConfig::default(),
+        MonitorModel::SelfModel,
+        q,
+        Box::new(EatPolicy::new(0.2, 1e-3, 96)),
+        0,
+    )?;
+    println!(
+        "smoke           q0 ops={:?} answer={:?} -> correct={} ({} reasoning tokens, {:?})",
+        q.ops, q.answer, res.correct, res.reasoning_tokens, res.exit_reason
+    );
+    println!(
+        "exec counters   prefills={} decodes={} probes={}",
+        rt.main.counters.prefills.get(),
+        rt.main.counters.decodes.get(),
+        rt.main.counters.probes.get()
+    );
+    if args.has("hlo") {
+        println!("\nHLO cost analysis (L2 perf, DESIGN.md \u{a7}6):");
+        for m in [&rt.cfg.main, &rt.cfg.proxy] {
+            for f in [&m.hlo_prefill, &m.hlo_decode, &m.hlo_probe] {
+                let rep = eat_serve::runtime::hlo_analysis::analyze_file(
+                    &rt.cfg.path(f),
+                )?;
+                print!("{}", rep.render(f));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+    let cfg = serve_cfg(args);
+    let dataset = args.str_or("dataset", "synth-math500-small");
+    let n = args.usize_or("requests", 16);
+    let slots = args.usize_or("slots", 4);
+    let monitor = if args.has("proxy") {
+        MonitorModel::Proxy
+    } else {
+        MonitorModel::SelfModel
+    };
+    let ds = Dataset::by_name(dataset, &rt.cfg.vocab, cfg.seed)?;
+
+    let policy_kind = args.str_or("policy", "eat").to_string();
+    let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
+    let factory: eat_serve::coordinator::batcher::PolicyFactory = match policy_kind.as_str() {
+        "eat" => Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget))),
+        "token" => Box::new(move || Box::new(TokenBudgetPolicy::new(budget))),
+        other => anyhow::bail!("unknown --policy `{other}`"),
+    };
+
+    let mut batcher = Batcher::new(&rt, cfg, monitor, slots, factory);
+    for q in ds.questions.iter().take(n) {
+        batcher.submit(q.clone());
+    }
+    batcher.run_to_completion()?;
+    println!("{}", batcher.metrics.report());
+    println!("kv slots        peak {} / {}", batcher.kv_peak(), slots);
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+    let cfg = serve_cfg(args);
+    let dataset = args.str_or("dataset", "synth-math500");
+    let swap = args.has("swap-models");
+    let default_name = if swap {
+        format!("{dataset}-proxyreason")
+    } else {
+        dataset.to_string()
+    };
+    let out = args
+        .str_opt("out")
+        .map(|s| s.to_string())
+        .unwrap_or(format!("{}/{}.json", eat_serve::DEFAULT_TRACES, default_name));
+    let ds = Dataset::by_name(dataset, &rt.cfg.vocab, cfg.seed)?;
+    let maxq = args.usize_or("max-questions", ds.questions.len());
+
+    let mut tracegen = TraceGen::new(&rt, cfg.clone());
+    tracegen.swap_models = swap;
+    tracegen.with_confidence = !args.has("no-confidence");
+    let t0 = std::time::Instant::now();
+    let mut traces = Vec::new();
+    for (i, q) in ds.questions.iter().take(maxq).enumerate() {
+        traces.push(tracegen.run(q, cfg.seed)?);
+        if (i + 1) % 25 == 0 {
+            println!(
+                "  {}/{} traces ({:.1}s)",
+                i + 1,
+                maxq.min(ds.questions.len()),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let set = TraceSet {
+        dataset: default_name.clone(),
+        traces,
+    };
+    set.save(std::path::Path::new(&out))?;
+    println!(
+        "wrote {} traces to {out} in {:.1}s",
+        set.traces.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let ctx = {
+        let mut c = FigureCtx::new(
+            args.str_or("traces-dir", eat_serve::DEFAULT_TRACES),
+            args.str_or("out-dir", eat_serve::DEFAULT_RESULTS),
+        );
+        c.cfg = serve_cfg(args);
+        c
+    };
+    let fig = args.str_or("fig", "all");
+    let mut ran = 0;
+    if fig == "all" {
+        for f in figures::OFFLINE_FIGS {
+            match figures::run_offline(&ctx, f) {
+                Ok(_) => ran += 1,
+                Err(e) => println!("[fig{f}] skipped: {e}"),
+            }
+        }
+        let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+        for f in figures::LIVE_FIGS {
+            match figures::run_live(&ctx, &rt, f) {
+                Ok(_) => ran += 1,
+                Err(e) => println!("[fig{f}] skipped: {e}"),
+            }
+        }
+    } else if figures::run_offline(&ctx, fig)? {
+        ran += 1;
+    } else {
+        let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+        if figures::run_live(&ctx, &rt, fig)? {
+            ran += 1;
+        } else {
+            anyhow::bail!("unknown figure `{fig}`");
+        }
+    }
+    println!("done: {ran} figure(s)");
+    Ok(())
+}
+
+fn cmd_blackbox(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+    let ctx = {
+        let mut c = FigureCtx::new(
+            args.str_or("traces-dir", eat_serve::DEFAULT_TRACES),
+            args.str_or("out-dir", eat_serve::DEFAULT_RESULTS),
+        );
+        c.cfg = serve_cfg(args);
+        c
+    };
+    figures::fig5a(&ctx, &rt, args.usize_or("questions", 8))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional(0) {
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("blackbox") => cmd_blackbox(&args),
+        _ => usage(),
+    }
+}

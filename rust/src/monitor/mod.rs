@@ -1,0 +1,8 @@
+//! EAT monitoring: the EMA mean/variance estimator (Alg. 1) and the
+//! per-request trajectory records used by the eval harness and figures.
+
+pub mod ema;
+pub mod trace;
+
+pub use ema::EmaVar;
+pub use trace::{LinePoint, Trace};

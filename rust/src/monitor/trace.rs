@@ -1,0 +1,204 @@
+//! Per-request trajectory records: everything the eval harness needs to
+//! replay early-exit decisions offline (the paper's "simulated early
+//! exiting", App. H) and to draw the figures.
+
+use crate::util::json::Json;
+
+/// One monitored reasoning line boundary.
+#[derive(Debug, Clone)]
+pub struct LinePoint {
+    /// 1-based reasoning line index n.
+    pub line: usize,
+    /// Total reasoning tokens |R| committed so far.
+    pub tokens: usize,
+    /// EAT (Eq. 5) with the configured suffix, from the main model.
+    pub eat: f64,
+    /// EAT computed by the proxy model (black-box setting), if enabled.
+    pub eat_proxy: Option<f64>,
+    /// EAT without the prefix string (Eq. 12), for the App. D ablation.
+    pub eat_plain: Option<f64>,
+    /// Entropy after newline (Eq. 14, App. F), if recorded.
+    pub eat_newline: Option<f64>,
+    /// De-biased EMA variance V' after observing `eat`.
+    pub vhat: f64,
+    /// Analytic Pass@1: probability mass on the correct answer token under
+    /// the forced-answer distribution (the exact limit of Avg@K).
+    pub p_correct: f64,
+    /// Sampled Pass@1(Avg@K) estimate.
+    pub pass1_avgk: f64,
+    /// Number of unique answers among the K rollout samples (#UA@K).
+    pub unique_answers: usize,
+    /// Confidence score (Eq. 16): length-normalized likelihood of a greedy
+    /// 5-token rollout, if recorded.
+    pub confidence: Option<f64>,
+}
+
+/// A full monitored reasoning trace for one question.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub question_id: usize,
+    /// Question difficulty (operand count n).
+    pub n_ops: usize,
+    /// True answer value, None when the question is corrupted/unsolvable.
+    pub answer: Option<u32>,
+    /// Prompt length in tokens.
+    pub prompt_tokens: usize,
+    /// Whether the model emitted `</think>` by itself before the budget.
+    pub self_terminated: bool,
+    /// All reasoning tokens that were generated (for replaying).
+    pub reasoning_tokens: Vec<u32>,
+    pub points: Vec<LinePoint>,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("question_id", Json::num(self.question_id as f64)),
+            ("n_ops", Json::num(self.n_ops as f64)),
+            (
+                "answer",
+                self.answer.map_or(Json::Null, |a| Json::num(a as f64)),
+            ),
+            ("prompt_tokens", Json::num(self.prompt_tokens as f64)),
+            ("self_terminated", Json::Bool(self.self_terminated)),
+            (
+                "reasoning_tokens",
+                Json::arr(
+                    self.reasoning_tokens
+                        .iter()
+                        .map(|&t| Json::num(t as f64)),
+                ),
+            ),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|p| {
+                    Json::obj(vec![
+                        ("line", Json::num(p.line as f64)),
+                        ("tokens", Json::num(p.tokens as f64)),
+                        ("eat", Json::num(p.eat)),
+                        (
+                            "eat_proxy",
+                            p.eat_proxy.map_or(Json::Null, Json::num),
+                        ),
+                        (
+                            "eat_plain",
+                            p.eat_plain.map_or(Json::Null, Json::num),
+                        ),
+                        (
+                            "eat_newline",
+                            p.eat_newline.map_or(Json::Null, Json::num),
+                        ),
+                        ("vhat", Json::num(if p.vhat.is_finite() {
+                            p.vhat
+                        } else {
+                            -1.0
+                        })),
+                        ("p_correct", Json::num(p.p_correct)),
+                        ("pass1_avgk", Json::num(p.pass1_avgk)),
+                        (
+                            "unique_answers",
+                            Json::num(p.unique_answers as f64),
+                        ),
+                        (
+                            "confidence",
+                            p.confidence.map_or(Json::Null, Json::num),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Trace> {
+        let points = v
+            .req("points")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|p| {
+                let vhat = p.get("vhat").as_f64().unwrap_or(-1.0);
+                Ok(LinePoint {
+                    line: p.req_usize("line")?,
+                    tokens: p.req_usize("tokens")?,
+                    eat: p.req("eat")?.as_f64().unwrap_or(0.0),
+                    eat_proxy: p.get("eat_proxy").as_f64(),
+                    eat_plain: p.get("eat_plain").as_f64(),
+                    eat_newline: p.get("eat_newline").as_f64(),
+                    vhat: if vhat < 0.0 { f64::INFINITY } else { vhat },
+                    p_correct: p.req("p_correct")?.as_f64().unwrap_or(0.0),
+                    pass1_avgk: p.req("pass1_avgk")?.as_f64().unwrap_or(0.0),
+                    unique_answers: p.req_usize("unique_answers")?,
+                    confidence: p.get("confidence").as_f64(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Trace {
+            question_id: v.req_usize("question_id")?,
+            n_ops: v.req_usize("n_ops")?,
+            answer: v.get("answer").as_f64().map(|a| a as u32),
+            prompt_tokens: v.req_usize("prompt_tokens")?,
+            self_terminated: v.get("self_terminated").as_bool().unwrap_or(false),
+            reasoning_tokens: v
+                .get("reasoning_tokens")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|t| t.as_f64().map(|x| x as u32))
+                .collect(),
+            points,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            question_id: 7,
+            n_ops: 4,
+            answer: Some(13),
+            prompt_tokens: 8,
+            self_terminated: true,
+            reasoning_tokens: vec![16, 17, 5, 18, 19, 5],
+            points: vec![LinePoint {
+                line: 1,
+                tokens: 3,
+                eat: 3.2,
+                eat_proxy: Some(3.0),
+                eat_plain: None,
+                eat_newline: Some(1.1),
+                vhat: f64::INFINITY,
+                p_correct: 0.05,
+                pass1_avgk: 0.06,
+                unique_answers: 21,
+                confidence: Some(0.4),
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample_trace();
+        let js = t.to_json();
+        let back = Trace::from_json(&js).unwrap();
+        assert_eq!(back.question_id, 7);
+        assert_eq!(back.answer, Some(13));
+        assert_eq!(back.reasoning_tokens, t.reasoning_tokens);
+        assert_eq!(back.points.len(), 1);
+        let p = &back.points[0];
+        assert!(p.vhat.is_infinite());
+        assert_eq!(p.eat_proxy, Some(3.0));
+        assert_eq!(p.eat_plain, None);
+        assert_eq!(p.unique_answers, 21);
+    }
+
+    #[test]
+    fn unsolvable_answer_roundtrips_as_null() {
+        let mut t = sample_trace();
+        t.answer = None;
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.answer, None);
+    }
+}

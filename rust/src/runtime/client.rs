@@ -1,0 +1,109 @@
+//! PJRT client wrapper + literal/buffer helpers.
+//!
+//! Wraps the `xla` crate's CPU PJRT client with the small set of typed
+//! helpers the serving stack needs: f32/i32 host->device uploads, HLO-text
+//! loading (the interchange format — see DESIGN.md §2) and executable
+//! compilation.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Shared PJRT CPU client.
+pub struct Client {
+    inner: PjRtClient,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        let inner = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { inner })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    /// Load HLO *text* (not a serialized proto: xla_extension 0.5.1 rejects
+    /// jax>=0.5 64-bit instruction ids; the text parser reassigns ids) and
+    /// compile it for this client.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    // -- host -> device uploads -------------------------------------------
+
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.inner.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.inner.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn buf_scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        self.buf_i32(&[v], &[])
+    }
+
+    pub fn buf_from_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(self.inner.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// A compiled HLO executable plus its artifact name (for error messages
+/// and profiling reports).
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute on device buffers; returns the decomposed output tuple as
+    /// host literals. All our AOT graphs return a top-level tuple (the
+    /// stablehlo->HLO converter is invoked with return_tuple=True), and
+    /// PJRT hands it back as a single tuple buffer.
+    pub fn run(&self, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching outputs of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and keep the raw tuple buffer on device (used when the
+    /// caller only needs a slice of the outputs and wants to defer/skip
+    /// the host copy).
+    pub fn run_raw(&self, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let mut outs = self.exe.execute_b(args)?;
+        Ok(outs.remove(0).remove(0))
+    }
+}
+
+/// Extract an f32 vector from a literal.
+pub fn lit_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn lit_f32_scalar(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,400 @@
+//! HLO cost analysis: parse the AOT-lowered HLO text and estimate FLOPs /
+//! memory traffic per executable — the L2 performance-profiling tool of
+//! the §Perf pass (DESIGN.md §6: "no redundant recomputation, fused where
+//! XLA can fuse").
+//!
+//! Two-pass structural parser (not a full HLO grammar): pass 1 records
+//! every instruction's output shape into a symbol table; pass 2 resolves
+//! dot operands by name to compute exact 2*M*N*K FLOPs and aggregates:
+//!   * op histogram (dot / elementwise / reduce / dynamic-update-slice ...)
+//!   * FLOP estimate (exact for dots, 1 flop/elem for elementwise)
+//!   * output-bytes estimate (memory-traffic lower bound)
+//! quoted by `repro info --hlo` and the EXPERIMENTS.md §Perf log.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Parsed output shape: dtype byte width and dimensions.
+#[derive(Debug, Clone, Default)]
+pub struct Shape {
+    pub dims: Vec<u64>,
+    pub elem_bytes: u64,
+}
+
+impl Shape {
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().product::<u64>().max(1)
+    }
+}
+
+/// Aggregate analysis of one HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct HloReport {
+    pub instr_count: usize,
+    pub op_histogram: BTreeMap<String, usize>,
+    pub flops: u64,
+    pub output_bytes: u64,
+    pub dot_flops: u64,
+    pub dot_count: usize,
+}
+
+impl HloReport {
+    /// Arithmetic intensity proxy: FLOPs per byte of instruction output.
+    pub fn intensity(&self) -> f64 {
+        self.flops as f64 / self.output_bytes.max(1) as f64
+    }
+
+    pub fn render(&self, name: &str) -> String {
+        let mut s = format!(
+            "{name}: {} instrs, {:.3} MFLOP ({:.0}% in {} dots), {:.2} MB outputs, intensity {:.2} flop/B\n",
+            self.instr_count,
+            self.flops as f64 / 1e6,
+            100.0 * self.dot_flops as f64 / self.flops.max(1) as f64,
+            self.dot_count,
+            self.output_bytes as f64 / 1e6,
+            self.intensity()
+        );
+        let mut ops: Vec<(&String, &usize)> = self.op_histogram.iter().collect();
+        ops.sort_by_key(|(_, c)| std::cmp::Reverse(**c));
+        s += "  top ops: ";
+        for (op, c) in ops.iter().take(8) {
+            s += &format!("{op}:{c} ");
+        }
+        s += "\n";
+        s
+    }
+}
+
+fn dtype_bytes(ty: &str) -> u64 {
+    match ty {
+        "f64" | "s64" | "u64" | "c64" => 8,
+        "f32" | "s32" | "u32" => 4,
+        "bf16" | "f16" | "s16" | "u16" => 2,
+        "pred" | "s8" | "u8" => 1,
+        _ => 0,
+    }
+}
+
+/// Parse `f32[2,3]{1,0}` / `s32[]` / `pred[4]` into a Shape.
+fn parse_shape(s: &str) -> Shape {
+    let s = s.trim();
+    let Some(br) = s.find('[') else {
+        return Shape {
+            dims: vec![],
+            elem_bytes: dtype_bytes(s),
+        };
+    };
+    let ty = &s[..br];
+    let end = s[br..].find(']').map(|e| br + e).unwrap_or(s.len());
+    let dims = s[br + 1..end]
+        .split(',')
+        .filter_map(|d| d.trim().parse::<u64>().ok())
+        .collect();
+    Shape {
+        dims,
+        elem_bytes: dtype_bytes(ty),
+    }
+}
+
+/// Sum of elems/bytes over a (possibly tuple) shape string.
+fn tuple_totals(shape_str: &str) -> (u64, u64) {
+    let inner = shape_str.trim().trim_start_matches('(').trim_end_matches(')');
+    let mut elems = 0u64;
+    let mut bytes = 0u64;
+    // split at "]," boundaries to keep dim lists intact
+    let mut start = 0usize;
+    let b = inner.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == b']' {
+            // include the layout suffix `{...}` if present
+            let mut j = i + 1;
+            if j < b.len() && b[j] == b'{' {
+                while j < b.len() && b[j] != b'}' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let sh = parse_shape(inner[start..j.min(inner.len())].trim_matches(','));
+            if sh.elem_bytes > 0 {
+                elems += sh.elems();
+                bytes += sh.elems() * sh.elem_bytes;
+            }
+            start = j;
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    if start == 0 && !inner.is_empty() {
+        // no ']' at all: scalar like `s32[]` handled above, or plain type
+        let sh = parse_shape(inner);
+        if sh.elem_bytes > 0 {
+            elems += sh.elems();
+            bytes += sh.elems() * sh.elem_bytes;
+        }
+    }
+    (elems, bytes)
+}
+
+struct Line<'a> {
+    name: &'a str,
+    shape_str: &'a str,
+    opcode: String,
+    rest: &'a str,
+    raw: &'a str,
+}
+
+fn split_line(line: &str) -> Option<Line<'_>> {
+    let line = line.trim();
+    let (lhs, rhs) = line.split_once(" = ")?;
+    let name = lhs.trim_start_matches("ROOT ").trim().trim_start_matches('%');
+    let rhs = rhs.trim();
+    let (shape_str, rest) = if rhs.starts_with('(') {
+        let mut depth = 0usize;
+        let mut end = 0usize;
+        for (i, c) in rhs.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        (&rhs[..end], rhs[end..].trim_start())
+    } else {
+        let sp = rhs.find(' ')?;
+        (&rhs[..sp], rhs[sp..].trim_start())
+    };
+    let opcode: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+        .collect();
+    if opcode.is_empty() {
+        return None;
+    }
+    Some(Line {
+        name,
+        shape_str,
+        opcode,
+        rest,
+        raw: line,
+    })
+}
+
+/// Operand names of `opcode(a, b, ...)` — first paren group of `rest`.
+fn operand_names(rest: &str) -> Vec<&str> {
+    let Some(open) = rest.find('(') else {
+        return vec![];
+    };
+    let Some(close) = rest[open..].find(')') else {
+        return vec![];
+    };
+    rest[open + 1..open + close]
+        .split(',')
+        .map(|s| s.trim().trim_start_matches('%'))
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn braces_list(line: &str, key: &str) -> Vec<usize> {
+    let Some(p) = line.find(key) else {
+        return vec![];
+    };
+    let s = &line[p + key.len()..];
+    let Some(close) = s.find('}') else {
+        return vec![];
+    };
+    s[..close]
+        .split(',')
+        .filter_map(|d| d.trim().parse().ok())
+        .collect()
+}
+
+const ELEMENTWISE: &[&str] = &[
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "compare",
+    "select", "and", "or", "not", "power", "abs", "sign", "floor", "ceil",
+    "clamp", "exponential-minus-one", "log-plus-one", "atan2",
+];
+
+const DATA_MOVEMENT: &[&str] = &[
+    "convert", "broadcast", "reshape", "transpose", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "gather", "scatter", "iota",
+    "constant", "parameter", "tuple", "get-tuple-element", "copy", "bitcast",
+    "pad", "reverse", "rng-bit-generator", "after-all", "custom-call",
+];
+
+/// Analyze HLO text.
+pub fn analyze_text(text: &str) -> HloReport {
+    // pass 1: symbol table of output shapes (entry + nested computations)
+    let mut shapes: BTreeMap<&str, Shape> = BTreeMap::new();
+    for raw in text.lines() {
+        let t = raw.trim();
+        if !t.contains(" = ") || t.starts_with("HloModule") {
+            continue;
+        }
+        if let Some(l) = split_line(t) {
+            if !l.shape_str.starts_with('(') {
+                shapes.insert(l.name, parse_shape(l.shape_str));
+            }
+        }
+    }
+
+    // pass 2: only the ENTRY computation contributes to the totals (the
+    // others are fusion/reduce bodies already accounted through callers)
+    let mut report = HloReport::default();
+    let mut in_entry = false;
+    for raw in text.lines() {
+        let t = raw.trim();
+        if t.starts_with("ENTRY") {
+            in_entry = true;
+            continue;
+        }
+        if in_entry && t == "}" {
+            in_entry = false;
+        }
+        if !in_entry || !t.contains(" = ") {
+            continue;
+        }
+        let Some(l) = split_line(t) else { continue };
+        let (out_elems, out_bytes) = tuple_totals(l.shape_str);
+        *report.op_histogram.entry(l.opcode.clone()).or_insert(0) += 1;
+        report.instr_count += 1;
+
+        let flops = if l.opcode == "dot" {
+            let ops = operand_names(l.rest);
+            let k: u64 = {
+                let cdims = braces_list(l.raw, "lhs_contracting_dims={");
+                ops.first()
+                    .and_then(|n| shapes.get(n))
+                    .map(|sh| {
+                        cdims
+                            .iter()
+                            .map(|&i| sh.dims.get(i).copied().unwrap_or(1))
+                            .product::<u64>()
+                            .max(1)
+                    })
+                    .unwrap_or(1)
+            };
+            let f = 2 * out_elems * k;
+            report.dot_flops += f;
+            report.dot_count += 1;
+            f
+        } else if ELEMENTWISE.contains(&l.opcode.as_str()) {
+            out_elems
+        } else if l.opcode == "reduce" || l.opcode == "reduce-window" {
+            // cost ~ number of inputs reduced; approximate via operand size
+            operand_names(l.rest)
+                .first()
+                .and_then(|n| shapes.get(n))
+                .map(|sh| sh.elems())
+                .unwrap_or(2 * out_elems)
+        } else if DATA_MOVEMENT.contains(&l.opcode.as_str()) {
+            0
+        } else {
+            out_elems // unknown compute op: 1 flop per output element
+        };
+        report.flops += flops;
+        report.output_bytes += out_bytes;
+    }
+    report
+}
+
+/// Analyze one HLO text file.
+pub fn analyze_file(path: &Path) -> Result<HloReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(analyze_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn
+
+ENTRY %main (p0: f32[4,8], p1: f32[8,16]) -> f32[4,16] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %p1 = f32[8,16]{1,0} parameter(1)
+  %dot.1 = f32[4,16]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %exp.1 = f32[4,16]{1,0} exponential(%dot.1)
+  ROOT %add.1 = f32[4,16]{1,0} add(%dot.1, %exp.1)
+}
+"#;
+
+    #[test]
+    fn parses_sample_module() {
+        let r = analyze_text(SAMPLE);
+        assert_eq!(r.op_histogram["dot"], 1);
+        assert_eq!(r.op_histogram["add"], 1);
+        assert_eq!(r.op_histogram["exponential"], 1);
+        assert_eq!(r.op_histogram["parameter"], 2);
+    }
+
+    #[test]
+    fn dot_flops_exact_via_symbol_table() {
+        let r = analyze_text(SAMPLE);
+        // dot: 2 * (4*16) * 8 = 1024; exp + add: 64 + 64
+        assert_eq!(r.dot_flops, 1024);
+        assert_eq!(r.flops, 1024 + 128);
+    }
+
+    #[test]
+    fn output_bytes_counted() {
+        let r = analyze_text(SAMPLE);
+        // params 32+128 elems + dot/exp/add 64 each, all f32
+        assert_eq!(r.output_bytes, (32 + 128 + 3 * 64) * 4);
+    }
+
+    #[test]
+    fn shape_parser() {
+        let s = parse_shape("f32[2,3]{1,0}");
+        assert_eq!((s.elems(), s.elem_bytes), (6, 4));
+        assert_eq!(parse_shape("s32[]").elems(), 1);
+        assert_eq!(parse_shape("bf16[8]").elem_bytes, 2);
+        assert_eq!(parse_shape("pred[4]").elem_bytes, 1);
+    }
+
+    #[test]
+    fn tuple_shape_totals() {
+        let (e, b) = tuple_totals("(f32[48]{0}, f32[2,2,128,32]{3,2,1,0}, s32[])");
+        assert_eq!(e, 48 + 2 * 2 * 128 * 32 + 1);
+        assert_eq!(b, (48 + 16384 + 1) * 4);
+    }
+
+    #[test]
+    fn operand_name_extraction() {
+        assert_eq!(operand_names("dot(%a, b.2), extra"), vec!["a", "b.2"]);
+        assert_eq!(operand_names("constant(3)"), vec!["3"]);
+    }
+
+    #[test]
+    fn real_artifacts_analyzable_if_present() {
+        let p = Path::new("artifacts/decode_main.hlo.txt");
+        if !p.exists() {
+            return;
+        }
+        let r = analyze_file(p).unwrap();
+        assert!(r.instr_count > 50, "decode HLO suspiciously small");
+        // decode step ~ 2 * params * 1 token ~ 0.2 MFLOP for the 113k-param
+        // main model
+        assert!(
+            r.flops > 100_000,
+            "decode FLOPs too low: {} (dots {})",
+            r.flops,
+            r.dot_count
+        );
+        assert!(r.op_histogram.contains_key("dot"));
+        // decode must update the cache functionally
+        assert!(r.op_histogram.contains_key("dynamic-update-slice"));
+    }
+}

@@ -1,0 +1,48 @@
+//! Runtime layer: load + execute the AOT artifacts via the PJRT C API
+//! (`xla` crate, CPU client). See /opt/xla-example/load_hlo for the
+//! reference wiring and DESIGN.md §2 for the entry-point signatures.
+
+pub mod client;
+pub mod hlo_analysis;
+pub mod model;
+pub mod weights;
+
+pub use client::Client;
+pub use model::{KvCache, ModelRuntime};
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::ArtifactsConfig;
+
+/// Both models loaded and ready: the full serving runtime.
+pub struct Runtime {
+    pub client: Client,
+    pub cfg: ArtifactsConfig,
+    pub main: ModelRuntime,
+    pub proxy: ModelRuntime,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let cfg = ArtifactsConfig::load(artifacts_dir)?;
+        let client = Client::cpu()?;
+        let main = ModelRuntime::load(&client, &cfg.dir, &cfg.main)?;
+        let proxy = ModelRuntime::load(&client, &cfg.dir, &cfg.proxy)?;
+        Ok(Runtime {
+            client,
+            cfg,
+            main,
+            proxy,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelRuntime> {
+        match name {
+            "main" => Ok(&self.main),
+            "proxy" => Ok(&self.proxy),
+            other => anyhow::bail!("unknown model `{other}`"),
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Typed model runtime: prefill / decode / probe / decode_batch over the
+//! AOT artifacts.
+//!
+//! Buffer discipline (see DESIGN.md §6): weights are uploaded to device
+//! once at load time and stay resident. KV caches are passed as device
+//! buffers; because PJRT hands multi-output results back as a *single
+//! tuple buffer* (no untupling in the `xla` crate), each decode step
+//! downloads the output tuple and re-uploads the caches — the host mirror
+//! this produces is kept on the `KvCache` and doubles as the cheap
+//! cache-fork mechanism that rollout-based baselines (#UA@K, Alg. 3) need.
+
+use std::cell::Cell;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use super::client::{lit_f32_scalar, lit_f32_vec, Client, Executable};
+use super::weights::Weights;
+use crate::config::ModelConfig;
+
+/// Per-sequence KV cache: device buffers + host mirror + write position.
+pub struct KvCache {
+    kc: PjRtBuffer,
+    vc: PjRtBuffer,
+    kc_host: Vec<f32>,
+    vc_host: Vec<f32>,
+    /// Next write position (== number of committed tokens).
+    pub pos: usize,
+}
+
+impl KvCache {
+    /// Bytes held on device by this cache (K + V), for the KV manager.
+    pub fn device_bytes(&self) -> usize {
+        (self.kc_host.len() + self.vc_host.len()) * 4
+    }
+}
+
+/// Execution counters for the perf report (`repro info`, §Perf).
+#[derive(Debug, Default)]
+pub struct RuntimeCounters {
+    pub prefills: Cell<u64>,
+    pub decodes: Cell<u64>,
+    pub probes: Cell<u64>,
+    pub batch_decodes: Cell<u64>,
+}
+
+/// One loaded model: compiled executables + resident weights.
+pub struct ModelRuntime {
+    pub cfg: ModelConfig,
+    weights: Weights,
+    exe_prefill: Executable,
+    exe_decode: Executable,
+    exe_probe: Executable,
+    exe_decode_batch: Option<Executable>,
+    pub counters: RuntimeCounters,
+}
+
+impl ModelRuntime {
+    pub fn load(client: &Client, dir: &Path, cfg: &ModelConfig) -> Result<ModelRuntime> {
+        let weights = Weights::load(
+            client,
+            &dir.join(&cfg.manifest),
+            &dir.join(&cfg.weights),
+        )
+        .with_context(|| format!("loading weights for model `{}`", cfg.name))?;
+        anyhow::ensure!(
+            weights.specs.len() == cfg.n_params,
+            "manifest has {} params, config says {}",
+            weights.specs.len(),
+            cfg.n_params
+        );
+        let exe_prefill = client.compile_hlo_text(&dir.join(&cfg.hlo_prefill))?;
+        let exe_decode = client.compile_hlo_text(&dir.join(&cfg.hlo_decode))?;
+        let exe_probe = client.compile_hlo_text(&dir.join(&cfg.hlo_probe))?;
+        let exe_decode_batch = cfg
+            .hlo_decode_batch
+            .as_ref()
+            .map(|f| client.compile_hlo_text(&dir.join(f)))
+            .transpose()?;
+        Ok(ModelRuntime {
+            cfg: cfg.clone(),
+            weights,
+            exe_prefill,
+            exe_decode,
+            exe_probe,
+            exe_decode_batch,
+            counters: RuntimeCounters::default(),
+        })
+    }
+
+    fn args_with<'a>(&'a self, extra: &[&'a PjRtBuffer]) -> Vec<&'a PjRtBuffer> {
+        let mut args: Vec<&PjRtBuffer> = self.weights.buffers.iter().collect();
+        args.extend_from_slice(extra);
+        args
+    }
+
+    fn cache_dims(&self) -> [usize; 4] {
+        [
+            self.cfg.n_layer,
+            self.cfg.n_head,
+            self.cfg.seq_len,
+            self.cfg.d_head,
+        ]
+    }
+
+    /// Run the prompt through the model; returns logits at position n-1 and
+    /// a fresh KV cache positioned at n.
+    pub fn prefill(&self, client: &Client, tokens: &[u32]) -> Result<(Vec<f32>, KvCache)> {
+        let s = self.cfg.seq_len;
+        anyhow::ensure!(
+            !tokens.is_empty() && tokens.len() <= s,
+            "prompt length {} out of range 1..={s}",
+            tokens.len()
+        );
+        let mut padded = vec![0i32; s];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let toks_buf = client.buf_i32(&padded, &[s])?;
+        let n_buf = client.buf_scalar_i32(tokens.len() as i32)?;
+        let outs = self
+            .exe_prefill
+            .run(&self.args_with(&[&toks_buf, &n_buf]))?;
+        anyhow::ensure!(outs.len() == 3, "prefill must return 3 outputs");
+        self.counters.prefills.set(self.counters.prefills.get() + 1);
+
+        let logits = lit_f32_vec(&outs[0])?;
+        let kc_host = lit_f32_vec(&outs[1])?;
+        let vc_host = lit_f32_vec(&outs[2])?;
+        let dims = self.cache_dims();
+        let kc = client.buf_f32(&kc_host, &dims)?;
+        let vc = client.buf_f32(&vc_host, &dims)?;
+        Ok((
+            logits,
+            KvCache {
+                kc,
+                vc,
+                kc_host,
+                vc_host,
+                pos: tokens.len(),
+            },
+        ))
+    }
+
+    /// One committed decode step: writes K/V at `cache.pos`, returns the
+    /// next-token logits, advances the cache.
+    pub fn decode(&self, client: &Client, cache: &mut KvCache, token: u32) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            cache.pos < self.cfg.seq_len,
+            "KV cache full (pos {} of {})",
+            cache.pos,
+            self.cfg.seq_len
+        );
+        let pos_buf = client.buf_scalar_i32(cache.pos as i32)?;
+        let tok_buf = client.buf_scalar_i32(token as i32)?;
+        let outs = self
+            .exe_decode
+            .run(&self.args_with(&[&cache.kc, &cache.vc, &pos_buf, &tok_buf]))?;
+        anyhow::ensure!(outs.len() == 3, "decode must return 3 outputs");
+        self.counters.decodes.set(self.counters.decodes.get() + 1);
+
+        let logits = lit_f32_vec(&outs[0])?;
+        cache.kc_host = lit_f32_vec(&outs[1])?;
+        cache.vc_host = lit_f32_vec(&outs[2])?;
+        let dims = self.cache_dims();
+        cache.kc = client.buf_f32(&cache.kc_host, &dims)?;
+        cache.vc = client.buf_f32(&cache.vc_host, &dims)?;
+        cache.pos += 1;
+        Ok(logits)
+    }
+
+    /// The EAT probe (Alg. 1 line 6): virtually append `suffix` after the
+    /// current position and return (entropy of the following token, its
+    /// full logits). The cache is NOT modified — this is the paper's
+    /// "one extra token" overhead trick (§4.3).
+    pub fn probe(&self, client: &Client, cache: &KvCache, suffix: &[u32]) -> Result<(f32, Vec<f32>)> {
+        let pk = self.cfg.probe_len;
+        anyhow::ensure!(
+            !suffix.is_empty() && suffix.len() <= pk,
+            "probe suffix length {} out of range 1..={pk}",
+            suffix.len()
+        );
+        anyhow::ensure!(
+            cache.pos + suffix.len() <= self.cfg.seq_len,
+            "probe would overflow the sequence"
+        );
+        let mut padded = vec![0i32; pk];
+        for (i, &t) in suffix.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let suf_buf = client.buf_i32(&padded, &[pk])?;
+        let slen_buf = client.buf_scalar_i32(suffix.len() as i32)?;
+        let pos_buf = client.buf_scalar_i32(cache.pos as i32)?;
+        let outs = self.exe_probe.run(&self.args_with(&[
+            &cache.kc, &cache.vc, &pos_buf, &suf_buf, &slen_buf,
+        ]))?;
+        anyhow::ensure!(outs.len() == 2, "probe must return 2 outputs");
+        self.counters.probes.set(self.counters.probes.get() + 1);
+        Ok((lit_f32_scalar(&outs[0])?, lit_f32_vec(&outs[1])?))
+    }
+
+    /// Fork a cache (device buffers re-created from the host mirror) —
+    /// used by rollout-based baselines that must decode hypothetical
+    /// continuations without disturbing the request's real cache.
+    pub fn fork_cache(&self, client: &Client, cache: &KvCache) -> Result<KvCache> {
+        let dims = self.cache_dims();
+        Ok(KvCache {
+            kc: client.buf_f32(&cache.kc_host, &dims)?,
+            vc: client.buf_f32(&cache.vc_host, &dims)?,
+            kc_host: cache.kc_host.clone(),
+            vc_host: cache.vc_host.clone(),
+            pos: cache.pos,
+        })
+    }
+
+    /// Build a cache for another model by re-prefilling the same tokens —
+    /// the black-box proxy path (proxy recomputes its own cache over the
+    /// received reasoning text).
+    pub fn has_batch(&self) -> bool {
+        self.exe_decode_batch.is_some()
+    }
+
+    /// Fused batched decode over B slots (continuous batching ablation).
+    /// `caches` must have exactly cfg.batch entries; inactive slots can
+    /// pass any token (their outputs are ignored by the caller).
+    pub fn decode_batch(
+        &self,
+        client: &Client,
+        caches: &mut [KvCache],
+        tokens: &[u32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.cfg.batch;
+        let exe = self
+            .exe_decode_batch
+            .as_ref()
+            .context("model has no decode_batch artifact")?;
+        anyhow::ensure!(caches.len() == b && tokens.len() == b);
+        let dims = self.cache_dims();
+        let elems: usize = dims.iter().product();
+        let bdims = [b, dims[0], dims[1], dims[2], dims[3]];
+
+        let mut kc_all = vec![0f32; b * elems];
+        let mut vc_all = vec![0f32; b * elems];
+        for (i, c) in caches.iter().enumerate() {
+            kc_all[i * elems..(i + 1) * elems].copy_from_slice(&c.kc_host);
+            vc_all[i * elems..(i + 1) * elems].copy_from_slice(&c.vc_host);
+        }
+        let kc_buf = client.buf_f32(&kc_all, &bdims)?;
+        let vc_buf = client.buf_f32(&vc_all, &bdims)?;
+        let pos: Vec<i32> = caches.iter().map(|c| c.pos as i32).collect();
+        let pos_buf = client.buf_i32(&pos, &[b])?;
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let toks_buf = client.buf_i32(&toks, &[b])?;
+
+        let outs = exe.run(&self.args_with(&[&kc_buf, &vc_buf, &pos_buf, &toks_buf]))?;
+        anyhow::ensure!(outs.len() == 3, "decode_batch must return 3 outputs");
+        self.counters
+            .batch_decodes
+            .set(self.counters.batch_decodes.get() + 1);
+
+        let logits_all = lit_f32_vec(&outs[0])?;
+        let kc_new = lit_f32_vec(&outs[1])?;
+        let vc_new = lit_f32_vec(&outs[2])?;
+        let v = self.cfg.vocab;
+        let mut per_slot = Vec::with_capacity(b);
+        for (i, c) in caches.iter_mut().enumerate() {
+            per_slot.push(logits_all[i * v..(i + 1) * v].to_vec());
+            c.kc_host.copy_from_slice(&kc_new[i * elems..(i + 1) * elems]);
+            c.vc_host.copy_from_slice(&vc_new[i * elems..(i + 1) * elems]);
+            c.kc = client.buf_f32(&c.kc_host, &dims)?;
+            c.vc = client.buf_f32(&c.vc_host, &dims)?;
+            c.pos += 1;
+        }
+        Ok(per_slot)
+    }
+
+    /// Parameter count (for `repro info`).
+    pub fn total_param_elems(&self) -> usize {
+        self.weights.total_elems
+    }
+}

@@ -1,0 +1,145 @@
+//! Trained-weights loader: manifest_{model}.json + weights_{model}.bin ->
+//! one device buffer per parameter, in the canonical order that the AOT
+//! HLO entry points expect (python/compile/model.py::param_specs).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use super::client::Client;
+use crate::util::json;
+
+/// One entry of the manifest.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Parse `manifest_{model}.json`.
+pub fn load_manifest(path: &Path) -> Result<Vec<ParamSpec>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let v = json::parse(&text)?;
+    let arr = v
+        .as_arr()
+        .context("manifest must be a JSON array")?;
+    let mut specs = Vec::with_capacity(arr.len());
+    for item in arr {
+        let shape = item
+            .req("shape")?
+            .as_arr()
+            .context("shape must be array")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        specs.push(ParamSpec {
+            name: item.req_str("name")?.to_string(),
+            shape,
+            offset: item.req_usize("offset")?,
+            size: item.req_usize("size")?,
+        });
+    }
+    Ok(specs)
+}
+
+/// Read the raw little-endian f32 blob.
+pub fn load_blob(path: &Path, expected_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() == expected_elems * 4,
+        "weights blob {} has {} bytes, expected {}",
+        path.display(),
+        bytes.len(),
+        expected_elems * 4
+    );
+    let mut out = vec![0f32; expected_elems];
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    Ok(out)
+}
+
+/// Loaded weights: device buffers in manifest order.
+pub struct Weights {
+    pub specs: Vec<ParamSpec>,
+    pub buffers: Vec<PjRtBuffer>,
+    pub total_elems: usize,
+}
+
+impl Weights {
+    pub fn load(client: &Client, manifest: &Path, blob: &Path) -> Result<Weights> {
+        let specs = load_manifest(manifest)?;
+        let total: usize = specs.iter().map(|s| s.size).sum();
+        // manifest sanity: offsets must tile the blob exactly
+        let mut expect = 0usize;
+        for s in &specs {
+            anyhow::ensure!(
+                s.offset == expect,
+                "manifest not contiguous at `{}` (offset {} != {})",
+                s.name,
+                s.offset,
+                expect
+            );
+            let shape_elems: usize = s.shape.iter().product();
+            anyhow::ensure!(
+                shape_elems == s.size,
+                "shape/size mismatch for `{}`",
+                s.name
+            );
+            expect += s.size;
+        }
+        let blob = load_blob(blob, total)?;
+        let mut buffers = Vec::with_capacity(specs.len());
+        for s in &specs {
+            let data = &blob[s.offset..s.offset + s.size];
+            buffers.push(client.buf_f32(data, &s.shape)?);
+        }
+        Ok(Weights {
+            specs,
+            buffers,
+            total_elems: total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let p = write_tmp(
+            "eat_manifest_test.json",
+            br#"[{"name":"a","shape":[2,3],"offset":0,"size":6},
+                 {"name":"b","shape":[4],"offset":6,"size":4}]"#,
+        );
+        let specs = load_manifest(&p).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].shape, vec![2, 3]);
+        assert_eq!(specs[1].offset, 6);
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let vals: Vec<f32> = (0..10).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let p = write_tmp("eat_blob_test.bin", &bytes);
+        let back = load_blob(&p, 10).unwrap();
+        assert_eq!(back, vals);
+        assert!(load_blob(&p, 11).is_err());
+    }
+}

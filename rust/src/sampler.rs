@@ -1,0 +1,185 @@
+//! Token sampling: temperature + top-p (nucleus), following the paper's
+//! decoding configuration (App. H: temperature 0.6, top-p 0.95, the
+//! DeepSeek model-card recommendation).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Sampler {
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+impl Sampler {
+    pub fn new(temperature: f32, top_p: f32) -> Sampler {
+        assert!(temperature >= 0.0 && top_p > 0.0 && top_p <= 1.0);
+        Sampler { temperature, top_p }
+    }
+
+    pub fn greedy() -> Sampler {
+        Sampler {
+            temperature: 0.0,
+            top_p: 1.0,
+        }
+    }
+
+    /// Softmax with temperature; numerically stable.
+    pub fn probs(&self, logits: &[f32]) -> Vec<f32> {
+        softmax_t(logits, self.temperature.max(1e-4))
+    }
+
+    /// Sample a token id from logits.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        if self.temperature == 0.0 {
+            return argmax(logits);
+        }
+        let mut probs = self.probs(logits);
+        if self.top_p < 1.0 {
+            truncate_top_p(&mut probs, self.top_p);
+        }
+        sample_from(&probs, rng)
+    }
+
+    /// Log-probability (natural log, full distribution at temperature 1 —
+    /// what the confidence baseline Eq. 16 uses) of a given token.
+    pub fn logprob(logits: &[f32], token: u32) -> f64 {
+        let p = softmax_t(logits, 1.0);
+        (p[token as usize] as f64).max(1e-30).ln()
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+fn softmax_t(logits: &[f32], t: f32) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::MIN, f32::max);
+    let mut out: Vec<f32> = logits
+        .iter()
+        .map(|&z| (((z - m) / t) as f64).exp() as f32)
+        .collect();
+    let sum: f32 = out.iter().sum();
+    for p in &mut out {
+        *p /= sum;
+    }
+    out
+}
+
+/// Zero out everything outside the smallest prefix of probability mass
+/// >= top_p (after sorting by probability), renormalize.
+fn truncate_top_p(probs: &mut [f32], top_p: f32) {
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let mut cum = 0.0f32;
+    let mut keep = vec![false; probs.len()];
+    for &i in &idx {
+        keep[i] = true;
+        cum += probs[i];
+        if cum >= top_p {
+            break;
+        }
+    }
+    let mut sum = 0.0f32;
+    for i in 0..probs.len() {
+        if !keep[i] {
+            probs[i] = 0.0;
+        }
+        sum += probs[i];
+    }
+    for p in probs.iter_mut() {
+        *p /= sum;
+    }
+}
+
+fn sample_from(probs: &[f32], rng: &mut Rng) -> u32 {
+    let r = rng.f32();
+    let mut cum = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        cum += p;
+        if r < cum {
+            return i as u32;
+        }
+    }
+    (probs.len() - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = vec![0.1, 5.0, -2.0, 4.9];
+        let mut rng = Rng::new(0);
+        assert_eq!(Sampler::greedy().sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let s = Sampler::new(0.6, 0.95);
+        let p = s.probs(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let logits = [1.0f32, 2.0];
+        let hot = Sampler::new(2.0, 1.0).probs(&logits);
+        let cold = Sampler::new(0.2, 1.0).probs(&logits);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        // token 2 has tiny probability; with top_p=0.9 it must never be
+        // sampled
+        let logits = vec![5.0f32, 5.0, -10.0];
+        let s = Sampler::new(1.0, 0.9);
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            assert_ne!(s.sample(&logits, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn sampling_matches_distribution() {
+        let logits = vec![0.0f32, (2.0f32).ln()]; // p = [1/3, 2/3]
+        let s = Sampler::new(1.0, 1.0);
+        let mut rng = Rng::new(2);
+        let n = 30_000;
+        let ones: usize = (0..n)
+            .map(|_| s.sample(&logits, &mut rng) as usize)
+            .sum();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn logprob_consistent() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let lp: f64 = (0..3).map(|t| Sampler::logprob(&logits, t).exp()).sum();
+        assert!((lp - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let logits = vec![0.5f32, 0.7, 0.1, 2.0];
+        let s = Sampler::new(0.6, 0.95);
+        let a: Vec<u32> = {
+            let mut rng = Rng::new(77);
+            (0..50).map(|_| s.sample(&logits, &mut rng)).collect()
+        };
+        let b: Vec<u32> = {
+            let mut rng = Rng::new(77);
+            (0..50).map(|_| s.sample(&logits, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

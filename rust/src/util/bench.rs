@@ -1,0 +1,107 @@
+//! Micro-benchmark harness substrate (no `criterion` offline).
+//!
+//! Warmup + adaptive-iteration timing with mean/p50/p95 reporting in a
+//! stable text format that `cargo bench` prints and EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters {:>6}  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Time `f` with `warmup` throwaway calls, then sample wall-clock per call
+/// until `budget` elapses (at least `min_iters` samples).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, Duration::from_secs(2), 3, 10, &mut f)
+}
+
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    warmup: usize,
+    min_iters: usize,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < budget {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: percentile(&samples, 0.5),
+        p95_ns: percentile(&samples, 0.95),
+    };
+    r.report();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench_with(
+            "noop",
+            Duration::from_millis(20),
+            1,
+            5,
+            &mut || {
+                std::hint::black_box(1 + 1);
+            },
+        );
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,142 @@
+//! Tiny argument-parsing substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.flags.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{key}: cannot parse `{v}`")
+            }),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list of f64 (threshold sweeps).
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().expect("bad float list"))
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_styles() {
+        // note: positionals come before bare boolean flags — a bare flag
+        // followed by a non-flag token consumes it as its value
+        let a = mk(&["serve", "x", "--n", "5", "--delta=0.1", "--verbose"]);
+        assert_eq!(a.positional(0), Some("serve"));
+        assert_eq!(a.positional(1), Some("x"));
+        assert_eq!(a.usize_or("n", 0), 5);
+        assert_eq!(a.f64_or("delta", 0.0), 0.1);
+        assert!(a.bool_or("verbose", false));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn bare_flag_consumes_following_value() {
+        let a = mk(&["--verbose", "x"]);
+        assert_eq!(a.str_opt("verbose"), Some("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = mk(&["--x=-3.5"]);
+        assert_eq!(a.f64_or("x", 0.0), -3.5);
+    }
+
+    #[test]
+    fn float_list() {
+        let a = mk(&["--deltas", "0.5,0.25, 0.125"]);
+        assert_eq!(a.f64_list("deltas", &[]), vec![0.5, 0.25, 0.125]);
+    }
+}

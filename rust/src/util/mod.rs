@@ -1,0 +1,9 @@
+//! Hand-rolled substrates (DESIGN.md §1): the offline crate registry only
+//! carries `xla` + `anyhow`, so JSON, CLI parsing, RNG, statistics and the
+//! bench harness are implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,151 @@
+//! Statistics helpers shared by metrics, benches and the eval harness.
+
+/// Mean of a slice (0.0 if empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile by linear interpolation on a *sorted copy* (q in [0,1]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Area under a (x, y) curve by trapezoid rule after sorting by x and
+/// normalizing x to [0, 1] — the paper's AUC efficiency metric (§5.2):
+/// "a more efficient early exiting approach should have a larger area
+/// under the [Agg. pass@1 vs token usage] curve".
+pub fn auc_normalized(points: &[(f64, f64)]) -> f64 {
+    if points.len() < 2 {
+        return 0.0;
+    }
+    let mut pts = points.to_vec();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (x0, x1) = (pts[0].0, pts[pts.len() - 1].0);
+    let span = (x1 - x0).max(1e-12);
+    let mut area = 0.0;
+    for w in pts.windows(2) {
+        let dx = (w[1].0 - w[0].0) / span;
+        area += dx * 0.5 * (w[0].1 + w[1].1);
+    }
+    area
+}
+
+/// Simple online latency histogram for the serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples, 0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 0.99)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::MIN, f64::max)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_of_flat_curve_is_height() {
+        let pts = [(0.0, 0.8), (5.0, 0.8), (10.0, 0.8)];
+        assert!((auc_normalized(&pts) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_higher_for_earlier_rise() {
+        // curve A reaches accuracy 1.0 with fewer tokens than curve B
+        let a = [(0.0, 0.0), (2.0, 1.0), (10.0, 1.0)];
+        let b = [(0.0, 0.0), (8.0, 1.0), (10.0, 1.0)];
+        assert!(auc_normalized(&a) > auc_normalized(&b));
+    }
+
+    #[test]
+    fn summary() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.p50() - 50.5).abs() < 1.0);
+        assert!(s.p95() >= 95.0 && s.p95() <= 96.0);
+        assert_eq!(s.max(), 100.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Tokenizer / vocabulary for the chain-sum reasoning task.
+//!
+//! Loaded from `artifacts/vocab.json`, which python/compile/vocab.py writes
+//! at AOT time — the single source of truth, so trained weights and the
+//! Rust tokenizer can never drift apart.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Vocab {
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+    pub think: u32,
+    pub ethink: u32,
+    pub nl: u32,
+    pub final_: u32,
+    pub ans: u32,
+    pub q: u32,
+    pub sep: u32,
+    pub ver: u32,
+    pub unk: u32,
+    pub lbrack: u32,
+    pub tool: u32,
+    pub num0: u32,
+    pub modulus: u32,
+    pub size: u32,
+}
+
+impl Vocab {
+    pub fn from_json(v: &Json) -> anyhow::Result<Vocab> {
+        Ok(Vocab {
+            pad: v.req_usize("pad")? as u32,
+            bos: v.req_usize("bos")? as u32,
+            eos: v.req_usize("eos")? as u32,
+            think: v.req_usize("think")? as u32,
+            ethink: v.req_usize("ethink")? as u32,
+            nl: v.req_usize("nl")? as u32,
+            final_: v.req_usize("final")? as u32,
+            ans: v.req_usize("ans")? as u32,
+            q: v.req_usize("q")? as u32,
+            sep: v.req_usize("sep")? as u32,
+            ver: v.req_usize("ver")? as u32,
+            unk: v.req_usize("unk")? as u32,
+            lbrack: v.req_usize("lbrack")? as u32,
+            tool: v.req_usize("tool")? as u32,
+            num0: v.req_usize("num0")? as u32,
+            modulus: v.req_usize("mod")? as u32,
+            size: v.req_usize("vocab")? as u32,
+        })
+    }
+
+    /// The layout python/compile/vocab.py defines; used by unit tests and
+    /// in-process workload generators that run without artifacts on disk.
+    pub fn default_layout() -> Vocab {
+        Vocab {
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            think: 3,
+            ethink: 4,
+            nl: 5,
+            final_: 6,
+            ans: 7,
+            q: 8,
+            sep: 9,
+            ver: 10,
+            unk: 11,
+            lbrack: 12,
+            tool: 13,
+            num0: 16,
+            modulus: 32,
+            size: 48,
+        }
+    }
+
+    /// Token id of number `v` (mod `modulus`).
+    #[inline]
+    pub fn num(&self, v: u32) -> u32 {
+        self.num0 + (v % self.modulus)
+    }
+
+    #[inline]
+    pub fn is_num(&self, tok: u32) -> bool {
+        tok >= self.num0 && tok < self.num0 + self.modulus
+    }
+
+    #[inline]
+    pub fn num_value(&self, tok: u32) -> Option<u32> {
+        if self.is_num(tok) {
+            Some(tok - self.num0)
+        } else {
+            None
+        }
+    }
+
+    /// The EAT probe suffixes of the paper (App. D):
+    /// Eq. 12 (no prefix string): just `</think>`.
+    pub fn suffix_plain(&self) -> Vec<u32> {
+        vec![self.ethink]
+    }
+
+    /// Eq. 13 (with prefix string "The final answer:"): the probed token is
+    /// the answer value itself.
+    pub fn suffix_prefixed(&self) -> Vec<u32> {
+        vec![self.ethink, self.final_, self.ans]
+    }
+
+    /// Eq. 14 (App. F): entropy after a newline, inside the reasoning.
+    pub fn suffix_newline(&self) -> Vec<u32> {
+        vec![self.nl]
+    }
+
+    /// Eq. 15 (App. I.2): tool-calling probe, appending `[` after
+    /// `</think>` (here: `</think> FINAL [` then ANS value follows).
+    pub fn suffix_tool(&self) -> Vec<u32> {
+        vec![self.ethink, self.final_, self.lbrack, self.ans]
+    }
+
+    /// Render a token sequence for logs / examples.
+    pub fn detok(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| self.tok_str(t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn tok_str(&self, t: u32) -> String {
+        if let Some(v) = self.num_value(t) {
+            return v.to_string();
+        }
+        match t {
+            x if x == self.pad => "<pad>".into(),
+            x if x == self.bos => "<bos>".into(),
+            x if x == self.eos => "<eos>".into(),
+            x if x == self.think => "<think>".into(),
+            x if x == self.ethink => "</think>".into(),
+            x if x == self.nl => "⏎".into(),
+            x if x == self.final_ => "Final:".into(),
+            x if x == self.ans => "A".into(),
+            x if x == self.q => "Q".into(),
+            x if x == self.sep => ";".into(),
+            x if x == self.ver => "V".into(),
+            x if x == self.unk => "?".into(),
+            x if x == self.lbrack => "[".into(),
+            x if x == self.tool => "T".into(),
+            x => format!("<{x}>"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn default_layout_roundtrips_through_json() {
+        let v = Vocab::default_layout();
+        let js = format!(
+            r#"{{"pad":0,"bos":1,"eos":2,"think":3,"ethink":4,"nl":5,
+                "final":6,"ans":7,"q":8,"sep":9,"ver":10,"unk":11,
+                "lbrack":12,"tool":13,"num0":16,"mod":32,"vocab":48}}"#
+        );
+        let parsed = Vocab::from_json(&json::parse(&js).unwrap()).unwrap();
+        assert_eq!(v, parsed);
+    }
+
+    #[test]
+    fn num_mapping() {
+        let v = Vocab::default_layout();
+        assert_eq!(v.num(0), 16);
+        assert_eq!(v.num(31), 47);
+        assert_eq!(v.num(33), 17); // wraps mod 32
+        assert_eq!(v.num_value(16), Some(0));
+        assert_eq!(v.num_value(5), None);
+        assert!(v.is_num(47));
+        assert!(!v.is_num(48));
+    }
+
+    #[test]
+    fn probe_suffixes() {
+        let v = Vocab::default_layout();
+        assert_eq!(v.suffix_plain(), vec![v.ethink]);
+        assert_eq!(v.suffix_prefixed(), vec![v.ethink, v.final_, v.ans]);
+        assert_eq!(v.suffix_newline(), vec![v.nl]);
+        assert!(v.suffix_prefixed().len() <= 4); // must fit probe_len
+    }
+
+    #[test]
+    fn detok_readable() {
+        let v = Vocab::default_layout();
+        let s = v.detok(&[v.bos, v.q, v.num(3), v.num(7), v.sep]);
+        assert_eq!(s, "<bos> Q 3 7 ;");
+    }
+}

@@ -1,0 +1,253 @@
+//! Property-based tests over coordinator invariants (no artifacts needed).
+//!
+//! The offline registry has no `proptest`, so properties are checked over
+//! many seeded random inputs from the repo's own RNG — same idea, no
+//! shrinking. Each property runs a few hundred cases.
+
+use eat_serve::exit::{
+    ConfidencePolicy, EatPolicy, ExitDecision, ExitPolicy, ExitReason,
+    LineObs, TokenBudgetPolicy, UniqueAnswersPolicy,
+};
+use eat_serve::eval::{replay, Signal};
+use eat_serve::monitor::{EmaVar, LinePoint, Trace};
+use eat_serve::util::json;
+use eat_serve::util::rng::Rng;
+use eat_serve::util::stats;
+use eat_serve::vocab::Vocab;
+
+const CASES: u64 = 300;
+
+fn random_trace(rng: &mut Rng) -> Trace {
+    let n_lines = rng.range(1, 40) as usize;
+    let stab = rng.range(1, 40) as usize;
+    let points = (1..=n_lines)
+        .map(|i| {
+            let stable = i >= stab;
+            LinePoint {
+                line: i,
+                tokens: i * 3,
+                eat: if stable {
+                    0.02 + 0.01 * rng.f64()
+                } else {
+                    1.0 + 2.0 * rng.f64()
+                },
+                eat_proxy: if rng.chance(0.8) {
+                    Some(rng.f64() * 3.0)
+                } else {
+                    None
+                },
+                eat_plain: Some(rng.f64() * 0.1),
+                eat_newline: Some(rng.f64()),
+                vhat: f64::INFINITY,
+                p_correct: if stable { 0.9 } else { 0.1 * rng.f64() },
+                pass1_avgk: if stable { 1.0 } else { rng.f64() * 0.2 },
+                unique_answers: rng.range(1, 32) as usize,
+                confidence: Some(rng.f64()),
+            }
+        })
+        .collect();
+    Trace {
+        question_id: rng.below(1000) as usize,
+        n_ops: rng.range(2, 12) as usize,
+        answer: if rng.chance(0.9) {
+            Some(rng.below(32) as u32)
+        } else {
+            None
+        },
+        prompt_tokens: rng.range(5, 16) as usize,
+        self_terminated: rng.chance(0.5),
+        reasoning_tokens: (0..n_lines * 3).map(|_| rng.below(48) as u32).collect(),
+        points,
+    }
+}
+
+/// EMA variance is always finite and non-negative after the first update.
+#[test]
+fn prop_ema_nonnegative_finite() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let mut ema = EmaVar::new(0.01 + 0.98 * rng.f64());
+        for _ in 0..rng.range(1, 200) {
+            let v = ema.update(rng.normal() * 10.0);
+            assert!(v.is_finite() && v >= 0.0, "seed {seed}: v={v}");
+        }
+    }
+}
+
+/// The de-biased variance never undershoots the raw variance.
+#[test]
+fn prop_ema_debias_monotone() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xD1A5);
+        let mut ema = EmaVar::new(0.05 + 0.9 * rng.f64());
+        for _ in 0..rng.range(1, 100) {
+            ema.update(rng.f64() * 5.0);
+            assert!(ema.debiased_var() >= ema.var() - 1e-15);
+        }
+    }
+}
+
+/// Replay never reports more reasoning tokens than the trace contains and
+/// the exit line (when any) indexes a real point.
+#[test]
+fn prop_replay_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x11E9);
+        let trace = random_trace(&mut rng);
+        let mut policy: Box<dyn ExitPolicy> = match rng.below(4) {
+            0 => Box::new(EatPolicy::new(0.2, 2f64.powi(-(rng.below(20) as i32)), 10_000)),
+            1 => Box::new(TokenBudgetPolicy::new(rng.range(1, 150) as usize)),
+            2 => Box::new(UniqueAnswersPolicy::new(
+                rng.range(1, 64) as usize,
+                rng.range(1, 3) as usize,
+                10_000,
+            )),
+            _ => Box::new(ConfidencePolicy::new(0.2, 2f64.powi(-(rng.below(20) as i32)), 10_000)),
+        };
+        let out = replay(&trace, policy.as_mut(), Signal::MainPrefixed, rng.chance(0.5));
+        assert!(out.reasoning_tokens <= trace.reasoning_tokens.len().max(trace.points.last().map(|p| p.tokens).unwrap_or(0)));
+        if let Some(line) = out.exit_line {
+            assert!(trace.points.iter().any(|p| p.line == line));
+        }
+        assert!((0.0..=1.0).contains(&out.accuracy));
+        assert!((0.0..=1.0).contains(&out.accuracy_exact));
+    }
+}
+
+/// Monotonicity of the threshold dial: a *larger* delta (looser stability
+/// requirement) never exits later than a smaller one on the same trace.
+#[test]
+fn prop_eat_threshold_monotone() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x7031);
+        let trace = random_trace(&mut rng);
+        let loose = 2f64.powi(-(rng.below(8) as i32));
+        let strict = loose / 2f64.powi(rng.range(1, 10) as i32);
+        let exit_at = |delta: f64| {
+            let mut p = EatPolicy::new(0.2, delta, usize::MAX);
+            replay(&trace, &mut p, Signal::MainPrefixed, false)
+                .exit_line
+                .unwrap_or(usize::MAX)
+        };
+        assert!(
+            exit_at(loose) <= exit_at(strict),
+            "seed {seed}: delta {loose} exited after {strict}"
+        );
+    }
+}
+
+/// Token budget policy exits within one line of its budget.
+#[test]
+fn prop_token_budget_respected() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x70CB);
+        let trace = random_trace(&mut rng);
+        let t = rng.range(1, 130) as usize;
+        let mut p = TokenBudgetPolicy::new(t);
+        let out = replay(&trace, &mut p, Signal::MainPrefixed, false);
+        if out.exit_line.is_some() && out.exit_reason == ExitReason::TokenBudget {
+            // exit happens at the first line boundary with tokens >= t
+            assert!(out.reasoning_tokens >= t);
+            assert!(out.reasoning_tokens < t + 3 + 1, "one line past budget max");
+        }
+    }
+}
+
+/// Trace JSON round-trip is lossless for all random traces.
+#[test]
+fn prop_trace_json_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x750D);
+        let t = random_trace(&mut rng);
+        let back = Trace::from_json(&json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(t.question_id, back.question_id);
+        assert_eq!(t.answer, back.answer);
+        assert_eq!(t.reasoning_tokens, back.reasoning_tokens);
+        assert_eq!(t.points.len(), back.points.len());
+        for (a, b) in t.points.iter().zip(&back.points) {
+            assert!((a.eat - b.eat).abs() < 1e-9);
+            assert_eq!(a.eat_proxy.is_some(), b.eat_proxy.is_some());
+            assert_eq!(a.unique_answers, b.unique_answers);
+        }
+    }
+}
+
+/// Policies are reusable after reset(): same trace, same outcome.
+#[test]
+fn prop_policy_reset_deterministic() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x4E5E);
+        let trace = random_trace(&mut rng);
+        let mut p = EatPolicy::new(0.2, 1e-3, 10_000);
+        let a = replay(&trace, &mut p, Signal::MainPrefixed, false);
+        let b = replay(&trace, &mut p, Signal::MainPrefixed, false);
+        assert_eq!(a.exit_line, b.exit_line);
+        assert_eq!(a.reasoning_tokens, b.reasoning_tokens);
+    }
+}
+
+/// Observing with a fresh policy after many noisy lines never yields an
+/// immediate Stable exit on the very first observation.
+#[test]
+fn prop_no_first_line_stable_exit() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xF125);
+        let mut p = EatPolicy::new(0.01 + rng.f64() * 0.9, 1e-6, usize::MAX);
+        let d = p.observe(&LineObs {
+            tokens: 3,
+            eat: Some(rng.f64() * 4.0 + 0.5),
+            ..Default::default()
+        });
+        // V'_1 = (x - a x)^2 * a / a = nonzero for x > 0
+        assert_eq!(d, ExitDecision::Continue, "seed {seed}");
+    }
+}
+
+/// AUC is invariant to point ordering and bounded by max accuracy.
+#[test]
+fn prop_auc_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xA0C);
+        let n = rng.range(2, 30) as usize;
+        let mut pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.f64() * 1000.0, rng.f64()))
+            .collect();
+        let auc = stats::auc_normalized(&pts);
+        let max_acc = pts.iter().map(|p| p.1).fold(0.0, f64::max);
+        assert!(auc <= max_acc + 1e-9, "seed {seed}");
+        assert!(auc >= 0.0);
+        rng.shuffle(&mut pts);
+        let auc2 = stats::auc_normalized(&pts);
+        assert!((auc - auc2).abs() < 1e-9, "ordering changed AUC");
+    }
+}
+
+/// Dataset generation invariants across seeds and sizes.
+#[test]
+fn prop_dataset_answers_consistent() {
+    let vocab = Vocab::default_layout();
+    for seed in 0..100 {
+        let ds = eat_serve::datasets::Dataset::synth_gpqa(&vocab, 30, seed);
+        for q in &ds.questions {
+            match q.kind {
+                eat_serve::datasets::chainsum::Kind::Corrupted => {
+                    assert!(q.answer.is_none());
+                    assert!(q.prompt.contains(&vocab.unk));
+                }
+                eat_serve::datasets::chainsum::Kind::ToolCall => {
+                    assert_eq!(q.answer, Some(*q.ops.last().unwrap()));
+                }
+                _ => {
+                    assert_eq!(
+                        q.answer,
+                        Some(q.ops.iter().sum::<u32>() % vocab.modulus)
+                    );
+                }
+            }
+            // prompts contain no out-of-vocabulary ids
+            for &t in &q.prompt {
+                assert!(t < vocab.size);
+            }
+        }
+    }
+}
