@@ -11,13 +11,13 @@ use anyhow::Result;
 use eat_serve::blackbox::{run_blackbox, LatencyModel};
 use eat_serve::config::ServeConfig;
 use eat_serve::datasets::Dataset;
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::cli::Args;
 use eat_serve::util::stats::mean;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let rt = Runtime::load_or_reference(args.str_or("artifacts", "artifacts"));
     let cfg = {
         let mut c = ServeConfig::default();
         // chunk-granularity monitoring sees ~4-8x fewer observations than
@@ -29,10 +29,10 @@ fn main() -> Result<()> {
     };
     let n = args.usize_or("questions", 8);
     let chunk = args.usize_or("chunk", 6);
-    let ds = Dataset::synth_aime(&rt.cfg.vocab, n, 11);
+    let ds = Dataset::synth_aime(&rt.vocab, n, 11);
 
-    println!("remote: simulated streaming reasoning API over the {}-param model", rt.main.total_param_elems());
-    println!("local : {}-param proxy computing EAT per received chunk\n", rt.proxy.total_param_elems());
+    println!("remote: simulated streaming reasoning API over the {}-param model", rt.main.param_elems());
+    println!("local : {}-param proxy computing EAT per received chunk\n", rt.proxy.param_elems());
 
     let mut saved = 0.0;
     let mut gaps = Vec::new();

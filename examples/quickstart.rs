@@ -1,10 +1,11 @@
-//! Quickstart: load the AOT artifacts, serve one reasoning question with
-//! EAT-based early exiting (Alg. 1), and print the monitored trajectory.
+//! Quickstart: serve one reasoning question with EAT-based early exiting
+//! (Alg. 1) and print the monitored trajectory.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Requires `make artifacts` to have been run once (build-time Python);
-//! after that everything here is pure Rust + PJRT.
+//! Uses the AOT artifacts when built with `--features pjrt` and
+//! `make artifacts` has run; otherwise the deterministic in-process
+//! reference backend serves the same protocol with zero setup.
 
 use anyhow::Result;
 
@@ -12,19 +13,19 @@ use eat_serve::config::ServeConfig;
 use eat_serve::coordinator::{serve_one, MonitorModel};
 use eat_serve::datasets::Dataset;
 use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 
 fn main() -> Result<()> {
-    let rt = Runtime::load("artifacts")?;
+    let rt = Runtime::load_or_reference("artifacts");
     println!(
-        "loaded models: main ({} params), proxy ({} params) on {}",
-        rt.main.total_param_elems(),
-        rt.proxy.total_param_elems(),
-        rt.client.platform()
+        "loaded models on the {} backend: main ({} params), proxy ({} params)",
+        rt.backend_kind(),
+        rt.main.param_elems(),
+        rt.proxy.param_elems(),
     );
 
     let cfg = ServeConfig::default();
-    let ds = Dataset::synth_math500(&rt.cfg.vocab, 5, 7);
+    let ds = Dataset::synth_math500(&rt.vocab, 5, 7);
 
     println!("\n--- EAT early exit (alpha={}, delta={}) ---", cfg.alpha, cfg.delta);
     for q in &ds.questions {
@@ -37,7 +38,7 @@ fn main() -> Result<()> {
             res.reasoning_tokens,
             res.exit_reason,
             res.correct,
-            rt.cfg.vocab.detok(&res.answer_tail)
+            rt.vocab.detok(&res.answer_tail)
         );
     }
 

@@ -28,7 +28,7 @@ fn run_workload(
     rate_per_s: f64,
     policy: &str,
 ) -> Result<()> {
-    let ds = Dataset::by_name(dataset, &rt.cfg.vocab, cfg.seed)?;
+    let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
     let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
     let factory: eat_serve::coordinator::batcher::PolicyFactory = match policy {
         "eat" => Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget))),
@@ -75,7 +75,7 @@ fn run_workload(
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let rt = Runtime::load_or_reference(args.str_or("artifacts", "artifacts"));
     let mut cfg = ServeConfig::default();
     cfg.alpha = args.f64_or("alpha", cfg.alpha);
     cfg.delta = args.f64_or("delta", cfg.delta);

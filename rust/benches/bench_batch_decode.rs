@@ -1,0 +1,111 @@
+//! Fused batched decode vs per-session sequential decode — the
+//! continuous-batching win the batcher refactor banks on (tokens/sec at
+//! B = 1/4/8), with the RuntimeCounters delta so the execution mix is
+//! auditable in the bench trajectory.
+//!
+//!     cargo bench --bench bench_batch_decode
+//!
+//! Runs against the AOT artifacts when available (`--features pjrt` +
+//! `make artifacts`), otherwise against the deterministic reference
+//! backend — the *relative* fused-vs-sequential shape is meaningful on
+//! both; absolute numbers only on pjrt.
+
+use eat_serve::datasets::Dataset;
+use eat_serve::runtime::{Backend, BackendCache, BatchLane, Runtime};
+use eat_serve::util::bench::bench;
+
+fn counters_snapshot(rt: &Runtime) -> (u64, u64, u64, u64) {
+    let c = rt.main.counters();
+    (
+        c.decodes.get(),
+        c.batch_decodes.get(),
+        c.batch_lanes.get(),
+        c.batch_resident_lanes.get(),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_or_reference("artifacts");
+    println!("backend: {}", rt.backend_kind());
+    let Some(width) = rt.main.batch_width() else {
+        eprintln!("skipping: backend has no fused decode_batch entry point");
+        return Ok(());
+    };
+    let vocab = rt.vocab;
+    let ds = Dataset::synth_math500(&vocab, 8, 9);
+
+    // template caches: distinct prompts, shared across both variants
+    let templates: Vec<BackendCache> = (0..8usize)
+        .map(|i| {
+            let mut p = ds.questions[i].prompt.clone();
+            p.push(vocab.think);
+            Ok(rt.main.prefill(&p)?.1)
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    println!("fused batch width: {width}\n");
+    let before = counters_snapshot(&rt);
+
+    // several decode steps per forked batch, so the backend's resident
+    // batch image engages from step 2 onward (steady-state serving shape)
+    const STEPS: usize = 4;
+    for b in [1usize, 4, 8] {
+        // fork fresh caches per iteration (a committed decode advances
+        // the cache; unbounded in-place stepping would overflow seq_len)
+        // — the fork cost is identical for both variants, keeping the
+        // comparison fair
+        let fused = bench(&format!("decode/fused_b{b}"), || {
+            let mut caches: Vec<BackendCache> = templates[..b]
+                .iter()
+                .map(|c| rt.main.fork(c).unwrap())
+                .collect();
+            for _ in 0..STEPS {
+                // chunk when B exceeds the artifact's batch width
+                for chunk in caches.chunks_mut(width) {
+                    let mut lanes: Vec<Option<BatchLane>> = chunk
+                        .iter_mut()
+                        .map(|c| {
+                            Some(BatchLane {
+                                cache: c,
+                                token: vocab.nl,
+                            })
+                        })
+                        .collect();
+                    lanes.resize_with(width, || None);
+                    rt.main.decode_batch(&mut lanes).unwrap();
+                }
+            }
+        });
+        let seq = bench(&format!("decode/sequential_b{b}"), || {
+            let mut caches: Vec<BackendCache> = templates[..b]
+                .iter()
+                .map(|c| rt.main.fork(c).unwrap())
+                .collect();
+            for _ in 0..STEPS {
+                for c in caches.iter_mut() {
+                    rt.main.decode(c, vocab.nl).unwrap();
+                }
+            }
+        });
+        let fused_tps = (b * STEPS) as f64 / (fused.mean_ns / 1e9);
+        let seq_tps = (b * STEPS) as f64 / (seq.mean_ns / 1e9);
+        println!(
+            "  B={b}: fused {:.0} tok/s vs sequential {:.0} tok/s -> {:.2}x\n",
+            fused_tps,
+            seq_tps,
+            fused_tps / seq_tps
+        );
+    }
+
+    let after = counters_snapshot(&rt);
+    println!("RuntimeCounters delta over the bench:");
+    println!("  single decodes      {:>10}", after.0 - before.0);
+    println!("  fused decode calls  {:>10}", after.1 - before.1);
+    println!("  fused lanes         {:>10}", after.2 - before.2);
+    println!("  resident lane hits  {:>10}", after.3 - before.3);
+    println!(
+        "\n(one fused call commits up to {width} tokens; the batcher issues \
+         exactly one per scheduling tick — see batcher_protocol.rs)"
+    );
+    Ok(())
+}

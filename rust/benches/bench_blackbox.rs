@@ -7,7 +7,7 @@
 
 use eat_serve::blackbox::LatencyModel;
 use eat_serve::datasets::Dataset;
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::bench::bench;
 use eat_serve::util::rng::Rng;
 
@@ -19,21 +19,21 @@ fn main() -> anyhow::Result<()> {
             return Ok(());
         }
     };
-    let vocab = rt.cfg.vocab;
+    let vocab = rt.vocab;
     let ds = Dataset::synth_aime(&vocab, 1, 13);
     let mut prompt = ds.questions[0].prompt.clone();
     prompt.push(vocab.think);
-    let (_l, cache) = rt.proxy.prefill(&rt.client, &prompt)?;
+    let (_l, cache) = rt.proxy.prefill(&prompt)?;
     let suffix = vocab.suffix_prefixed();
 
     // chunk sizes in tokens (the paper receives ~100-token chunks)
     for chunk in [4usize, 12, 24] {
         let r = bench(&format!("blackbox/proxy_chunk{chunk}"), || {
-            let mut fork = rt.proxy.fork_cache(&rt.client, &cache).unwrap();
+            let mut fork = rt.proxy.fork(&cache).unwrap();
             for _ in 0..chunk {
-                rt.proxy.decode(&rt.client, &mut fork, vocab.nl).unwrap();
+                rt.proxy.decode(&mut fork, vocab.nl).unwrap();
             }
-            rt.proxy.probe(&rt.client, &fork, &suffix).unwrap();
+            rt.proxy.probe(&fork, &suffix).unwrap();
         });
         let mut rng = Rng::new(1);
         let lat = LatencyModel::default();

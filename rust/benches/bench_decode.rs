@@ -1,12 +1,11 @@
-//! Serving hot-path microbenchmarks: prefill, decode step, fused batched
-//! decode vs sequential, probe suffix lengths. The fused-vs-sequential
-//! comparison is the continuous-batching ablation recorded in
-//! EXPERIMENTS.md §Perf.
+//! Serving hot-path microbenchmarks: prefill, decode step, probe suffix
+//! lengths. The fused-vs-sequential continuous-batching ablation lives
+//! in bench_batch_decode.rs.
 //!
 //!     cargo bench --bench bench_decode
 
 use eat_serve::datasets::Dataset;
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::bench::bench;
 
 fn main() -> anyhow::Result<()> {
@@ -17,77 +16,37 @@ fn main() -> anyhow::Result<()> {
             return Ok(());
         }
     };
-    let vocab = rt.cfg.vocab;
+    let vocab = rt.vocab;
     let ds = Dataset::synth_math500(&vocab, 8, 9);
     let mut prompt = ds.questions[0].prompt.clone();
     prompt.push(vocab.think);
 
     bench("prefill/main", || {
-        rt.main.prefill(&rt.client, &prompt).unwrap();
+        rt.main.prefill(&prompt).unwrap();
     });
     bench("prefill/proxy", || {
-        rt.proxy.prefill(&rt.client, &prompt).unwrap();
+        rt.proxy.prefill(&prompt).unwrap();
     });
 
-    let (_lg, cache) = rt.main.prefill(&rt.client, &prompt)?;
+    let (_lg, cache) = rt.main.prefill(&prompt)?;
     bench("decode/main_single", || {
-        let mut fork = rt.main.fork_cache(&rt.client, &cache).unwrap();
-        rt.main.decode(&rt.client, &mut fork, vocab.nl).unwrap();
+        let mut fork = rt.main.fork(&cache).unwrap();
+        rt.main.decode(&mut fork, vocab.nl).unwrap();
     });
-    let (_lgp, pcache) = rt.proxy.prefill(&rt.client, &prompt)?;
+    let (_lgp, pcache) = rt.proxy.prefill(&prompt)?;
     bench("decode/proxy_single", || {
-        let mut fork = rt.proxy.fork_cache(&rt.client, &pcache).unwrap();
-        rt.proxy.decode(&rt.client, &mut fork, vocab.nl).unwrap();
+        let mut fork = rt.proxy.fork(&pcache).unwrap();
+        rt.proxy.decode(&mut fork, vocab.nl).unwrap();
     });
 
-    // fused batched decode (B=4) vs 4 sequential decodes
-    if rt.main.has_batch() {
-        let b = rt.main.cfg.batch;
-        let mk_caches = || -> anyhow::Result<Vec<_>> {
-            (0..b)
-                .map(|i| {
-                    let mut p = ds.questions[i].prompt.clone();
-                    p.push(vocab.think);
-                    Ok(rt.main.prefill(&rt.client, &p)?.1)
-                })
-                .collect()
-        };
-        // fork fresh caches per iteration (a committed decode advances the
-        // cache; repeated in-place stepping would overflow seq_len) — the
-        // fork cost is identical for both variants, keeping the
-        // comparison fair
-        let templates = mk_caches()?;
-        let toks = vec![vocab.nl; b];
-        let fused = bench("decode/batch4_fused", || {
-            let mut caches: Vec<_> = templates
-                .iter()
-                .map(|c| rt.main.fork_cache(&rt.client, c).unwrap())
-                .collect();
-            rt.main.decode_batch(&rt.client, &mut caches, &toks).unwrap();
-        });
-        let seq = bench("decode/batch4_sequential", || {
-            let mut caches: Vec<_> = templates
-                .iter()
-                .map(|c| rt.main.fork_cache(&rt.client, c).unwrap())
-                .collect();
-            for c in caches.iter_mut() {
-                rt.main.decode(&rt.client, c, vocab.nl).unwrap();
-            }
-        });
-        println!(
-            "\nfused B=4 decode is {:.2}x the latency of 4 sequential steps \
-             (per-token speedup {:.2}x)",
-            fused.mean_ns / seq.mean_ns * 4.0 / 4.0,
-            seq.mean_ns / fused.mean_ns
-        );
-    }
+    // fused batched decode vs sequential: see bench_batch_decode.rs
 
     // probe suffix length scaling (Eq. 12's 1-token vs Eq. 13's 3-token)
     bench("probe/suffix1", || {
-        rt.main.probe(&rt.client, &cache, &vocab.suffix_plain()).unwrap();
+        rt.main.probe(&cache, &vocab.suffix_plain()).unwrap();
     });
     bench("probe/suffix3", || {
-        rt.main.probe(&rt.client, &cache, &vocab.suffix_prefixed()).unwrap();
+        rt.main.probe(&cache, &vocab.suffix_prefixed()).unwrap();
     });
     Ok(())
 }

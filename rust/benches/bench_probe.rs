@@ -7,7 +7,7 @@
 //!     cargo bench --bench bench_probe
 
 use eat_serve::datasets::Dataset;
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::bench::bench;
 
 fn main() -> anyhow::Result<()> {
@@ -18,34 +18,34 @@ fn main() -> anyhow::Result<()> {
             return Ok(());
         }
     };
-    let vocab = rt.cfg.vocab;
+    let vocab = rt.vocab;
     let ds = Dataset::synth_aime(&vocab, 1, 3);
     let mut prompt = ds.questions[0].prompt.clone();
     prompt.push(vocab.think);
-    let (_lg, mut cache) = rt.main.prefill(&rt.client, &prompt)?;
+    let (_lg, mut cache) = rt.main.prefill(&prompt)?;
 
     let suffix = vocab.suffix_prefixed();
     let mut results = Vec::new();
     // grow the committed context and measure the probe at checkpoints
     for target in [16usize, 32, 64, 96, 120] {
-        while cache.pos < target {
-            rt.main.decode(&rt.client, &mut cache, vocab.nl)?;
+        while cache.pos() < target {
+            rt.main.decode(&mut cache, vocab.nl)?;
         }
         let r = bench(&format!("eat_probe/ctx{target}"), || {
-            rt.main.probe(&rt.client, &cache, &suffix).unwrap();
+            rt.main.probe(&cache, &suffix).unwrap();
         });
         results.push((target, r.mean_ns));
     }
 
     // one committed decode step for the "one extra token" comparison
-    let (_lg2, mut c2) = rt.main.prefill(&rt.client, &prompt)?;
-    while c2.pos < 64 {
-        rt.main.decode(&rt.client, &mut c2, vocab.nl)?;
+    let (_lg2, mut c2) = rt.main.prefill(&prompt)?;
+    while c2.pos() < 64 {
+        rt.main.decode(&mut c2, vocab.nl)?;
     }
     let probe_at_64 = results.iter().find(|r| r.0 == 64).unwrap().1;
     let d = bench("decode_step/ctx64", || {
-        let mut fork = rt.main.fork_cache(&rt.client, &c2).unwrap();
-        rt.main.decode(&rt.client, &mut fork, vocab.nl).unwrap();
+        let mut fork = rt.main.fork(&c2).unwrap();
+        rt.main.decode(&mut fork, vocab.nl).unwrap();
     });
     println!(
         "\nEAT probe at ctx=64 is {:.2}x one decode step (paper: ~1 extra token; \
@@ -57,9 +57,9 @@ fn main() -> anyhow::Result<()> {
         println!("  ctx {ctx:>4}: {:.3} ms", ns / 1e6);
     }
     // proxy-model probe for the black-box path
-    let (_l, pc) = rt.proxy.prefill(&rt.client, &prompt)?;
+    let (_l, pc) = rt.proxy.prefill(&prompt)?;
     bench("eat_probe/proxy_ctx_prompt", || {
-        rt.proxy.probe(&rt.client, &pc, &suffix).unwrap();
+        rt.proxy.probe(&pc, &suffix).unwrap();
     });
     Ok(())
 }

@@ -8,7 +8,7 @@
 //!     cargo bench --bench bench_rollout
 
 use eat_serve::datasets::Dataset;
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::sampler::Sampler;
 use eat_serve::util::bench::bench;
 use eat_serve::util::rng::Rng;
@@ -21,35 +21,35 @@ fn main() -> anyhow::Result<()> {
             return Ok(());
         }
     };
-    let vocab = rt.cfg.vocab;
+    let vocab = rt.vocab;
     let ds = Dataset::synth_aime(&vocab, 1, 5);
     let mut prompt = ds.questions[0].prompt.clone();
     prompt.push(vocab.think);
-    let (_lg, mut cache) = rt.main.prefill(&rt.client, &prompt)?;
-    while cache.pos < 64 {
-        rt.main.decode(&rt.client, &mut cache, vocab.nl)?;
+    let (_lg, mut cache) = rt.main.prefill(&prompt)?;
+    while cache.pos() < 64 {
+        rt.main.decode(&mut cache, vocab.nl)?;
     }
     let suffix = vocab.suffix_prefixed();
     let sampler = Sampler::new(0.6, 0.95);
     let mut rng = Rng::new(0);
 
     let probe = bench("eat_probe", || {
-        rt.main.probe(&rt.client, &cache, &suffix).unwrap();
+        rt.main.probe(&cache, &suffix).unwrap();
     });
 
     // one full answer rollout: fork cache, decode suffix, sample to EOS
     let mut one_rollout = || {
-        let mut fork = rt.main.fork_cache(&rt.client, &cache).unwrap();
+        let mut fork = rt.main.fork(&cache).unwrap();
         let mut logits = Vec::new();
         for &t in &suffix {
-            logits = rt.main.decode(&rt.client, &mut fork, t).unwrap();
+            logits = rt.main.decode(&mut fork, t).unwrap();
         }
         for _ in 0..3 {
             let t = sampler.sample(&logits, &mut rng);
             if t == vocab.eos {
                 break;
             }
-            logits = rt.main.decode(&rt.client, &mut fork, t).unwrap();
+            logits = rt.main.decode(&mut fork, t).unwrap();
         }
     };
     let r1 = bench("rollout/k1", &mut one_rollout);

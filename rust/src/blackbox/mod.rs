@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::config::ServeConfig;
 use crate::datasets::{check_answer, Question};
 use crate::monitor::EmaVar;
-use crate::runtime::{KvCache, Runtime};
+use crate::runtime::{Backend, BackendCache, Runtime};
 use crate::sampler::Sampler;
 use crate::util::rng::Rng;
 
@@ -66,7 +66,7 @@ pub struct Chunk {
 /// model; externally exposes only token text — no logits.
 pub struct StreamingApi<'a> {
     rt: &'a Runtime,
-    cache: KvCache,
+    cache: BackendCache,
     cur_logits: Vec<f32>,
     sampler: Sampler,
     rng: Rng,
@@ -88,8 +88,8 @@ impl<'a> StreamingApi<'a> {
         seed: u64,
     ) -> Result<StreamingApi<'a>> {
         let mut prompt = question.prompt.clone();
-        prompt.push(rt.cfg.vocab.think);
-        let (logits, cache) = rt.main.prefill(&rt.client, &prompt)?;
+        prompt.push(rt.vocab.think);
+        let (logits, cache) = rt.main.prefill(&prompt)?;
         Ok(StreamingApi {
             rt,
             cache,
@@ -110,11 +110,12 @@ impl<'a> StreamingApi<'a> {
         if self.finished {
             return Ok(None);
         }
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.vocab;
         let mut tokens = Vec::new();
         while tokens.len() < self.chunk_tokens {
+            // keep headroom for finalize()'s forced tail + sampled answer
             if self.produced >= self.max_tokens
-                || self.cache.pos + 8 >= self.rt.cfg.main.seq_len
+                || self.cache.pos() + vocab.answer_reserve() + 1 >= self.rt.main.seq_len()
             {
                 self.finished = true;
                 break;
@@ -124,8 +125,7 @@ impl<'a> StreamingApi<'a> {
                 self.finished = true;
                 break;
             }
-            self.cur_logits =
-                self.rt.main.decode(&self.rt.client, &mut self.cache, t)?;
+            self.cur_logits = self.rt.main.decode(&mut self.cache, t)?;
             tokens.push(t);
             self.produced += 1;
         }
@@ -140,18 +140,18 @@ impl<'a> StreamingApi<'a> {
     /// Cancel reasoning and ask the service for its final answer (the
     /// paper force-appends `</think>` + answer-inducing text server-side).
     pub fn finalize(mut self) -> Result<Vec<u32>> {
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.vocab;
         let mut tail = Vec::new();
         let mut logits = self.cur_logits.clone();
-        for &t in &[vocab.ethink, vocab.final_, vocab.ans] {
-            if self.cache.pos >= self.rt.cfg.main.seq_len {
+        for &t in &vocab.forced_answer_tail() {
+            if self.cache.pos() >= self.rt.main.seq_len() {
                 break;
             }
-            logits = self.rt.main.decode(&self.rt.client, &mut self.cache, t)?;
+            logits = self.rt.main.decode(&mut self.cache, t)?;
             tail.push(t);
         }
-        for _ in 0..4 {
-            if self.cache.pos >= self.rt.cfg.main.seq_len {
+        for _ in 0..crate::vocab::ANSWER_SAMPLE_CAP {
+            if self.cache.pos() >= self.rt.main.seq_len() {
                 break;
             }
             let t = self.sampler.sample(&logits, &mut self.rng);
@@ -159,7 +159,7 @@ impl<'a> StreamingApi<'a> {
             if t == vocab.eos {
                 break;
             }
-            logits = self.rt.main.decode(&self.rt.client, &mut self.cache, t)?;
+            logits = self.rt.main.decode(&mut self.cache, t)?;
         }
         Ok(tail)
     }
@@ -215,9 +215,9 @@ pub fn run_blackbox(
 
     // local proxy: own cache over the same visible prompt
     let mut prompt = question.prompt.clone();
-    prompt.push(rt.cfg.vocab.think);
-    let (_lg, mut proxy_cache) = rt.proxy.prefill(&rt.client, &prompt)?;
-    let suffix = rt.cfg.vocab.suffix_prefixed();
+    prompt.push(rt.vocab.think);
+    let (_lg, mut proxy_cache) = rt.proxy.prefill(&prompt)?;
+    let suffix = rt.vocab.suffix_prefixed();
     let mut ema = EmaVar::new(cfg.alpha);
 
     let mut points = Vec::new();
@@ -238,22 +238,22 @@ pub fn run_blackbox(
         let nl_pos = chunk
             .tokens
             .iter()
-            .rposition(|&t| t == rt.cfg.vocab.nl);
+            .rposition(|&t| t == rt.vocab.nl);
         let (head, tail) = match nl_pos {
             Some(i) => chunk.tokens.split_at(i + 1),
             None => (&[][..], &chunk.tokens[..]),
         };
         for &t in head {
-            rt.proxy.decode(&rt.client, &mut proxy_cache, t)?;
+            rt.proxy.decode(&mut proxy_cache, t)?;
         }
         let probed = if !head.is_empty() || chunk.finished {
-            let (eat, _) = rt.proxy.probe(&rt.client, &proxy_cache, &suffix)?;
+            let (eat, _) = rt.proxy.probe(&proxy_cache, &suffix)?;
             Some(eat as f64)
         } else {
             None
         };
         for &t in tail {
-            rt.proxy.decode(&rt.client, &mut proxy_cache, t)?;
+            rt.proxy.decode(&mut proxy_cache, t)?;
         }
         tokens_seen += chunk.tokens.len();
         let Some(eat) = probed else {
@@ -298,7 +298,7 @@ pub fn run_blackbox(
     };
 
     let answer_tail = api.finalize()?;
-    let correct = check_answer(&rt.cfg.vocab, question, &answer_tail);
+    let correct = check_answer(&rt.vocab, question, &answer_tail);
     Ok(BlackboxResult {
         question_id: question.id,
         points,

@@ -1,0 +1,313 @@
+//! Slot-major batch cache store: the per-slot KV state of every active
+//! request, owned by the batcher instead of the sessions (DESIGN.md
+//! §3.3).
+//!
+//! Keeping all B caches in one place is what makes the fused decode path
+//! possible: each scheduling tick hands the backend a lane slice built
+//! straight from the store, and the backend keeps the batched K/V image
+//! resident between calls. The store tracks a *dirty* bit per slot — set
+//! on admission (fresh prefill) and on any out-of-band mutation
+//! (sequential-fallback decode) — so only dirty lanes need their host
+//! image re-gathered into the batch; clean lanes ride the resident image.
+//! The accounting is backend-agnostic and therefore testable without
+//! artifacts.
+
+use anyhow::{Context, Result};
+
+use super::kv::SlotId;
+use crate::runtime::{Backend, BackendCache, BatchLane};
+
+/// Upload/residency accounting (asserted by the batching tests, quoted
+/// by the bench report).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StoreCounters {
+    pub installs: u64,
+    pub retires: u64,
+    /// Fused decode calls issued through the store.
+    pub fused_calls: u64,
+    /// Engaged lanes that were dirty and needed their K/V image uploaded.
+    pub dirty_lane_uploads: u64,
+    /// Engaged lanes that were clean (resident image reused).
+    pub resident_lane_hits: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    main: Option<BackendCache>,
+    proxy: Option<BackendCache>,
+    dirty: bool,
+}
+
+/// Fixed-capacity slot-major cache store.
+pub struct BatchCacheStore {
+    slots: Vec<Slot>,
+    pub counters: StoreCounters,
+}
+
+impl BatchCacheStore {
+    pub fn new(capacity: usize) -> BatchCacheStore {
+        BatchCacheStore {
+            slots: (0..capacity).map(|_| Slot::default()).collect(),
+            counters: StoreCounters::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn slot(&self, slot: SlotId) -> Result<&Slot> {
+        self.slots.get(slot.0).context("slot id out of range")
+    }
+
+    fn slot_mut(&mut self, slot: SlotId) -> Result<&mut Slot> {
+        self.slots.get_mut(slot.0).context("slot id out of range")
+    }
+
+    /// Install a freshly admitted request's caches (marks the slot
+    /// dirty: its K/V image is not in the batched buffer yet).
+    pub fn install(
+        &mut self,
+        slot: SlotId,
+        main: BackendCache,
+        proxy: Option<BackendCache>,
+    ) -> Result<()> {
+        let s = self.slot_mut(slot)?;
+        anyhow::ensure!(s.main.is_none(), "slot {} already occupied", slot.0);
+        s.main = Some(main);
+        s.proxy = proxy;
+        s.dirty = true;
+        self.counters.installs += 1;
+        Ok(())
+    }
+
+    /// Drop a retired request's caches.
+    pub fn retire(&mut self, slot: SlotId) -> Result<()> {
+        let s = self.slot_mut(slot)?;
+        anyhow::ensure!(s.main.is_some(), "retiring an empty slot {}", slot.0);
+        s.main = None;
+        s.proxy = None;
+        s.dirty = false;
+        self.counters.retires += 1;
+        Ok(())
+    }
+
+    pub fn is_dirty(&self, slot: SlotId) -> bool {
+        self.slot(slot).map(|s| s.dirty).unwrap_or(false)
+    }
+
+    /// Record an out-of-band mutation of the slot's main cache (e.g. a
+    /// sequential-fallback decode): its resident batch image is stale.
+    pub fn mark_dirty(&mut self, slot: SlotId) -> Result<()> {
+        self.slot_mut(slot)?.dirty = true;
+        Ok(())
+    }
+
+    pub fn main(&self, slot: SlotId) -> Result<&BackendCache> {
+        self.slot(slot)?
+            .main
+            .as_ref()
+            .context("slot has no main cache")
+    }
+
+    pub fn main_mut(&mut self, slot: SlotId) -> Result<&mut BackendCache> {
+        self.slot_mut(slot)?
+            .main
+            .as_mut()
+            .context("slot has no main cache")
+    }
+
+    pub fn proxy(&self, slot: SlotId) -> Option<&BackendCache> {
+        self.slots.get(slot.0).and_then(|s| s.proxy.as_ref())
+    }
+
+    pub fn proxy_mut(&mut self, slot: SlotId) -> Option<&mut BackendCache> {
+        self.slots.get_mut(slot.0).and_then(|s| s.proxy.as_mut())
+    }
+
+    /// Issue ONE fused `decode_batch` for the picked (slot, token) pairs,
+    /// padding idle lanes, and return the per-pick logits in pick order.
+    /// Engaged slots come back clean (their image is resident on the
+    /// backend's batched buffer).
+    pub fn fused_decode(
+        &mut self,
+        backend: &dyn Backend,
+        picks: &[(SlotId, u32)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let width = backend
+            .batch_width()
+            .context("backend has no fused batch entry point")?;
+        anyhow::ensure!(
+            !picks.is_empty() && picks.len() <= width,
+            "{} picks for a {width}-wide batch",
+            picks.len()
+        );
+        // Lane placement: slot-major whenever the store fits the batch
+        // width, so a slot keeps the SAME lane across ticks even as
+        // other requests retire — that stability is what lets the
+        // backend's per-lane residency tags (PJRT scratch image) keep
+        // hitting. Falls back to first-fit when slots > width; lanes
+        // then reshuffle between calls, so every engaged lane is
+        // honestly counted as an upload (the backend's tags will miss).
+        let slot_major = self.slots.len() <= width;
+
+        self.counters.fused_calls += 1;
+        for (slot, _) in picks {
+            let dirty = {
+                let s = self.slot(*slot)?;
+                anyhow::ensure!(s.main.is_some(), "picked empty slot {}", slot.0);
+                s.dirty
+            };
+            if dirty || !slot_major {
+                self.counters.dirty_lane_uploads += 1;
+            } else {
+                self.counters.resident_lane_hits += 1;
+            }
+        }
+        let mut by_slot: Vec<Option<&mut BackendCache>> = self
+            .slots
+            .iter_mut()
+            .map(|s| s.main.as_mut())
+            .collect();
+        let mut lanes: Vec<Option<BatchLane<'_>>> = Vec::new();
+        lanes.resize_with(width, || None);
+        let mut lane_of_pick = Vec::with_capacity(picks.len());
+        for (i, (slot, token)) in picks.iter().enumerate() {
+            let cache = by_slot[slot.0]
+                .take()
+                .context("duplicate slot in fused picks")?;
+            let lane = if slot_major { slot.0 } else { i };
+            anyhow::ensure!(lanes[lane].is_none(), "fused lane collision");
+            lanes[lane] = Some(BatchLane {
+                cache,
+                token: *token,
+            });
+            lane_of_pick.push(lane);
+        }
+
+        let out = backend.decode_batch(&mut lanes)?;
+        drop(lanes);
+        drop(by_slot);
+
+        let mut logits = Vec::with_capacity(picks.len());
+        for ((slot, _), lane) in picks.iter().zip(&lane_of_pick) {
+            self.slots[slot.0].dirty = false;
+            logits.push(
+                out.get(*lane)
+                    .and_then(|l| l.clone())
+                    .context("backend returned no logits for an engaged lane")?,
+            );
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{RefBackend, Runtime};
+    use crate::vocab::Vocab;
+
+    fn prefill(rt: &Runtime, seed: u32) -> BackendCache {
+        let v = rt.vocab;
+        let prompt = vec![v.bos, v.q, v.num(seed % 7 + 1), v.num(3), v.sep, v.think];
+        rt.main.prefill(&prompt).unwrap().1
+    }
+
+    #[test]
+    fn install_retire_lifecycle() {
+        let rt = Runtime::reference();
+        let mut store = BatchCacheStore::new(2);
+        let c = prefill(&rt, 1);
+        store.install(SlotId(0), c, None).unwrap();
+        assert!(store.is_dirty(SlotId(0)));
+        assert!(store.main(SlotId(0)).is_ok());
+        assert!(store.main(SlotId(1)).is_err());
+        // double install refused
+        let c2 = prefill(&rt, 2);
+        assert!(store.install(SlotId(0), c2, None).is_err());
+        store.retire(SlotId(0)).unwrap();
+        assert!(store.main(SlotId(0)).is_err());
+        assert!(store.retire(SlotId(0)).is_err());
+        assert_eq!(store.counters.installs, 1);
+        assert_eq!(store.counters.retires, 1);
+    }
+
+    #[test]
+    fn dirty_accounting_over_fused_ticks() {
+        let rt = Runtime::reference();
+        let v = rt.vocab;
+        let mut store = BatchCacheStore::new(3);
+        for i in 0..3 {
+            let c = prefill(&rt, i);
+            store.install(SlotId(i as usize), c, None).unwrap();
+        }
+        let picks: Vec<(SlotId, u32)> =
+            (0..3).map(|i| (SlotId(i), v.ver)).collect();
+
+        // tick 1: all three lanes are fresh admissions -> dirty uploads
+        store.fused_decode(rt.main.as_ref(), &picks).unwrap();
+        assert_eq!(store.counters.dirty_lane_uploads, 3);
+        assert_eq!(store.counters.resident_lane_hits, 0);
+
+        // tick 2: all lanes resident
+        store.fused_decode(rt.main.as_ref(), &picks).unwrap();
+        assert_eq!(store.counters.dirty_lane_uploads, 3);
+        assert_eq!(store.counters.resident_lane_hits, 3);
+
+        // out-of-band mutation dirties exactly that lane
+        let cache = store.main_mut(SlotId(1)).unwrap();
+        rt.main.decode(cache, v.ver).unwrap();
+        store.mark_dirty(SlotId(1)).unwrap();
+        store.fused_decode(rt.main.as_ref(), &picks).unwrap();
+        assert_eq!(store.counters.dirty_lane_uploads, 4);
+        assert_eq!(store.counters.resident_lane_hits, 5);
+        assert_eq!(store.counters.fused_calls, 3);
+    }
+
+    #[test]
+    fn fused_decode_advances_only_picked_slots() {
+        let rt = Runtime::reference();
+        let v = rt.vocab;
+        let mut store = BatchCacheStore::new(3);
+        for i in 0..3 {
+            let c = prefill(&rt, i);
+            store.install(SlotId(i as usize), c, None).unwrap();
+        }
+        let before: Vec<usize> = (0..3)
+            .map(|i| store.main(SlotId(i)).unwrap().pos())
+            .collect();
+        let logits = store
+            .fused_decode(rt.main.as_ref(), &[(SlotId(0), v.ver), (SlotId(2), v.ver)])
+            .unwrap();
+        assert_eq!(logits.len(), 2);
+        assert_eq!(store.main(SlotId(0)).unwrap().pos(), before[0] + 1);
+        assert_eq!(store.main(SlotId(1)).unwrap().pos(), before[1]);
+        assert_eq!(store.main(SlotId(2)).unwrap().pos(), before[2] + 1);
+    }
+
+    #[test]
+    fn fused_decode_respects_batch_width() {
+        let vocab = Vocab::default_layout();
+        let rt = Runtime {
+            vocab,
+            main: Box::new(RefBackend::new("tiny", vocab, 128, Some(2))),
+            proxy: Box::new(RefBackend::proxy(vocab)),
+            artifacts: None,
+        };
+        let mut store = BatchCacheStore::new(3);
+        for i in 0..3 {
+            let c = prefill(&rt, i);
+            store.install(SlotId(i as usize), c, None).unwrap();
+        }
+        let picks: Vec<(SlotId, u32)> =
+            (0..3).map(|i| (SlotId(i), vocab.ver)).collect();
+        assert!(
+            store.fused_decode(rt.main.as_ref(), &picks).is_err(),
+            "3 picks must not fit a 2-wide batch"
+        );
+        assert!(store
+            .fused_decode(rt.main.as_ref(), &picks[..2])
+            .is_ok());
+    }
+}

@@ -1,25 +1,39 @@
-//! Continuous batcher: vLLM-style slot scheduling over `ReasoningSession`s.
+//! Continuous batcher: vLLM-style slot scheduling over split-phase
+//! [`ReasoningSession`]s — the batcher, not the session, owns model
+//! execution (DESIGN.md §3.3).
 //!
 //! Requests arrive with timestamps (the workload generator produces a
-//! Poisson process); the batcher admits them into up to `slots` concurrent
-//! sessions (KV capacity permitting — backpressure otherwise), advances all
-//! active sessions round-robin one decode step per scheduling tick, and
-//! retires finished ones. On 1 CPU core the decode steps of co-resident
-//! requests interleave rather than parallelize; the scheduling, admission,
-//! fairness and accounting logic is identical to the multi-device case.
+//! Poisson process); the batcher admits them into up to `slots`
+//! concurrent sessions (KV capacity permitting — backpressure
+//! otherwise). Each scheduling tick it polls every active session up to
+//! its pending decode, servicing probes and rollouts *out-of-band* as
+//! they surface, then commits **all pending decodes in one fused
+//! `decode_batch` call** against the slot-major [`BatchCacheStore`]
+//! (idle lanes padded; chunked only if active > batch width). When the
+//! backend carries no batch entry point — or `force_sequential` is set —
+//! the same decodes run one by one in admission order. The session
+//! protocol cannot observe which path serviced it, so on the reference
+//! backend (a pure function of token history) the two paths are
+//! bit-identical for the same seed; on PJRT artifacts the fused kernel
+//! agrees with the single-decode kernel to ~1e-3, so sampled tokens can
+//! in principle diverge at nucleus boundaries.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::engine::{MonitorModel, ReasoningSession, RequestResult};
+use super::batch_cache::{BatchCacheStore, StoreCounters};
+use super::engine::{
+    run_probe, run_rollout, start_session, MonitorModel, ReasoningSession, RequestResult,
+    StepWork,
+};
 use super::kv::{KvSlotManager, SlotId};
 use super::metrics::ServeMetrics;
 use crate::config::ServeConfig;
 use crate::datasets::Question;
 use crate::exit::ExitPolicy;
-use crate::runtime::Runtime;
+use crate::runtime::{Backend, Runtime};
 use crate::util::rng::Rng;
 
 /// A request waiting for admission.
@@ -28,8 +42,8 @@ pub struct QueuedRequest {
     pub arrived: Instant,
 }
 
-struct Active<'a> {
-    session: ReasoningSession<'a>,
+struct Active {
+    session: ReasoningSession,
     slot: SlotId,
     arrived: Instant,
     admitted: Instant,
@@ -44,9 +58,13 @@ pub struct Batcher<'a> {
     monitor: MonitorModel,
     make_policy: PolicyFactory,
     kv: KvSlotManager,
+    store: BatchCacheStore,
     queue: VecDeque<QueuedRequest>,
-    active: Vec<Active<'a>>,
+    active: Vec<Active>,
     rng: Rng,
+    /// Disable the fused path even when the backend has one (A/B
+    /// determinism checks, ablations).
+    pub force_sequential: bool,
     pub metrics: ServeMetrics,
     pub results: Vec<RequestResult>,
 }
@@ -59,9 +77,9 @@ impl<'a> Batcher<'a> {
         slots: usize,
         make_policy: PolicyFactory,
     ) -> Batcher<'a> {
-        let slot_bytes = rt.cfg.main.cache_elems() * 4 * 2
+        let slot_bytes = rt.main.cache_elems() * 4 * 2
             + if monitor == MonitorModel::Proxy {
-                rt.cfg.proxy.cache_elems() * 4 * 2
+                rt.proxy.cache_elems() * 4 * 2
             } else {
                 0
             };
@@ -72,9 +90,11 @@ impl<'a> Batcher<'a> {
             monitor,
             make_policy,
             kv: KvSlotManager::new(slots, slot_bytes),
+            store: BatchCacheStore::new(slots),
             queue: VecDeque::new(),
             active: Vec::new(),
             rng: Rng::new(seed ^ 0xBA7C4E5),
+            force_sequential: false,
             metrics: ServeMetrics::new(),
             results: Vec::new(),
         }
@@ -103,6 +123,11 @@ impl<'a> Batcher<'a> {
         self.kv.peak()
     }
 
+    /// Batch-store upload/residency accounting.
+    pub fn store_counters(&self) -> StoreCounters {
+        self.store.counters
+    }
+
     /// Admit queued requests while KV slots are free (prefill phase).
     fn admit(&mut self) -> Result<()> {
         while !self.queue.is_empty() {
@@ -111,7 +136,7 @@ impl<'a> Batcher<'a> {
             };
             let req = self.queue.pop_front().unwrap();
             let policy = (self.make_policy)();
-            let session = ReasoningSession::new(
+            let (session, caches) = start_session(
                 self.rt,
                 self.cfg.clone(),
                 self.monitor,
@@ -119,6 +144,7 @@ impl<'a> Batcher<'a> {
                 policy,
                 self.rng.fork(),
             )?;
+            self.store.install(slot, caches.main, caches.proxy)?;
             self.active.push(Active {
                 session,
                 slot,
@@ -129,28 +155,103 @@ impl<'a> Batcher<'a> {
         Ok(())
     }
 
-    /// One scheduling tick: admit, then advance every active session by a
-    /// single decode step (continuous batching granularity), retiring the
-    /// finished ones. Returns the number of sessions advanced.
+    /// One scheduling tick: admit; poll every active session to its
+    /// pending decode (probes/rollouts serviced out-of-band); commit all
+    /// pending decodes — fused when possible, sequential otherwise;
+    /// retire sessions that reported `Done`. Returns the number of
+    /// sessions advanced.
     pub fn tick(&mut self) -> Result<usize> {
         self.admit()?;
-        let mut advanced = 0;
-        let mut finished_idx = Vec::new();
-        for (i, a) in self.active.iter_mut().enumerate() {
-            let done = a.session.step()?;
+        let rt = self.rt;
+        let force_sequential = self.force_sequential;
+        let store = &mut self.store;
+        let active = &mut self.active;
+
+        let mut advanced = 0usize;
+        // (active index, token, mirror-to-proxy)
+        let mut decodes: Vec<(usize, u32, bool)> = Vec::new();
+        let mut finished: Vec<usize> = Vec::new();
+
+        // phase A: drive each session to its next decode or completion
+        for (i, a) in active.iter_mut().enumerate() {
+            loop {
+                match a.session.poll() {
+                    StepWork::Done => {
+                        finished.push(i);
+                        break;
+                    }
+                    StepWork::Decode { token, mirror } => {
+                        decodes.push((i, token, mirror));
+                        break;
+                    }
+                    StepWork::Probe { suffix, target } => {
+                        run_probe(
+                            rt,
+                            &mut a.session,
+                            store.main(a.slot)?,
+                            store.proxy(a.slot),
+                            &suffix,
+                            target,
+                        )?;
+                    }
+                    StepWork::Rollout { suffix, max_tokens } => {
+                        run_rollout(rt, &mut a.session, store.main(a.slot)?, &suffix, max_tokens)?;
+                    }
+                }
+            }
             advanced += 1;
-            if done {
-                finished_idx.push(i);
+        }
+
+        // phase B: commit every pending decode
+        let width = if force_sequential {
+            None
+        } else {
+            rt.main.batch_width()
+        };
+        match width {
+            Some(w) => {
+                // one fused decode_batch per tick (chunked only when the
+                // active set exceeds the batch width)
+                for chunk in decodes.chunks(w) {
+                    let picks: Vec<(SlotId, u32)> = chunk
+                        .iter()
+                        .map(|&(i, tok, _)| (active[i].slot, tok))
+                        .collect();
+                    let logits = store.fused_decode(rt.main.as_ref(), &picks)?;
+                    for (&(i, token, mirror), lg) in chunk.iter().zip(logits) {
+                        if mirror {
+                            if let Some(pc) = store.proxy_mut(active[i].slot) {
+                                rt.proxy.decode(pc, token)?;
+                            }
+                        }
+                        active[i].session.complete_decode(lg)?;
+                    }
+                }
+            }
+            None => {
+                // sequential fallback, admission order: same results,
+                // one decode per session
+                for &(i, token, mirror) in &decodes {
+                    let slot = active[i].slot;
+                    let lg = rt.main.decode(store.main_mut(slot)?, token)?;
+                    store.mark_dirty(slot)?;
+                    if mirror {
+                        if let Some(pc) = store.proxy_mut(slot) {
+                            rt.proxy.decode(pc, token)?;
+                        }
+                    }
+                    active[i].session.complete_decode(lg)?;
+                }
             }
         }
-        // retire in reverse index order to keep indices valid
-        for &i in finished_idx.iter().rev() {
-            let a = self.active.swap_remove(i);
+
+        // phase C: retire in reverse index order to keep indices valid
+        for &i in finished.iter().rev() {
+            let a = active.swap_remove(i);
+            store.retire(a.slot)?;
             self.kv.release(a.slot)?;
-            let queue_ms =
-                a.admitted.duration_since(a.arrived).as_secs_f64() * 1e3;
-            let latency_ms =
-                a.arrived.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = a.admitted.duration_since(a.arrived).as_secs_f64() * 1e3;
+            let latency_ms = a.arrived.elapsed().as_secs_f64() * 1e3;
             let result = a.session.finish();
             self.metrics.record_completion(
                 result.correct,

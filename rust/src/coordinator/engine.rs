@@ -1,11 +1,22 @@
-//! The serving engine: drives a request through
-//! prefill -> reasoning (line loop + EAT monitoring) -> answer elicitation.
+//! The serving engine: a *split-phase* per-request state machine.
 //!
-//! `ReasoningSession` is a per-request state machine advanced one decode
-//! step at a time, so the continuous batcher can interleave many sessions
-//! (vLLM-style) while the quickstart/eval paths drive a single session to
-//! completion. All model access goes through the AOT artifacts — no Python
-//! anywhere near this path.
+//! `ReasoningSession` holds **no model or runtime reference**. It is
+//! advanced by a poll/complete protocol (DESIGN.md §3.2):
+//!
+//!  * [`ReasoningSession::poll`] returns the next [`StepWork`] the
+//!    request needs — a decode to commit, a probe, a rollout, or `Done`;
+//!  * the driver executes that work against a [`Backend`] (it owns the
+//!    caches) and feeds the result back through `complete_decode` /
+//!    `complete_probe` / `complete_rollout`.
+//!
+//! This inversion is what lets the continuous batcher gather the pending
+//! decode of *every* active session into one fused `decode_batch` call
+//! per scheduling tick, while single-request paths ([`serve_one`],
+//! tracegen, quickstart) drive the same protocol sequentially through
+//! [`service_work`]. The session's control flow — line loop, EAT
+//! monitoring at line boundaries (Alg. 1), forced answer elicitation —
+//! is identical either way, and with identical seeds the produced
+//! [`RequestResult`]s are identical too.
 
 use std::time::Instant;
 
@@ -14,9 +25,13 @@ use anyhow::Result;
 use crate::config::ServeConfig;
 use crate::datasets::{check_answer, Question};
 use crate::exit::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
-use crate::runtime::{KvCache, ModelRuntime, Runtime};
+use crate::runtime::{Backend, BackendCache, Runtime};
 use crate::sampler::Sampler;
 use crate::util::rng::Rng;
+use crate::vocab::{Vocab, ANSWER_SAMPLE_CAP};
+
+/// Greedy rollout length of the confidence baseline (Eq. 16).
+pub const CONFIDENCE_ROLLOUT_LEN: usize = 5;
 
 /// Which model computes EAT (Alg. 1's optional proxy phi).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,6 +41,33 @@ pub enum MonitorModel {
     /// Black-box: a separate small proxy keeps its own KV cache over the
     /// verbal reasoning stream and supplies the entropy.
     Proxy,
+}
+
+/// Which cache/model a probe targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeTarget {
+    /// Always the main model (answer-distribution probes, #UA@K).
+    Main,
+    /// The monitoring model: the proxy when black-box, else the main.
+    Monitor,
+}
+
+/// Work a session asks its driver to perform.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepWork {
+    /// Commit `token` on the main model and reply with the new logits.
+    /// When `mirror` is set (proxy-monitored reasoning tokens), the
+    /// driver also commits the token into the proxy cache.
+    Decode { token: u32, mirror: bool },
+    /// Probe `suffix` against `target` (cache untouched); reply with
+    /// (entropy, logits).
+    Probe { suffix: Vec<u32>, target: ProbeTarget },
+    /// Greedy confidence rollout (Eq. 16) on a *fork* of the main cache:
+    /// decode `suffix`, then up to `max_tokens` greedy continuations;
+    /// reply with (length-normalized likelihood, tokens charged).
+    Rollout { suffix: Vec<u32>, max_tokens: usize },
+    /// The request is finished; call [`ReasoningSession::finish`].
+    Done,
 }
 
 /// Completed request summary.
@@ -47,26 +89,46 @@ pub struct RequestResult {
     pub wall_ms: f64,
 }
 
+/// Internal protocol state. `Await*` states have work in flight; the
+/// others decide the next work at `poll` time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Phase {
-    Reasoning,
+enum State {
+    /// Reasoning phase, logits in hand: next poll samples a token.
+    Ready,
+    /// Reasoning decode in flight.
+    AwaitDecode { tok: u32 },
+    /// EAT probe in flight (line boundary).
+    AwaitEat,
+    /// Answer-distribution probe in flight for #UA@K sampling.
+    AwaitUa,
+    /// Confidence rollout in flight.
+    AwaitConf,
+    /// Elicitation: about to emit the next forced/sampled tail token.
+    Elicit { forced: usize, sampled: usize },
+    /// Elicitation decode in flight.
+    AwaitElicit { tok: u32, forced: usize, sampled: usize },
     Done,
 }
 
-/// Per-request state machine.
-pub struct ReasoningSession<'a> {
-    rt: &'a Runtime,
+/// Per-request split-phase state machine (no model access).
+pub struct ReasoningSession {
     cfg: ServeConfig,
     monitor: MonitorModel,
+    vocab: Vocab,
+    seq_len: usize,
     pub question: Question,
     policy: Box<dyn ExitPolicy>,
     rng: Rng,
     sampler: Sampler,
 
-    cache: KvCache,
-    proxy_cache: Option<KvCache>,
+    /// Logits of the next token (updated by every completed decode).
     cur_logits: Vec<f32>,
-    phase: Phase,
+    /// Mirror of the main cache's write position.
+    pos: usize,
+    state: State,
+    /// Line-boundary observation under construction.
+    pending_obs: LineObs,
+    line_needs: SignalNeeds,
 
     reasoning_tokens: Vec<u32>,
     line_count: usize,
@@ -77,37 +139,38 @@ pub struct ReasoningSession<'a> {
     started: Instant,
 }
 
-impl<'a> ReasoningSession<'a> {
-    /// Prefill the prompt (+`<think>`) on the main model, and on the proxy
-    /// when black-box monitoring is requested.
+impl ReasoningSession {
+    /// Build a session from a completed prefill. The driver prefilled
+    /// `question.prompt + <think>` (see [`start_session`]) and hands the
+    /// resulting logits + position in; the session never touches a model
+    /// from here on.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
-        rt: &'a Runtime,
+        vocab: Vocab,
+        seq_len: usize,
         cfg: ServeConfig,
         monitor: MonitorModel,
         question: Question,
         policy: Box<dyn ExitPolicy>,
         rng: Rng,
-    ) -> Result<ReasoningSession<'a>> {
-        let mut prompt = question.prompt.clone();
-        prompt.push(rt.cfg.vocab.think);
-        let (logits, cache) = rt.main.prefill(&rt.client, &prompt)?;
-        let proxy_cache = match monitor {
-            MonitorModel::SelfModel => None,
-            MonitorModel::Proxy => Some(rt.proxy.prefill(&rt.client, &prompt)?.1),
-        };
+        prefill_logits: Vec<f32>,
+        prompt_len: usize,
+    ) -> ReasoningSession {
         let sampler = Sampler::new(cfg.temperature, cfg.top_p);
-        Ok(ReasoningSession {
-            rt,
+        ReasoningSession {
             cfg,
             monitor,
+            vocab,
+            seq_len,
             question,
             policy,
             rng,
             sampler,
-            cache,
-            proxy_cache,
-            cur_logits: logits,
-            phase: Phase::Reasoning,
+            cur_logits: prefill_logits,
+            pos: prompt_len,
+            state: State::Ready,
+            pending_obs: LineObs::default(),
+            line_needs: SignalNeeds::default(),
             reasoning_tokens: Vec::new(),
             line_count: 0,
             probes: 0,
@@ -115,195 +178,271 @@ impl<'a> ReasoningSession<'a> {
             exit_reason: None,
             answer_tail: Vec::new(),
             started: Instant::now(),
-        })
+        }
     }
 
     pub fn done(&self) -> bool {
-        self.phase == Phase::Done
+        self.state == State::Done
     }
 
     pub fn reasoning_len(&self) -> usize {
         self.reasoning_tokens.len()
     }
 
-    /// The monitoring model + cache used for probes.
-    fn probe_target(&self) -> (&ModelRuntime, &KvCache) {
-        match (self.monitor, &self.proxy_cache) {
-            (MonitorModel::Proxy, Some(pc)) => (&self.rt.proxy, pc),
-            _ => (&self.rt.main, &self.cache),
+    /// The probe target of the EAT signal per the monitoring mode.
+    fn monitor_target(&self) -> ProbeTarget {
+        match self.monitor {
+            MonitorModel::Proxy => ProbeTarget::Monitor,
+            MonitorModel::SelfModel => ProbeTarget::Main,
         }
     }
 
     /// EAT probe suffix per config (Eq. 12 vs Eq. 13).
     fn probe_suffix(&self) -> Vec<u32> {
         if self.cfg.prefixed_probe {
-            self.rt.cfg.vocab.suffix_prefixed()
+            self.vocab.suffix_prefixed()
         } else {
-            self.rt.cfg.vocab.suffix_plain()
+            self.vocab.suffix_plain()
         }
     }
 
-    /// Compute the signals the active policy needs at a line boundary.
-    fn line_signals(&mut self, needs: SignalNeeds) -> Result<LineObs> {
-        let mut obs = LineObs {
-            tokens: self.reasoning_tokens.len(),
-            ..Default::default()
+    /// After a line boundary (or a completed line signal), pick the next
+    /// signal the policy still needs, or finalize the line.
+    fn advance_line(&mut self) {
+        let needs = self.line_needs;
+        if needs.eat && self.pending_obs.eat.is_none() {
+            self.state = State::AwaitEat;
+            return;
+        }
+        let wants_ua = needs.rollouts_k > 0
+            && self.line_count % needs.rollout_every == 0
+            && self.pending_obs.unique_answers.is_none();
+        if wants_ua {
+            self.state = State::AwaitUa;
+            return;
+        }
+        if needs.confidence && self.pending_obs.confidence.is_none() {
+            self.state = State::AwaitConf;
+            return;
+        }
+        // all signals gathered: evaluate the exit policy (Alg. 1 l. 6-9)
+        match self.policy.observe(&self.pending_obs) {
+            ExitDecision::Exit(reason) => self.begin_elicit(reason),
+            ExitDecision::Continue => self.state = State::Ready,
+        }
+    }
+
+    /// Begin answer elicitation with the given exit reason.
+    fn begin_elicit(&mut self, reason: ExitReason) {
+        self.exit_reason = Some(reason);
+        self.state = State::Elicit {
+            forced: 0,
+            sampled: 0,
         };
-        if needs.eat {
-            let suffix = self.probe_suffix();
-            let (model, cache) = self.probe_target();
-            let (eat, _logits) = model.probe(&self.rt.client, cache, &suffix)?;
-            self.probes += 1;
-            obs.eat = Some(eat as f64);
-        }
-        if needs.rollouts_k > 0 && self.line_count % needs.rollout_every == 0 {
-            let (ua, toks) = self.sample_unique_answers(needs.rollouts_k)?;
-            obs.unique_answers = Some(ua);
-            self.rollout_tokens += toks;
-        }
-        if needs.confidence {
-            let (conf, toks) = self.confidence_rollout()?;
-            obs.confidence = Some(conf);
-            self.rollout_tokens += toks;
-        }
-        Ok(obs)
     }
 
-    /// #UA@K: sample K answer rollouts, count unique extracted answers.
-    /// The answer of the chain-sum task is a single token after the forced
-    /// `</think> Final answer: A` suffix, so sampling the probe logits K
-    /// times is *distributionally identical* to K full rollouts; we charge
-    /// the full rollout token cost (suffix + answer + EOS per rollout), as
-    /// the paper does in Fig. 6b.
-    fn sample_unique_answers(&mut self, k: usize) -> Result<(usize, usize)> {
-        let suffix = self.rt.cfg.vocab.suffix_prefixed();
-        let (_eat, logits) = self
-            .rt
-            .main
-            .probe(&self.rt.client, &self.cache, &suffix)?;
-        self.probes += 1;
-        let mut seen = std::collections::BTreeSet::new();
-        for _ in 0..k {
-            seen.insert(self.sampler.sample(&logits, &mut self.rng));
+    /// What should the driver do next? Idempotent for in-flight states:
+    /// re-polling without completing returns the same work.
+    pub fn poll(&mut self) -> StepWork {
+        loop {
+            match self.state {
+                State::Ready => {
+                    // headroom check: leave space for the full answer tail
+                    // (forced suffix + sampled value/EOS) — derived from
+                    // the vocab, not a magic constant
+                    let room = self.seq_len - self.pos;
+                    if room <= self.vocab.answer_reserve() {
+                        self.begin_elicit(ExitReason::TokenBudget);
+                        continue;
+                    }
+                    let tok = self.sampler.sample(&self.cur_logits, &mut self.rng);
+                    if tok == self.vocab.ethink {
+                        // the model stopped thinking on its own
+                        self.policy.observe(&LineObs {
+                            tokens: self.reasoning_tokens.len(),
+                            self_terminated: true,
+                            ..Default::default()
+                        });
+                        self.begin_elicit(ExitReason::SelfTerminated);
+                        continue;
+                    }
+                    self.state = State::AwaitDecode { tok };
+                    return StepWork::Decode {
+                        token: tok,
+                        mirror: self.monitor == MonitorModel::Proxy,
+                    };
+                }
+                State::AwaitDecode { tok } => {
+                    return StepWork::Decode {
+                        token: tok,
+                        mirror: self.monitor == MonitorModel::Proxy,
+                    };
+                }
+                State::AwaitEat => {
+                    return StepWork::Probe {
+                        suffix: self.probe_suffix(),
+                        target: self.monitor_target(),
+                    };
+                }
+                State::AwaitUa => {
+                    // #UA@K always samples the main model's forced-answer
+                    // distribution (Alg. 3)
+                    return StepWork::Probe {
+                        suffix: self.vocab.suffix_prefixed(),
+                        target: ProbeTarget::Main,
+                    };
+                }
+                State::AwaitConf => {
+                    return StepWork::Rollout {
+                        suffix: self.vocab.suffix_prefixed(),
+                        max_tokens: CONFIDENCE_ROLLOUT_LEN,
+                    };
+                }
+                State::Elicit { forced, sampled } => {
+                    if self.pos >= self.seq_len {
+                        self.state = State::Done;
+                        continue;
+                    }
+                    let force = self.vocab.forced_answer_tail();
+                    if forced < force.len() {
+                        let tok = force[forced];
+                        self.state = State::AwaitElicit {
+                            tok,
+                            forced,
+                            sampled,
+                        };
+                        return StepWork::Decode {
+                            token: tok,
+                            mirror: false,
+                        };
+                    }
+                    if sampled >= ANSWER_SAMPLE_CAP {
+                        self.state = State::Done;
+                        continue;
+                    }
+                    let tok = self.sampler.sample(&self.cur_logits, &mut self.rng);
+                    self.answer_tail.push(tok);
+                    if tok == self.vocab.eos {
+                        self.state = State::Done;
+                        continue;
+                    }
+                    self.state = State::AwaitElicit {
+                        tok,
+                        forced,
+                        sampled: sampled + 1,
+                    };
+                    return StepWork::Decode {
+                        token: tok,
+                        mirror: false,
+                    };
+                }
+                State::AwaitElicit { tok, .. } => {
+                    return StepWork::Decode {
+                        token: tok,
+                        mirror: false,
+                    };
+                }
+                State::Done => return StepWork::Done,
+            }
         }
-        let per_rollout_tokens = suffix.len() + 2; // answer value + EOS
-        Ok((seen.len(), k * per_rollout_tokens))
     }
 
-    /// Confidence (Eq. 16): greedy rollout of `rollout_len` tokens after
-    /// the answer-inducing suffix on a *forked* cache; returns the
-    /// length-normalized likelihood.
-    fn confidence_rollout(&mut self) -> Result<(f64, usize)> {
-        let suffix = self.rt.cfg.vocab.suffix_prefixed();
-        let mut fork = self.rt.main.fork_cache(&self.rt.client, &self.cache)?;
-        let mut logits = Vec::new();
-        for &t in &suffix {
-            logits = self.rt.main.decode(&self.rt.client, &mut fork, t)?;
-        }
-        let rollout_len = 5usize;
-        let mut logprob_sum = 0.0f64;
-        let mut produced = 0usize;
-        for _ in 0..rollout_len {
-            if fork.pos >= self.rt.cfg.main.seq_len {
-                break;
+    /// Feed back the logits of a completed [`StepWork::Decode`].
+    pub fn complete_decode(&mut self, logits: Vec<f32>) -> Result<()> {
+        match self.state {
+            State::AwaitDecode { tok } => {
+                self.cur_logits = logits;
+                self.pos += 1;
+                self.reasoning_tokens.push(tok);
+                if tok == self.vocab.nl {
+                    // line boundary: gather what the policy needs
+                    self.line_count += 1;
+                    self.line_needs = self.policy.needs();
+                    self.pending_obs = LineObs {
+                        tokens: self.reasoning_tokens.len(),
+                        ..Default::default()
+                    };
+                    self.advance_line();
+                } else if self.reasoning_tokens.len() >= self.cfg.max_think_tokens {
+                    self.begin_elicit(ExitReason::TokenBudget);
+                } else {
+                    self.state = State::Ready;
+                }
+                Ok(())
             }
-            let tok = crate::sampler::argmax(&logits);
-            logprob_sum += Sampler::logprob(&logits, tok);
-            logits = self.rt.main.decode(&self.rt.client, &mut fork, tok)?;
-            produced += 1;
+            State::AwaitElicit {
+                tok,
+                forced,
+                sampled,
+            } => {
+                self.cur_logits = logits;
+                self.pos += 1;
+                let force_len = self.vocab.forced_answer_tail().len();
+                if forced < force_len {
+                    // forced tokens enter the tail once actually decoded
+                    self.answer_tail.push(tok);
+                    self.state = State::Elicit {
+                        forced: forced + 1,
+                        sampled,
+                    };
+                } else {
+                    self.state = State::Elicit { forced, sampled };
+                }
+                Ok(())
+            }
+            _ => anyhow::bail!("complete_decode in state {:?}", self.state),
         }
-        let conf = (logprob_sum / produced.max(1) as f64).exp();
-        Ok((conf, suffix.len() + produced))
     }
 
-    /// Advance by one decode step. Returns true when the request finished.
-    pub fn step(&mut self) -> Result<bool> {
-        if self.phase == Phase::Done {
-            return Ok(true);
-        }
-        // room check: leave space for the answer tail (suffix + value + EOS)
-        let room = self.rt.cfg.main.seq_len - self.cache.pos;
-        if room <= 6 {
-            self.exit_reason = Some(ExitReason::TokenBudget);
-            return self.elicit_answer().map(|_| true);
-        }
-
-        let tok = self.sampler.sample(&self.cur_logits, &mut self.rng);
-        let vocab = self.rt.cfg.vocab;
-
-        if tok == vocab.ethink {
-            // the model decided to stop thinking on its own
-            self.policy.observe(&LineObs {
-                tokens: self.reasoning_tokens.len(),
-                self_terminated: true,
-                ..Default::default()
-            });
-            self.exit_reason = Some(ExitReason::SelfTerminated);
-            return self.elicit_answer().map(|_| true);
-        }
-
-        // commit the token to the main cache (and mirror into the proxy)
-        self.cur_logits = self.rt.main.decode(&self.rt.client, &mut self.cache, tok)?;
-        if let Some(pc) = self.proxy_cache.as_mut() {
-            self.rt.proxy.decode(&self.rt.client, pc, tok)?;
-        }
-        self.reasoning_tokens.push(tok);
-
-        if tok == vocab.nl {
-            // line boundary: evaluate the exit policy (Alg. 1 lines 6-9)
-            self.line_count += 1;
-            let needs = self.policy.needs();
-            let obs = self.line_signals(needs)?;
-            if let ExitDecision::Exit(reason) = self.policy.observe(&obs) {
-                self.exit_reason = Some(reason);
-                return self.elicit_answer().map(|_| true);
+    /// Feed back a completed [`StepWork::Probe`].
+    pub fn complete_probe(&mut self, eat: f32, logits: &[f32]) -> Result<()> {
+        match self.state {
+            State::AwaitEat => {
+                self.probes += 1;
+                self.pending_obs.eat = Some(eat as f64);
+                self.advance_line();
+                Ok(())
             }
-        } else if self.reasoning_tokens.len() >= self.cfg.max_think_tokens {
-            self.exit_reason = Some(ExitReason::TokenBudget);
-            return self.elicit_answer().map(|_| true);
+            State::AwaitUa => {
+                // #UA@K: the answer of the chain-sum task is a single
+                // token after the forced suffix, so sampling the probe
+                // logits K times is *distributionally identical* to K
+                // full rollouts; we charge the full rollout token cost
+                // (suffix + answer + EOS per rollout), as the paper does
+                // in Fig. 6b.
+                self.probes += 1;
+                let k = self.line_needs.rollouts_k;
+                let mut seen = std::collections::BTreeSet::new();
+                for _ in 0..k {
+                    seen.insert(self.sampler.sample(logits, &mut self.rng));
+                }
+                self.pending_obs.unique_answers = Some(seen.len());
+                let per_rollout = self.vocab.suffix_prefixed().len() + 2; // value + EOS
+                self.rollout_tokens += k * per_rollout;
+                self.advance_line();
+                Ok(())
+            }
+            _ => anyhow::bail!("complete_probe in state {:?}", self.state),
         }
-        Ok(false)
     }
 
-    /// Force `</think> Final answer: A` and sample the answer
-    /// (GenTillEoS, Alg. 1 line 11).
-    fn elicit_answer(&mut self) -> Result<()> {
-        let vocab = self.rt.cfg.vocab;
-        let force = [vocab.ethink, vocab.final_, vocab.ans];
-        let mut logits = self.cur_logits.clone();
-        for &t in &force {
-            if self.cache.pos >= self.rt.cfg.main.seq_len {
-                break;
+    /// Feed back a completed [`StepWork::Rollout`].
+    pub fn complete_rollout(&mut self, confidence: f64, tokens_charged: usize) -> Result<()> {
+        match self.state {
+            State::AwaitConf => {
+                self.pending_obs.confidence = Some(confidence);
+                self.rollout_tokens += tokens_charged;
+                self.advance_line();
+                Ok(())
             }
-            logits = self.rt.main.decode(&self.rt.client, &mut self.cache, t)?;
-            self.answer_tail.push(t);
+            _ => anyhow::bail!("complete_rollout in state {:?}", self.state),
         }
-        // sample until EOS or a short cap (answers are value + EOS)
-        for _ in 0..4 {
-            if self.cache.pos >= self.rt.cfg.main.seq_len {
-                break;
-            }
-            let t = self.sampler.sample(&logits, &mut self.rng);
-            self.answer_tail.push(t);
-            if t == vocab.eos {
-                break;
-            }
-            logits = self.rt.main.decode(&self.rt.client, &mut self.cache, t)?;
-        }
-        self.phase = Phase::Done;
-        Ok(())
-    }
-
-    /// Run the session to completion (single-request paths).
-    pub fn run(mut self) -> Result<RequestResult> {
-        while !self.step()? {}
-        Ok(self.finish())
     }
 
     /// Summarize a finished session.
     pub fn finish(self) -> RequestResult {
-        debug_assert_eq!(self.phase, Phase::Done);
-        let correct = check_answer(&self.rt.cfg.vocab, &self.question, &self.answer_tail);
+        debug_assert_eq!(self.state, State::Done);
+        let correct = check_answer(&self.vocab, &self.question, &self.answer_tail);
         RequestResult {
             question_id: self.question.id,
             exit_reason: self.exit_reason.unwrap_or(ExitReason::TokenBudget),
@@ -318,6 +457,136 @@ impl<'a> ReasoningSession<'a> {
     }
 }
 
+/// The per-session caches a driver owns on the session's behalf.
+pub struct SessionCaches {
+    pub main: BackendCache,
+    /// Present iff the session is proxy-monitored.
+    pub proxy: Option<BackendCache>,
+}
+
+/// Prefill `prompt + <think>` on the main model (and the proxy when
+/// black-box monitoring is requested) and build the session.
+pub fn start_session(
+    rt: &Runtime,
+    cfg: ServeConfig,
+    monitor: MonitorModel,
+    question: Question,
+    policy: Box<dyn ExitPolicy>,
+    rng: Rng,
+) -> Result<(ReasoningSession, SessionCaches)> {
+    let mut prompt = question.prompt.clone();
+    prompt.push(rt.vocab.think);
+    let (logits, main) = rt.main.prefill(&prompt)?;
+    let proxy = match monitor {
+        MonitorModel::SelfModel => None,
+        MonitorModel::Proxy => Some(rt.proxy.prefill(&prompt)?.1),
+    };
+    let session = ReasoningSession::new(
+        rt.vocab,
+        rt.main.seq_len(),
+        cfg,
+        monitor,
+        question,
+        policy,
+        rng,
+        logits,
+        prompt.len(),
+    );
+    Ok((session, SessionCaches { main, proxy }))
+}
+
+/// Service a probe against the right backend/cache pair and feed the
+/// result back into the session.
+pub fn run_probe(
+    rt: &Runtime,
+    session: &mut ReasoningSession,
+    main: &BackendCache,
+    proxy: Option<&BackendCache>,
+    suffix: &[u32],
+    target: ProbeTarget,
+) -> Result<()> {
+    let (backend, cache) = match (target, proxy) {
+        (ProbeTarget::Monitor, Some(pc)) => (rt.proxy.as_ref(), pc),
+        _ => (rt.main.as_ref(), main),
+    };
+    let (eat, logits) = backend.probe(cache, suffix)?;
+    session.complete_probe(eat, &logits)
+}
+
+/// Confidence (Eq. 16): greedy rollout of up to `rollout_len` tokens
+/// after the answer-inducing suffix on a *forked* cache; returns the
+/// length-normalized likelihood and the tokens charged.
+pub fn confidence_rollout(
+    backend: &dyn Backend,
+    cache: &BackendCache,
+    suffix: &[u32],
+    rollout_len: usize,
+) -> Result<(f64, usize)> {
+    let mut fork = backend.fork(cache)?;
+    let mut logits = Vec::new();
+    for &t in suffix {
+        logits = backend.decode(&mut fork, t)?;
+    }
+    let mut logprob_sum = 0.0f64;
+    let mut produced = 0usize;
+    for _ in 0..rollout_len {
+        if fork.pos() >= backend.seq_len() {
+            break;
+        }
+        let tok = crate::sampler::argmax(&logits);
+        logprob_sum += Sampler::logprob(&logits, tok);
+        logits = backend.decode(&mut fork, tok)?;
+        produced += 1;
+    }
+    let conf = (logprob_sum / produced.max(1) as f64).exp();
+    Ok((conf, suffix.len() + produced))
+}
+
+/// Service a rollout request and feed the result back.
+pub fn run_rollout(
+    rt: &Runtime,
+    session: &mut ReasoningSession,
+    main: &BackendCache,
+    suffix: &[u32],
+    max_tokens: usize,
+) -> Result<()> {
+    let (conf, toks) = confidence_rollout(rt.main.as_ref(), main, suffix, max_tokens)?;
+    session.complete_rollout(conf, toks)
+}
+
+/// Execute one unit of [`StepWork`] sequentially — the single-session
+/// driver the batcher's fused path is equivalent to.
+pub fn service_work(
+    rt: &Runtime,
+    session: &mut ReasoningSession,
+    caches: &mut SessionCaches,
+    work: StepWork,
+) -> Result<()> {
+    match work {
+        StepWork::Decode { token, mirror } => {
+            let logits = rt.main.decode(&mut caches.main, token)?;
+            if mirror {
+                if let Some(pc) = caches.proxy.as_mut() {
+                    rt.proxy.decode(pc, token)?;
+                }
+            }
+            session.complete_decode(logits)
+        }
+        StepWork::Probe { suffix, target } => run_probe(
+            rt,
+            session,
+            &caches.main,
+            caches.proxy.as_ref(),
+            &suffix,
+            target,
+        ),
+        StepWork::Rollout { suffix, max_tokens } => {
+            run_rollout(rt, session, &caches.main, &suffix, max_tokens)
+        }
+        StepWork::Done => Ok(()),
+    }
+}
+
 /// Convenience wrapper: serve one question end-to-end with a policy.
 pub fn serve_one(
     rt: &Runtime,
@@ -327,7 +596,7 @@ pub fn serve_one(
     policy: Box<dyn ExitPolicy>,
     seed: u64,
 ) -> Result<RequestResult> {
-    let session = ReasoningSession::new(
+    let (mut session, mut caches) = start_session(
         rt,
         cfg.clone(),
         monitor,
@@ -335,5 +604,163 @@ pub fn serve_one(
         policy,
         Rng::new(seed),
     )?;
-    session.run()
+    loop {
+        match session.poll() {
+            StepWork::Done => break,
+            work => service_work(rt, &mut session, &mut caches, work)?,
+        }
+    }
+    Ok(session.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Dataset;
+    use crate::exit::{EatPolicy, TokenBudgetPolicy};
+
+    fn rt() -> Runtime {
+        Runtime::reference()
+    }
+
+    fn easy_question(rt: &Runtime) -> Question {
+        Dataset::synth_math500(&rt.vocab, 30, 3)
+            .questions
+            .into_iter()
+            .find(|q| q.n_ops() <= 3)
+            .expect("an easy question exists")
+    }
+
+    #[test]
+    fn serve_one_answers_easy_questions_correctly() {
+        let rt = rt();
+        let cfg = ServeConfig::default();
+        let q = easy_question(&rt);
+        let res = serve_one(
+            &rt,
+            &cfg,
+            MonitorModel::SelfModel,
+            &q,
+            Box::new(EatPolicy::new(cfg.alpha, cfg.delta, cfg.max_think_tokens)),
+            7,
+        )
+        .unwrap();
+        assert!(res.correct, "{res:?}");
+        assert!(res.probes > 0, "EAT must probe at line boundaries");
+        assert!(res.reasoning_tokens > 0);
+        assert!(!res.answer_tail.is_empty());
+    }
+
+    #[test]
+    fn proxy_monitoring_probes_the_proxy() {
+        let rt = rt();
+        let cfg = ServeConfig::default();
+        let q = easy_question(&rt);
+        let res = serve_one(
+            &rt,
+            &cfg,
+            MonitorModel::Proxy,
+            &q,
+            Box::new(EatPolicy::new(cfg.alpha, cfg.delta, cfg.max_think_tokens)),
+            7,
+        )
+        .unwrap();
+        assert!(res.correct, "{res:?}");
+        assert!(rt.proxy.counters().probes.get() >= res.probes as u64);
+        // reasoning tokens were mirrored into the proxy cache
+        assert!(rt.proxy.counters().decodes.get() >= res.reasoning_tokens as u64);
+    }
+
+    #[test]
+    fn poll_is_idempotent_while_work_is_in_flight() {
+        let rt = rt();
+        let cfg = ServeConfig::default();
+        let q = easy_question(&rt);
+        let (mut session, mut caches) = start_session(
+            &rt,
+            cfg,
+            MonitorModel::SelfModel,
+            q,
+            Box::new(TokenBudgetPolicy::new(96)),
+            Rng::new(1),
+        )
+        .unwrap();
+        let w1 = session.poll();
+        let w2 = session.poll();
+        assert_eq!(w1, w2, "re-polling must not re-sample");
+        service_work(&rt, &mut session, &mut caches, w1).unwrap();
+    }
+
+    #[test]
+    fn completing_out_of_order_is_an_error_not_a_panic() {
+        let rt = rt();
+        let cfg = ServeConfig::default();
+        let q = easy_question(&rt);
+        let (mut session, _caches) = start_session(
+            &rt,
+            cfg,
+            MonitorModel::SelfModel,
+            q,
+            Box::new(TokenBudgetPolicy::new(96)),
+            Rng::new(1),
+        )
+        .unwrap();
+        let _ = session.poll(); // a Decode is now in flight
+        assert!(session.complete_probe(0.1, &[0.0; 48]).is_err());
+        assert!(session.complete_rollout(0.5, 8).is_err());
+    }
+
+    #[test]
+    fn headroom_reserve_prevents_answer_truncation() {
+        // a tiny budget forces the token-budget exit; the elicited tail
+        // must still carry the full forced suffix and an answer value
+        let rt = rt();
+        let mut cfg = ServeConfig::default();
+        cfg.max_think_tokens = 9;
+        let q = easy_question(&rt);
+        let res = serve_one(
+            &rt,
+            &cfg,
+            MonitorModel::SelfModel,
+            &q,
+            Box::new(TokenBudgetPolicy::new(9)),
+            5,
+        )
+        .unwrap();
+        let v = rt.vocab;
+        assert!(res.answer_tail.len() >= v.forced_answer_tail().len() + 1);
+        assert_eq!(res.answer_tail[0], v.ethink);
+        assert_eq!(res.answer_tail[1], v.final_);
+        assert_eq!(res.answer_tail[2], v.ans);
+        assert!(
+            res.answer_tail[3..]
+                .iter()
+                .any(|&t| v.num_value(t).is_some()),
+            "answer value truncated: {:?}",
+            res.answer_tail
+        );
+    }
+
+    #[test]
+    fn sequential_driver_is_deterministic_by_seed() {
+        let rt = rt();
+        let cfg = ServeConfig::default();
+        let q = easy_question(&rt);
+        let run = |seed| {
+            serve_one(
+                &rt,
+                &cfg,
+                MonitorModel::SelfModel,
+                &q,
+                Box::new(EatPolicy::new(cfg.alpha, cfg.delta, cfg.max_think_tokens)),
+                seed,
+            )
+            .unwrap()
+        };
+        let (a, b) = (run(11), run(11));
+        assert_eq!(a.reasoning_tokens, b.reasoning_tokens);
+        assert_eq!(a.answer_tail, b.answer_tail);
+        assert_eq!(a.probes, b.probes);
+        assert_eq!(a.exit_reason, b.exit_reason);
+    }
 }

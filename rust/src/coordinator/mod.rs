@@ -1,18 +1,26 @@
 //! L3 coordinator — the paper's system contribution: EAT-monitored
 //! early-exit reasoning serving.
 //!
-//!  * `engine`  — per-request reasoning state machine (prefill -> line
-//!    loop with EAT probes -> answer elicitation)
-//!  * `batcher` — continuous batching over sessions with KV admission
-//!  * `kv`      — KV slot manager (capacity + backpressure)
-//!  * `metrics` — serving metrics
+//!  * `engine`      — split-phase per-request state machine: `poll()` →
+//!    [`engine::StepWork`] / `complete_*(..)`; no model reference inside
+//!    the session
+//!  * `batcher`     — continuous batching: one fused `decode_batch` per
+//!    scheduling tick, probes/rollouts out-of-band, sequential fallback
+//!  * `batch_cache` — slot-major cache store with dirty-slot upload
+//!    accounting
+//!  * `kv`          — KV slot manager (capacity + backpressure)
+//!  * `metrics`     — serving metrics
 
+pub mod batch_cache;
 pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
 
+pub use batch_cache::BatchCacheStore;
 pub use batcher::Batcher;
-pub use engine::{serve_one, MonitorModel, ReasoningSession, RequestResult};
+pub use engine::{
+    serve_one, MonitorModel, ProbeTarget, ReasoningSession, RequestResult, StepWork,
+};
 pub use kv::KvSlotManager;
 pub use metrics::ServeMetrics;

@@ -15,7 +15,7 @@ use crate::config::ServeConfig;
 use crate::datasets::Dataset;
 use crate::exit::EatPolicy;
 use crate::monitor::{EmaVar, Trace};
-use crate::runtime::Runtime;
+use crate::runtime::{Backend, Runtime};
 
 use super::replay::{replay, Signal};
 use super::store::TraceSet;
@@ -262,7 +262,7 @@ pub fn fig4(ctx: &FigureCtx) -> Result<()> {
 
 pub fn fig5a(ctx: &FigureCtx, rt: &Runtime, n_questions: usize) -> Result<()> {
     println!("[fig5a/fig18] black-box: local proxy early-stops the streaming API");
-    let ds = Dataset::synth_aime(&rt.cfg.vocab, n_questions.max(3), ctx.cfg.seed);
+    let ds = Dataset::synth_aime(&rt.vocab, n_questions.max(3), ctx.cfg.seed);
     let mut rows = Vec::new();
     let mut saved_total = 0.0;
     for q in ds.questions.iter().take(n_questions) {
@@ -339,44 +339,44 @@ pub fn fig6b(ctx: &FigureCtx) -> Result<()> {
 /// Fig. 6c — runtime: EAT probe vs K-rollout wall-clock vs context length.
 pub fn fig6c(ctx: &FigureCtx, rt: &Runtime) -> Result<()> {
     println!("[fig6c] measured probe vs rollout runtime (live)");
-    let vocab = rt.cfg.vocab;
+    let vocab = rt.vocab;
     let ds = Dataset::synth_aime(&vocab, 3, 7);
     let q = &ds.questions[0];
     let mut prompt = q.prompt.clone();
     prompt.push(vocab.think);
-    let (mut logits, mut cache) = rt.main.prefill(&rt.client, &prompt)?;
+    let (mut logits, mut cache) = rt.main.prefill(&prompt)?;
     let sampler = crate::sampler::Sampler::new(ctx.cfg.temperature, ctx.cfg.top_p);
     let mut rng = crate::util::rng::Rng::new(1);
     let suffix = vocab.suffix_prefixed();
     let mut rows = Vec::new();
     // grow the context; at checkpoints measure probe + K=1 rollout cost
-    for step in 1..=(rt.cfg.main.seq_len - prompt.len() - 10) {
+    for step in 1..=(rt.main.seq_len() - prompt.len() - 10) {
         let tok = {
             let t = sampler.sample(&logits, &mut rng);
             if t == vocab.ethink || t == vocab.eos { vocab.nl } else { t }
         };
-        logits = rt.main.decode(&rt.client, &mut cache, tok)?;
+        logits = rt.main.decode(&mut cache, tok)?;
         if step % 16 == 0 {
             let t0 = std::time::Instant::now();
             for _ in 0..5 {
-                rt.main.probe(&rt.client, &cache, &suffix)?;
+                rt.main.probe(&cache, &suffix)?;
             }
             let probe_ms = t0.elapsed().as_secs_f64() * 1e3 / 5.0;
             let t1 = std::time::Instant::now();
-            let mut fork = rt.main.fork_cache(&rt.client, &cache)?;
+            let mut fork = rt.main.fork(&cache)?;
             let mut lg = Vec::new();
             for &t in &suffix {
-                lg = rt.main.decode(&rt.client, &mut fork, t)?;
+                lg = rt.main.decode(&mut fork, t)?;
             }
             for _ in 0..2 {
                 let t = crate::sampler::argmax(&lg);
-                lg = rt.main.decode(&rt.client, &mut fork, t)?;
+                lg = rt.main.decode(&mut fork, t)?;
             }
             let rollout_ms = t1.elapsed().as_secs_f64() * 1e3;
-            rows.push(format!("{},{:.3},{:.3}", cache.pos, probe_ms, rollout_ms));
+            rows.push(format!("{},{:.3},{:.3}", cache.pos(), probe_ms, rollout_ms));
             println!(
                 "  ctx {:>4} tokens: EAT probe {:.2} ms, 1 rollout {:.2} ms ({:.1}x)",
-                cache.pos, probe_ms, rollout_ms, rollout_ms / probe_ms
+                cache.pos(), probe_ms, rollout_ms, rollout_ms / probe_ms
             );
         }
     }

@@ -7,13 +7,17 @@
 //! without it (Eq. 12, App. D ablation), entropy-after-newline (Eq. 14,
 //! App. F), proxy-model EAT (black-box setting), the analytic + sampled
 //! Pass@1(Avg@K) (Eq. 9), #UA@K, and the confidence score (Eq. 16).
+//!
+//! Runs against any [`Backend`] — AOT artifacts or the deterministic
+//! reference model.
 
 use anyhow::Result;
 
 use crate::config::ServeConfig;
+use crate::coordinator::engine::{confidence_rollout, CONFIDENCE_ROLLOUT_LEN};
 use crate::datasets::Question;
 use crate::monitor::{EmaVar, LinePoint, Trace};
-use crate::runtime::{KvCache, Runtime};
+use crate::runtime::{Backend, BackendCache, Runtime};
 use crate::sampler::Sampler;
 use crate::util::rng::Rng;
 
@@ -25,7 +29,7 @@ pub struct TraceGen<'a> {
     pub cfg: ServeConfig,
     /// Record the monitor model's EAT alongside (costs a parallel decode).
     pub with_proxy: bool,
-    /// Record the confidence score (costs a forked 8-step rollout/line).
+    /// Record the confidence score (costs a forked rollout per line).
     pub with_confidence: bool,
     /// Swap roles (Fig. 11): the *proxy* model reasons, the *main* model
     /// monitors. In the emitted trace, `eat` is the reasoner's own entropy
@@ -45,27 +49,26 @@ impl<'a> TraceGen<'a> {
     }
 
     /// (reasoner, monitor) model pair per `swap_models`.
-    fn models(&self) -> (&'a crate::runtime::ModelRuntime, &'a crate::runtime::ModelRuntime) {
+    fn models(&self) -> (&'a dyn Backend, &'a dyn Backend) {
         if self.swap_models {
-            (&self.rt.proxy, &self.rt.main)
+            (self.rt.proxy.as_ref(), self.rt.main.as_ref())
         } else {
-            (&self.rt.main, &self.rt.proxy)
+            (self.rt.main.as_ref(), self.rt.proxy.as_ref())
         }
     }
 
     /// Generate the monitored trace for one question.
     pub fn run(&self, q: &Question, seed: u64) -> Result<Trace> {
-        let rt = self.rt;
         let (reasoner, monitor) = self.models();
-        let vocab = rt.cfg.vocab;
+        let vocab = self.rt.vocab;
         let mut rng = Rng::new(seed ^ (q.id as u64).wrapping_mul(0x9E3779B9));
         let sampler = Sampler::new(self.cfg.temperature, self.cfg.top_p);
 
         let mut prompt = q.prompt.clone();
         prompt.push(vocab.think);
-        let (mut logits, mut cache) = reasoner.prefill(&rt.client, &prompt)?;
+        let (mut logits, mut cache) = reasoner.prefill(&prompt)?;
         let mut proxy_cache = if self.with_proxy {
-            Some(monitor.prefill(&rt.client, &prompt)?.1)
+            Some(monitor.prefill(&prompt)?.1)
         } else {
             None
         };
@@ -76,9 +79,12 @@ impl<'a> TraceGen<'a> {
         let mut line = 0usize;
         let mut self_terminated = false;
 
+        // headroom for the longest per-line signal: the confidence
+        // rollout decodes suffix + CONFIDENCE_ROLLOUT_LEN greedy tokens
+        let reserve = vocab.suffix_prefixed().len() + CONFIDENCE_ROLLOUT_LEN;
         loop {
             if reasoning.len() >= self.cfg.max_think_tokens
-                || cache.pos + 8 >= reasoner.cfg.seq_len
+                || cache.pos() + reserve >= reasoner.seq_len()
             {
                 break;
             }
@@ -87,9 +93,9 @@ impl<'a> TraceGen<'a> {
                 self_terminated = true;
                 break;
             }
-            logits = reasoner.decode(&rt.client, &mut cache, tok)?;
+            logits = reasoner.decode(&mut cache, tok)?;
             if let Some(pc) = proxy_cache.as_mut() {
-                monitor.decode(&rt.client, pc, tok)?;
+                monitor.decode(pc, tok)?;
             }
             reasoning.push(tok);
 
@@ -126,15 +132,14 @@ impl<'a> TraceGen<'a> {
         q: &Question,
         line: usize,
         tokens: usize,
-        cache: &KvCache,
-        proxy_cache: Option<&KvCache>,
+        cache: &BackendCache,
+        proxy_cache: Option<&BackendCache>,
         ema: &mut EmaVar,
         sampler: &Sampler,
         rng: &mut Rng,
     ) -> Result<LinePoint> {
-        let rt = self.rt;
         let (reasoner, monitor) = self.models();
-        let vocab = rt.cfg.vocab;
+        let vocab = self.rt.vocab;
 
         // EAT with prefix string (Eq. 13) — the headline signal; its probe
         // logits also give the forced-answer distribution for Pass@1.
@@ -146,20 +151,14 @@ impl<'a> TraceGen<'a> {
         } else {
             vocab.suffix_prefixed()
         };
-        let (eat, ans_logits) = reasoner.probe(&rt.client, cache, &answer_suffix)?;
+        let (eat, ans_logits) = reasoner.probe(cache, &answer_suffix)?;
         // EAT without prefix (Eq. 12)
-        let (eat_plain, _) =
-            reasoner.probe(&rt.client, cache, &vocab.suffix_plain())?;
+        let (eat_plain, _) = reasoner.probe(cache, &vocab.suffix_plain())?;
         // entropy after newline (Eq. 14)
-        let (eat_nl, _) =
-            reasoner.probe(&rt.client, cache, &vocab.suffix_newline())?;
+        let (eat_nl, _) = reasoner.probe(cache, &vocab.suffix_newline())?;
         // cross-model EAT (black-box monitor)
         let eat_proxy = match proxy_cache {
-            Some(pc) => Some(
-                monitor
-                    .probe(&rt.client, pc, &vocab.suffix_prefixed())?
-                    .0 as f64,
-            ),
+            Some(pc) => Some(monitor.probe(pc, &vocab.suffix_prefixed())?.0 as f64),
             None => None,
         };
 
@@ -184,7 +183,13 @@ impl<'a> TraceGen<'a> {
         }
 
         let confidence = if self.with_confidence {
-            Some(self.confidence(cache)?)
+            let (conf, _toks) = confidence_rollout(
+                reasoner,
+                cache,
+                &vocab.suffix_prefixed(),
+                CONFIDENCE_ROLLOUT_LEN,
+            )?;
+            Some(conf)
         } else {
             None
         };
@@ -202,29 +207,5 @@ impl<'a> TraceGen<'a> {
             unique_answers: seen.len(),
             confidence,
         })
-    }
-
-    /// Confidence (Eq. 16): greedy 5-token rollout on a forked cache.
-    fn confidence(&self, cache: &KvCache) -> Result<f64> {
-        let rt = self.rt;
-        let (reasoner, _) = self.models();
-        let suffix = rt.cfg.vocab.suffix_prefixed();
-        let mut fork = reasoner.fork_cache(&rt.client, cache)?;
-        let mut logits = Vec::new();
-        for &t in &suffix {
-            logits = reasoner.decode(&rt.client, &mut fork, t)?;
-        }
-        let mut lp = 0.0f64;
-        let mut n = 0usize;
-        for _ in 0..5 {
-            if fork.pos >= reasoner.cfg.seq_len {
-                break;
-            }
-            let tok = crate::sampler::argmax(&logits);
-            lp += Sampler::logprob(&logits, tok);
-            logits = reasoner.decode(&rt.client, &mut fork, tok)?;
-            n += 1;
-        }
-        Ok((lp / n.max(1) as f64).exp())
     }
 }

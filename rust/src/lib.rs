@@ -4,11 +4,16 @@
 //! </Think> for reasoning model early exiting" (2025). The Rust layer is
 //! the serving coordinator (this crate); the JAX/Pallas layers are
 //! build-time only and ship as AOT-compiled HLO artifacts executed through
-//! the PJRT C API.
+//! the PJRT C API (feature `pjrt`). Without artifacts, a deterministic
+//! in-process reference backend drives the identical serving stack.
 //!
 //! Layout (see DESIGN.md):
-//!  * [`runtime`]     — PJRT client, weights, typed model entry points
-//!  * [`coordinator`] — serving engine, continuous batcher, KV manager
+//!  * [`runtime`]     — the `Backend` trait (prefill / decode / probe /
+//!    fork / fused `decode_batch`) with two impls: PJRT artifacts and
+//!    the in-process reference model
+//!  * [`coordinator`] — split-phase sessions (`poll()`/`complete_*`),
+//!    continuous batcher (one fused decode per tick), slot-major batch
+//!    cache store, KV manager
 //!  * [`exit`]        — EAT (Alg. 1) + token/#UA@K/confidence baselines
 //!  * [`monitor`]     — EMA variance estimator + trajectory records
 //!  * [`blackbox`]    — streaming-API simulation + local proxy monitoring

@@ -1,11 +1,16 @@
 //! `repro` — the leader CLI of the EAT serving stack.
 //!
 //! Subcommands:
-//!   info                         artifact + model summary
+//!   info                         backend + model summary
 //!   serve                        continuous-batch serving of a workload
 //!   trace                        generate monitored reasoning traces
 //!   figures                      reproduce the paper's figures
 //!   blackbox                     black-box streaming demo (Fig. 5)
+//!
+//! Every live command loads the AOT artifacts when present (feature
+//! `pjrt` + `make artifacts`) and otherwise falls back to the
+//! deterministic in-process reference backend, so the whole CLI works in
+//! a clean checkout.
 
 use anyhow::Result;
 
@@ -15,7 +20,7 @@ use eat_serve::datasets::Dataset;
 use eat_serve::eval::figures::{self, FigureCtx};
 use eat_serve::eval::{TraceGen, TraceSet};
 use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::cli::Args;
 
 fn usage() -> ! {
@@ -25,9 +30,10 @@ fn usage() -> ! {
 USAGE: repro <command> [flags]
 
 COMMANDS
-  info                          artifact inventory + smoke execution
+  info                          backend inventory + smoke execution
   serve     --dataset D --requests N [--slots S] [--policy eat|token]
             [--delta X] [--alpha A] [--budget T] [--proxy] [--seed K]
+            [--sequential]
   trace     --dataset D [--out FILE] [--max-questions N] [--swap-models]
             [--no-confidence] [--seed K]
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
@@ -51,23 +57,18 @@ fn serve_cfg(args: &Args) -> ServeConfig {
     cfg
 }
 
+fn load_runtime(args: &Args) -> Runtime {
+    Runtime::load_or_reference(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
-    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
-    println!("platform        {}", rt.client.platform());
-    for m in [&rt.main, &rt.proxy] {
-        println!(
-            "model {:<8} d={} L={} H={} ff={} seq={} params={}",
-            m.cfg.name,
-            m.cfg.d_model,
-            m.cfg.n_layer,
-            m.cfg.n_head,
-            m.cfg.d_ff,
-            m.cfg.seq_len,
-            m.total_param_elems()
-        );
+    let rt = load_runtime(args);
+    println!("backend         {}", rt.backend_kind());
+    for b in [&rt.main, &rt.proxy] {
+        println!("model {}", b.describe());
     }
     // smoke: answer one easy question
-    let ds = Dataset::synth_math500(&rt.cfg.vocab, 1, 0);
+    let ds = Dataset::synth_math500(&rt.vocab, 1, 0);
     let q = &ds.questions[0];
     let res = eat_serve::coordinator::serve_one(
         &rt,
@@ -81,28 +82,35 @@ fn cmd_info(args: &Args) -> Result<()> {
         "smoke           q0 ops={:?} answer={:?} -> correct={} ({} reasoning tokens, {:?})",
         q.ops, q.answer, res.correct, res.reasoning_tokens, res.exit_reason
     );
+    let c = rt.main.counters();
     println!(
-        "exec counters   prefills={} decodes={} probes={}",
-        rt.main.counters.prefills.get(),
-        rt.main.counters.decodes.get(),
-        rt.main.counters.probes.get()
+        "exec counters   prefills={} decodes={} probes={} batch_decodes={}",
+        c.prefills.get(),
+        c.decodes.get(),
+        c.probes.get(),
+        c.batch_decodes.get()
     );
     if args.has("hlo") {
-        println!("\nHLO cost analysis (L2 perf, DESIGN.md \u{a7}6):");
-        for m in [&rt.cfg.main, &rt.cfg.proxy] {
-            for f in [&m.hlo_prefill, &m.hlo_decode, &m.hlo_probe] {
-                let rep = eat_serve::runtime::hlo_analysis::analyze_file(
-                    &rt.cfg.path(f),
-                )?;
-                print!("{}", rep.render(f));
+        match &rt.artifacts {
+            Some(art) => {
+                println!("\nHLO cost analysis (L2 perf, DESIGN.md \u{a7}6):");
+                for m in [&art.main, &art.proxy] {
+                    for f in [&m.hlo_prefill, &m.hlo_decode, &m.hlo_probe] {
+                        let rep = eat_serve::runtime::hlo_analysis::analyze_file(
+                            &art.path(f),
+                        )?;
+                        print!("{}", rep.render(f));
+                    }
+                }
             }
+            None => println!("\n(--hlo needs the AOT artifacts; reference backend active)"),
         }
     }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+    let rt = load_runtime(args);
     let cfg = serve_cfg(args);
     let dataset = args.str_or("dataset", "synth-math500-small");
     let n = args.usize_or("requests", 16);
@@ -112,7 +120,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         MonitorModel::SelfModel
     };
-    let ds = Dataset::by_name(dataset, &rt.cfg.vocab, cfg.seed)?;
+    let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
 
     let policy_kind = args.str_or("policy", "eat").to_string();
     let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
@@ -123,17 +131,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     let mut batcher = Batcher::new(&rt, cfg, monitor, slots, factory);
+    batcher.force_sequential = args.has("sequential");
     for q in ds.questions.iter().take(n) {
         batcher.submit(q.clone());
     }
     batcher.run_to_completion()?;
     println!("{}", batcher.metrics.report());
     println!("kv slots        peak {} / {}", batcher.kv_peak(), slots);
+    let sc = batcher.store_counters();
+    let mc = rt.main.counters();
+    println!(
+        "batch decode    fused_calls {}  lanes {} (resident {})  dirty uploads {}  single decodes {}",
+        mc.batch_decodes.get(),
+        mc.batch_lanes.get(),
+        mc.batch_resident_lanes.get(),
+        sc.dirty_lane_uploads,
+        mc.decodes.get()
+    );
     Ok(())
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
-    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+    let rt = load_runtime(args);
     let cfg = serve_cfg(args);
     let dataset = args.str_or("dataset", "synth-math500");
     let swap = args.has("swap-models");
@@ -146,7 +165,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         .str_opt("out")
         .map(|s| s.to_string())
         .unwrap_or(format!("{}/{}.json", eat_serve::DEFAULT_TRACES, default_name));
-    let ds = Dataset::by_name(dataset, &rt.cfg.vocab, cfg.seed)?;
+    let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
     let maxq = args.usize_or("max-questions", ds.questions.len());
 
     let mut tracegen = TraceGen::new(&rt, cfg.clone());
@@ -196,7 +215,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
                 Err(e) => println!("[fig{f}] skipped: {e}"),
             }
         }
-        let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+        let rt = load_runtime(args);
         for f in figures::LIVE_FIGS {
             match figures::run_live(&ctx, &rt, f) {
                 Ok(_) => ran += 1,
@@ -206,7 +225,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     } else if figures::run_offline(&ctx, fig)? {
         ran += 1;
     } else {
-        let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+        let rt = load_runtime(args);
         if figures::run_live(&ctx, &rt, fig)? {
             ran += 1;
         } else {
@@ -218,7 +237,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_blackbox(args: &Args) -> Result<()> {
-    let rt = Runtime::load(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))?;
+    let rt = load_runtime(args);
     let ctx = {
         let mut c = FigureCtx::new(
             args.str_or("traces-dir", eat_serve::DEFAULT_TRACES),

@@ -1,0 +1,151 @@
+//! The `Backend` trait: the execution interface the coordinator programs
+//! against (DESIGN.md §2).
+//!
+//! Everything above the runtime layer — sessions, batcher, exit policies,
+//! trace generation, the black-box simulator — speaks only this trait.
+//! Two implementations exist:
+//!
+//!  * [`crate::runtime::model::ModelRuntime`] behind `PjrtBackend`
+//!    (feature `pjrt`): executes the AOT-compiled HLO artifacts through
+//!    the PJRT C API.
+//!  * [`crate::runtime::reference::RefBackend`]: a deterministic
+//!    in-process table-driven chain-sum reasoner, so the full serving
+//!    stack runs (and is tested) without artifacts or a PJRT toolchain.
+//!
+//! The trait is deliberately session-free: callers own the caches and
+//! pass them in, which is what lets the continuous batcher keep all
+//! per-slot state in one [`crate::coordinator::BatchCacheStore`] and
+//! drive a single fused `decode_batch` per scheduling tick.
+
+use std::cell::Cell;
+
+use anyhow::Result;
+
+use super::reference::RefCache;
+
+/// Execution counters for the perf report (`repro info`, §Perf) and the
+/// batching tests (one fused call per tick is asserted through these).
+#[derive(Debug, Default)]
+pub struct RuntimeCounters {
+    pub prefills: Cell<u64>,
+    pub decodes: Cell<u64>,
+    pub probes: Cell<u64>,
+    /// Fused batched decode *calls* (one per engaged tick).
+    pub batch_decodes: Cell<u64>,
+    /// Total engaged lanes across all fused calls.
+    pub batch_lanes: Cell<u64>,
+    /// Engaged lanes whose K/V image was already resident in the
+    /// backend's batched scratch from the previous fused call — the
+    /// per-lane host *gather* was skipped. (On PJRT the batched image
+    /// itself is still uploaded/downloaded once per call: the tuple
+    /// output API offers no device-side buffer reuse; see DESIGN.md §6.)
+    pub batch_resident_lanes: Cell<u64>,
+}
+
+impl RuntimeCounters {
+    pub fn bump(cell: &Cell<u64>) {
+        cell.set(cell.get() + 1);
+    }
+
+    pub fn add(cell: &Cell<u64>, n: u64) {
+        cell.set(cell.get() + n);
+    }
+}
+
+/// A per-sequence KV cache, owned by the caller (session driver or batch
+/// store), interpreted by the backend that created it.
+pub enum BackendCache {
+    /// Token-history cache of the reference backend.
+    Ref(RefCache),
+    /// Device + host-mirror KV cache of the PJRT backend.
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::model::KvCache),
+}
+
+impl BackendCache {
+    /// Next write position (== number of committed tokens).
+    pub fn pos(&self) -> usize {
+        match self {
+            BackendCache::Ref(c) => c.pos(),
+            #[cfg(feature = "pjrt")]
+            BackendCache::Pjrt(c) => c.pos,
+        }
+    }
+
+    /// Bytes this cache accounts for against the KV budget.
+    pub fn device_bytes(&self) -> usize {
+        match self {
+            BackendCache::Ref(c) => c.device_bytes(),
+            #[cfg(feature = "pjrt")]
+            BackendCache::Pjrt(c) => c.device_bytes(),
+        }
+    }
+}
+
+/// One engaged lane of a fused batched decode: the slot's cache and the
+/// token to commit. Idle (padding) lanes are `None` in the lane slice.
+pub struct BatchLane<'a> {
+    pub cache: &'a mut BackendCache,
+    pub token: u32,
+}
+
+/// The model-execution interface (prefill / decode / probe / fork /
+/// fused batched decode). One instance per model (main, proxy).
+pub trait Backend {
+    /// Short model name for reports ("main", "proxy", "ref-main", ...).
+    fn name(&self) -> &str;
+
+    /// One-line human description for `repro info`.
+    fn describe(&self) -> String;
+
+    /// Maximum sequence length a cache can hold.
+    fn seq_len(&self) -> usize;
+
+    /// Maximum probe suffix length.
+    fn probe_len(&self) -> usize;
+
+    /// Vocabulary size (logits dimensionality).
+    fn vocab_size(&self) -> usize;
+
+    /// Fused batch width, when this backend carries a batched decode
+    /// entry point (`None` → the batcher falls back to sequential
+    /// decodes).
+    fn batch_width(&self) -> Option<usize>;
+
+    fn has_batch(&self) -> bool {
+        self.batch_width().is_some()
+    }
+
+    /// Elements of one K (or V) cache tensor per sequence — the unit the
+    /// KV slot manager budgets in.
+    fn cache_elems(&self) -> usize;
+
+    /// Parameter count (for `repro info`).
+    fn param_elems(&self) -> usize;
+
+    /// Run a prompt; returns logits at the last position and a fresh
+    /// cache positioned just past the prompt.
+    fn prefill(&self, tokens: &[u32]) -> Result<(Vec<f32>, BackendCache)>;
+
+    /// Commit one token, returning next-token logits.
+    fn decode(&self, cache: &mut BackendCache, token: u32) -> Result<Vec<f32>>;
+
+    /// EAT probe (paper §4.3): virtually append `suffix`, return the
+    /// entropy of the following token plus its full logits. The cache is
+    /// NOT modified.
+    fn probe(&self, cache: &BackendCache, suffix: &[u32]) -> Result<(f32, Vec<f32>)>;
+
+    /// Fork a cache for hypothetical continuations (rollout baselines).
+    fn fork(&self, cache: &BackendCache) -> Result<BackendCache>;
+
+    /// Fused batched decode over exactly `batch_width()` lanes. Engaged
+    /// lanes commit their token and receive logits (index-aligned with
+    /// the input); `None` lanes are padding and stay untouched. Must be
+    /// step-equivalent to `decode` per engaged lane. Errors when the
+    /// backend has no batch entry point.
+    fn decode_batch(&self, lanes: &mut [Option<BatchLane<'_>>]) -> Result<Vec<Option<Vec<f32>>>>;
+
+    /// Execution counters (shared cell-based, bumped by every entry
+    /// point).
+    fn counters(&self) -> &RuntimeCounters;
+}

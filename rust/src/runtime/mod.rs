@@ -1,48 +1,119 @@
-//! Runtime layer: load + execute the AOT artifacts via the PJRT C API
-//! (`xla` crate, CPU client). See /opt/xla-example/load_hlo for the
-//! reference wiring and DESIGN.md §2 for the entry-point signatures.
+//! Runtime layer: model execution behind the [`Backend`] trait.
+//!
+//! Two backends implement it (DESIGN.md §2):
+//!  * `pjrt` feature — load + execute the AOT artifacts via the PJRT C
+//!    API (`xla` crate, CPU client; see /opt/xla-example/load_hlo for the
+//!    reference wiring);
+//!  * always available — [`RefBackend`], a deterministic in-process
+//!    reference model, so the engine/batcher/exit stack runs and tests
+//!    without artifacts.
+//!
+//! [`Runtime`] is the loaded pair (main reasoner + proxy monitor) plus
+//! the shared vocabulary — the only runtime type the coordinator sees.
 
-pub mod client;
+pub mod backend;
 pub mod hlo_analysis;
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod model;
+#[cfg(feature = "pjrt")]
 pub mod weights;
 
+pub use backend::{Backend, BackendCache, BatchLane, RuntimeCounters};
+pub use reference::RefBackend;
+
+#[cfg(feature = "pjrt")]
 pub use client::Client;
-pub use model::{KvCache, ModelRuntime};
+#[cfg(feature = "pjrt")]
+pub use model::{KvCache, ModelRuntime, PjrtBackend};
 
 use std::path::Path;
 
 use anyhow::Result;
 
 use crate::config::ArtifactsConfig;
+use crate::vocab::Vocab;
 
 /// Both models loaded and ready: the full serving runtime.
 pub struct Runtime {
-    pub client: Client,
-    pub cfg: ArtifactsConfig,
-    pub main: ModelRuntime,
-    pub proxy: ModelRuntime,
+    pub vocab: Vocab,
+    /// The reasoning model.
+    pub main: Box<dyn Backend>,
+    /// The small proxy monitor (black-box setting).
+    pub proxy: Box<dyn Backend>,
+    /// Artifact metadata when PJRT-backed (`None` on the reference
+    /// backend).
+    pub artifacts: Option<ArtifactsConfig>,
 }
 
 impl Runtime {
+    /// Load the AOT artifacts (requires the `pjrt` feature and a built
+    /// `artifacts/` directory); errors otherwise so callers can skip or
+    /// fall back.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let cfg = ArtifactsConfig::load(artifacts_dir)?;
-        let client = Client::cpu()?;
-        let main = ModelRuntime::load(&client, &cfg.dir, &cfg.main)?;
-        let proxy = ModelRuntime::load(&client, &cfg.dir, &cfg.proxy)?;
+        Runtime::load_impl(artifacts_dir.as_ref())
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn load_impl(dir: &Path) -> Result<Runtime> {
+        use std::rc::Rc;
+        let cfg = ArtifactsConfig::load(dir)?;
+        let client = Rc::new(Client::cpu()?);
+        let main = PjrtBackend::load(client.clone(), &cfg.dir, &cfg.main)?;
+        let proxy = PjrtBackend::load(client, &cfg.dir, &cfg.proxy)?;
         Ok(Runtime {
-            client,
-            cfg,
-            main,
-            proxy,
+            vocab: cfg.vocab,
+            main: Box::new(main),
+            proxy: Box::new(proxy),
+            artifacts: Some(cfg),
         })
     }
 
-    pub fn model(&self, name: &str) -> Result<&ModelRuntime> {
-        match name {
-            "main" => Ok(&self.main),
-            "proxy" => Ok(&self.proxy),
-            other => anyhow::bail!("unknown model `{other}`"),
+    #[cfg(not(feature = "pjrt"))]
+    fn load_impl(dir: &Path) -> Result<Runtime> {
+        anyhow::bail!(
+            "cannot load artifacts from {}: built without the `pjrt` feature \
+             (use Runtime::reference(), or rebuild with `--features pjrt`)",
+            dir.display()
+        )
+    }
+
+    /// The deterministic in-process reference runtime: no artifacts, no
+    /// PJRT, bit-reproducible from seeds alone.
+    pub fn reference() -> Runtime {
+        let vocab = Vocab::default_layout();
+        Runtime {
+            vocab,
+            main: Box::new(RefBackend::main(vocab)),
+            proxy: Box::new(RefBackend::proxy(vocab)),
+            artifacts: None,
+        }
+    }
+
+    /// Artifacts when present, otherwise the reference runtime (with a
+    /// note) — the zero-setup path for the CLI and examples.
+    pub fn load_or_reference(artifacts_dir: impl AsRef<Path>) -> Runtime {
+        match Runtime::load(&artifacts_dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!(
+                    "note: PJRT artifacts unavailable ({e:#}); using the \
+                     deterministic reference backend"
+                );
+                Runtime::reference()
+            }
+        }
+    }
+
+    /// "pjrt" or "reference", for reports.
+    pub fn backend_kind(&self) -> &'static str {
+        if self.artifacts.is_some() {
+            "pjrt"
+        } else {
+            "reference"
         }
     }
 }

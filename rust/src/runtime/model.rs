@@ -1,48 +1,74 @@
-//! Typed model runtime: prefill / decode / probe / decode_batch over the
-//! AOT artifacts.
+//! Typed PJRT model runtime: prefill / decode / probe / fused batched
+//! decode over the AOT artifacts, plus the [`PjrtBackend`] adapter that
+//! exposes it through the [`Backend`] trait.
 //!
-//! Buffer discipline (see DESIGN.md §6): weights are uploaded to device
-//! once at load time and stay resident. KV caches are passed as device
-//! buffers; because PJRT hands multi-output results back as a *single
-//! tuple buffer* (no untupling in the `xla` crate), each decode step
-//! downloads the output tuple and re-uploads the caches — the host mirror
-//! this produces is kept on the `KvCache` and doubles as the cheap
-//! cache-fork mechanism that rollout-based baselines (#UA@K, Alg. 3) need.
+//! Buffer discipline (DESIGN.md §6): weights are uploaded to device once
+//! at load time and stay resident. Because PJRT hands multi-output
+//! results back as a *single tuple buffer* (no untupling in the `xla`
+//! crate), every step downloads the output tuple; the host mirror this
+//! produces is kept on the [`KvCache`] and doubles as the cheap
+//! cache-fork mechanism that rollout-based baselines (#UA@K, Alg. 3)
+//! need. Two things keep the batched hot path off the per-slot copy
+//! treadmill:
+//!
+//!  * per-slot *device* buffers are lazy — they are only materialized
+//!    when a single-sequence entry point (decode / probe) actually needs
+//!    them, so slots that live entirely in the fused batch never pay a
+//!    per-slot upload;
+//!  * the fused `decode_batch` keeps one slot-major scratch image of the
+//!    whole batch; lanes whose (cache id, generation) still match the
+//!    previous fused call skip the host-side gather entirely, and the
+//!    downloaded output *becomes* the next call's resident image.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::path::Path;
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 use xla::PjRtBuffer;
 
+use super::backend::{Backend, BackendCache, BatchLane, RuntimeCounters};
 use super::client::{lit_f32_scalar, lit_f32_vec, Client, Executable};
 use super::weights::Weights;
 use crate::config::ModelConfig;
 
-/// Per-sequence KV cache: device buffers + host mirror + write position.
+/// Per-sequence KV cache: host mirror + lazily materialized device
+/// buffers + write position.
 pub struct KvCache {
-    kc: PjRtBuffer,
-    vc: PjRtBuffer,
     kc_host: Vec<f32>,
     vc_host: Vec<f32>,
     /// Next write position (== number of committed tokens).
     pub pos: usize,
+    /// Unique cache identity (survives moves; used by the fused-batch
+    /// residency check).
+    id: u64,
+    /// Bumped on every host-mirror mutation.
+    gen: u64,
+    dev: RefCell<DevBuffers>,
+}
+
+#[derive(Default)]
+struct DevBuffers {
+    kc: Option<PjRtBuffer>,
+    vc: Option<PjRtBuffer>,
+    /// Generation the device copies reflect.
+    gen: u64,
 }
 
 impl KvCache {
-    /// Bytes held on device by this cache (K + V), for the KV manager.
+    /// Bytes held by this cache's K + V image, for the KV manager.
     pub fn device_bytes(&self) -> usize {
         (self.kc_host.len() + self.vc_host.len()) * 4
     }
 }
 
-/// Execution counters for the perf report (`repro info`, §Perf).
-#[derive(Debug, Default)]
-pub struct RuntimeCounters {
-    pub prefills: Cell<u64>,
-    pub decodes: Cell<u64>,
-    pub probes: Cell<u64>,
-    pub batch_decodes: Cell<u64>,
+/// Reusable slot-major image of the batched K/V for `decode_batch`.
+#[derive(Default)]
+struct BatchScratch {
+    kc_all: Vec<f32>,
+    vc_all: Vec<f32>,
+    /// (cache id, generation) the lane image currently holds.
+    lane_tag: Vec<Option<(u64, u64)>>,
 }
 
 /// One loaded model: compiled executables + resident weights.
@@ -54,6 +80,8 @@ pub struct ModelRuntime {
     exe_probe: Executable,
     exe_decode_batch: Option<Executable>,
     pub counters: RuntimeCounters,
+    next_cache_id: Cell<u64>,
+    batch_scratch: RefCell<BatchScratch>,
 }
 
 impl ModelRuntime {
@@ -86,6 +114,8 @@ impl ModelRuntime {
             exe_probe,
             exe_decode_batch,
             counters: RuntimeCounters::default(),
+            next_cache_id: Cell::new(0),
+            batch_scratch: RefCell::new(BatchScratch::default()),
         })
     }
 
@@ -104,8 +134,34 @@ impl ModelRuntime {
         ]
     }
 
-    /// Run the prompt through the model; returns logits at position n-1 and
-    /// a fresh KV cache positioned at n.
+    fn new_cache(&self, kc_host: Vec<f32>, vc_host: Vec<f32>, pos: usize) -> KvCache {
+        let id = self.next_cache_id.get();
+        self.next_cache_id.set(id + 1);
+        KvCache {
+            kc_host,
+            vc_host,
+            pos,
+            id,
+            gen: 0,
+            dev: RefCell::new(DevBuffers::default()),
+        }
+    }
+
+    /// Materialize (or refresh) the per-slot device buffers from the host
+    /// mirror. Lazy so that fused-batch-only slots never pay this upload.
+    fn ensure_device(&self, client: &Client, cache: &KvCache) -> Result<()> {
+        let mut dev = cache.dev.borrow_mut();
+        if dev.kc.is_none() || dev.gen != cache.gen {
+            let dims = self.cache_dims();
+            dev.kc = Some(client.buf_f32(&cache.kc_host, &dims)?);
+            dev.vc = Some(client.buf_f32(&cache.vc_host, &dims)?);
+            dev.gen = cache.gen;
+        }
+        Ok(())
+    }
+
+    /// Run the prompt through the model; returns logits at position n-1
+    /// and a fresh KV cache positioned at n.
     pub fn prefill(&self, client: &Client, tokens: &[u32]) -> Result<(Vec<f32>, KvCache)> {
         let s = self.cfg.seq_len;
         anyhow::ensure!(
@@ -123,28 +179,17 @@ impl ModelRuntime {
             .exe_prefill
             .run(&self.args_with(&[&toks_buf, &n_buf]))?;
         anyhow::ensure!(outs.len() == 3, "prefill must return 3 outputs");
-        self.counters.prefills.set(self.counters.prefills.get() + 1);
+        RuntimeCounters::bump(&self.counters.prefills);
 
         let logits = lit_f32_vec(&outs[0])?;
         let kc_host = lit_f32_vec(&outs[1])?;
         let vc_host = lit_f32_vec(&outs[2])?;
-        let dims = self.cache_dims();
-        let kc = client.buf_f32(&kc_host, &dims)?;
-        let vc = client.buf_f32(&vc_host, &dims)?;
-        Ok((
-            logits,
-            KvCache {
-                kc,
-                vc,
-                kc_host,
-                vc_host,
-                pos: tokens.len(),
-            },
-        ))
+        Ok((logits, self.new_cache(kc_host, vc_host, tokens.len())))
     }
 
     /// One committed decode step: writes K/V at `cache.pos`, returns the
-    /// next-token logits, advances the cache.
+    /// next-token logits, advances the cache. The device copy goes stale
+    /// and is refreshed lazily on the next single-sequence use.
     pub fn decode(&self, client: &Client, cache: &mut KvCache, token: u32) -> Result<Vec<f32>> {
         anyhow::ensure!(
             cache.pos < self.cfg.seq_len,
@@ -152,21 +197,23 @@ impl ModelRuntime {
             cache.pos,
             self.cfg.seq_len
         );
+        self.ensure_device(client, cache)?;
         let pos_buf = client.buf_scalar_i32(cache.pos as i32)?;
         let tok_buf = client.buf_scalar_i32(token as i32)?;
-        let outs = self
-            .exe_decode
-            .run(&self.args_with(&[&cache.kc, &cache.vc, &pos_buf, &tok_buf]))?;
+        let outs = {
+            let dev = cache.dev.borrow();
+            let (kc, vc) = (dev.kc.as_ref().unwrap(), dev.vc.as_ref().unwrap());
+            self.exe_decode
+                .run(&self.args_with(&[kc, vc, &pos_buf, &tok_buf]))?
+        };
         anyhow::ensure!(outs.len() == 3, "decode must return 3 outputs");
-        self.counters.decodes.set(self.counters.decodes.get() + 1);
+        RuntimeCounters::bump(&self.counters.decodes);
 
         let logits = lit_f32_vec(&outs[0])?;
         cache.kc_host = lit_f32_vec(&outs[1])?;
         cache.vc_host = lit_f32_vec(&outs[2])?;
-        let dims = self.cache_dims();
-        cache.kc = client.buf_f32(&cache.kc_host, &dims)?;
-        cache.vc = client.buf_f32(&cache.vc_host, &dims)?;
         cache.pos += 1;
+        cache.gen += 1;
         Ok(logits)
     }
 
@@ -185,6 +232,7 @@ impl ModelRuntime {
             cache.pos + suffix.len() <= self.cfg.seq_len,
             "probe would overflow the sequence"
         );
+        self.ensure_device(client, cache)?;
         let mut padded = vec![0i32; pk];
         for (i, &t) in suffix.iter().enumerate() {
             padded[i] = t as i32;
@@ -192,91 +240,247 @@ impl ModelRuntime {
         let suf_buf = client.buf_i32(&padded, &[pk])?;
         let slen_buf = client.buf_scalar_i32(suffix.len() as i32)?;
         let pos_buf = client.buf_scalar_i32(cache.pos as i32)?;
-        let outs = self.exe_probe.run(&self.args_with(&[
-            &cache.kc, &cache.vc, &pos_buf, &suf_buf, &slen_buf,
-        ]))?;
+        let outs = {
+            let dev = cache.dev.borrow();
+            let (kc, vc) = (dev.kc.as_ref().unwrap(), dev.vc.as_ref().unwrap());
+            self.exe_probe
+                .run(&self.args_with(&[kc, vc, &pos_buf, &suf_buf, &slen_buf]))?
+        };
         anyhow::ensure!(outs.len() == 2, "probe must return 2 outputs");
-        self.counters.probes.set(self.counters.probes.get() + 1);
+        RuntimeCounters::bump(&self.counters.probes);
         Ok((lit_f32_scalar(&outs[0])?, lit_f32_vec(&outs[1])?))
     }
 
-    /// Fork a cache (device buffers re-created from the host mirror) —
-    /// used by rollout-based baselines that must decode hypothetical
-    /// continuations without disturbing the request's real cache.
-    pub fn fork_cache(&self, client: &Client, cache: &KvCache) -> Result<KvCache> {
-        let dims = self.cache_dims();
-        Ok(KvCache {
-            kc: client.buf_f32(&cache.kc_host, &dims)?,
-            vc: client.buf_f32(&cache.vc_host, &dims)?,
-            kc_host: cache.kc_host.clone(),
-            vc_host: cache.vc_host.clone(),
-            pos: cache.pos,
-        })
+    /// Fork a cache (host mirror cloned; device buffers materialize
+    /// lazily) — used by rollout-based baselines that must decode
+    /// hypothetical continuations without disturbing the request's real
+    /// cache.
+    pub fn fork_cache(&self, _client: &Client, cache: &KvCache) -> Result<KvCache> {
+        Ok(self.new_cache(cache.kc_host.clone(), cache.vc_host.clone(), cache.pos))
     }
 
-    /// Build a cache for another model by re-prefilling the same tokens —
-    /// the black-box proxy path (proxy recomputes its own cache over the
-    /// received reasoning text).
     pub fn has_batch(&self) -> bool {
         self.exe_decode_batch.is_some()
     }
 
-    /// Fused batched decode over B slots (continuous batching ablation).
-    /// `caches` must have exactly cfg.batch entries; inactive slots can
-    /// pass any token (their outputs are ignored by the caller).
+    /// Fused batched decode over exactly `cfg.batch` lanes. Engaged lanes
+    /// (`Some`) commit their token; `None` lanes are padding whose
+    /// outputs are discarded and whose scratch image is invalidated.
     pub fn decode_batch(
         &self,
         client: &Client,
-        caches: &mut [KvCache],
-        tokens: &[u32],
-    ) -> Result<Vec<Vec<f32>>> {
+        lanes: &mut [Option<(&mut KvCache, u32)>],
+    ) -> Result<Vec<Option<Vec<f32>>>> {
         let b = self.cfg.batch;
         let exe = self
             .exe_decode_batch
             .as_ref()
             .context("model has no decode_batch artifact")?;
-        anyhow::ensure!(caches.len() == b && tokens.len() == b);
+        anyhow::ensure!(
+            lanes.len() == b,
+            "decode_batch got {} lanes, batch width is {b}",
+            lanes.len()
+        );
         let dims = self.cache_dims();
         let elems: usize = dims.iter().product();
         let bdims = [b, dims[0], dims[1], dims[2], dims[3]];
 
-        let mut kc_all = vec![0f32; b * elems];
-        let mut vc_all = vec![0f32; b * elems];
-        for (i, c) in caches.iter().enumerate() {
-            kc_all[i * elems..(i + 1) * elems].copy_from_slice(&c.kc_host);
-            vc_all[i * elems..(i + 1) * elems].copy_from_slice(&c.vc_host);
+        let mut scratch = self.batch_scratch.borrow_mut();
+        if scratch.kc_all.len() != b * elems {
+            scratch.kc_all = vec![0.0; b * elems];
+            scratch.vc_all = vec![0.0; b * elems];
+            scratch.lane_tag = vec![None; b];
         }
-        let kc_buf = client.buf_f32(&kc_all, &bdims)?;
-        let vc_buf = client.buf_f32(&vc_all, &bdims)?;
-        let pos: Vec<i32> = caches.iter().map(|c| c.pos as i32).collect();
-        let pos_buf = client.buf_i32(&pos, &[b])?;
-        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        let toks_buf = client.buf_i32(&toks, &[b])?;
 
+        let mut pos = vec![0i32; b];
+        let mut toks = vec![0i32; b];
+        let mut engaged = 0u64;
+        let mut resident = 0u64;
+        for (i, lane) in lanes.iter().enumerate() {
+            let Some((cache, token)) = lane else {
+                continue;
+            };
+            anyhow::ensure!(
+                cache.pos < self.cfg.seq_len,
+                "KV cache full (pos {} of {})",
+                cache.pos,
+                self.cfg.seq_len
+            );
+            pos[i] = cache.pos as i32;
+            toks[i] = *token as i32;
+            engaged += 1;
+            if scratch.lane_tag[i] == Some((cache.id, cache.gen)) {
+                resident += 1; // lane image current from the previous call
+            } else {
+                scratch.kc_all[i * elems..(i + 1) * elems].copy_from_slice(&cache.kc_host);
+                scratch.vc_all[i * elems..(i + 1) * elems].copy_from_slice(&cache.vc_host);
+            }
+        }
+        anyhow::ensure!(engaged > 0, "decode_batch needs at least one engaged lane");
+
+        let kc_buf = client.buf_f32(&scratch.kc_all, &bdims)?;
+        let vc_buf = client.buf_f32(&scratch.vc_all, &bdims)?;
+        let pos_buf = client.buf_i32(&pos, &[b])?;
+        let toks_buf = client.buf_i32(&toks, &[b])?;
         let outs = exe.run(&self.args_with(&[&kc_buf, &vc_buf, &pos_buf, &toks_buf]))?;
         anyhow::ensure!(outs.len() == 3, "decode_batch must return 3 outputs");
-        self.counters
-            .batch_decodes
-            .set(self.counters.batch_decodes.get() + 1);
+        RuntimeCounters::bump(&self.counters.batch_decodes);
+        RuntimeCounters::add(&self.counters.batch_lanes, engaged);
+        RuntimeCounters::add(&self.counters.batch_resident_lanes, resident);
 
         let logits_all = lit_f32_vec(&outs[0])?;
-        let kc_new = lit_f32_vec(&outs[1])?;
-        let vc_new = lit_f32_vec(&outs[2])?;
+        // the downloaded batch becomes the next call's resident image —
+        // steady-state ticks never gather from host mirrors again
+        scratch.kc_all = lit_f32_vec(&outs[1])?;
+        scratch.vc_all = lit_f32_vec(&outs[2])?;
+        anyhow::ensure!(
+            scratch.kc_all.len() == b * elems && scratch.vc_all.len() == b * elems,
+            "decode_batch returned a mis-shaped cache"
+        );
+
         let v = self.cfg.vocab;
-        let mut per_slot = Vec::with_capacity(b);
-        for (i, c) in caches.iter_mut().enumerate() {
-            per_slot.push(logits_all[i * v..(i + 1) * v].to_vec());
-            c.kc_host.copy_from_slice(&kc_new[i * elems..(i + 1) * elems]);
-            c.vc_host.copy_from_slice(&vc_new[i * elems..(i + 1) * elems]);
-            c.kc = client.buf_f32(&c.kc_host, &dims)?;
-            c.vc = client.buf_f32(&c.vc_host, &dims)?;
-            c.pos += 1;
+        let mut out = Vec::with_capacity(b);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            match lane {
+                Some((cache, _)) => {
+                    cache
+                        .kc_host
+                        .copy_from_slice(&scratch.kc_all[i * elems..(i + 1) * elems]);
+                    cache
+                        .vc_host
+                        .copy_from_slice(&scratch.vc_all[i * elems..(i + 1) * elems]);
+                    cache.pos += 1;
+                    cache.gen += 1;
+                    scratch.lane_tag[i] = Some((cache.id, cache.gen));
+                    out.push(Some(logits_all[i * v..(i + 1) * v].to_vec()));
+                }
+                None => {
+                    // the fused kernel scribbled at pos 0 of idle lanes;
+                    // their scratch image is no longer trustworthy
+                    scratch.lane_tag[i] = None;
+                    out.push(None);
+                }
+            }
         }
-        Ok(per_slot)
+        Ok(out)
     }
 
     /// Parameter count (for `repro info`).
     pub fn total_param_elems(&self) -> usize {
         self.weights.total_elems
+    }
+}
+
+/// [`Backend`] adapter over a PJRT [`ModelRuntime`]. Main and proxy
+/// share the client.
+pub struct PjrtBackend {
+    client: Rc<Client>,
+    pub model: ModelRuntime,
+}
+
+impl PjrtBackend {
+    pub fn load(client: Rc<Client>, dir: &Path, cfg: &ModelConfig) -> Result<PjrtBackend> {
+        let model = ModelRuntime::load(&client, dir, cfg)?;
+        Ok(PjrtBackend { client, model })
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+}
+
+fn pjrt_cache(cache: &BackendCache) -> Result<&KvCache> {
+    match cache {
+        BackendCache::Pjrt(c) => Ok(c),
+        _ => anyhow::bail!("pjrt backend received a non-pjrt cache"),
+    }
+}
+
+fn pjrt_cache_mut(cache: &mut BackendCache) -> Result<&mut KvCache> {
+    match cache {
+        BackendCache::Pjrt(c) => Ok(c),
+        _ => anyhow::bail!("pjrt backend received a non-pjrt cache"),
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.model.cfg.name
+    }
+
+    fn describe(&self) -> String {
+        let c = &self.model.cfg;
+        format!(
+            "{:<9} pjrt d={} L={} H={} ff={} seq={} params={}",
+            c.name,
+            c.d_model,
+            c.n_layer,
+            c.n_head,
+            c.d_ff,
+            c.seq_len,
+            self.model.total_param_elems()
+        )
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.cfg.seq_len
+    }
+
+    fn probe_len(&self) -> usize {
+        self.model.cfg.probe_len
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.model.cfg.vocab
+    }
+
+    fn batch_width(&self) -> Option<usize> {
+        self.model.has_batch().then_some(self.model.cfg.batch)
+    }
+
+    fn cache_elems(&self) -> usize {
+        self.model.cfg.cache_elems()
+    }
+
+    fn param_elems(&self) -> usize {
+        self.model.total_param_elems()
+    }
+
+    fn prefill(&self, tokens: &[u32]) -> Result<(Vec<f32>, BackendCache)> {
+        let (logits, cache) = self.model.prefill(&self.client, tokens)?;
+        Ok((logits, BackendCache::Pjrt(cache)))
+    }
+
+    fn decode(&self, cache: &mut BackendCache, token: u32) -> Result<Vec<f32>> {
+        self.model
+            .decode(&self.client, pjrt_cache_mut(cache)?, token)
+    }
+
+    fn probe(&self, cache: &BackendCache, suffix: &[u32]) -> Result<(f32, Vec<f32>)> {
+        self.model.probe(&self.client, pjrt_cache(cache)?, suffix)
+    }
+
+    fn fork(&self, cache: &BackendCache) -> Result<BackendCache> {
+        Ok(BackendCache::Pjrt(
+            self.model.fork_cache(&self.client, pjrt_cache(cache)?)?,
+        ))
+    }
+
+    fn decode_batch(&self, lanes: &mut [Option<BatchLane<'_>>]) -> Result<Vec<Option<Vec<f32>>>> {
+        let mut raw: Vec<Option<(&mut KvCache, u32)>> = Vec::with_capacity(lanes.len());
+        for lane in lanes.iter_mut() {
+            match lane {
+                Some(BatchLane { cache, token }) => match &mut **cache {
+                    BackendCache::Pjrt(c) => raw.push(Some((c, *token))),
+                    _ => anyhow::bail!("pjrt backend received a non-pjrt cache"),
+                },
+                None => raw.push(None),
+            }
+        }
+        self.model.decode_batch(&self.client, &mut raw)
+    }
+
+    fn counters(&self) -> &RuntimeCounters {
+        &self.model.counters
     }
 }

@@ -1,0 +1,594 @@
+//! `RefBackend` — a deterministic, in-process reference implementation of
+//! the [`Backend`] trait (DESIGN.md §2.3).
+//!
+//! It emulates a *trained chain-sum reasoner* with a closed-form next-token
+//! distribution instead of a neural net: given the committed token history
+//! it scripts the reasoning ("verify partial-sum" lines, an overthinking
+//! tail, self-termination) and shapes the forced-answer distribution so
+//! that the paper's EAT dynamics hold —
+//!
+//!  * entropy after `</think>` starts at ~ln(32) and collapses as the
+//!    partial sums accumulate, plateauing near zero once the chain is
+//!    complete (solvable questions);
+//!  * corrupted (unsolvable) questions keep a noisy high-entropy answer
+//!    distribution forever (App. I.4: EAT never stabilizes);
+//!  * out-of-distribution chains (n > 10) only sharpen to a small margin
+//!    (the "degrading Pass@1" error class, Fig. 15);
+//!  * tool-call questions know the answer from the prompt (reasoning
+//!    optional, App. I.2).
+//!
+//! Because the distribution is a pure function of the token history,
+//! fused batched decode is bit-identical to sequential decode — which is
+//! exactly the invariant the batcher's determinism tests pin down — and
+//! every session is reproducible from its seed alone.
+
+use anyhow::Result;
+
+use super::backend::{Backend, BackendCache, BatchLane, RuntimeCounters};
+use crate::vocab::Vocab;
+
+/// Token-history cache of the reference backend.
+#[derive(Debug, Clone)]
+pub struct RefCache {
+    tokens: Vec<u32>,
+}
+
+impl RefCache {
+    pub fn pos(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn device_bytes(&self) -> usize {
+        self.tokens.len() * 4
+    }
+
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+}
+
+/// Margin of scripted (deterministic) continuation tokens: large enough
+/// that nucleus sampling at the paper's temperature/top-p always picks
+/// the scripted token.
+const SCRIPT_MARGIN: f32 = 12.0;
+/// Peak answer margin once a solvable chain is fully resolved (entropy
+/// effectively zero).
+const SHARP_MARGIN: f32 = 9.0;
+/// Degraded peak margin for out-of-distribution chains (n > 10).
+const OOD_MARGIN: f32 = 2.0;
+/// Logit floor for non-number tokens in the answer slot.
+const NON_ANSWER_LOGIT: f32 = -6.0;
+
+/// Deterministic in-process reference model.
+pub struct RefBackend {
+    name: String,
+    vocab: Vocab,
+    seq_len: usize,
+    probe_len: usize,
+    batch: Option<usize>,
+    /// Per-model salt so main and proxy are distinct-but-correlated
+    /// monitors (the black-box setting).
+    salt: u64,
+    counters: RuntimeCounters,
+}
+
+/// What the reference model read off the prompt.
+struct Parsed {
+    /// Operand values; `None` where masked with UNK (corrupted).
+    ops: Vec<Option<u32>>,
+    tool: bool,
+    /// Index just past `<think>`, when present.
+    think_end: Option<usize>,
+}
+
+fn mix(h: u64, x: u64) -> u64 {
+    // boost::hash_combine-style mixer over SplitMix64
+    let mut z = h ^ x.wrapping_add(0x9E3779B97F4A7C15)
+        .wrapping_add(h << 6)
+        .wrapping_add(h >> 2);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 31)
+}
+
+/// Uniform f32 in [0, 1) from a hash.
+fn unit(h: u64) -> f32 {
+    ((h >> 40) as f32) / (1u64 << 24) as f32
+}
+
+/// Logits peaked at `idx` with the given margin over a zero baseline.
+fn peaked(n: usize, idx: usize, margin: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    out[idx] = margin;
+    out
+}
+
+/// Shannon entropy (nats, temperature 1) of softmax(logits), computed in
+/// f64 the way the Pallas entropy kernel does.
+fn entropy(logits: &[f32]) -> f32 {
+    let mx = logits.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&z| (z as f64 - mx).exp()).collect();
+    let zsum: f64 = exps.iter().sum();
+    let mut h = 0.0f64;
+    for &e in &exps {
+        let p = e / zsum;
+        if p > 0.0 {
+            h -= p * p.ln();
+        }
+    }
+    h as f32
+}
+
+impl RefBackend {
+    pub fn new(name: &str, vocab: Vocab, seq_len: usize, batch: Option<usize>) -> RefBackend {
+        let salt = name.bytes().fold(0xEA7u64, |h, b| mix(h, b as u64));
+        RefBackend {
+            name: name.to_string(),
+            vocab,
+            seq_len,
+            probe_len: 4,
+            batch,
+            salt,
+            counters: RuntimeCounters::default(),
+        }
+    }
+
+    /// The default "main" reference model: artifact-shaped dimensions
+    /// (seq 128) with an 8-wide fused batch lane.
+    pub fn main(vocab: Vocab) -> RefBackend {
+        RefBackend::new("ref-main", vocab, 128, Some(8))
+    }
+
+    /// The default "proxy" monitor: no fused batch entry point (probes
+    /// and mirrored decodes are serviced out-of-band anyway).
+    pub fn proxy(vocab: Vocab) -> RefBackend {
+        RefBackend::new("ref-proxy", vocab, 128, None)
+    }
+
+    fn parse(&self, tokens: &[u32]) -> Parsed {
+        let v = self.vocab;
+        let mut ops = Vec::new();
+        let mut tool = false;
+        let mut think_end = None;
+        for (i, &t) in tokens.iter().enumerate() {
+            if t == v.think {
+                think_end = Some(i + 1);
+                break;
+            }
+            if t == v.tool {
+                tool = true;
+            }
+            if let Some(x) = v.num_value(t) {
+                ops.push(Some(x));
+            } else if t == v.unk {
+                ops.push(None);
+            }
+        }
+        Parsed {
+            ops,
+            tool,
+            think_end,
+        }
+    }
+
+    fn question_hash(&self, p: &Parsed) -> u64 {
+        let mut h = mix(self.salt, p.tool as u64 + 1);
+        for op in &p.ops {
+            h = mix(h, op.map(|x| x as u64 + 2).unwrap_or(1));
+        }
+        h
+    }
+
+    /// Overthinking verification lines appended after the chain resolves
+    /// (per-question, 2..=5) — the tail an adaptive exit can cut.
+    fn extra_lines(&self, p: &Parsed) -> usize {
+        2 + (self.question_hash(p) % 4) as usize
+    }
+
+    /// The value concluded by reasoning line `line` (1-based): the
+    /// partial sum of the first min(line, n) operands (chain-sum), or the
+    /// min(line, n)-th operand (tool copy task). `None` when an UNK mask
+    /// makes it unknowable.
+    fn line_value(&self, p: &Parsed, line: usize) -> Option<u32> {
+        let n = p.ops.len();
+        if n == 0 || line == 0 {
+            return None;
+        }
+        let upto = line.min(n);
+        if p.tool {
+            p.ops[upto - 1]
+        } else {
+            let mut s = 0u32;
+            for op in &p.ops[..upto] {
+                s = (s + (*op)?) % self.vocab.modulus;
+            }
+            Some(s)
+        }
+    }
+
+    /// The forced-answer distribution ("what comes after ANS") given how
+    /// many reasoning lines were committed — the signal the EAT probe
+    /// measures.
+    fn answer_logits(&self, p: &Parsed, lines_done: usize) -> Vec<f32> {
+        let v = self.vocab;
+        let nv = v.size as usize;
+        let m = v.modulus;
+        let n = p.ops.len().max(1);
+        let known = if p.tool { n } else { lines_done.min(n) };
+
+        let mut out = vec![NON_ANSWER_LOGIT; nv];
+        for val in 0..m {
+            out[v.num(val) as usize] = 0.0;
+        }
+        match self.line_value(p, n) {
+            None => {
+                // unknowable: noisy, never-stabilizing high entropy
+                let h = mix(self.question_hash(p), lines_done as u64 + 0xA);
+                let center = (h % m as u64) as u32;
+                let margin = 0.3 + 1.5 * unit(mix(h, 0x17));
+                out[v.num(center) as usize] = margin;
+            }
+            Some(ans) => {
+                let max_margin = if n > 10 { OOD_MARGIN } else { SHARP_MARGIN };
+                let progress = known as f32 / n as f32;
+                // small salt-dependent wiggle keeps the proxy monitor
+                // distinct-but-close to the self-monitor
+                let wiggle =
+                    1.0 + 0.05 * (unit(mix(self.salt, known as u64 + 0x31)) - 0.5);
+                let margin = max_margin * progress * progress * wiggle;
+                let center = if known >= n {
+                    ans
+                } else {
+                    // belief drifts line-to-line until the chain resolves
+                    let drift =
+                        (mix(self.question_hash(p), known as u64 + 0xB) % m as u64) as u32;
+                    (self.line_value(p, known).unwrap_or(0) + drift) % m
+                };
+                out[v.num(center) as usize] = margin.max(0.0);
+            }
+        }
+        out
+    }
+
+    /// Next-token distribution inside the reasoning stream: scripted
+    /// `VER value ⏎` lines, then self-termination once the chain is
+    /// resolved and re-verified.
+    fn reasoning_logits(&self, p: &Parsed, tail: &[u32]) -> Vec<f32> {
+        let v = self.vocab;
+        let nv = v.size as usize;
+        let n = p.ops.len().max(1);
+        let lines_done = tail.iter().filter(|&&t| t == v.nl).count();
+        let in_line = tail
+            .iter()
+            .rposition(|&t| t == v.nl)
+            .map(|i| tail.len() - i - 1)
+            .unwrap_or(tail.len());
+        let planned = n + self.extra_lines(p);
+        if in_line == 0 && lines_done >= planned && self.line_value(p, n).is_some() {
+            // fully resolved and re-verified: stop thinking on our own
+            return peaked(nv, v.ethink as usize, SCRIPT_MARGIN);
+        }
+        match in_line {
+            0 => peaked(nv, v.ver as usize, SCRIPT_MARGIN),
+            1 => match self.line_value(p, lines_done + 1) {
+                Some(val) => peaked(nv, v.num(val) as usize, SCRIPT_MARGIN),
+                None => peaked(nv, v.unk as usize, SCRIPT_MARGIN),
+            },
+            _ => peaked(nv, v.nl as usize, SCRIPT_MARGIN),
+        }
+    }
+
+    /// The full next-token function: pure in the token history.
+    fn next_logits(&self, tokens: &[u32]) -> Vec<f32> {
+        let v = self.vocab;
+        let nv = v.size as usize;
+        let p = self.parse(tokens);
+        let Some(te) = p.think_end else {
+            // prompt still streaming: the model expects <think> next
+            return peaked(nv, v.think as usize, SCRIPT_MARGIN);
+        };
+        let tail = &tokens[te..];
+        if let Some(e) = tail.iter().position(|&t| t == v.ethink) {
+            // answer elicitation (forced or probed): react to the last
+            // token; reasoning progress is frozen at the `</think>` point
+            let lines_done = tail[..e].iter().filter(|&&t| t == v.nl).count();
+            let last = *tokens.last().expect("tail is non-empty here");
+            return if last == v.ethink {
+                peaked(nv, v.final_ as usize, SCRIPT_MARGIN)
+            } else if last == v.final_ || last == v.lbrack {
+                peaked(nv, v.ans as usize, SCRIPT_MARGIN)
+            } else if last == v.ans {
+                self.answer_logits(&p, lines_done)
+            } else {
+                // answer value / EOS / anything else: absorb on EOS
+                peaked(nv, v.eos as usize, SCRIPT_MARGIN)
+            };
+        }
+        self.reasoning_logits(&p, tail)
+    }
+}
+
+fn ref_cache(cache: &BackendCache) -> Result<&RefCache> {
+    match cache {
+        BackendCache::Ref(c) => Ok(c),
+        #[cfg(feature = "pjrt")]
+        _ => anyhow::bail!("reference backend received a non-reference cache"),
+    }
+}
+
+fn ref_cache_mut(cache: &mut BackendCache) -> Result<&mut RefCache> {
+    match cache {
+        BackendCache::Ref(c) => Ok(c),
+        #[cfg(feature = "pjrt")]
+        _ => anyhow::bail!("reference backend received a non-reference cache"),
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{:<9} reference (table-driven chain-sum reasoner) seq={} probe={} batch={:?}",
+            self.name, self.seq_len, self.probe_len, self.batch
+        )
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn probe_len(&self) -> usize {
+        self.probe_len
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.vocab.size as usize
+    }
+
+    fn batch_width(&self) -> Option<usize> {
+        self.batch
+    }
+
+    fn cache_elems(&self) -> usize {
+        // nominal, for KV byte accounting only
+        self.seq_len * 16
+    }
+
+    fn param_elems(&self) -> usize {
+        0
+    }
+
+    fn prefill(&self, tokens: &[u32]) -> Result<(Vec<f32>, BackendCache)> {
+        anyhow::ensure!(
+            !tokens.is_empty() && tokens.len() <= self.seq_len,
+            "prompt length {} out of range 1..={}",
+            tokens.len(),
+            self.seq_len
+        );
+        let cache = RefCache {
+            tokens: tokens.to_vec(),
+        };
+        let logits = self.next_logits(&cache.tokens);
+        RuntimeCounters::bump(&self.counters.prefills);
+        Ok((logits, BackendCache::Ref(cache)))
+    }
+
+    fn decode(&self, cache: &mut BackendCache, token: u32) -> Result<Vec<f32>> {
+        let c = ref_cache_mut(cache)?;
+        anyhow::ensure!(
+            c.tokens.len() < self.seq_len,
+            "KV cache full (pos {} of {})",
+            c.tokens.len(),
+            self.seq_len
+        );
+        c.tokens.push(token);
+        RuntimeCounters::bump(&self.counters.decodes);
+        Ok(self.next_logits(&c.tokens))
+    }
+
+    fn probe(&self, cache: &BackendCache, suffix: &[u32]) -> Result<(f32, Vec<f32>)> {
+        let c = ref_cache(cache)?;
+        anyhow::ensure!(
+            !suffix.is_empty() && suffix.len() <= self.probe_len,
+            "probe suffix length {} out of range 1..={}",
+            suffix.len(),
+            self.probe_len
+        );
+        anyhow::ensure!(
+            c.tokens.len() + suffix.len() <= self.seq_len,
+            "probe would overflow the sequence"
+        );
+        let mut t = c.tokens.clone();
+        t.extend_from_slice(suffix);
+        let logits = self.next_logits(&t);
+        RuntimeCounters::bump(&self.counters.probes);
+        Ok((entropy(&logits), logits))
+    }
+
+    fn fork(&self, cache: &BackendCache) -> Result<BackendCache> {
+        Ok(BackendCache::Ref(ref_cache(cache)?.clone()))
+    }
+
+    fn decode_batch(&self, lanes: &mut [Option<BatchLane<'_>>]) -> Result<Vec<Option<Vec<f32>>>> {
+        let width = self
+            .batch
+            .ok_or_else(|| anyhow::anyhow!("backend `{}` has no fused batch lane", self.name))?;
+        anyhow::ensure!(
+            lanes.len() == width,
+            "decode_batch got {} lanes, batch width is {width}",
+            lanes.len()
+        );
+        let mut out = Vec::with_capacity(lanes.len());
+        let mut engaged = 0u64;
+        for lane in lanes.iter_mut() {
+            match lane {
+                Some(l) => {
+                    let c = ref_cache_mut(l.cache)?;
+                    anyhow::ensure!(
+                        c.tokens.len() < self.seq_len,
+                        "KV cache full (pos {} of {})",
+                        c.tokens.len(),
+                        self.seq_len
+                    );
+                    c.tokens.push(l.token);
+                    out.push(Some(self.next_logits(&c.tokens)));
+                    engaged += 1;
+                }
+                None => out.push(None),
+            }
+        }
+        anyhow::ensure!(engaged > 0, "decode_batch needs at least one engaged lane");
+        RuntimeCounters::bump(&self.counters.batch_decodes);
+        RuntimeCounters::add(&self.counters.batch_lanes, engaged);
+        Ok(out)
+    }
+
+    fn counters(&self) -> &RuntimeCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> RefBackend {
+        RefBackend::main(Vocab::default_layout())
+    }
+
+    fn prompt(ops: &[u32]) -> Vec<u32> {
+        let v = Vocab::default_layout();
+        let mut p = vec![v.bos, v.q];
+        p.extend(ops.iter().map(|&a| v.num(a)));
+        p.push(v.sep);
+        p.push(v.think);
+        p
+    }
+
+    #[test]
+    fn scripted_reasoning_self_terminates_with_correct_answer() {
+        let v = Vocab::default_layout();
+        let b = backend();
+        let ops = [3u32, 7, 9];
+        let want = ops.iter().sum::<u32>() % v.modulus;
+        let (mut logits, mut cache) = b.prefill(&prompt(&ops)).unwrap();
+        let mut saw_ethink = false;
+        for _ in 0..100 {
+            let tok = crate::sampler::argmax(&logits);
+            if tok == v.ethink {
+                saw_ethink = true;
+                break;
+            }
+            logits = b.decode(&mut cache, tok).unwrap();
+        }
+        assert!(saw_ethink, "reference reasoner must self-terminate");
+        // force the tail and greedily read the answer
+        logits = b.decode(&mut cache, v.ethink).unwrap();
+        assert_eq!(crate::sampler::argmax(&logits), v.final_);
+        logits = b.decode(&mut cache, v.final_).unwrap();
+        assert_eq!(crate::sampler::argmax(&logits), v.ans);
+        logits = b.decode(&mut cache, v.ans).unwrap();
+        assert_eq!(crate::sampler::argmax(&logits), v.num(want));
+    }
+
+    #[test]
+    fn eat_collapses_as_the_chain_resolves() {
+        let v = Vocab::default_layout();
+        let b = backend();
+        let (mut logits, mut cache) = b.prefill(&prompt(&[5, 2, 8, 1])).unwrap();
+        let suffix = v.suffix_prefixed();
+        let mut eats = Vec::new();
+        for _ in 0..60 {
+            let tok = crate::sampler::argmax(&logits);
+            if tok == v.ethink {
+                break;
+            }
+            logits = b.decode(&mut cache, tok).unwrap();
+            if tok == v.nl {
+                eats.push(b.probe(&cache, &suffix).unwrap().0);
+            }
+        }
+        assert!(eats.len() >= 5, "expected several line probes, got {eats:?}");
+        let first = eats[0];
+        let last = *eats.last().unwrap();
+        assert!(first > 2.5, "initial EAT should be near ln(32), got {first}");
+        assert!(last < 0.1, "post-resolution EAT should collapse, got {last}");
+        // probes never advanced the cache
+        assert_eq!(b.counters().probes.get(), eats.len() as u64);
+    }
+
+    #[test]
+    fn probe_does_not_mutate_cache() {
+        let v = Vocab::default_layout();
+        let b = backend();
+        let (_l, cache) = b.prefill(&prompt(&[4, 4])).unwrap();
+        let before = cache.pos();
+        for _ in 0..3 {
+            b.probe(&cache, &v.suffix_prefixed()).unwrap();
+        }
+        assert_eq!(cache.pos(), before);
+    }
+
+    #[test]
+    fn corrupted_questions_never_stabilize() {
+        let v = Vocab::default_layout();
+        let b = backend();
+        let p = vec![v.bos, v.q, v.num(3), v.unk, v.num(5), v.sep, v.think];
+        let (mut logits, mut cache) = b.prefill(&p).unwrap();
+        let mut eats = Vec::new();
+        for _ in 0..80 {
+            let tok = crate::sampler::argmax(&logits);
+            assert_ne!(tok, v.ethink, "corrupted chain must not self-terminate");
+            logits = b.decode(&mut cache, tok).unwrap();
+            if tok == v.nl {
+                eats.push(b.probe(&cache, &v.suffix_prefixed()).unwrap().0 as f64);
+            }
+            if eats.len() >= 12 {
+                break;
+            }
+        }
+        // stays high and keeps moving (never flat-lines near zero)
+        assert!(eats.iter().all(|&e| e > 2.0), "{eats:?}");
+        let spread = eats.iter().cloned().fold(f64::MIN, f64::max)
+            - eats.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.01, "corrupted EAT must stay noisy: {eats:?}");
+    }
+
+    #[test]
+    fn fused_decode_is_bit_identical_to_sequential() {
+        let b = backend();
+        let width = b.batch_width().unwrap();
+        let mk = |i: u32| prompt(&[i % 7 + 1, (i + 3) % 7 + 1]);
+        // sequential
+        let mut seq_logits = Vec::new();
+        let mut seq_caches = Vec::new();
+        for i in 0..3u32 {
+            let (_l, mut c) = b.prefill(&mk(i)).unwrap();
+            seq_logits.push(b.decode(&mut c, b.vocab.ver).unwrap());
+            seq_caches.push(c);
+        }
+        // fused (3 engaged lanes + padding)
+        let mut fused_caches: Vec<BackendCache> =
+            (0..3u32).map(|i| b.prefill(&mk(i)).unwrap().1).collect();
+        let mut lanes: Vec<Option<BatchLane>> = fused_caches
+            .iter_mut()
+            .map(|c| {
+                Some(BatchLane {
+                    cache: c,
+                    token: b.vocab.ver,
+                })
+            })
+            .collect();
+        lanes.resize_with(width, || None);
+        let out = b.decode_batch(&mut lanes).unwrap();
+        drop(lanes);
+        for i in 0..3 {
+            assert_eq!(out[i].as_ref().unwrap(), &seq_logits[i]);
+            assert_eq!(fused_caches[i].pos(), seq_caches[i].pos());
+        }
+        assert_eq!(b.counters().batch_decodes.get(), 1);
+        assert_eq!(b.counters().batch_lanes.get(), 3);
+    }
+}

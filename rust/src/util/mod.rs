@@ -1,6 +1,7 @@
 //! Hand-rolled substrates (DESIGN.md §1): the offline crate registry only
-//! carries `xla` + `anyhow`, so JSON, CLI parsing, RNG, statistics and the
-//! bench harness are implemented here.
+//! carries `anyhow` (plus the optional, feature-gated `xla`), so JSON,
+//! CLI parsing, RNG, statistics and the bench harness are implemented
+//! here.
 
 pub mod bench;
 pub mod cli;

@@ -6,6 +6,10 @@
 
 use crate::util::json::Json;
 
+/// Maximum sampled answer-tail tokens after the forced suffix (value +
+/// EOS, with slack for summarization babble the model may emit first).
+pub const ANSWER_SAMPLE_CAP: usize = 4;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Vocab {
     pub pad: u32,
@@ -92,6 +96,23 @@ impl Vocab {
         } else {
             None
         }
+    }
+
+    /// Tokens the engine force-feeds to elicit an answer
+    /// (GenTillEoS, Alg. 1 line 11): `</think> Final answer:` + the ANS
+    /// marker. Returned by value (no allocation — this sits on the
+    /// per-token serving hot path via [`Vocab::answer_reserve`]).
+    pub fn forced_answer_tail(&self) -> [u32; 3] {
+        [self.ethink, self.final_, self.ans]
+    }
+
+    /// Decode positions that must stay free for answer elicitation: the
+    /// forced tail plus up to [`ANSWER_SAMPLE_CAP`] sampled answer tokens
+    /// (value + EOS + slack). The engine refuses to commit another
+    /// reasoning token once headroom drops to this, so a longer forced
+    /// suffix can never silently truncate answers.
+    pub fn answer_reserve(&self) -> usize {
+        self.forced_answer_tail().len() + ANSWER_SAMPLE_CAP
     }
 
     /// The EAT probe suffixes of the paper (App. D):
@@ -186,6 +207,20 @@ mod tests {
         assert_eq!(v.suffix_prefixed(), vec![v.ethink, v.final_, v.ans]);
         assert_eq!(v.suffix_newline(), vec![v.nl]);
         assert!(v.suffix_prefixed().len() <= 4); // must fit probe_len
+    }
+
+    #[test]
+    fn answer_reserve_covers_forced_tail_and_sampling() {
+        let v = Vocab::default_layout();
+        assert_eq!(v.forced_answer_tail(), [v.ethink, v.final_, v.ans]);
+        // the reserve must cover every decode the elicitation path can
+        // issue: each forced token plus each sampled (non-EOS) token
+        assert_eq!(
+            v.answer_reserve(),
+            v.forced_answer_tail().len() + ANSWER_SAMPLE_CAP
+        );
+        // a minimal full answer (forced tail + value + EOS) always fits
+        assert!(v.answer_reserve() >= v.forced_answer_tail().len() + 2);
     }
 
     #[test]
