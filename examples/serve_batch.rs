@@ -1,24 +1,37 @@
 //! End-to-end serving driver (the repo's headline validation run):
-//! a Poisson workload of reasoning requests served through the continuous
-//! batcher with EAT early exiting, reporting latency / throughput /
-//! accuracy / token usage — and the same workload under the fixed-budget
-//! baseline for comparison.
+//! a Poisson workload of reasoning requests served through the
+//! continuous batcher, comparing three serving configurations on the
+//! SAME seeded arrival process —
+//!
+//!   1. EAT early exiting + the EAT-aware preemptive scheduler,
+//!   2. EAT early exiting + plain FIFO admission,
+//!   3. fixed token budget + FIFO (the baseline serving stack);
+//!
+//! reporting latency / throughput / accuracy / token usage and the
+//! scheduler counters (preemptions, resumes, deadline misses).
 //!
 //!     cargo run --release --example serve_batch -- \
-//!         [--requests 48] [--slots 4] [--rate 4.0] [--dataset synth-math500-small]
+//!         [--requests 48] [--slots 4] [--rate 4.0] [--deadline 30] \
+//!         [--dataset synth-gpqa-small] [--wall]
 //!
-//! Results are recorded in EXPERIMENTS.md §End-to-end serving.
+//! By default the run is simulated on a VIRTUAL clock (DESIGN.md §3.4):
+//! fully deterministic in --seed, with one scheduling tick charged as
+//! 10 ms of simulated time. Pass --wall to pace arrivals in real time
+//! instead. Results are recorded in EXPERIMENTS.md §End-to-end serving.
 
 use anyhow::Result;
 
-use eat_serve::config::ServeConfig;
-use eat_serve::coordinator::{Batcher, MonitorModel};
+use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::coordinator::{
+    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MonitorModel, DEFAULT_TICK_DT,
+};
 use eat_serve::datasets::Dataset;
-use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
+use eat_serve::exit::TokenBudgetPolicy;
 use eat_serve::runtime::Runtime;
 use eat_serve::util::cli::Args;
-use eat_serve::util::rng::Rng;
+use eat_serve::util::clock::Clock;
 
+#[allow(clippy::too_many_arguments)]
 fn run_workload(
     rt: &Runtime,
     cfg: &ServeConfig,
@@ -27,48 +40,39 @@ fn run_workload(
     slots: usize,
     rate_per_s: f64,
     policy: &str,
+    mode: SchedMode,
+    wall: bool,
 ) -> Result<()> {
     let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
-    let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
+    let budget = cfg.max_think_tokens;
     let factory: eat_serve::coordinator::batcher::PolicyFactory = match policy {
-        "eat" => Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget))),
+        "eat" => eat_policy_factory(cfg),
         "token" => Box::new(move || Box::new(TokenBudgetPolicy::new(budget))),
         other => anyhow::bail!("unknown policy {other}"),
     };
-    let mut batcher = Batcher::new(rt, cfg.clone(), MonitorModel::SelfModel, slots, factory);
+    let mut cfg = cfg.clone();
+    cfg.sched.mode = mode;
+    let clock = if wall { Clock::wall() } else { Clock::virt() };
+    let mut batcher =
+        Batcher::with_clock(rt, cfg.clone(), MonitorModel::SelfModel, slots, factory, clock);
 
-    // Poisson arrivals: submit requests as their (simulated) arrival time
-    // passes, interleaved with scheduler ticks — open-loop load.
-    let mut rng = Rng::new(cfg.seed ^ 0xA221);
-    let mut arrivals: Vec<f64> = Vec::new();
-    let mut t = 0.0;
-    for _ in 0..n {
-        t += rng.exponential(rate_per_s);
-        arrivals.push(t);
-    }
-    let started = std::time::Instant::now();
-    let mut next = 0usize;
-    loop {
-        let now = started.elapsed().as_secs_f64();
-        while next < n && arrivals[next] <= now {
-            batcher.submit(ds.questions[next % ds.questions.len()].clone());
-            next += 1;
-        }
-        let advanced = batcher.tick()?;
-        if next >= n && batcher.pending() == 0 && batcher.active_count() == 0 {
-            break;
-        }
-        if advanced == 0 && next < n {
-            // idle until the next arrival
-            std::thread::sleep(std::time::Duration::from_micros(200));
-        }
-    }
+    // Open-loop Poisson arrivals: identical across the compared
+    // configurations (same seed ⇒ same arrival times ⇒ same workload).
+    let arrivals = poisson_arrivals(n, rate_per_s, cfg.seed);
+    run_open_loop(&mut batcher, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
 
-    println!("=== policy={policy} dataset={dataset} slots={slots} rate={rate_per_s}/s ===");
+    let sched = match mode {
+        SchedMode::Fifo => "fifo",
+        SchedMode::EatAware => "eat-aware",
+    };
+    println!(
+        "=== policy={policy} sched={sched} dataset={dataset} slots={slots} rate={rate_per_s}/s ==="
+    );
     println!("{}", batcher.metrics.report());
     println!("kv slot peak       {} / {}", batcher.kv_peak(), slots);
-    let mean_tokens = batcher.metrics.reasoning_tokens as f64
-        / batcher.metrics.completed.max(1) as f64;
+    println!("mean slot occupancy {:.2}", batcher.metrics.mean_slot_occupancy());
+    let mean_tokens =
+        batcher.metrics.reasoning_tokens as f64 / batcher.metrics.completed.max(1) as f64;
     println!("mean reasoning tok {mean_tokens:.1}\n");
     Ok(())
 }
@@ -80,13 +84,16 @@ fn main() -> Result<()> {
     cfg.alpha = args.f64_or("alpha", cfg.alpha);
     cfg.delta = args.f64_or("delta", cfg.delta);
     cfg.seed = args.u64_or("seed", 0);
+    cfg.sched.deadline_s = args.f64_or("deadline", 30.0);
 
-    let dataset = args.str_or("dataset", "synth-math500-small");
+    let dataset = args.str_or("dataset", "synth-gpqa-small");
     let n = args.usize_or("requests", 48);
     let slots = args.usize_or("slots", 4);
     let rate = args.f64_or("rate", 4.0);
+    let wall = args.has("wall");
 
-    run_workload(&rt, &cfg, dataset, n, slots, rate, "eat")?;
-    run_workload(&rt, &cfg, dataset, n, slots, rate, "token")?;
+    run_workload(&rt, &cfg, dataset, n, slots, rate, "eat", SchedMode::EatAware, wall)?;
+    run_workload(&rt, &cfg, dataset, n, slots, rate, "eat", SchedMode::Fifo, wall)?;
+    run_workload(&rt, &cfg, dataset, n, slots, rate, "token", SchedMode::Fifo, wall)?;
     Ok(())
 }

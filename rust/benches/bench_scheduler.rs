@@ -1,0 +1,68 @@
+//! Virtual-clock serving simulator throughput: how fast the scheduler
+//! itself runs (simulated requests per wall second), FIFO vs EAT-aware,
+//! plus the scheduler event mix of one contended run — preemptions,
+//! resumes, re-prefill tokens — so the preemption overhead is auditable.
+//!
+//!     cargo bench --bench bench_scheduler
+//!
+//! Runs on the deterministic reference backend (no artifacts needed):
+//! the virtual clock means the bench measures pure scheduling + protocol
+//! overhead, not model execution time.
+
+use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::coordinator::{
+    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MonitorModel, DEFAULT_TICK_DT,
+};
+use eat_serve::datasets::Dataset;
+use eat_serve::runtime::Runtime;
+use eat_serve::util::bench::bench;
+use eat_serve::util::clock::Clock;
+
+fn simulate(rt: &Runtime, cfg: &ServeConfig, n: usize, slots: usize) -> (u64, u64, u64) {
+    let ds = Dataset::synth_gpqa(&rt.vocab, 24, cfg.seed);
+    let mut b = Batcher::with_clock(
+        rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        slots,
+        eat_policy_factory(cfg),
+        Clock::virt(),
+    );
+    let arrivals = poisson_arrivals(n, 40.0, cfg.seed);
+    run_open_loop(&mut b, &ds.questions, &arrivals, DEFAULT_TICK_DT).unwrap();
+    assert_eq!(b.metrics.completed, n);
+    (b.metrics.preemptions, b.metrics.resumes, b.metrics.resume_prefill_tokens)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::reference();
+    println!("backend: {} (virtual clock)\n", rt.backend_kind());
+
+    const N: usize = 24;
+    const SLOTS: usize = 3;
+    for mode in [SchedMode::Fifo, SchedMode::EatAware] {
+        let mut cfg = ServeConfig::default();
+        cfg.seed = 11;
+        cfg.sched.mode = mode;
+        let name = match mode {
+            SchedMode::Fifo => "serve_sim/fifo",
+            SchedMode::EatAware => "serve_sim/eat_aware",
+        };
+        let r = bench(name, || {
+            simulate(&rt, &cfg, N, SLOTS);
+        });
+        let req_per_s = N as f64 / (r.mean_ns / 1e9);
+        println!("  {name}: {req_per_s:.0} simulated req/s\n");
+    }
+
+    // event mix of one contended EAT-aware run
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 11;
+    cfg.sched.mode = SchedMode::EatAware;
+    let (preemptions, resumes, re_prefill) = simulate(&rt, &cfg, N, SLOTS);
+    println!("scheduler event mix ({N} requests, {SLOTS} slots):");
+    println!("  preemptions         {preemptions:>8}");
+    println!("  resumes             {resumes:>8}");
+    println!("  re-prefill tokens   {re_prefill:>8}");
+    Ok(())
+}

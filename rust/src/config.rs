@@ -133,6 +133,8 @@ pub struct ServeConfig {
     pub prefixed_probe: bool,
     /// Seed for all sampling.
     pub seed: u64,
+    /// Scheduler knobs (DESIGN.md §3.4).
+    pub sched: SchedConfig,
 }
 
 impl Default for ServeConfig {
@@ -145,6 +147,59 @@ impl Default for ServeConfig {
             delta: 1e-3,
             prefixed_probe: true,
             seed: 0,
+            sched: SchedConfig::default(),
+        }
+    }
+}
+
+/// How the batcher allocates contended KV slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Arrival order, no preemption — the pre-scheduler behavior.
+    Fifo,
+    /// EAT-aware: earliest-deadline admission, preemption of long-stalled
+    /// sessions, stall retirement past the starvation guard.
+    EatAware,
+}
+
+/// Scheduler configuration (DESIGN.md §3.4). The defaults keep the
+/// historical FIFO behavior; `EatAware` turns the batcher into a
+/// preemptive priority scheduler driven by the monitor's EMA-variance
+/// distance to the exit threshold (`ExitPolicy::stability`).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub mode: SchedMode,
+    /// Per-request latency SLO in seconds: admission prefers earlier
+    /// deadlines in EAT-aware mode, and completions past their deadline
+    /// count as misses in the metrics.
+    pub deadline_s: f64,
+    /// Aging bound: scheduling ticks a session must stay resident before
+    /// it counts as long-stalled and becomes preemptible.
+    pub preempt_after_ticks: u64,
+    /// Stability (see `ExitPolicy::stability`) at or below which a
+    /// resident session counts as stalled. Stabilized sessions are never
+    /// preempted — they are driven to completion.
+    pub stall_stability: f64,
+    /// Starvation guard: a session preempted this many times becomes
+    /// unpreemptible and its resumption outranks fresh admissions. A
+    /// session still stalled after burning through the guard is retired
+    /// by forced elicitation (`ExitReason::Stalled`) instead of burning
+    /// the rest of its token budget.
+    pub max_preemptions: u32,
+    /// Suspended sessions waiting longer than this also outrank fresh
+    /// admissions, even before hitting `max_preemptions`.
+    pub resume_priority_after_s: f64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            mode: SchedMode::Fifo,
+            deadline_s: 60.0,
+            preempt_after_ticks: 32,
+            stall_stability: 0.25,
+            max_preemptions: 2,
+            resume_priority_after_s: 1.0,
         }
     }
 }
@@ -160,6 +215,10 @@ mod tests {
         assert_eq!(c.top_p, 0.95);
         assert_eq!(c.alpha, 0.2); // the paper Alg. 1 default
         assert!(c.prefixed_probe);
+        // default scheduling stays FIFO (the pre-scheduler behavior)
+        assert_eq!(c.sched.mode, SchedMode::Fifo);
+        assert!(c.sched.max_preemptions > 0);
+        assert!(c.sched.stall_stability > 0.0 && c.sched.stall_stability < 1.0);
     }
 
     #[test]

@@ -1,56 +1,115 @@
-//! Continuous batcher: vLLM-style slot scheduling over split-phase
-//! [`ReasoningSession`]s — the batcher, not the session, owns model
-//! execution (DESIGN.md §3.3).
+//! Continuous batcher + EAT-aware preemptive scheduler: vLLM-style slot
+//! scheduling over split-phase [`ReasoningSession`]s — the batcher, not
+//! the session, owns model execution (DESIGN.md §3.3/§3.4).
 //!
-//! Requests arrive with timestamps (the workload generator produces a
-//! Poisson process); the batcher admits them into up to `slots`
-//! concurrent sessions (KV capacity permitting — backpressure
-//! otherwise). Each scheduling tick it polls every active session up to
-//! its pending decode, servicing probes and rollouts *out-of-band* as
-//! they surface, then commits **all pending decodes in one fused
-//! `decode_batch` call** against the slot-major [`BatchCacheStore`]
-//! (idle lanes padded; chunked only if active > batch width). When the
-//! backend carries no batch entry point — or `force_sequential` is set —
-//! the same decodes run one by one in admission order. The session
-//! protocol cannot observe which path serviced it, so on the reference
-//! backend (a pure function of token history) the two paths are
-//! bit-identical for the same seed; on PJRT artifacts the fused kernel
-//! agrees with the single-decode kernel to ~1e-3, so sampled tokens can
-//! in principle diverge at nucleus boundaries.
+//! Requests arrive with timestamps read from an injected [`Clock`] (the
+//! workload driver produces a Poisson process; under a virtual clock the
+//! whole run is a pure function of the seed). The batcher admits them
+//! into up to `slots` concurrent sessions (KV capacity permitting —
+//! backpressure otherwise). Each scheduling tick it polls every active
+//! session up to its pending decode, servicing probes and rollouts
+//! *out-of-band* as they surface, then commits **all pending decodes in
+//! one fused `decode_batch` call** against the slot-major
+//! [`BatchCacheStore`] (idle lanes padded; chunked only if active >
+//! batch width). When the backend carries no batch entry point — or
+//! `force_sequential` is set — the same decodes run one by one in
+//! admission order. The session protocol cannot observe which path
+//! serviced it, so on the reference backend (a pure function of token
+//! history) the two paths are bit-identical for the same seed; on PJRT
+//! artifacts the fused kernel agrees with the single-decode kernel to
+//! ~1e-3, so sampled tokens can in principle diverge at nucleus
+//! boundaries.
+//!
+//! In `SchedMode::EatAware` the FIFO loop becomes a scheduler
+//! (DESIGN.md §3.4): admission prefers earliest deadlines, long-stalled
+//! sessions (low `ExitPolicy::stability`, past the aging bound) are
+//! *preempted* — KV slot evicted, token history + monitor/policy state
+//! retained in a [`SuspendedSession`] — and later resumed by re-prefill,
+//! which is bit-identical on the reference backend. Per-request RNGs are
+//! seeded from the submission sequence number, so a request's trajectory
+//! is invariant to admission order and scheduling mode.
 
 use std::collections::VecDeque;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use super::batch_cache::{BatchCacheStore, StoreCounters};
 use super::engine::{
-    run_probe, run_rollout, start_session, MonitorModel, ReasoningSession, RequestResult,
-    StepWork,
+    resume_session, run_probe, run_rollout, start_session, MonitorModel, ReasoningSession,
+    RequestResult, StepWork,
 };
 use super::kv::{KvSlotManager, SlotId};
 use super::metrics::ServeMetrics;
-use crate::config::ServeConfig;
+use crate::config::{SchedMode, ServeConfig};
 use crate::datasets::Question;
-use crate::exit::ExitPolicy;
+use crate::exit::{EatPolicy, ExitPolicy, ExitReason};
 use crate::runtime::{Backend, Runtime};
+use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 
 /// A request waiting for admission.
 pub struct QueuedRequest {
     pub question: Question,
-    pub arrived: Instant,
+    /// Clock seconds at submission.
+    pub arrived: f64,
+    /// SLO deadline: `arrived + sched.deadline_s`.
+    pub deadline: f64,
+    /// Submission sequence number: FIFO tiebreaker *and* the per-request
+    /// RNG seed component, so a request's trajectory does not depend on
+    /// admission order or scheduling mode.
+    pub seq: u64,
 }
 
 struct Active {
     session: ReasoningSession,
     slot: SlotId,
-    arrived: Instant,
-    admitted: Instant,
+    arrived: f64,
+    /// First admission (queue-delay measurement; preserved across
+    /// preemptions).
+    admitted: f64,
+    deadline: f64,
+    seq: u64,
+    /// Ticks since this session last entered its slot.
+    resident_ticks: u64,
+    preemptions: u32,
+}
+
+/// A preempted mid-flight session: the KV slot is evicted while the
+/// token history and monitor/policy state live on here; resumption
+/// rebuilds the caches by re-prefill ([`resume_session`]).
+pub struct SuspendedSession {
+    session: ReasoningSession,
+    arrived: f64,
+    admitted: f64,
+    deadline: f64,
+    seq: u64,
+    preemptions: u32,
+    suspended_at: f64,
+}
+
+/// Which waiter gets the next free slot.
+enum AdmitPick {
+    /// Index into the queue.
+    Fresh(usize),
+    /// Index into the suspended list.
+    Resume(usize),
 }
 
 /// Policy factory: each admitted request gets a fresh policy instance.
 pub type PolicyFactory = Box<dyn Fn() -> Box<dyn ExitPolicy>>;
+
+/// The default serving policy factory: fresh [`EatPolicy`] instances
+/// with the config's alpha/delta/budget (shared by the CLI, examples,
+/// benches and tests).
+pub fn eat_policy_factory(cfg: &ServeConfig) -> PolicyFactory {
+    let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
+    Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget)))
+}
+
+/// Simulated seconds charged per scheduling tick on a virtual clock
+/// (one fused decode step at ~10 ms) — used by [`Batcher::run_to_completion`]
+/// and as the workload driver's default.
+pub const DEFAULT_TICK_DT: f64 = 0.01;
 
 pub struct Batcher<'a> {
     rt: &'a Runtime,
@@ -59,9 +118,11 @@ pub struct Batcher<'a> {
     make_policy: PolicyFactory,
     kv: KvSlotManager,
     store: BatchCacheStore,
+    clock: Clock,
     queue: VecDeque<QueuedRequest>,
     active: Vec<Active>,
-    rng: Rng,
+    suspended: VecDeque<SuspendedSession>,
+    next_seq: u64,
     /// Disable the fused path even when the backend has one (A/B
     /// determinism checks, ablations).
     pub force_sequential: bool,
@@ -70,6 +131,7 @@ pub struct Batcher<'a> {
 }
 
 impl<'a> Batcher<'a> {
+    /// Wall-clock batcher (live serving).
     pub fn new(
         rt: &'a Runtime,
         cfg: ServeConfig,
@@ -77,13 +139,25 @@ impl<'a> Batcher<'a> {
         slots: usize,
         make_policy: PolicyFactory,
     ) -> Batcher<'a> {
+        Batcher::with_clock(rt, cfg, monitor, slots, make_policy, Clock::wall())
+    }
+
+    /// Full constructor: inject the time source (a [`Clock::virt`] makes
+    /// the entire serve run deterministic in the seed).
+    pub fn with_clock(
+        rt: &'a Runtime,
+        cfg: ServeConfig,
+        monitor: MonitorModel,
+        slots: usize,
+        make_policy: PolicyFactory,
+        clock: Clock,
+    ) -> Batcher<'a> {
         let slot_bytes = rt.main.cache_elems() * 4 * 2
             + if monitor == MonitorModel::Proxy {
                 rt.proxy.cache_elems() * 4 * 2
             } else {
                 0
             };
-        let seed = cfg.seed;
         Batcher {
             rt,
             cfg,
@@ -91,19 +165,31 @@ impl<'a> Batcher<'a> {
             make_policy,
             kv: KvSlotManager::new(slots, slot_bytes),
             store: BatchCacheStore::new(slots),
+            metrics: ServeMetrics::new(clock.clone()),
+            clock,
             queue: VecDeque::new(),
             active: Vec::new(),
-            rng: Rng::new(seed ^ 0xBA7C4E5),
+            suspended: VecDeque::new(),
+            next_seq: 0,
             force_sequential: false,
-            metrics: ServeMetrics::new(),
             results: Vec::new(),
         }
     }
 
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
     pub fn submit(&mut self, question: Question) {
+        self.metrics.mark_start();
+        let now = self.clock.now();
+        let seq = self.next_seq;
+        self.next_seq += 1;
         self.queue.push_back(QueuedRequest {
             question,
-            arrived: Instant::now(),
+            arrived: now,
+            deadline: now + self.cfg.sched.deadline_s,
+            seq,
         });
     }
 
@@ -113,6 +199,15 @@ impl<'a> Batcher<'a> {
 
     pub fn active_count(&self) -> usize {
         self.active.len()
+    }
+
+    pub fn suspended_count(&self) -> usize {
+        self.suspended.len()
+    }
+
+    /// Anything left to do: queued, resident, or suspended work.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty() || !self.suspended.is_empty()
     }
 
     pub fn kv_utilization(&self) -> f64 {
@@ -128,39 +223,188 @@ impl<'a> Batcher<'a> {
         self.store.counters
     }
 
-    /// Admit queued requests while KV slots are free (prefill phase).
-    fn admit(&mut self) -> Result<()> {
-        while !self.queue.is_empty() {
-            let Some(slot) = self.kv.acquire() else {
-                break; // backpressure: leave the rest queued
+    /// The per-request RNG: a pure function of the serve seed and the
+    /// submission sequence number.
+    fn request_rng(&self, seq: u64) -> Rng {
+        Rng::new(self.cfg.seed ^ 0xBA7C4E5 ^ seq.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Pick the waiter for the next free slot.
+    ///
+    /// FIFO mode: suspended sessions first (oldest suspension), then the
+    /// queue head. EAT-aware mode (DESIGN.md §3.4): (1) suspended
+    /// sessions past the starvation guard (preempted `max_preemptions`
+    /// times, or waiting longer than `resume_priority_after_s`), (2)
+    /// fresh requests by earliest deadline, (3) remaining suspended
+    /// sessions, oldest suspension first.
+    fn pick_admission(&self) -> Option<AdmitPick> {
+        if self.cfg.sched.mode == SchedMode::Fifo {
+            if !self.suspended.is_empty() {
+                return Some(AdmitPick::Resume(0));
+            }
+            return if self.queue.is_empty() {
+                None
+            } else {
+                Some(AdmitPick::Fresh(0))
             };
-            let req = self.queue.pop_front().unwrap();
-            let policy = (self.make_policy)();
-            let (session, caches) = start_session(
-                self.rt,
-                self.cfg.clone(),
-                self.monitor,
-                req.question,
-                policy,
-                self.rng.fork(),
-            )?;
-            self.store.install(slot, caches.main, caches.proxy)?;
-            self.active.push(Active {
-                session,
-                slot,
-                arrived: req.arrived,
-                admitted: Instant::now(),
+        }
+        let now = self.clock.now();
+        let aged = self
+            .suspended
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.preemptions >= self.cfg.sched.max_preemptions
+                    || now - s.suspended_at >= self.cfg.sched.resume_priority_after_s
+            })
+            .min_by(|(_, a), (_, b)| {
+                (a.deadline, a.seq).partial_cmp(&(b.deadline, b.seq)).unwrap()
+            });
+        if let Some((i, _)) = aged {
+            return Some(AdmitPick::Resume(i));
+        }
+        let fresh = self.queue.iter().enumerate().min_by(|(_, a), (_, b)| {
+            (a.deadline, a.seq).partial_cmp(&(b.deadline, b.seq)).unwrap()
+        });
+        if let Some((i, _)) = fresh {
+            return Some(AdmitPick::Fresh(i));
+        }
+        self.suspended
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                (a.suspended_at, a.seq).partial_cmp(&(b.suspended_at, b.seq)).unwrap()
+            })
+            .map(|(i, _)| AdmitPick::Resume(i))
+    }
+
+    /// Admit waiters while KV slots are free: fresh requests prefill,
+    /// suspended sessions resume by re-prefill.
+    fn admit(&mut self) -> Result<()> {
+        while self.kv.available() > 0 {
+            let Some(pick) = self.pick_admission() else {
+                break;
+            };
+            let Some(slot) = self.kv.acquire() else {
+                break;
+            };
+            match pick {
+                AdmitPick::Fresh(i) => {
+                    let req = self.queue.remove(i).expect("picked index in range");
+                    let policy = (self.make_policy)();
+                    let rng = self.request_rng(req.seq);
+                    let (session, caches) = start_session(
+                        self.rt,
+                        self.cfg.clone(),
+                        self.monitor,
+                        req.question,
+                        policy,
+                        rng,
+                    )?;
+                    self.store.install(slot, caches.main, caches.proxy)?;
+                    self.active.push(Active {
+                        session,
+                        slot,
+                        arrived: req.arrived,
+                        admitted: self.clock.now(),
+                        deadline: req.deadline,
+                        seq: req.seq,
+                        resident_ticks: 0,
+                        preemptions: 0,
+                    });
+                }
+                AdmitPick::Resume(i) => {
+                    let mut s = self.suspended.remove(i).expect("picked index in range");
+                    // Adaptive compute governor: a session still stalled
+                    // after burning through the starvation guard has
+                    // shown no EAT progress across multiple residencies —
+                    // stop reasoning and elicit its answer now instead of
+                    // burning the rest of the token budget (the paper's
+                    // §6 stall extension, applied at the scheduler level).
+                    if self.cfg.sched.mode == SchedMode::EatAware
+                        && s.preemptions >= self.cfg.sched.max_preemptions
+                        && s.session.stability().unwrap_or(1.0) <= self.cfg.sched.stall_stability
+                    {
+                        s.session.force_exit(ExitReason::Stalled);
+                    }
+                    let caches = resume_session(self.rt, &s.session)?;
+                    self.metrics.record_resume(s.session.pos());
+                    self.store.install(slot, caches.main, caches.proxy)?;
+                    self.active.push(Active {
+                        session: s.session,
+                        slot,
+                        arrived: s.arrived,
+                        admitted: s.admitted,
+                        deadline: s.deadline,
+                        seq: s.seq,
+                        resident_ticks: 0,
+                        preemptions: s.preemptions,
+                    });
+                }
+            }
+            self.metrics.sample_slots(self.kv.in_use());
+        }
+        Ok(())
+    }
+
+    /// Preempt long-stalled sessions to free slots for fresh work
+    /// (EAT-aware mode only): evict the KV slot, retain the session —
+    /// token history plus monitor/policy state — in the suspended list.
+    /// Stabilized sessions (stability above the stall cutoff) are never
+    /// preempted: they are driven to completion.
+    fn preempt(&mut self) -> Result<()> {
+        if self.cfg.sched.mode != SchedMode::EatAware {
+            return Ok(());
+        }
+        let aging = self.cfg.sched.preempt_after_ticks;
+        let max_pre = self.cfg.sched.max_preemptions;
+        let cutoff = self.cfg.sched.stall_stability;
+        while !self.queue.is_empty() && self.kv.available() == 0 {
+            let victim = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| {
+                    a.session.can_suspend()
+                        && !a.session.eliciting()
+                        && a.preemptions < max_pre
+                        && a.resident_ticks >= aging
+                        && a.session.stability().unwrap_or(1.0) <= cutoff
+                })
+                .min_by(|(_, a), (_, b)| {
+                    let sa = a.session.stability().unwrap_or(1.0);
+                    let sb = b.session.stability().unwrap_or(1.0);
+                    (sa, a.seq).partial_cmp(&(sb, b.seq)).unwrap()
+                })
+                .map(|(i, _)| i);
+            let Some(i) = victim else {
+                break;
+            };
+            let a = self.active.swap_remove(i);
+            self.store.retire(a.slot)?;
+            self.kv.release(a.slot)?;
+            self.metrics.record_preemption();
+            self.metrics.sample_slots(self.kv.in_use());
+            self.suspended.push_back(SuspendedSession {
+                session: a.session,
+                arrived: a.arrived,
+                admitted: a.admitted,
+                deadline: a.deadline,
+                seq: a.seq,
+                preemptions: a.preemptions + 1,
+                suspended_at: self.clock.now(),
             });
         }
         Ok(())
     }
 
-    /// One scheduling tick: admit; poll every active session to its
-    /// pending decode (probes/rollouts serviced out-of-band); commit all
-    /// pending decodes — fused when possible, sequential otherwise;
-    /// retire sessions that reported `Done`. Returns the number of
-    /// sessions advanced.
+    /// One scheduling tick: preempt (EAT-aware mode); admit/resume; poll
+    /// every active session to its pending decode (probes/rollouts
+    /// serviced out-of-band); commit all pending decodes — fused when
+    /// possible, sequential otherwise; retire sessions that reported
+    /// `Done`. Returns the number of sessions advanced.
     pub fn tick(&mut self) -> Result<usize> {
+        self.preempt()?;
         self.admit()?;
         let rt = self.rt;
         let force_sequential = self.force_sequential;
@@ -174,6 +418,7 @@ impl<'a> Batcher<'a> {
 
         // phase A: drive each session to its next decode or completion
         for (i, a) in active.iter_mut().enumerate() {
+            a.resident_ticks += 1;
             loop {
                 match a.session.poll() {
                     StepWork::Done => {
@@ -246,13 +491,15 @@ impl<'a> Batcher<'a> {
         }
 
         // phase C: retire in reverse index order to keep indices valid
+        let now = self.clock.now();
         for &i in finished.iter().rev() {
-            let a = active.swap_remove(i);
-            store.retire(a.slot)?;
+            let a = self.active.swap_remove(i);
+            self.store.retire(a.slot)?;
             self.kv.release(a.slot)?;
-            let queue_ms = a.admitted.duration_since(a.arrived).as_secs_f64() * 1e3;
-            let latency_ms = a.arrived.elapsed().as_secs_f64() * 1e3;
-            let result = a.session.finish();
+            let queue_ms = (a.admitted - a.arrived) * 1e3;
+            let latency_ms = (now - a.arrived) * 1e3;
+            let mut result = a.session.finish();
+            result.wall_ms = latency_ms;
             self.metrics.record_completion(
                 result.correct,
                 result.reasoning_tokens,
@@ -260,17 +507,25 @@ impl<'a> Batcher<'a> {
                 result.rollout_tokens,
                 latency_ms,
                 queue_ms,
+                now > a.deadline,
                 result.exit_reason,
             );
+            self.metrics.sample_slots(self.kv.in_use());
             self.results.push(result);
         }
         Ok(advanced)
     }
 
-    /// Drain: run ticks until queue and active set are empty.
+    /// Drain: run ticks until queue, active set and suspended list are
+    /// all empty. On a virtual clock each tick is charged
+    /// [`DEFAULT_TICK_DT`] simulated seconds (a frozen clock would report
+    /// zero latencies and infinite throughput, and time-based scheduling
+    /// — suspension aging, deadline misses — could never trigger); on a
+    /// wall clock the advance is a no-op.
     pub fn run_to_completion(&mut self) -> Result<()> {
-        while !self.queue.is_empty() || !self.active.is_empty() {
+        while self.has_work() {
             self.tick()?;
+            self.clock.advance(DEFAULT_TICK_DT);
         }
         Ok(())
     }

@@ -189,6 +189,82 @@ impl ReasoningSession {
         self.reasoning_tokens.len()
     }
 
+    /// The main-cache write position this session mirrors.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn monitor(&self) -> MonitorModel {
+        self.monitor
+    }
+
+    /// Scheduler hint from the exit policy: closeness of the monitored
+    /// signal to its exit threshold in (0, 1], or `None` for fixed
+    /// policies (see `ExitPolicy::stability`).
+    pub fn stability(&self) -> Option<f64> {
+        self.policy.stability()
+    }
+
+    /// True when no decode is in flight and the session is not finished
+    /// — i.e. between scheduling ticks. In these states the committed
+    /// token history fully determines the KV caches, so the slot can be
+    /// evicted and rebuilt later by re-prefill ([`resume_session`]).
+    /// Probe/rollout states are suspendable too: `poll` is idempotent,
+    /// so the pending work is simply re-requested against the rebuilt
+    /// caches after resume.
+    pub fn can_suspend(&self) -> bool {
+        !matches!(self.state, State::AwaitDecode { .. } | State::AwaitElicit { .. } | State::Done)
+    }
+
+    /// True while the answer tail is being elicited — the session is
+    /// past its reasoning phase and a handful of tokens from retiring
+    /// (the scheduler never preempts these: a full re-prefill to decode
+    /// a few tail tokens is pure waste).
+    pub fn eliciting(&self) -> bool {
+        matches!(self.state, State::Elicit { .. } | State::AwaitElicit { .. })
+    }
+
+    /// The committed main-model token history: prompt + `<think>` +
+    /// reasoning tokens + decoded answer tail. Re-prefilling exactly
+    /// this sequence rebuilds the evicted main cache — bit-identical on
+    /// the reference backend, whose logits are a pure function of the
+    /// history.
+    pub fn history(&self) -> Vec<u32> {
+        let mut h = Vec::with_capacity(self.pos);
+        h.extend_from_slice(&self.question.prompt);
+        h.push(self.vocab.think);
+        h.extend_from_slice(&self.reasoning_tokens);
+        h.extend_from_slice(&self.answer_tail);
+        debug_assert_eq!(h.len(), self.pos, "token history out of sync with cache position");
+        h
+    }
+
+    /// The token history mirrored into the proxy cache: proxy-monitored
+    /// sessions mirror reasoning tokens only (the answer tail is decoded
+    /// with `mirror: false`).
+    pub fn mirrored_history(&self) -> Vec<u32> {
+        let mut h =
+            Vec::with_capacity(self.question.prompt.len() + 1 + self.reasoning_tokens.len());
+        h.extend_from_slice(&self.question.prompt);
+        h.push(self.vocab.think);
+        h.extend_from_slice(&self.reasoning_tokens);
+        h
+    }
+
+    /// Scheduler-driven exit (DESIGN.md §3.4 stall retirement): abandon
+    /// the reasoning phase and elicit the answer now. Legal only between
+    /// ticks (no decode in flight) and before elicitation started;
+    /// returns false (and changes nothing) otherwise.
+    pub fn force_exit(&mut self, reason: ExitReason) -> bool {
+        match self.state {
+            State::Ready | State::AwaitEat | State::AwaitUa | State::AwaitConf => {
+                self.begin_elicit(reason);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// The probe target of the EAT signal per the monitoring mode.
     fn monitor_target(&self) -> ProbeTarget {
         match self.monitor {
@@ -495,6 +571,29 @@ pub fn start_session(
     Ok((session, SessionCaches { main, proxy }))
 }
 
+/// Rebuild the KV caches of a suspended session by re-prefilling its
+/// committed token history (DESIGN.md §3.4 preemption protocol). On the
+/// reference backend the rebuilt caches are bit-identical to the evicted
+/// ones — prefill and step-wise decode are the same pure function of the
+/// token history — so a resumed session continues exactly as if it had
+/// never been preempted (pinned by `tests/scheduler_sim.rs`).
+pub fn resume_session(rt: &Runtime, session: &ReasoningSession) -> Result<SessionCaches> {
+    anyhow::ensure!(session.can_suspend(), "cannot rebuild caches while a decode is in flight");
+    let hist = session.history();
+    let (_logits, main) = rt.main.prefill(&hist)?;
+    anyhow::ensure!(
+        main.pos() == session.pos(),
+        "resume prefill position mismatch: cache {} vs session {}",
+        main.pos(),
+        session.pos()
+    );
+    let proxy = match session.monitor() {
+        MonitorModel::SelfModel => None,
+        MonitorModel::Proxy => Some(rt.proxy.prefill(&session.mirrored_history())?.1),
+    };
+    Ok(SessionCaches { main, proxy })
+}
+
 /// Service a probe against the right backend/cache pair and feed the
 /// result back into the session.
 pub fn run_probe(
@@ -739,6 +838,80 @@ mod tests {
             "answer value truncated: {:?}",
             res.answer_tail
         );
+    }
+
+    #[test]
+    fn suspend_resume_mid_flight_is_bit_identical() {
+        // drive two same-seeded sessions; one has its caches evicted and
+        // rebuilt by re-prefill at every 5th suspendable boundary — the
+        // trajectories must match exactly (DESIGN.md §3.4)
+        let rt = rt();
+        let cfg = ServeConfig::default();
+        let q = easy_question(&rt);
+        let run = |suspend: bool| {
+            let (mut session, mut caches) = start_session(
+                &rt,
+                cfg.clone(),
+                MonitorModel::SelfModel,
+                q.clone(),
+                Box::new(EatPolicy::new(cfg.alpha, cfg.delta, cfg.max_think_tokens)),
+                Rng::new(21),
+            )
+            .unwrap();
+            let mut steps = 0usize;
+            loop {
+                match session.poll() {
+                    StepWork::Done => break,
+                    work => {
+                        service_work(&rt, &mut session, &mut caches, work).unwrap();
+                        steps += 1;
+                        if suspend && steps % 5 == 0 && session.can_suspend() {
+                            caches = resume_session(&rt, &session).unwrap();
+                        }
+                    }
+                }
+            }
+            session.finish()
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a.reasoning_tokens, b.reasoning_tokens);
+        assert_eq!(a.answer_tail, b.answer_tail);
+        assert_eq!(a.probes, b.probes);
+        assert_eq!(a.exit_reason, b.exit_reason);
+        assert_eq!(a.correct, b.correct);
+    }
+
+    #[test]
+    fn force_exit_refused_while_a_decode_is_in_flight() {
+        let rt = rt();
+        let cfg = ServeConfig::default();
+        let q = easy_question(&rt);
+        let (mut session, mut caches) = start_session(
+            &rt,
+            cfg,
+            MonitorModel::SelfModel,
+            q,
+            Box::new(TokenBudgetPolicy::new(96)),
+            Rng::new(2),
+        )
+        .unwrap();
+        let w = session.poll();
+        assert!(matches!(w, StepWork::Decode { .. }));
+        assert!(!session.can_suspend(), "decode in flight");
+        assert!(!session.force_exit(ExitReason::Stalled));
+        service_work(&rt, &mut session, &mut caches, w).unwrap();
+        assert!(session.can_suspend());
+        assert!(session.force_exit(ExitReason::Stalled));
+        loop {
+            match session.poll() {
+                StepWork::Done => break,
+                work => service_work(&rt, &mut session, &mut caches, work).unwrap(),
+            }
+        }
+        let res = session.finish();
+        assert_eq!(res.exit_reason, ExitReason::Stalled);
+        assert!(!res.answer_tail.is_empty(), "forced exit must still elicit an answer");
     }
 
     #[test]

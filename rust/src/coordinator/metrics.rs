@@ -1,45 +1,83 @@
-//! Serving metrics: throughput, latency, token accounting, exit reasons.
+//! Serving metrics: throughput, latency, token accounting, exit reasons,
+//! scheduler events (preemption/resume/deadline misses) and the slot
+//! utilization timeline.
+//!
+//! Time is read through an injected [`Clock`] rather than
+//! `std::time::Instant`, and the throughput window opens at the *first
+//! arrival* (`mark_start`) instead of at construction — metrics built
+//! before traffic no longer skew elapsed/throughput. Under a virtual
+//! clock `to_json()` is byte-identical across same-seed runs; the CI
+//! determinism step diffs it.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
 
 use crate::exit::ExitReason;
+use crate::util::clock::Clock;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 #[derive(Debug)]
 pub struct ServeMetrics {
-    started: Instant,
+    clock: Clock,
+    /// Opened by the first arrival (`mark_start`); `None` until then.
+    started: Option<f64>,
     pub completed: usize,
     pub correct: usize,
     pub reasoning_tokens: u64,
     pub probe_count: u64,
     pub rollout_tokens: u64,
+    /// KV-slot evictions of long-stalled sessions (EAT-aware mode).
+    pub preemptions: u64,
+    /// Suspended sessions readmitted by re-prefill.
+    pub resumes: u64,
+    /// Tokens re-prefilled to rebuild evicted KV state on resume.
+    pub resume_prefill_tokens: u64,
+    /// Completions that finished past their SLO deadline.
+    pub deadline_misses: u64,
     pub latency_ms: Summary,
     pub queue_ms: Summary,
     pub exit_reasons: BTreeMap<String, usize>,
+    /// (seconds, slots in use) — appended whenever occupancy changes.
+    pub slot_timeline: Vec<(f64, usize)>,
 }
 
 impl Default for ServeMetrics {
     fn default() -> Self {
+        ServeMetrics::new(Clock::wall())
+    }
+}
+
+impl ServeMetrics {
+    pub fn new(clock: Clock) -> Self {
         ServeMetrics {
-            started: Instant::now(),
+            clock,
+            started: None,
             completed: 0,
             correct: 0,
             reasoning_tokens: 0,
             probe_count: 0,
             rollout_tokens: 0,
+            preemptions: 0,
+            resumes: 0,
+            resume_prefill_tokens: 0,
+            deadline_misses: 0,
             latency_ms: Summary::new(),
             queue_ms: Summary::new(),
             exit_reasons: BTreeMap::new(),
+            slot_timeline: Vec::new(),
         }
     }
-}
 
-impl ServeMetrics {
-    pub fn new() -> Self {
-        Self::default()
+    /// Open the throughput window (idempotent; the batcher calls this on
+    /// the first submission so pre-traffic construction cannot skew
+    /// elapsed/throughput).
+    pub fn mark_start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(self.clock.now());
+        }
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn record_completion(
         &mut self,
         correct: bool,
@@ -48,13 +86,16 @@ impl ServeMetrics {
         rollout_tokens: usize,
         latency_ms: f64,
         queue_ms: f64,
+        deadline_missed: bool,
         reason: ExitReason,
     ) {
+        self.mark_start();
         self.completed += 1;
         self.correct += correct as usize;
         self.reasoning_tokens += reasoning_tokens as u64;
         self.probe_count += probes as u64;
         self.rollout_tokens += rollout_tokens as u64;
+        self.deadline_misses += deadline_missed as u64;
         self.latency_ms.record(latency_ms);
         self.queue_ms.record(queue_ms);
         *self
@@ -63,12 +104,33 @@ impl ServeMetrics {
             .or_insert(0) += 1;
     }
 
+    pub fn record_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    pub fn record_resume(&mut self, prefill_tokens: usize) {
+        self.resumes += 1;
+        self.resume_prefill_tokens += prefill_tokens as u64;
+    }
+
+    /// Append a slot-occupancy sample if occupancy changed.
+    pub fn sample_slots(&mut self, in_use: usize) {
+        if self.slot_timeline.last().map(|&(_, u)| u) == Some(in_use) {
+            return;
+        }
+        self.slot_timeline.push((self.clock.now(), in_use));
+    }
+
     pub fn accuracy(&self) -> f64 {
         self.correct as f64 / self.completed.max(1) as f64
     }
 
+    /// Seconds since the first arrival (0 before any traffic).
     pub fn elapsed_s(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
+        match self.started {
+            Some(t0) => (self.clock.now() - t0).max(0.0),
+            None => 0.0,
+        }
     }
 
     pub fn requests_per_s(&self) -> f64 {
@@ -77,6 +139,68 @@ impl ServeMetrics {
 
     pub fn tokens_per_s(&self) -> f64 {
         self.reasoning_tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    /// Mean slot occupancy over the timeline (time-weighted), for
+    /// reports; 0 without samples.
+    pub fn mean_slot_occupancy(&self) -> f64 {
+        if self.slot_timeline.len() < 2 {
+            return self.slot_timeline.last().map(|&(_, u)| u as f64).unwrap_or(0.0);
+        }
+        let mut area = 0.0;
+        for w in self.slot_timeline.windows(2) {
+            area += w[0].1 as f64 * (w[1].0 - w[0].0);
+        }
+        let span = self.slot_timeline.last().unwrap().0 - self.slot_timeline[0].0;
+        if span <= 0.0 {
+            self.slot_timeline.last().map(|&(_, u)| u as f64).unwrap_or(0.0)
+        } else {
+            area / span
+        }
+    }
+
+    /// Deterministic JSON snapshot: every counter plus latency/queue
+    /// percentiles and the slot timeline. Under a virtual clock two
+    /// same-seed runs serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        let summary = |s: &Summary| {
+            Json::obj(vec![
+                ("count", Json::num(s.count() as f64)),
+                ("mean", Json::num(s.mean())),
+                ("min", Json::num(s.min())),
+                ("p50", Json::num(s.p50())),
+                ("p95", Json::num(s.p95())),
+                ("p99", Json::num(s.p99())),
+                ("max", Json::num(s.max())),
+            ])
+        };
+        let reasons: Vec<(&str, Json)> = self
+            .exit_reasons
+            .iter()
+            .map(|(k, &v)| (k.as_str(), Json::num(v as f64)))
+            .collect();
+        let timeline: Vec<Json> = self
+            .slot_timeline
+            .iter()
+            .map(|&(t, u)| Json::arr(vec![Json::num(t), Json::num(u as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("completed", Json::num(self.completed as f64)),
+            ("correct", Json::num(self.correct as f64)),
+            ("accuracy", Json::num(self.accuracy())),
+            ("reasoning_tokens", Json::num(self.reasoning_tokens as f64)),
+            ("probe_count", Json::num(self.probe_count as f64)),
+            ("rollout_tokens", Json::num(self.rollout_tokens as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("resumes", Json::num(self.resumes as f64)),
+            ("resume_prefill_tokens", Json::num(self.resume_prefill_tokens as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s())),
+            ("latency_ms", summary(&self.latency_ms)),
+            ("queue_ms", summary(&self.queue_ms)),
+            ("exit_reasons", Json::obj(reasons)),
+            ("slot_timeline", Json::arr(timeline)),
+        ])
     }
 
     /// One-block human report for examples / `repro serve`.
@@ -93,9 +217,10 @@ impl ServeMetrics {
             self.tokens_per_s()
         );
         s += &format!(
-            "latency ms         p50 {:>8.1}  p95 {:>8.1}  max {:>8.1}\n",
+            "latency ms         p50 {:>8.1}  p95 {:>8.1}  p99 {:>8.1}  max {:>8.1}\n",
             self.latency_ms.p50(),
             self.latency_ms.p95(),
+            self.latency_ms.p99(),
             self.latency_ms.max()
         );
         s += &format!(
@@ -106,6 +231,10 @@ impl ServeMetrics {
         s += &format!(
             "tokens             reasoning {}  probes {}  rollout {}\n",
             self.reasoning_tokens, self.probe_count, self.rollout_tokens
+        );
+        s += &format!(
+            "scheduler          preemptions {}  resumes {} (re-prefill {} tok)  deadline misses {}\n",
+            self.preemptions, self.resumes, self.resume_prefill_tokens, self.deadline_misses
         );
         s += "exit reasons       ";
         for (k, v) in &self.exit_reasons {
@@ -122,14 +251,67 @@ mod tests {
 
     #[test]
     fn accounting() {
-        let mut m = ServeMetrics::new();
-        m.record_completion(true, 30, 10, 0, 12.0, 1.0, ExitReason::Stable);
-        m.record_completion(false, 90, 30, 0, 40.0, 2.0, ExitReason::TokenBudget);
+        let mut m = ServeMetrics::default();
+        m.record_completion(true, 30, 10, 0, 12.0, 1.0, false, ExitReason::Stable);
+        m.record_completion(false, 90, 30, 0, 40.0, 2.0, true, ExitReason::TokenBudget);
         assert_eq!(m.completed, 2);
         assert!((m.accuracy() - 0.5).abs() < 1e-12);
         assert_eq!(m.reasoning_tokens, 120);
+        assert_eq!(m.deadline_misses, 1);
         assert_eq!(m.exit_reasons["Stable"], 1);
         assert_eq!(m.exit_reasons["TokenBudget"], 1);
         assert!(m.report().contains("requests"));
+        assert!(m.report().contains("preemptions"));
+    }
+
+    #[test]
+    fn throughput_window_opens_at_first_arrival_not_construction() {
+        // the old ServeMetrics captured Instant::now() in default(),
+        // so metrics built before the first arrival inflated elapsed
+        let clock = Clock::virt();
+        let mut m = ServeMetrics::new(clock.clone());
+        clock.advance(100.0); // idle pre-traffic gap
+        assert_eq!(m.elapsed_s(), 0.0, "no traffic yet");
+        m.mark_start();
+        clock.advance(2.0);
+        m.record_completion(true, 10, 1, 0, 5.0, 0.5, false, ExitReason::Stable);
+        assert!((m.elapsed_s() - 2.0).abs() < 1e-12);
+        assert!((m.requests_per_s() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scheduler_counters_and_timeline() {
+        let clock = Clock::virt();
+        let mut m = ServeMetrics::new(clock.clone());
+        m.sample_slots(1);
+        m.sample_slots(1); // deduped
+        clock.advance(1.0);
+        m.sample_slots(2);
+        clock.advance(1.0);
+        m.sample_slots(0);
+        assert_eq!(m.slot_timeline.len(), 3);
+        assert!((m.mean_slot_occupancy() - 1.5).abs() < 1e-9);
+        m.record_preemption();
+        m.record_resume(40);
+        assert_eq!(m.preemptions, 1);
+        assert_eq!(m.resumes, 1);
+        assert_eq!(m.resume_prefill_tokens, 40);
+    }
+
+    #[test]
+    fn json_snapshot_is_stable_under_a_virtual_clock() {
+        let build = || {
+            let clock = Clock::virt();
+            let mut m = ServeMetrics::new(clock.clone());
+            m.mark_start();
+            clock.advance(0.25);
+            m.sample_slots(2);
+            m.record_completion(true, 12, 4, 0, 250.0, 3.0, false, ExitReason::Stable);
+            m.to_json().to_string()
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a, b, "same-virtual-run snapshots must be byte-identical");
+        assert!(a.contains("\"preemptions\""));
+        assert!(a.contains("\"p99\""));
     }
 }

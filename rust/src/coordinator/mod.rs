@@ -4,23 +4,30 @@
 //!  * `engine`      — split-phase per-request state machine: `poll()` →
 //!    [`engine::StepWork`] / `complete_*(..)`; no model reference inside
 //!    the session
-//!  * `batcher`     — continuous batching: one fused `decode_batch` per
-//!    scheduling tick, probes/rollouts out-of-band, sequential fallback
+//!  * `batcher`     — continuous batching + EAT-aware preemptive
+//!    scheduler: one fused `decode_batch` per scheduling tick,
+//!    probes/rollouts out-of-band, sequential fallback,
+//!    preempt/resume-by-re-prefill under contention (DESIGN.md §3.4)
+//!  * `workload`    — open-loop Poisson workload driver (deterministic
+//!    under a virtual clock)
 //!  * `batch_cache` — slot-major cache store with dirty-slot upload
 //!    accounting
 //!  * `kv`          — KV slot manager (capacity + backpressure)
-//!  * `metrics`     — serving metrics
+//!  * `metrics`     — serving metrics (clock-injected, JSON snapshot)
 
 pub mod batch_cache;
 pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
+pub mod workload;
 
 pub use batch_cache::BatchCacheStore;
-pub use batcher::Batcher;
+pub use batcher::{eat_policy_factory, Batcher, SuspendedSession, DEFAULT_TICK_DT};
 pub use engine::{
-    serve_one, MonitorModel, ProbeTarget, ReasoningSession, RequestResult, StepWork,
+    resume_session, serve_one, MonitorModel, ProbeTarget, ReasoningSession, RequestResult,
+    StepWork,
 };
 pub use kv::KvSlotManager;
 pub use metrics::ServeMetrics;
+pub use workload::{poisson_arrivals, run_open_loop};

@@ -1,0 +1,93 @@
+//! Open-loop Poisson workload driver (DESIGN.md §3.4): submits requests
+//! as their arrival times pass, interleaved with scheduler ticks.
+//!
+//! Under a wall clock this paces a live load test (arrivals fire in real
+//! time, the driver naps while idle). Under a virtual clock the driver
+//! advances time itself — `tick_dt` simulated seconds per scheduling
+//! tick, jumping straight to the next arrival when the batcher idles —
+//! so the entire serve run (arrival pattern, admission order, preemption
+//! decisions, latency percentiles) is a pure function of the seed.
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use crate::datasets::Question;
+use crate::util::rng::Rng;
+
+/// Seeded Poisson arrival times (seconds) for `n` requests at
+/// `rate_per_s`: cumulative sums of exponential inter-arrival gaps.
+pub fn poisson_arrivals(n: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xA221);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate_per_s);
+            t
+        })
+        .collect()
+}
+
+/// Drive `batcher` through an open-loop arrival process until everything
+/// submitted has completed. Questions are taken round-robin from
+/// `questions`; `arrivals` must be non-decreasing (as produced by
+/// [`poisson_arrivals`]).
+pub fn run_open_loop(
+    batcher: &mut Batcher,
+    questions: &[Question],
+    arrivals: &[f64],
+    tick_dt: f64,
+) -> Result<()> {
+    anyhow::ensure!(!questions.is_empty(), "workload needs at least one question");
+    let clock = batcher.clock().clone();
+    let mut next = 0usize;
+    loop {
+        let now = clock.now();
+        while next < arrivals.len() && arrivals[next] <= now {
+            batcher.submit(questions[next % questions.len()].clone());
+            next += 1;
+        }
+        if !batcher.has_work() {
+            if next >= arrivals.len() {
+                break;
+            }
+            // idle: jump (virtual) or wait (wall) for the next arrival
+            if clock.is_virtual() {
+                clock.advance(arrivals[next] - now);
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            continue;
+        }
+        batcher.tick()?;
+        clock.advance(tick_dt);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_positive_and_increasing() {
+        let a = poisson_arrivals(50, 8.0, 3);
+        assert_eq!(a.len(), 50);
+        assert!(a[0] > 0.0);
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "arrival times must strictly increase");
+        }
+    }
+
+    #[test]
+    fn arrivals_are_seed_deterministic() {
+        assert_eq!(poisson_arrivals(20, 4.0, 9), poisson_arrivals(20, 4.0, 9));
+        assert_ne!(poisson_arrivals(20, 4.0, 9), poisson_arrivals(20, 4.0, 10));
+    }
+
+    #[test]
+    fn mean_gap_tracks_the_rate() {
+        let a = poisson_arrivals(4000, 10.0, 1);
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!((mean_gap - 0.1).abs() < 0.01, "mean gap {mean_gap}");
+    }
+}

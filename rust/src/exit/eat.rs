@@ -65,6 +65,15 @@ impl ExitPolicy for EatPolicy {
             ..Default::default()
         }
     }
+
+    fn stability(&self) -> Option<f64> {
+        if self.ema.count() == 0 {
+            // no observation yet: "no data" is not "no progress" — the
+            // scheduler must treat this as neutral, never as stalled
+            return None;
+        }
+        Some(super::stability_from_vhat(self.ema.debiased_var(), self.delta))
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +143,24 @@ mod tests {
         assert!(p.vhat() < 1e-4);
         p.reset();
         assert!(p.vhat().is_infinite());
+    }
+
+    #[test]
+    fn stability_rises_as_the_signal_settles() {
+        let mut p = EatPolicy::new(0.2, 1e-4, 10_000);
+        assert_eq!(p.stability(), None, "no observation yet must read as neutral, not stalled");
+        for i in 0..4 {
+            p.observe(&obs(i * 3, 3.0 + (i % 2) as f64));
+        }
+        let noisy = p.stability().unwrap();
+        for i in 4..60 {
+            if p.observe(&obs(i * 3, 0.05)).is_exit() {
+                break;
+            }
+        }
+        let settled = p.stability().unwrap();
+        assert!(settled > noisy, "stability must rise toward the exit: {noisy} -> {settled}");
+        assert!(noisy > 0.0 && settled <= 1.0);
     }
 
     #[test]

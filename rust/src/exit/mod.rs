@@ -62,6 +62,18 @@ impl ExitDecision {
     }
 }
 
+/// The scheduler's urgency mapping (DESIGN.md §3.4), shared by every
+/// EMA-variance policy: the log-distance of V-hat to the exit threshold
+/// `delta`, mapped into (0, 1] — 1.0 at/below the threshold (exit
+/// imminent), → 0 as V-hat grows away from it. A non-finite V-hat (no
+/// observation yet) maps to 0.0: no evidence of progress.
+pub fn stability_from_vhat(vhat: f64, delta: f64) -> f64 {
+    if !vhat.is_finite() {
+        return 0.0;
+    }
+    1.0 / (1.0 + (vhat / delta).max(1.0).ln())
+}
+
 /// An early-exit policy.
 pub trait ExitPolicy {
     /// Human-readable name for reports.
@@ -73,6 +85,19 @@ pub trait ExitPolicy {
     /// Which signals this policy needs the engine to compute.
     fn needs(&self) -> SignalNeeds {
         SignalNeeds::default()
+    }
+
+    /// Scheduler hint (DESIGN.md §3.4): how close the policy's adaptive
+    /// signal is to its exit threshold, mapped into (0, 1]. 1.0 means the
+    /// exit is imminent (the scheduler drives such sessions to
+    /// completion); values near 0 mean the monitored variance sits far
+    /// above the threshold — a stalled request, the preemption candidate.
+    /// `None` for policies without an adaptive signal (fixed budgets)
+    /// and *before the first observation* — "no data" is not "no
+    /// progress" — which the scheduler treats as neutral (never
+    /// preempted).
+    fn stability(&self) -> Option<f64> {
+        None
     }
 }
 
@@ -108,5 +133,16 @@ mod tests {
     fn decision_helpers() {
         assert!(!ExitDecision::Continue.is_exit());
         assert!(ExitDecision::Exit(ExitReason::Stable).is_exit());
+    }
+
+    #[test]
+    fn stability_mapping_bounds_and_monotonicity() {
+        let d = 1e-3;
+        assert_eq!(stability_from_vhat(f64::INFINITY, d), 0.0);
+        assert_eq!(stability_from_vhat(d / 10.0, d), 1.0, "below threshold clamps to 1");
+        let near = stability_from_vhat(2.0 * d, d);
+        let far = stability_from_vhat(1e4 * d, d);
+        assert!(near > far, "closer to the threshold must rank more stable");
+        assert!(far > 0.0 && near < 1.0);
     }
 }

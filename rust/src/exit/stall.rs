@@ -114,6 +114,13 @@ impl ExitPolicy for StallAwareEatPolicy {
             ..Default::default()
         }
     }
+
+    fn stability(&self) -> Option<f64> {
+        if self.ema.count() == 0 {
+            return None; // no observation yet — neutral, not stalled
+        }
+        Some(super::stability_from_vhat(self.ema.debiased_var(), self.delta))
+    }
 }
 
 #[cfg(test)]

@@ -12,8 +12,9 @@
 //!    fork / fused `decode_batch`) with two impls: PJRT artifacts and
 //!    the in-process reference model
 //!  * [`coordinator`] — split-phase sessions (`poll()`/`complete_*`),
-//!    continuous batcher (one fused decode per tick), slot-major batch
-//!    cache store, KV manager
+//!    continuous batcher with an EAT-aware preemptive scheduler (one
+//!    fused decode per tick, preempt/resume-by-re-prefill, virtual-clock
+//!    deterministic simulation), slot-major batch cache store, KV manager
 //!  * [`exit`]        — EAT (Alg. 1) + token/#UA@K/confidence baselines
 //!  * [`monitor`]     — EMA variance estimator + trajectory records
 //!  * [`blackbox`]    — streaming-API simulation + local proxy monitoring

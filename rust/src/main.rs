@@ -14,14 +14,17 @@
 
 use anyhow::Result;
 
-use eat_serve::config::ServeConfig;
-use eat_serve::coordinator::{Batcher, MonitorModel};
+use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::coordinator::{
+    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MonitorModel, DEFAULT_TICK_DT,
+};
 use eat_serve::datasets::Dataset;
 use eat_serve::eval::figures::{self, FigureCtx};
 use eat_serve::eval::{TraceGen, TraceSet};
 use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
 use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::cli::Args;
+use eat_serve::util::clock::Clock;
 
 fn usage() -> ! {
     eprintln!(
@@ -33,7 +36,8 @@ COMMANDS
   info                          backend inventory + smoke execution
   serve     --dataset D --requests N [--slots S] [--policy eat|token]
             [--delta X] [--alpha A] [--budget T] [--proxy] [--seed K]
-            [--sequential]
+            [--sequential] [--sched fifo|eat] [--deadline S]
+            [--rate R] [--virtual] [--metrics-json FILE]
   trace     --dataset D [--out FILE] [--max-questions N] [--swap-models]
             [--no-confidence] [--seed K]
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
@@ -42,6 +46,9 @@ COMMANDS
 FLAG DEFAULTS
   --artifacts artifacts   --traces-dir results/traces   --out-dir results
   --alpha 0.2  --delta 1e-3  --budget 96  --slots 4  --seed 0
+  --sched fifo  --deadline 60  --rate 0 (submit all upfront)
+  (--rate R > 0 drives open-loop Poisson arrivals; with --virtual the
+   run is simulated on a virtual clock and fully seed-deterministic)
 "
     );
     std::process::exit(2);
@@ -111,10 +118,17 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let rt = load_runtime(args);
-    let cfg = serve_cfg(args);
+    let mut cfg = serve_cfg(args);
+    cfg.sched.mode = match args.str_or("sched", "fifo") {
+        "fifo" => SchedMode::Fifo,
+        "eat" | "eat-aware" => SchedMode::EatAware,
+        other => anyhow::bail!("unknown --sched `{other}` (fifo|eat)"),
+    };
+    cfg.sched.deadline_s = args.f64_or("deadline", cfg.sched.deadline_s);
     let dataset = args.str_or("dataset", "synth-math500-small");
     let n = args.usize_or("requests", 16);
     let slots = args.usize_or("slots", 4);
+    let rate = args.f64_or("rate", 0.0);
     let monitor = if args.has("proxy") {
         MonitorModel::Proxy
     } else {
@@ -123,19 +137,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
 
     let policy_kind = args.str_or("policy", "eat").to_string();
-    let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
+    let budget = cfg.max_think_tokens;
     let factory: eat_serve::coordinator::batcher::PolicyFactory = match policy_kind.as_str() {
-        "eat" => Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget))),
+        "eat" => eat_policy_factory(&cfg),
         "token" => Box::new(move || Box::new(TokenBudgetPolicy::new(budget))),
         other => anyhow::bail!("unknown --policy `{other}`"),
     };
 
-    let mut batcher = Batcher::new(&rt, cfg, monitor, slots, factory);
+    let clock = if args.has("virtual") {
+        Clock::virt()
+    } else {
+        Clock::wall()
+    };
+    let seed = cfg.seed;
+    let mut batcher = Batcher::with_clock(&rt, cfg, monitor, slots, factory, clock);
     batcher.force_sequential = args.has("sequential");
-    for q in ds.questions.iter().take(n) {
-        batcher.submit(q.clone());
+    if rate > 0.0 {
+        // open-loop Poisson arrivals at `rate` req/s (deterministic
+        // under --virtual: the whole run is a pure function of the seed)
+        let arrivals = poisson_arrivals(n, rate, seed);
+        run_open_loop(&mut batcher, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
+    } else {
+        for q in ds.questions.iter().take(n) {
+            batcher.submit(q.clone());
+        }
+        batcher.run_to_completion()?;
     }
-    batcher.run_to_completion()?;
     println!("{}", batcher.metrics.report());
     println!("kv slots        peak {} / {}", batcher.kv_peak(), slots);
     let sc = batcher.store_counters();
@@ -148,6 +175,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sc.dirty_lane_uploads,
         mc.decodes.get()
     );
+    if let Some(path) = args.str_opt("metrics-json") {
+        std::fs::write(path, batcher.metrics.to_json().to_string())?;
+        println!("metrics json    {path}");
+    }
     Ok(())
 }
 

@@ -94,8 +94,20 @@ impl Summary {
         percentile(&self.samples, 0.99)
     }
 
+    /// Largest sample (0.0 if empty, like `mean`/`percentile`).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::MIN, f64::max)
+    }
+
+    /// Smallest sample (0.0 if empty, like `mean`/`percentile`).
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().cloned().fold(f64::MAX, f64::min)
     }
 
     pub fn total(&self) -> f64 {
@@ -137,6 +149,15 @@ mod tests {
     }
 
     #[test]
+    fn empty_summary_reports_zeros_not_sentinels() {
+        let s = Summary::new();
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+    }
+
+    #[test]
     fn summary() {
         let mut s = Summary::new();
         for i in 1..=100 {
@@ -146,6 +167,8 @@ mod tests {
         assert!((s.mean() - 50.5).abs() < 1e-9);
         assert!((s.p50() - 50.5).abs() < 1.0);
         assert!(s.p95() >= 95.0 && s.p95() <= 96.0);
+        assert!(s.p99() >= 99.0 && s.p99() <= 100.0);
         assert_eq!(s.max(), 100.0);
+        assert_eq!(s.min(), 1.0);
     }
 }

@@ -10,32 +10,15 @@
 //!  * backpressure + mid-tick retire interaction
 //!  * out-of-band probe/rollout servicing (EAT, #UA@K)
 
+mod common;
+
+use common::{eat_factory, key};
 use eat_serve::config::ServeConfig;
 use eat_serve::coordinator::{Batcher, MonitorModel, RequestResult};
 use eat_serve::datasets::Dataset;
-use eat_serve::exit::{EatPolicy, TokenBudgetPolicy, UniqueAnswersPolicy};
+use eat_serve::exit::{TokenBudgetPolicy, UniqueAnswersPolicy};
 use eat_serve::runtime::{Backend, RefBackend, Runtime};
 use eat_serve::vocab::Vocab;
-
-fn eat_factory(cfg: &ServeConfig) -> eat_serve::coordinator::batcher::PolicyFactory {
-    let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
-    Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget)))
-}
-
-/// The comparable portion of a result (wall-clock excluded).
-#[allow(clippy::type_complexity)]
-fn key(r: &RequestResult) -> (usize, String, usize, usize, usize, usize, Vec<u32>, bool) {
-    (
-        r.question_id,
-        format!("{:?}", r.exit_reason),
-        r.reasoning_tokens,
-        r.lines,
-        r.probes,
-        r.rollout_tokens,
-        r.answer_tail.clone(),
-        r.correct,
-    )
-}
 
 fn run_batcher(
     rt: &Runtime,

@@ -1,0 +1,23 @@
+//! Helpers shared by the coordinator integration suites
+//! (batcher_protocol.rs, scheduler_sim.rs). Not a test target itself —
+//! pulled in via `mod common;`.
+
+use eat_serve::coordinator::RequestResult;
+
+pub use eat_serve::coordinator::eat_policy_factory as eat_factory;
+
+/// The comparable portion of a result (wall-clock excluded) — the
+/// definition of "bit-identical" the determinism suites assert on.
+#[allow(clippy::type_complexity)]
+pub fn key(r: &RequestResult) -> (usize, String, usize, usize, usize, usize, Vec<u32>, bool) {
+    (
+        r.question_id,
+        format!("{:?}", r.exit_reason),
+        r.reasoning_tokens,
+        r.lines,
+        r.probes,
+        r.rollout_tokens,
+        r.answer_tail.clone(),
+        r.correct,
+    )
+}

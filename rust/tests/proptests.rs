@@ -4,12 +4,20 @@
 //! many seeded random inputs from the repo's own RNG — same idea, no
 //! shrinking. Each property runs a few hundred cases.
 
+use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::coordinator::kv::SlotId;
+use eat_serve::coordinator::{
+    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, KvSlotManager, MonitorModel,
+};
+use eat_serve::datasets::Dataset;
 use eat_serve::exit::{
     ConfidencePolicy, EatPolicy, ExitDecision, ExitPolicy, ExitReason,
     LineObs, TokenBudgetPolicy, UniqueAnswersPolicy,
 };
 use eat_serve::eval::{replay, Signal};
 use eat_serve::monitor::{EmaVar, LinePoint, Trace};
+use eat_serve::runtime::Runtime;
+use eat_serve::util::clock::Clock;
 use eat_serve::util::json;
 use eat_serve::util::rng::Rng;
 use eat_serve::util::stats;
@@ -219,6 +227,85 @@ fn prop_auc_bounds() {
         rng.shuffle(&mut pts);
         let auc2 = stats::auc_normalized(&pts);
         assert!((auc - auc2).abs() < 1e-9, "ordering changed AUC");
+    }
+}
+
+/// Under random acquire/release sequences the KV slot manager never
+/// leaks a slot, never double-frees, and never over-admits — the
+/// invariant the scheduler's preempt/resume churn leans on.
+#[test]
+fn prop_kv_slots_never_leak_or_double_free() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5107);
+        let cap = rng.range(1, 8) as usize;
+        let mut m = KvSlotManager::new(cap, 64);
+        let mut held: Vec<SlotId> = Vec::new();
+        for _ in 0..200 {
+            assert_eq!(held.len() + m.available(), cap, "slot leak (seed {seed})");
+            assert_eq!(m.in_use(), held.len());
+            if rng.chance(0.5) {
+                match m.acquire() {
+                    Some(s) => {
+                        assert!(!held.contains(&s), "slot handed out twice");
+                        held.push(s);
+                    }
+                    None => assert_eq!(held.len(), cap, "refused admission below capacity"),
+                }
+            } else if !held.is_empty() {
+                let i = rng.below(held.len() as u64) as usize;
+                let s = held.swap_remove(i);
+                m.release(s).unwrap();
+                assert!(m.release(s).is_err(), "double free undetected");
+            }
+        }
+        assert!(m.peak() <= cap);
+    }
+}
+
+/// Random admit/preempt/resume/retire sequences arise from running the
+/// EAT-aware scheduler itself over random configurations under a virtual
+/// clock: every submitted request must complete (the aging bound +
+/// starvation guard rule out starvation), no KV slot may leak, and cache
+/// installs must balance retires.
+#[test]
+fn prop_scheduler_never_starves_or_leaks() {
+    for seed in 0..40 {
+        let mut rng = Rng::new(seed ^ 0x5CED);
+        let rt = Runtime::reference();
+        let mut cfg = ServeConfig::default();
+        cfg.seed = seed;
+        cfg.sched.mode = SchedMode::EatAware;
+        cfg.sched.preempt_after_ticks = rng.range(2, 40);
+        cfg.sched.max_preemptions = rng.range(0, 4) as u32;
+        cfg.sched.stall_stability = 0.1 + 0.3 * rng.f64();
+        cfg.sched.deadline_s = 0.5 + rng.f64();
+        cfg.sched.resume_priority_after_s = 0.05 + rng.f64();
+        let slots = rng.range(1, 4) as usize;
+        let n = rng.range(3, 14) as usize;
+        let ds = Dataset::synth_gpqa(&rt.vocab, 8, seed);
+        let mut b = Batcher::with_clock(
+            &rt,
+            cfg.clone(),
+            MonitorModel::SelfModel,
+            slots,
+            eat_policy_factory(&cfg),
+            Clock::virt(),
+        );
+        let arrivals = poisson_arrivals(n, 20.0 + 50.0 * rng.f64(), seed);
+        run_open_loop(&mut b, &ds.questions, &arrivals, 0.01).unwrap();
+        assert_eq!(b.metrics.completed, n, "request starved (seed {seed})");
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.active_count(), 0);
+        assert_eq!(b.suspended_count(), 0);
+        assert_eq!(b.kv_utilization(), 0.0, "KV slot leaked (seed {seed})");
+        let sc = b.store_counters();
+        assert_eq!(sc.installs, sc.retires, "cache slot leaked (seed {seed})");
+        assert_eq!(b.metrics.resumes, b.metrics.preemptions);
+        assert_eq!(
+            sc.installs,
+            n as u64 + b.metrics.resumes,
+            "install accounting broken (seed {seed})"
+        );
     }
 }
 

@@ -1,0 +1,297 @@
+//! Deterministic serving simulator suite (DESIGN.md §3.4): end-to-end
+//! runs on the reference backend under a VIRTUAL clock, pinning down
+//!
+//!  * same seed ⇒ byte-identical metrics JSON (completed/correct/token
+//!    counts, latency percentiles, slot timeline) across runs;
+//!  * fused vs `force_sequential` decode paths ⇒ identical metrics;
+//!  * preempt → suspend → resume-by-re-prefill ⇒ bit-identical
+//!    trajectories vs an uninterrupted FIFO run of the same workload;
+//!  * under slot contention, the EAT-aware scheduler (preemption + stall
+//!    retirement) completes the workload with fewer total reasoning
+//!    tokens than FIFO at equal accuracy.
+//!
+//! Per-request RNGs are seeded from the submission sequence number, so a
+//! request's trajectory is invariant to admission order and scheduling
+//! mode — that invariance is what makes the cross-mode comparisons exact.
+
+mod common;
+
+use common::{eat_factory, key};
+use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::coordinator::{
+    poisson_arrivals, run_open_loop, Batcher, MonitorModel, RequestResult, DEFAULT_TICK_DT,
+};
+use eat_serve::datasets::{chainsum::Kind, Dataset, Question};
+use eat_serve::runtime::Runtime;
+use eat_serve::util::clock::Clock;
+
+/// One full open-loop serve run under a fresh virtual clock; returns the
+/// metrics JSON string and the results sorted by question id.
+fn run_sim(
+    mode: SchedMode,
+    slots: usize,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    sequential: bool,
+) -> (String, Vec<RequestResult>) {
+    let rt = Runtime::reference();
+    let mut cfg = ServeConfig::default();
+    cfg.seed = seed;
+    cfg.sched.mode = mode;
+    let ds = Dataset::synth_gpqa(&rt.vocab, n.max(4), seed);
+    let mut b = Batcher::with_clock(
+        &rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        slots,
+        eat_factory(&cfg),
+        Clock::virt(),
+    );
+    b.force_sequential = sequential;
+    let arrivals = poisson_arrivals(n, rate, seed);
+    run_open_loop(&mut b, &ds.questions, &arrivals, DEFAULT_TICK_DT).unwrap();
+    assert_eq!(b.metrics.completed, n);
+    assert_eq!(b.pending(), 0);
+    assert_eq!(b.active_count(), 0);
+    assert_eq!(b.suspended_count(), 0);
+    let json = b.metrics.to_json().to_string();
+    let mut results = b.results;
+    results.sort_by_key(|r| r.question_id);
+    (json, results)
+}
+
+#[test]
+fn same_seed_virtual_runs_are_byte_identical() {
+    // the golden determinism guarantee: an entire serve run — arrivals,
+    // admission order, preemptions, latency percentiles — is a pure
+    // function of the seed under the virtual clock
+    let (json_a, res_a) = run_sim(SchedMode::EatAware, 2, 16, 30.0, 7, false);
+    let (json_b, res_b) = run_sim(SchedMode::EatAware, 2, 16, 30.0, 7, false);
+    assert_eq!(json_a, json_b, "same-seed metrics JSON diverged");
+    assert_eq!(res_a.len(), res_b.len());
+    for (a, b) in res_a.iter().zip(&res_b) {
+        assert_eq!(key(a), key(b));
+        assert_eq!(a.wall_ms, b.wall_ms, "virtual latencies must be exact");
+    }
+    // the snapshot carries the full percentile set and the timeline
+    assert!(json_a.contains("\"p99\""));
+    assert!(json_a.contains("\"slot_timeline\""));
+    // a different seed produces a different run
+    let (json_c, _) = run_sim(SchedMode::EatAware, 2, 16, 30.0, 8, false);
+    assert_ne!(json_a, json_c, "seed is not reaching the simulation");
+}
+
+#[test]
+fn fused_and_sequential_paths_emit_identical_metrics() {
+    // the session protocol cannot observe which decode path serviced it,
+    // and the tick structure is identical — so even latency percentiles
+    // and the slot timeline must match byte-for-byte
+    let (json_fused, res_fused) = run_sim(SchedMode::EatAware, 2, 12, 25.0, 11, false);
+    let (json_seq, res_seq) = run_sim(SchedMode::EatAware, 2, 12, 25.0, 11, true);
+    assert_eq!(json_fused, json_seq, "fused vs sequential metrics diverged");
+    for (a, b) in res_fused.iter().zip(&res_seq) {
+        assert_eq!(key(a), key(b));
+    }
+}
+
+/// A contended workload with known composition: `n_corrupted` unsolvable
+/// questions first (they stall — EAT never stabilizes), then easy
+/// solvable ones (n_ops <= 4: they leave the reasoning phase within ~30
+/// ticks, well inside the aging bound, so stall handling can never touch
+/// their trajectories).
+fn mixed_workload(n_corrupted: usize, n_solvable: usize, seed: u64) -> Vec<Question> {
+    let rt = Runtime::reference();
+    let pool = Dataset::synth_gpqa(&rt.vocab, 120, seed);
+    let corrupted: Vec<Question> = pool
+        .questions
+        .iter()
+        .filter(|q| q.kind == Kind::Corrupted)
+        .take(n_corrupted)
+        .cloned()
+        .collect();
+    let solvable: Vec<Question> = pool
+        .questions
+        .iter()
+        .filter(|q| q.kind == Kind::ChainSum && q.n_ops() <= 4)
+        .take(n_solvable)
+        .cloned()
+        .collect();
+    assert_eq!(corrupted.len(), n_corrupted, "pool too small");
+    assert_eq!(solvable.len(), n_solvable, "pool too small");
+    let mut qs = corrupted;
+    qs.extend(solvable);
+    qs
+}
+
+/// Submit a fixed workload upfront (slot contention: slots < requests)
+/// and drain it.
+fn run_contended(cfg: &ServeConfig, questions: &[Question], slots: usize) -> ContendedRun {
+    let rt = Runtime::reference();
+    let mut b = Batcher::with_clock(
+        &rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        slots,
+        eat_factory(cfg),
+        Clock::virt(),
+    );
+    for q in questions {
+        b.submit(q.clone());
+    }
+    b.run_to_completion().unwrap();
+    assert_eq!(b.metrics.completed, questions.len());
+    assert_eq!(b.suspended_count(), 0);
+    let mut results = b.results;
+    results.sort_by_key(|r| r.question_id);
+    ContendedRun {
+        reasoning_tokens: b.metrics.reasoning_tokens,
+        correct: b.metrics.correct,
+        preemptions: b.metrics.preemptions,
+        resumes: b.metrics.resumes,
+        resume_prefill_tokens: b.metrics.resume_prefill_tokens,
+        stalled: b.metrics.exit_reasons.get("Stalled").copied().unwrap_or(0),
+        results,
+    }
+}
+
+struct ContendedRun {
+    reasoning_tokens: u64,
+    correct: usize,
+    preemptions: u64,
+    resumes: u64,
+    resume_prefill_tokens: u64,
+    stalled: usize,
+    results: Vec<RequestResult>,
+}
+
+#[test]
+fn preempted_then_resumed_sessions_are_bit_identical_to_uninterrupted() {
+    // pure preempt/resume round-trip: a huge starvation guard disables
+    // stall retirement, so the EAT-aware run differs from FIFO only in
+    // WHEN sessions run, never in WHAT they compute
+    let questions = mixed_workload(2, 8, 5);
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 5;
+    cfg.delta = 1e-7; // corrupted V-hat sits decades above the threshold
+    cfg.sched.stall_stability = 0.2;
+    cfg.sched.preempt_after_ticks = 8; // aggressive preemption
+    cfg.sched.max_preemptions = 100; // retirement never triggers
+
+    let mut eat_cfg = cfg.clone();
+    eat_cfg.sched.mode = SchedMode::EatAware;
+    let preemptive = run_contended(&eat_cfg, &questions, 2);
+
+    let mut fifo_cfg = cfg.clone();
+    fifo_cfg.sched.mode = SchedMode::Fifo;
+    let fifo = run_contended(&fifo_cfg, &questions, 2);
+
+    assert!(preemptive.preemptions > 0, "contended stalled sessions must get preempted");
+    assert_eq!(preemptive.resumes, preemptive.preemptions, "every suspended session must resume");
+    assert!(preemptive.resume_prefill_tokens > 0, "resume must re-prefill the committed history");
+    assert_eq!(fifo.preemptions, 0, "FIFO must never preempt");
+    // the acceptance bit-identity: token history, probe count, exit step
+    // and answer tail all survive the suspend/re-prefill round trip
+    assert_eq!(preemptive.results.len(), fifo.results.len());
+    for (p, f) in preemptive.results.iter().zip(&fifo.results) {
+        assert_eq!(key(p), key(f), "preempt/resume changed a trajectory");
+    }
+}
+
+#[test]
+fn eat_aware_scheduler_saves_tokens_at_equal_accuracy_under_contention() {
+    // acceptance criterion: slots < concurrent requests; the EAT-aware
+    // scheduler preempts the stalled (corrupted) sessions and — once
+    // they burn through the starvation guard still showing no EAT
+    // progress — retires them by forced elicitation, while FIFO lets
+    // them burn the full token budget. Solvable trajectories are
+    // untouched (they exit reasoning inside the aging bound), so
+    // accuracy is exactly equal and total reasoning tokens strictly
+    // smaller.
+    let questions = mixed_workload(3, 9, 9);
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 9;
+    cfg.delta = 1e-7;
+    cfg.sched.stall_stability = 0.2;
+    cfg.sched.preempt_after_ticks = 32;
+    cfg.sched.max_preemptions = 1;
+
+    let mut eat_cfg = cfg.clone();
+    eat_cfg.sched.mode = SchedMode::EatAware;
+    let eat_aware = run_contended(&eat_cfg, &questions, 2);
+
+    let mut fifo_cfg = cfg.clone();
+    fifo_cfg.sched.mode = SchedMode::Fifo;
+    let fifo = run_contended(&fifo_cfg, &questions, 2);
+
+    assert!(
+        eat_aware.reasoning_tokens < fifo.reasoning_tokens,
+        "EAT-aware must spend fewer reasoning tokens: {} vs {}",
+        eat_aware.reasoning_tokens,
+        fifo.reasoning_tokens
+    );
+    assert_eq!(
+        eat_aware.correct,
+        fifo.correct,
+        "adaptive compute allocation must not cost accuracy"
+    );
+    assert_eq!(
+        eat_aware.stalled,
+        3,
+        "each corrupted question should be stall-retired exactly once"
+    );
+    // per-question: solvable trajectories are bit-identical; corrupted
+    // ones are wrong either way (unsolvable questions are never correct)
+    for (e, f) in eat_aware.results.iter().zip(&fifo.results) {
+        assert_eq!(e.question_id, f.question_id);
+        if format!("{:?}", e.exit_reason) == "Stalled" {
+            assert!(!e.correct && !f.correct);
+            assert!(e.reasoning_tokens < f.reasoning_tokens);
+        } else {
+            assert_eq!(key(e), key(f));
+        }
+    }
+}
+
+#[test]
+fn proxy_monitored_sessions_survive_preemption() {
+    // black-box monitoring keeps a second (proxy) KV cache per session;
+    // preemption must rebuild BOTH caches on resume — trajectories still
+    // match the uninterrupted FIFO run
+    let questions = mixed_workload(2, 4, 13);
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 13;
+    cfg.delta = 1e-7;
+    cfg.sched.stall_stability = 0.2;
+    cfg.sched.preempt_after_ticks = 8;
+    cfg.sched.max_preemptions = 100;
+
+    let run = |mode: SchedMode| {
+        let rt = Runtime::reference();
+        let mut c = cfg.clone();
+        c.sched.mode = mode;
+        let mut b = Batcher::with_clock(
+            &rt,
+            c.clone(),
+            MonitorModel::Proxy,
+            2,
+            eat_factory(&c),
+            Clock::virt(),
+        );
+        for q in &questions {
+            b.submit(q.clone());
+        }
+        b.run_to_completion().unwrap();
+        assert_eq!(b.metrics.completed, questions.len());
+        let preemptions = b.metrics.preemptions;
+        let mut results = b.results;
+        results.sort_by_key(|r| r.question_id);
+        (preemptions, results)
+    };
+    let (preemptions, eat_results) = run(SchedMode::EatAware);
+    let (_, fifo_results) = run(SchedMode::Fifo);
+    assert!(preemptions > 0, "proxy workload never hit the preemptor");
+    for (p, f) in eat_results.iter().zip(&fifo_results) {
+        assert_eq!(key(p), key(f), "proxy cache not rebuilt faithfully");
+    }
+}
