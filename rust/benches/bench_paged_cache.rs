@@ -1,0 +1,122 @@
+//! Paged vs monolithic KV store: EAT probe and rollout-fork cost at
+//! B = 1/4/8 concurrent sequences — the cost-model honesty check behind
+//! DESIGN.md §3.5 (the paper's premise is that the probe is *cheap*;
+//! forks and preemptions must not smuggle full-sequence copies back in).
+//!
+//!     cargo bench --bench bench_paged_cache
+//!
+//! Reference backend only (the comparison is between cache layouts, not
+//! kernels): both stores compute identical logits, so the delta is pure
+//! cache bookkeeping. The CoW counter report quantifies the sharing —
+//! a fork is O(pages) refcount bumps plus at most ONE copied page on
+//! first divergence, versus the monolithic full-history clone.
+
+use std::time::Duration;
+
+use eat_serve::coordinator::DEFAULT_PAGE_SIZE;
+use eat_serve::runtime::{Backend, BackendCache, RefBackend};
+use eat_serve::util::bench::bench_with;
+use eat_serve::vocab::Vocab;
+
+const ROLLOUT_LEN: usize = 5;
+
+/// Prefill B caches and decode them to mid-reasoning depth (~56
+/// committed tokens: several pages deep at the default page size).
+fn mid_reasoning_caches(b: &dyn Backend, vocab: Vocab, n: usize) -> Vec<BackendCache> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![vocab.bos, vocab.q];
+            for k in 0..4u32 {
+                p.push(vocab.num((i as u32 + k) % 7 + 1));
+            }
+            p.push(vocab.sep);
+            p.push(vocab.think);
+            let (mut logits, mut cache) = b.prefill(&p).unwrap();
+            for _ in 0..48 {
+                let tok = eat_serve::sampler::argmax(&logits);
+                if tok == vocab.ethink {
+                    break;
+                }
+                logits = b.decode(&mut cache, tok).unwrap();
+            }
+            cache
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let vocab = Vocab::default_layout();
+    let paged = RefBackend::with_pages("ref-main", vocab, 128, Some(8), Some(DEFAULT_PAGE_SIZE));
+    let mono = RefBackend::monolithic("ref-main", vocab, 128, Some(8));
+    let suffix = vocab.suffix_prefixed();
+    let budget = Duration::from_millis(400);
+
+    println!("paged page size: {DEFAULT_PAGE_SIZE} tok  (mono = one full-sequence block)\n");
+    for b in [1usize, 4, 8] {
+        let paged_caches = mid_reasoning_caches(&paged, vocab, b);
+        let mono_caches = mid_reasoning_caches(&mono, vocab, b);
+
+        // EAT probe: one per cache (the per-line monitoring step)
+        let pr_paged = bench_with(&format!("probe/paged_b{b}"), budget, 3, 10, &mut || {
+            for c in &paged_caches {
+                paged.probe(c, &suffix).unwrap();
+            }
+        });
+        let pr_mono = bench_with(&format!("probe/mono_b{b}"), budget, 3, 10, &mut || {
+            for c in &mono_caches {
+                mono.probe(c, &suffix).unwrap();
+            }
+        });
+
+        // rollout fork: fork + suffix + greedy rollout, then drop the
+        // fork (the #UA@K / confidence baseline step)
+        let rollout = |backend: &RefBackend, caches: &[BackendCache]| {
+            for c in caches {
+                let mut fork = backend.fork(c).unwrap();
+                let mut logits = Vec::new();
+                for &t in &suffix {
+                    logits = backend.decode(&mut fork, t).unwrap();
+                }
+                for _ in 0..ROLLOUT_LEN {
+                    let tok = eat_serve::sampler::argmax(&logits);
+                    logits = backend.decode(&mut fork, tok).unwrap();
+                }
+            }
+        };
+        let fk_paged = bench_with(&format!("rollout_fork/paged_b{b}"), budget, 3, 10, &mut || {
+            rollout(&paged, &paged_caches)
+        });
+        let fk_mono = bench_with(&format!("rollout_fork/mono_b{b}"), budget, 3, 10, &mut || {
+            rollout(&mono, &mono_caches)
+        });
+
+        println!(
+            "  B={b}: probe paged/mono {:.2}x   rollout-fork paged/mono {:.2}x\n",
+            pr_mono.mean_ns / pr_paged.mean_ns.max(1.0),
+            fk_mono.mean_ns / fk_paged.mean_ns.max(1.0),
+        );
+    }
+
+    let c = paged.counters();
+    let forks = c.cow_forks.get().max(1);
+    println!("paged CoW audit over the bench:");
+    println!("  cow_forks           {:>10}", c.cow_forks.get());
+    println!(
+        "  pages_shared        {:>10}  ({:.1} refcount bumps/fork)",
+        c.pages_shared.get(),
+        c.pages_shared.get() as f64 / forks as f64
+    );
+    println!(
+        "  pages_copied        {:>10}  ({:.2} CoW copies/fork — a full-sequence \
+         clone would be {:.0})",
+        c.pages_copied.get(),
+        c.pages_copied.get() as f64 / forks as f64,
+        (128f64 / DEFAULT_PAGE_SIZE as f64),
+    );
+    println!("  live pages at exit  {:>10}", paged.pool_pages_in_use().unwrap());
+    println!(
+        "\n(the probe itself allocates, shares and copies ZERO pages — asserted \
+         in batcher_protocol.rs; this table is the rollout-fork story)"
+    );
+    Ok(())
+}

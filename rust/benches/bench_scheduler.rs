@@ -63,6 +63,8 @@ fn main() -> anyhow::Result<()> {
     println!("scheduler event mix ({N} requests, {SLOTS} slots):");
     println!("  preemptions         {preemptions:>8}");
     println!("  resumes             {resumes:>8}");
-    println!("  re-prefill tokens   {re_prefill:>8}");
+    println!(
+        "  restored tokens     {re_prefill:>8}  (repinned pages on paged; re-prefilled on mono)"
+    );
     Ok(())
 }

@@ -133,6 +133,16 @@ pub struct ServeConfig {
     pub prefixed_probe: bool,
     /// Seed for all sampling.
     pub seed: u64,
+    /// KV page budget (DESIGN.md §3.5): caps the device-resident pages
+    /// (admission gate — a session needs worst-case headroom) and
+    /// bounds the host-side pages suspended sessions may retain for
+    /// re-prefill-free resume (overflow spills to the re-prefill
+    /// fallback). `None` = device budget of `slots × worst-case
+    /// pages/session` with unbounded host retention, which makes page
+    /// admission degenerate to lane admission, never spills, and keeps
+    /// paged and monolithic serve runs byte-identical. The `--kv-pages`
+    /// serve flag sets it.
+    pub kv_pages: Option<usize>,
     /// Scheduler knobs (DESIGN.md §3.4).
     pub sched: SchedConfig,
 }
@@ -147,6 +157,7 @@ impl Default for ServeConfig {
             delta: 1e-3,
             prefixed_probe: true,
             seed: 0,
+            kv_pages: None,
             sched: SchedConfig::default(),
         }
     }
@@ -217,6 +228,8 @@ mod tests {
         assert!(c.prefixed_probe);
         // default scheduling stays FIFO (the pre-scheduler behavior)
         assert_eq!(c.sched.mode, SchedMode::Fifo);
+        // default page budget = lane-equivalent (paged ≡ monolithic)
+        assert!(c.kv_pages.is_none());
         assert!(c.sched.max_preemptions > 0);
         assert!(c.sched.stall_stability > 0.0 && c.sched.stall_stability < 1.0);
     }

@@ -9,12 +9,20 @@
 //! on admission (fresh prefill) and on any out-of-band mutation
 //! (sequential-fallback decode) — so only dirty lanes need their host
 //! image re-gathered into the batch; clean lanes ride the resident image.
+//! On a paged backend (DESIGN.md §3.5) the dirty tracking additionally
+//! drops to page granularity: a per-slot synced-position watermark
+//! records how far the resident image is current, so an out-of-band
+//! decode dirties one page, not the whole lane. The page counters are
+//! an *accounting model* of what a paged device transfer would move —
+//! the PJRT tuple API still re-gathers a stale lane wholesale (it has
+//! no per-page upload; see DESIGN.md §6), exactly as the lane-level
+//! counters already model uploads the reference backend never performs.
 //! The accounting is backend-agnostic and therefore testable without
 //! artifacts.
 
 use anyhow::{Context, Result};
 
-use super::kv::SlotId;
+use super::kv::{pages_for, SlotId};
 use crate::runtime::{Backend, BackendCache, BatchLane};
 
 /// Upload/residency accounting (asserted by the batching tests, quoted
@@ -29,6 +37,14 @@ pub struct StoreCounters {
     pub dirty_lane_uploads: u64,
     /// Engaged lanes that were clean (resident image reused).
     pub resident_lane_hits: u64,
+    /// KV pages of engaged lanes stale since the synced watermark —
+    /// what a page-granular device transfer would upload (accounting
+    /// model: the PJRT tuple API still re-gathers a stale lane
+    /// wholesale; a monolithic backend counts one "page" per dirty
+    /// lane).
+    pub dirty_page_uploads: u64,
+    /// KV pages of engaged lanes still current in the resident image.
+    pub resident_page_hits: u64,
 }
 
 #[derive(Default)]
@@ -36,6 +52,10 @@ struct Slot {
     main: Option<BackendCache>,
     proxy: Option<BackendCache>,
     dirty: bool,
+    /// Cache position up to which the resident batch image is current
+    /// (`None` = nothing resident). Appends past this watermark dirty
+    /// only the pages they touch.
+    synced: Option<usize>,
 }
 
 /// Fixed-capacity slot-major cache store.
@@ -77,19 +97,30 @@ impl BatchCacheStore {
         s.main = Some(main);
         s.proxy = proxy;
         s.dirty = true;
+        s.synced = None;
         self.counters.installs += 1;
         Ok(())
     }
 
     /// Drop a retired request's caches.
     pub fn retire(&mut self, slot: SlotId) -> Result<()> {
+        self.take(slot).map(|_| ())
+    }
+
+    /// Vacate a slot *without dropping* its caches — the paged
+    /// suspend path (DESIGN.md §3.5): the session keeps its page tables
+    /// (unpinned) and repins them into a lane on resume, skipping the
+    /// re-prefill. Counts as a retire so installs and retires stay
+    /// balanced across preempt/resume churn.
+    pub fn take(&mut self, slot: SlotId) -> Result<(BackendCache, Option<BackendCache>)> {
         let s = self.slot_mut(slot)?;
-        anyhow::ensure!(s.main.is_some(), "retiring an empty slot {}", slot.0);
-        s.main = None;
-        s.proxy = None;
+        let main = s.main.take();
+        anyhow::ensure!(main.is_some(), "retiring an empty slot {}", slot.0);
+        let proxy = s.proxy.take();
         s.dirty = false;
+        s.synced = None;
         self.counters.retires += 1;
-        Ok(())
+        Ok((main.expect("checked above"), proxy))
     }
 
     pub fn is_dirty(&self, slot: SlotId) -> bool {
@@ -98,6 +129,8 @@ impl BatchCacheStore {
 
     /// Record an out-of-band mutation of the slot's main cache (e.g. a
     /// sequential-fallback decode): its resident batch image is stale.
+    /// The synced watermark survives — appends past it dirty only the
+    /// pages they touch.
     pub fn mark_dirty(&mut self, slot: SlotId) -> Result<()> {
         self.slot_mut(slot)?.dirty = true;
         Ok(())
@@ -152,16 +185,38 @@ impl BatchCacheStore {
         let slot_major = self.slots.len() <= width;
 
         self.counters.fused_calls += 1;
+        let page_size = backend.page_size();
         for (slot, _) in picks {
-            let dirty = {
+            let (dirty, pos, synced) = {
                 let s = self.slot(*slot)?;
-                anyhow::ensure!(s.main.is_some(), "picked empty slot {}", slot.0);
-                s.dirty
+                let main = s.main.as_ref();
+                anyhow::ensure!(main.is_some(), "picked empty slot {}", slot.0);
+                (s.dirty, main.map(|c| c.pos()).unwrap_or(0), s.synced)
             };
-            if dirty || !slot_major {
-                self.counters.dirty_lane_uploads += 1;
-            } else {
+            let lane_resident = !dirty && slot_major;
+            if lane_resident {
                 self.counters.resident_lane_hits += 1;
+            } else {
+                self.counters.dirty_lane_uploads += 1;
+            }
+            match page_size {
+                Some(p) => {
+                    // pages touched since the watermark need re-gather;
+                    // everything below it rides the resident image
+                    let total = pages_for(pos, p);
+                    let synced = if slot_major { synced.unwrap_or(0) } else { 0 };
+                    let uploads = if synced >= pos { 0 } else { total - synced / p };
+                    self.counters.dirty_page_uploads += uploads as u64;
+                    self.counters.resident_page_hits += (total - uploads) as u64;
+                }
+                None => {
+                    // monolithic cache: the lane is the page
+                    if lane_resident {
+                        self.counters.resident_page_hits += 1;
+                    } else {
+                        self.counters.dirty_page_uploads += 1;
+                    }
+                }
             }
         }
         let mut by_slot: Vec<Option<&mut BackendCache>> = self
@@ -191,7 +246,15 @@ impl BatchCacheStore {
 
         let mut logits = Vec::with_capacity(picks.len());
         for ((slot, _), lane) in picks.iter().zip(&lane_of_pick) {
-            self.slots[slot.0].dirty = false;
+            let s = &mut self.slots[slot.0];
+            s.dirty = false;
+            // the downloaded post-write image is the new resident state;
+            // lane reshuffling (!slot_major) voids residency entirely
+            s.synced = if slot_major {
+                s.main.as_ref().map(|c| c.pos())
+            } else {
+                None
+            };
             logits.push(
                 out.get(*lane)
                     .and_then(|l| l.clone())
@@ -263,6 +326,65 @@ mod tests {
         assert_eq!(store.counters.dirty_lane_uploads, 4);
         assert_eq!(store.counters.resident_lane_hits, 5);
         assert_eq!(store.counters.fused_calls, 3);
+    }
+
+    #[test]
+    fn page_granular_dirty_accounting() {
+        // page size 4, 6-token prompts: two pages per fresh cache
+        let vocab = Vocab::default_layout();
+        let rt = Runtime {
+            vocab,
+            main: Box::new(RefBackend::with_pages("ref-main", vocab, 128, Some(8), Some(4))),
+            proxy: Box::new(RefBackend::with_pages("ref-proxy", vocab, 128, None, Some(4))),
+            artifacts: None,
+        };
+        let mut store = BatchCacheStore::new(3);
+        for i in 0..3 {
+            let c = prefill(&rt, i);
+            assert_eq!(c.pos(), 6);
+            store.install(SlotId(i as usize), c, None).unwrap();
+        }
+        let picks: Vec<(SlotId, u32)> = (0..3).map(|i| (SlotId(i), vocab.ver)).collect();
+
+        // tick 1: fresh admissions — both pages of every lane upload
+        store.fused_decode(rt.main.as_ref(), &picks).unwrap();
+        assert_eq!(store.counters.dirty_page_uploads, 6);
+        assert_eq!(store.counters.resident_page_hits, 0);
+
+        // tick 2: fully resident (watermark == pos)
+        store.fused_decode(rt.main.as_ref(), &picks).unwrap();
+        assert_eq!(store.counters.dirty_page_uploads, 6);
+        assert_eq!(store.counters.resident_page_hits, 6);
+
+        // out-of-band decode on slot 1 (pos 8 -> 9): exactly ONE page of
+        // that lane goes stale; the lane-level bit would re-upload all 3
+        let cache = store.main_mut(SlotId(1)).unwrap();
+        rt.main.decode(cache, vocab.ver).unwrap();
+        store.mark_dirty(SlotId(1)).unwrap();
+        store.fused_decode(rt.main.as_ref(), &picks).unwrap();
+        assert_eq!(store.counters.dirty_page_uploads, 7, "one page, not the whole lane");
+        assert_eq!(store.counters.resident_page_hits, 12);
+        // lane-level counters keep their coarse meaning
+        assert_eq!(store.counters.dirty_lane_uploads, 4);
+        assert_eq!(store.counters.resident_lane_hits, 5);
+    }
+
+    #[test]
+    fn take_preserves_caches_and_balances_retires() {
+        let rt = Runtime::reference();
+        let mut store = BatchCacheStore::new(2);
+        let c = prefill(&rt, 1);
+        let pos = c.pos();
+        store.install(SlotId(0), c, None).unwrap();
+        let (main, proxy) = store.take(SlotId(0)).unwrap();
+        assert_eq!(main.pos(), pos, "take must not disturb the cache");
+        assert!(proxy.is_none());
+        assert!(store.main(SlotId(0)).is_err(), "slot vacated");
+        assert_eq!(store.counters.installs, 1);
+        assert_eq!(store.counters.retires, 1);
+        // repin into another lane
+        store.install(SlotId(1), main, None).unwrap();
+        assert_eq!(store.main(SlotId(1)).unwrap().pos(), pos);
     }
 
     #[test]

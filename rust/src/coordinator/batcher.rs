@@ -1,49 +1,56 @@
-//! Continuous batcher + EAT-aware preemptive scheduler: vLLM-style slot
-//! scheduling over split-phase [`ReasoningSession`]s — the batcher, not
-//! the session, owns model execution (DESIGN.md §3.3/§3.4).
+//! Continuous batcher + EAT-aware preemptive scheduler: vLLM-style
+//! paged-KV scheduling over split-phase [`ReasoningSession`]s — the
+//! batcher, not the session, owns model execution (DESIGN.md §3.3–§3.5).
 //!
 //! Requests arrive with timestamps read from an injected [`Clock`] (the
 //! workload driver produces a Poisson process; under a virtual clock the
 //! whole run is a pure function of the seed). The batcher admits them
-//! into up to `slots` concurrent sessions (KV capacity permitting —
-//! backpressure otherwise). Each scheduling tick it polls every active
-//! session up to its pending decode, servicing probes and rollouts
-//! *out-of-band* as they surface, then commits **all pending decodes in
-//! one fused `decode_batch` call** against the slot-major
+//! into up to `slots` concurrent sessions — each admission claims a
+//! batch lane *and* a worst-case page reservation in the
+//! [`KvPageManager`]; with the default `--kv-pages` budget the page gate
+//! degenerates to lane admission, which is what keeps paged and
+//! monolithic serve runs byte-identical. Each scheduling tick it polls
+//! every active session up to its pending decode, servicing probes and
+//! rollouts *out-of-band* as they surface, then commits **all pending
+//! decodes in one fused `decode_batch` call** against the slot-major
 //! [`BatchCacheStore`] (idle lanes padded; chunked only if active >
 //! batch width). When the backend carries no batch entry point — or
 //! `force_sequential` is set — the same decodes run one by one in
-//! admission order. The session protocol cannot observe which path
-//! serviced it, so on the reference backend (a pure function of token
-//! history) the two paths are bit-identical for the same seed; on PJRT
-//! artifacts the fused kernel agrees with the single-decode kernel to
-//! ~1e-3, so sampled tokens can in principle diverge at nucleus
-//! boundaries.
+//! admission order; the session protocol cannot observe which path
+//! serviced it.
 //!
 //! In `SchedMode::EatAware` the FIFO loop becomes a scheduler
-//! (DESIGN.md §3.4): admission prefers earliest deadlines, long-stalled
-//! sessions (low `ExitPolicy::stability`, past the aging bound) are
-//! *preempted* — KV slot evicted, token history + monitor/policy state
-//! retained in a [`SuspendedSession`] — and later resumed by re-prefill,
-//! which is bit-identical on the reference backend. Per-request RNGs are
-//! seeded from the submission sequence number, so a request's trajectory
-//! is invariant to admission order and scheduling mode.
+//! (DESIGN.md §3.4): admission pulls from binary heaps — fresh requests
+//! keyed on `(deadline, seq)`, suspended sessions on `(suspended_at,
+//! seq)` with an aged heap on `(deadline, seq)` — so a freed slot costs
+//! O(log n), not an O(n) rescan. Long-stalled sessions (low
+//! [`crate::exit::ExitPolicy::stability`], past the aging bound) are
+//! *preempted*: the KV lane is released and, on a paged backend, the
+//! session's pages are **unpinned and retained** against the host-side
+//! budget — resumption *repins* them with zero re-prefill. When
+//! retention would overflow that budget the pages are spilled (dropped)
+//! and the session falls back to the PR 3 resume-by-re-prefill path,
+//! which doubles as the equivalence oracle: on the reference backend
+//! both resume paths are bit-identical. Per-request RNGs are seeded
+//! from the submission sequence number, so a request's trajectory is
+//! invariant to admission order, scheduling mode and store layout.
 
-use std::collections::VecDeque;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, VecDeque};
 
 use anyhow::Result;
 
 use super::batch_cache::{BatchCacheStore, StoreCounters};
 use super::engine::{
     resume_session, run_probe, run_rollout, start_session, MonitorModel, ReasoningSession,
-    RequestResult, StepWork,
+    RequestResult, SessionCaches, StepWork,
 };
-use super::kv::{KvSlotManager, SlotId};
+use super::kv::{pages_for, KvPageManager, SlotId};
 use super::metrics::ServeMetrics;
 use crate::config::{SchedMode, ServeConfig};
 use crate::datasets::Question;
 use crate::exit::{EatPolicy, ExitPolicy, ExitReason};
-use crate::runtime::{Backend, Runtime};
+use crate::runtime::{Backend, BackendCache, Runtime};
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 
@@ -74,9 +81,12 @@ struct Active {
     preemptions: u32,
 }
 
-/// A preempted mid-flight session: the KV slot is evicted while the
-/// token history and monitor/policy state live on here; resumption
-/// rebuilds the caches by re-prefill ([`resume_session`]).
+/// A preempted mid-flight session. The KV lane is released while the
+/// token history and monitor/policy state live on here. On a paged
+/// backend the caches themselves are retained too (unpinned pages,
+/// accounted against the host-side budget) and resumption *repins*
+/// them; `caches == None` (monolithic store, or spilled under host
+/// pressure) falls back to resume-by-re-prefill ([`resume_session`]).
 pub struct SuspendedSession {
     session: ReasoningSession,
     arrived: f64,
@@ -85,14 +95,53 @@ pub struct SuspendedSession {
     seq: u64,
     preemptions: u32,
     suspended_at: f64,
+    caches: Option<SessionCaches>,
+    /// Pages the retained caches hold against the host budget.
+    held_pages: usize,
+}
+
+/// Min-heap entry ordered by an `(f64, u64)` key — deadlines or
+/// suspension times with the submission seq as the (unique) tiebreaker,
+/// so heap order is total and deterministic.
+struct Prioritized<V> {
+    key: (f64, u64),
+    val: V,
+}
+
+impl<V> PartialEq for Prioritized<V> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<V> Eq for Prioritized<V> {}
+
+impl<V> PartialOrd for Prioritized<V> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<V> Ord for Prioritized<V> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.0.total_cmp(&other.key.0).then(self.key.1.cmp(&other.key.1))
+    }
+}
+
+type MinHeap<V> = BinaryHeap<Reverse<Prioritized<V>>>;
+
+fn heap_push<V>(heap: &mut MinHeap<V>, key: (f64, u64), val: V) {
+    heap.push(Reverse(Prioritized { key, val }));
+}
+
+fn heap_pop<V>(heap: &mut MinHeap<V>) -> Option<V> {
+    heap.pop().map(|Reverse(p)| p.val)
 }
 
 /// Which waiter gets the next free slot.
 enum AdmitPick {
-    /// Index into the queue.
-    Fresh(usize),
-    /// Index into the suspended list.
-    Resume(usize),
+    Fresh(QueuedRequest),
+    Resume(SuspendedSession),
 }
 
 /// Policy factory: each admitted request gets a fresh policy instance.
@@ -116,12 +165,28 @@ pub struct Batcher<'a> {
     cfg: ServeConfig,
     monitor: MonitorModel,
     make_policy: PolicyFactory,
-    kv: KvSlotManager,
+    kv: KvPageManager,
     store: BatchCacheStore,
     clock: Clock,
+    /// FIFO-mode admission queue (arrival order).
     queue: VecDeque<QueuedRequest>,
+    /// EAT-aware fresh requests, earliest `(deadline, seq)` first.
+    fresh: MinHeap<QueuedRequest>,
     active: Vec<Active>,
-    suspended: VecDeque<SuspendedSession>,
+    /// Suspended sessions past the starvation guard (or aged past the
+    /// wait bound), earliest `(deadline, seq)` first — they outrank
+    /// fresh admissions.
+    suspended_aged: MinHeap<SuspendedSession>,
+    /// Remaining suspended sessions, earliest `(suspended_at, seq)`
+    /// first.
+    suspended_wait: MinHeap<SuspendedSession>,
+    /// Caches are page tables (retain on suspend, repin on resume).
+    paged: bool,
+    /// Token-page geometry per model, for budget accounting in the same
+    /// unit as `KvPageManager::reserve_pages` (a K+V pair counts once,
+    /// like `cache_elems`).
+    main_page_size: usize,
+    proxy_page_size: usize,
     next_seq: u64,
     /// Disable the fused path even when the backend has one (A/B
     /// determinism checks, ablations).
@@ -152,24 +217,33 @@ impl<'a> Batcher<'a> {
         make_policy: PolicyFactory,
         clock: Clock,
     ) -> Batcher<'a> {
-        let slot_bytes = rt.main.cache_elems() * 4 * 2
+        let main_ps = rt.main.page_size().unwrap_or(rt.main.seq_len());
+        let proxy_ps = rt.proxy.page_size().unwrap_or(rt.proxy.seq_len());
+        // worst-case pages a resident session can pin: full sequence on
+        // the main model, plus the proxy mirror when black-box monitored
+        let reserve = pages_for(rt.main.seq_len(), main_ps)
             + if monitor == MonitorModel::Proxy {
-                rt.proxy.cache_elems() * 4 * 2
+                pages_for(rt.proxy.seq_len(), proxy_ps)
             } else {
                 0
             };
         Batcher {
+            paged: rt.main.page_size().is_some(),
+            main_page_size: main_ps,
+            proxy_page_size: proxy_ps,
+            kv: KvPageManager::new(slots, main_ps, reserve, cfg.kv_pages),
+            store: BatchCacheStore::new(slots),
+            metrics: ServeMetrics::new(clock.clone()),
             rt,
             cfg,
             monitor,
             make_policy,
-            kv: KvSlotManager::new(slots, slot_bytes),
-            store: BatchCacheStore::new(slots),
-            metrics: ServeMetrics::new(clock.clone()),
             clock,
             queue: VecDeque::new(),
+            fresh: BinaryHeap::new(),
             active: Vec::new(),
-            suspended: VecDeque::new(),
+            suspended_aged: BinaryHeap::new(),
+            suspended_wait: BinaryHeap::new(),
             next_seq: 0,
             force_sequential: false,
             results: Vec::new(),
@@ -185,16 +259,23 @@ impl<'a> Batcher<'a> {
         let now = self.clock.now();
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.queue.push_back(QueuedRequest {
+        let req = QueuedRequest {
             question,
             arrived: now,
             deadline: now + self.cfg.sched.deadline_s,
             seq,
-        });
+        };
+        match self.cfg.sched.mode {
+            SchedMode::Fifo => self.queue.push_back(req),
+            SchedMode::EatAware => {
+                let key = (req.deadline, req.seq);
+                heap_push(&mut self.fresh, key, req);
+            }
+        }
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queue.len() + self.fresh.len()
     }
 
     pub fn active_count(&self) -> usize {
@@ -202,12 +283,12 @@ impl<'a> Batcher<'a> {
     }
 
     pub fn suspended_count(&self) -> usize {
-        self.suspended.len()
+        self.suspended_aged.len() + self.suspended_wait.len()
     }
 
     /// Anything left to do: queued, resident, or suspended work.
     pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || !self.active.is_empty() || !self.suspended.is_empty()
+        self.pending() > 0 || !self.active.is_empty() || self.suspended_count() > 0
     }
 
     pub fn kv_utilization(&self) -> f64 {
@@ -216,6 +297,12 @@ impl<'a> Batcher<'a> {
 
     pub fn kv_peak(&self) -> usize {
         self.kv.peak()
+    }
+
+    /// Page-budget accounting (pinned reservations, suspended
+    /// retention, peak) for reports.
+    pub fn kv_pages(&self) -> &KvPageManager {
+        &self.kv
     }
 
     /// Batch-store upload/residency accounting.
@@ -229,68 +316,62 @@ impl<'a> Batcher<'a> {
         Rng::new(self.cfg.seed ^ 0xBA7C4E5 ^ seq.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Migrate suspended sessions whose wait crossed the aging bound
+    /// into the aged heap (EAT-aware mode). Amortized O(log n) once per
+    /// session — this plus the heaps replaces the old per-slot O(n)
+    /// rescan of queue + suspended list.
+    fn promote_aged(&mut self) {
+        if self.cfg.sched.mode != SchedMode::EatAware {
+            return;
+        }
+        let now = self.clock.now();
+        let bound = self.cfg.sched.resume_priority_after_s;
+        while let Some(Reverse(head)) = self.suspended_wait.peek() {
+            if now - head.val.suspended_at < bound {
+                break;
+            }
+            let s = heap_pop(&mut self.suspended_wait).expect("peeked entry exists");
+            let key = (s.deadline, s.seq);
+            heap_push(&mut self.suspended_aged, key, s);
+        }
+    }
+
     /// Pick the waiter for the next free slot.
     ///
     /// FIFO mode: suspended sessions first (oldest suspension), then the
-    /// queue head. EAT-aware mode (DESIGN.md §3.4): (1) suspended
-    /// sessions past the starvation guard (preempted `max_preemptions`
-    /// times, or waiting longer than `resume_priority_after_s`), (2)
-    /// fresh requests by earliest deadline, (3) remaining suspended
-    /// sessions, oldest suspension first.
-    fn pick_admission(&self) -> Option<AdmitPick> {
+    /// queue head. EAT-aware mode (DESIGN.md §3.4): (1) aged suspended
+    /// sessions (preempted `max_preemptions` times, or waiting longer
+    /// than `resume_priority_after_s`) by earliest deadline, (2) fresh
+    /// requests by earliest deadline, (3) remaining suspended sessions,
+    /// oldest suspension first.
+    fn pick_admission(&mut self) -> Option<AdmitPick> {
         if self.cfg.sched.mode == SchedMode::Fifo {
-            if !self.suspended.is_empty() {
-                return Some(AdmitPick::Resume(0));
+            if let Some(s) = heap_pop(&mut self.suspended_wait) {
+                return Some(AdmitPick::Resume(s));
             }
-            return if self.queue.is_empty() {
-                None
-            } else {
-                Some(AdmitPick::Fresh(0))
-            };
+            return self.queue.pop_front().map(AdmitPick::Fresh);
         }
-        let now = self.clock.now();
-        let aged = self
-            .suspended
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| {
-                s.preemptions >= self.cfg.sched.max_preemptions
-                    || now - s.suspended_at >= self.cfg.sched.resume_priority_after_s
-            })
-            .min_by(|(_, a), (_, b)| {
-                (a.deadline, a.seq).partial_cmp(&(b.deadline, b.seq)).unwrap()
-            });
-        if let Some((i, _)) = aged {
-            return Some(AdmitPick::Resume(i));
+        if let Some(s) = heap_pop(&mut self.suspended_aged) {
+            return Some(AdmitPick::Resume(s));
         }
-        let fresh = self.queue.iter().enumerate().min_by(|(_, a), (_, b)| {
-            (a.deadline, a.seq).partial_cmp(&(b.deadline, b.seq)).unwrap()
-        });
-        if let Some((i, _)) = fresh {
-            return Some(AdmitPick::Fresh(i));
+        if let Some(r) = heap_pop(&mut self.fresh) {
+            return Some(AdmitPick::Fresh(r));
         }
-        self.suspended
-            .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| {
-                (a.suspended_at, a.seq).partial_cmp(&(b.suspended_at, b.seq)).unwrap()
-            })
-            .map(|(i, _)| AdmitPick::Resume(i))
+        heap_pop(&mut self.suspended_wait).map(AdmitPick::Resume)
     }
 
-    /// Admit waiters while KV slots are free: fresh requests prefill,
-    /// suspended sessions resume by re-prefill.
+    /// Admit waiters while KV lanes + page budget allow: fresh requests
+    /// prefill; suspended sessions repin their retained pages (paged)
+    /// or rebuild by re-prefill (monolithic / spilled).
     fn admit(&mut self) -> Result<()> {
+        self.promote_aged();
         while self.kv.available() > 0 {
             let Some(pick) = self.pick_admission() else {
                 break;
             };
-            let Some(slot) = self.kv.acquire() else {
-                break;
-            };
+            let slot = self.kv.acquire().expect("available() > 0 guarantees a lane");
             match pick {
-                AdmitPick::Fresh(i) => {
-                    let req = self.queue.remove(i).expect("picked index in range");
+                AdmitPick::Fresh(req) => {
                     let policy = (self.make_policy)();
                     let rng = self.request_rng(req.seq);
                     let (session, caches) = start_session(
@@ -313,8 +394,7 @@ impl<'a> Batcher<'a> {
                         preemptions: 0,
                     });
                 }
-                AdmitPick::Resume(i) => {
-                    let mut s = self.suspended.remove(i).expect("picked index in range");
+                AdmitPick::Resume(mut s) => {
                     // Adaptive compute governor: a session still stalled
                     // after burning through the starvation guard has
                     // shown no EAT progress across multiple residencies —
@@ -327,7 +407,22 @@ impl<'a> Batcher<'a> {
                     {
                         s.session.force_exit(ExitReason::Stalled);
                     }
-                    let caches = resume_session(self.rt, &s.session)?;
+                    let caches = match s.caches.take() {
+                        Some(caches) => {
+                            // repin: the pages never left the pool — zero
+                            // re-prefill work, the reservation just moves
+                            // from the host budget back to a pinned lane
+                            self.kv.release_suspended(s.held_pages);
+                            anyhow::ensure!(
+                                caches.main.pos() == s.session.pos(),
+                                "repin position mismatch: cache {} vs session {}",
+                                caches.main.pos(),
+                                s.session.pos()
+                            );
+                            caches
+                        }
+                        None => resume_session(self.rt, &s.session)?,
+                    };
                     self.metrics.record_resume(s.session.pos());
                     self.store.install(slot, caches.main, caches.proxy)?;
                     self.active.push(Active {
@@ -347,11 +442,59 @@ impl<'a> Batcher<'a> {
         Ok(())
     }
 
+    /// Park a preempted session: on a paged backend retain its caches
+    /// (unpinned pages) against the host budget, spilling to the
+    /// re-prefill fallback when retention would overflow; then file it
+    /// into the right suspended heap.
+    fn suspend(&mut self, a: Active, main: BackendCache, proxy: Option<BackendCache>) {
+        let now = self.clock.now();
+        let (caches, held_pages) = if self.paged {
+            // charged in the same token-page unit as the admission
+            // reserve (one count per K+V pair, whatever the backend's
+            // physical page multiplicity)
+            let pages = pages_for(main.pos(), self.main_page_size)
+                + proxy
+                    .as_ref()
+                    .map(|p| pages_for(p.pos(), self.proxy_page_size))
+                    .unwrap_or(0);
+            if self.kv.try_hold_suspended(pages) {
+                (Some(SessionCaches { main, proxy }), pages)
+            } else {
+                // host budget full: drop the pages, resume re-prefills
+                self.metrics.record_spill();
+                (None, 0)
+            }
+        } else {
+            (None, 0)
+        };
+        let s = SuspendedSession {
+            session: a.session,
+            arrived: a.arrived,
+            admitted: a.admitted,
+            deadline: a.deadline,
+            seq: a.seq,
+            preemptions: a.preemptions + 1,
+            suspended_at: now,
+            caches,
+            held_pages,
+        };
+        if self.cfg.sched.mode == SchedMode::EatAware
+            && s.preemptions >= self.cfg.sched.max_preemptions
+        {
+            let key = (s.deadline, s.seq);
+            heap_push(&mut self.suspended_aged, key, s);
+        } else {
+            let key = (s.suspended_at, s.seq);
+            heap_push(&mut self.suspended_wait, key, s);
+        }
+    }
+
     /// Preempt long-stalled sessions to free slots for fresh work
-    /// (EAT-aware mode only): evict the KV slot, retain the session —
-    /// token history plus monitor/policy state — in the suspended list.
-    /// Stabilized sessions (stability above the stall cutoff) are never
-    /// preempted: they are driven to completion.
+    /// (EAT-aware mode only): release the KV lane, retain the session —
+    /// token history plus monitor/policy state, and on a paged backend
+    /// the unpinned pages themselves. Stabilized sessions (stability
+    /// above the stall cutoff) are never preempted: they are driven to
+    /// completion.
     fn preempt(&mut self) -> Result<()> {
         if self.cfg.sched.mode != SchedMode::EatAware {
             return Ok(());
@@ -359,7 +502,7 @@ impl<'a> Batcher<'a> {
         let aging = self.cfg.sched.preempt_after_ticks;
         let max_pre = self.cfg.sched.max_preemptions;
         let cutoff = self.cfg.sched.stall_stability;
-        while !self.queue.is_empty() && self.kv.available() == 0 {
+        while !self.fresh.is_empty() && self.kv.available() == 0 {
             let victim = self
                 .active
                 .iter()
@@ -381,19 +524,11 @@ impl<'a> Batcher<'a> {
                 break;
             };
             let a = self.active.swap_remove(i);
-            self.store.retire(a.slot)?;
+            let (main, proxy) = self.store.take(a.slot)?;
             self.kv.release(a.slot)?;
             self.metrics.record_preemption();
             self.metrics.sample_slots(self.kv.in_use());
-            self.suspended.push_back(SuspendedSession {
-                session: a.session,
-                arrived: a.arrived,
-                admitted: a.admitted,
-                deadline: a.deadline,
-                seq: a.seq,
-                preemptions: a.preemptions + 1,
-                suspended_at: self.clock.now(),
-            });
+            self.suspend(a, main, proxy);
         }
         Ok(())
     }
@@ -516,7 +651,7 @@ impl<'a> Batcher<'a> {
         Ok(advanced)
     }
 
-    /// Drain: run ticks until queue, active set and suspended list are
+    /// Drain: run ticks until queue, active set and suspended heaps are
     /// all empty. On a virtual clock each tick is charged
     /// [`DEFAULT_TICK_DT`] simulated seconds (a frozen clock would report
     /// zero latencies and infinite throughput, and time-based scheduling

@@ -576,7 +576,12 @@ pub fn start_session(
 /// reference backend the rebuilt caches are bit-identical to the evicted
 /// ones — prefill and step-wise decode are the same pure function of the
 /// token history — so a resumed session continues exactly as if it had
-/// never been preempted (pinned by `tests/scheduler_sim.rs`).
+/// never been preempted (pinned by `tests/scheduler_sim.rs`). Under the
+/// paged store (DESIGN.md §3.5) this is the *fallback* path: suspension
+/// normally retains the session's pages and resume repins them with no
+/// prefill at all; re-prefill runs only when host page pressure spilled
+/// the retained pages, and doubles as the equivalence oracle for the
+/// repin path.
 pub fn resume_session(rt: &Runtime, session: &ReasoningSession) -> Result<SessionCaches> {
     anyhow::ensure!(session.can_suspend(), "cannot rebuild caches while a decode is in flight");
     let hist = session.history();
@@ -614,7 +619,12 @@ pub fn run_probe(
 
 /// Confidence (Eq. 16): greedy rollout of up to `rollout_len` tokens
 /// after the answer-inducing suffix on a *forked* cache; returns the
-/// length-normalized likelihood and the tokens charged.
+/// length-normalized likelihood and the tokens charged. On a paged
+/// backend (DESIGN.md §3.5) the fork is O(pages) refcount bumps and the
+/// rollout's divergence copies at most the shared tail page — the
+/// monolithic full-sequence cache copy this used to cost is exactly
+/// what the paged store eliminates (`RuntimeCounters::{cow_forks,
+/// pages_copied, pages_shared}` audit it).
 pub fn confidence_rollout(
     backend: &dyn Backend,
     cache: &BackendCache,

@@ -1,81 +1,452 @@
-//! KV-cache slot manager: capacity accounting for concurrent requests.
+//! Paged KV subsystem: a refcounted block allocator, a typed page pool
+//! with copy-on-write, and the serving-side page-budget manager
+//! (DESIGN.md §3.5).
 //!
-//! The CPU PJRT backend has no real HBM budget, but the coordinator still
-//! enforces an explicit cache budget the way a vLLM-style server must:
-//! a request is only admitted when a slot (one full-sequence K/V pair per
-//! model) is free, and the manager reports utilization for the metrics
-//! endpoint. Proxy-monitored requests consume a proxy slot too.
+//! The paper's whole premise is that the EAT probe is *inexpensive*:
+//! append `</think>`, read one token's entropy. A monolithic
+//! full-sequence cache betrays that premise operationally — every
+//! rollout fork pays an O(seq) copy and every preemption pays a full
+//! re-prefill. The paged store fixes the cost model the way vLLM-style
+//! paged attention does:
+//!
+//!  * caches become page tables over a shared [`PagePool`];
+//!  * `fork()` is O(pages) refcount bumps; the first divergent write
+//!    copies exactly one page (copy-on-write);
+//!  * probes read the page table without touching the pool at all;
+//!  * suspend/resume unpins and repins pages instead of re-prefilling
+//!    (the re-prefill path survives as the spill fallback and the
+//!    equivalence oracle).
+//!
+//! [`KvPageManager`] is the coordinator-side accounting: admission
+//! requires a free batch lane *and* worst-case page headroom in the
+//! device budget, and suspended sessions retain their pages against a
+//! host-side budget (exceeding it spills: the pages are dropped and the
+//! session falls back to resume-by-re-prefill).
 
 use anyhow::Result;
 
+/// Batch lane of an admitted request (index into the
+/// [`crate::coordinator::BatchCacheStore`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SlotId(pub usize);
 
-/// Fixed-capacity slot allocator.
-#[derive(Debug)]
-pub struct KvSlotManager {
-    capacity: usize,
-    /// bytes per slot (main K+V [+ proxy K+V])
-    slot_bytes: usize,
-    free: Vec<usize>,
-    in_use: usize,
-    /// peak concurrent usage (for reports)
-    peak: usize,
+/// Handle to one fixed-size page in a [`PageAllocator`] / [`PagePool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageId(pub u32);
+
+/// Default tokens per KV page (the paged reference runtime's geometry).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Allocator-level accounting. `allocs`/`frees` are asserted by the
+/// allocator proptests; the serving-level CoW audit (what the bench and
+/// the batching tests quote) lives in
+/// [`crate::runtime::backend::RuntimeCounters`] instead.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AllocCounters {
+    /// Pages handed out (fresh allocations).
+    pub allocs: u64,
+    /// Pages whose refcount hit zero (returned to the freelist).
+    pub frees: u64,
+    /// Refcount bumps (cache forks sharing pages).
+    pub retains: u64,
 }
 
-impl KvSlotManager {
-    pub fn new(capacity: usize, slot_bytes: usize) -> KvSlotManager {
-        KvSlotManager {
-            capacity,
-            slot_bytes,
-            free: (0..capacity).rev().collect(),
+/// Refcounted fixed-size block allocator. Pages are identified by
+/// [`PageId`]; `alloc` hands out a page at refcount 1, `retain` bumps,
+/// `release` drops — the page returns to the freelist exactly when its
+/// refcount hits zero. Double release and retain-after-free are errors,
+/// not corruption.
+#[derive(Debug)]
+pub struct PageAllocator {
+    /// Refcount per page id; 0 = free.
+    refcounts: Vec<u32>,
+    free: Vec<u32>,
+    /// `None` = growable (backend pools); `Some(n)` = hard capacity
+    /// (budget-style use and the proptests).
+    capacity: Option<usize>,
+    in_use: usize,
+    peak: usize,
+    pub counters: AllocCounters,
+}
+
+impl PageAllocator {
+    /// Fixed-capacity allocator: `alloc` fails once `capacity` pages are
+    /// live.
+    pub fn new_fixed(capacity: usize) -> PageAllocator {
+        PageAllocator {
+            refcounts: vec![0; capacity],
+            free: (0..capacity as u32).rev().collect(),
+            capacity: Some(capacity),
             in_use: 0,
             peak: 0,
+            counters: AllocCounters::default(),
         }
     }
 
-    pub fn capacity(&self) -> usize {
-        self.capacity
+    /// Growable allocator (backend page pools): the serving budget is
+    /// enforced by [`KvPageManager`], not here.
+    pub fn new_growable() -> PageAllocator {
+        PageAllocator {
+            refcounts: Vec::new(),
+            free: Vec::new(),
+            capacity: None,
+            in_use: 0,
+            peak: 0,
+            counters: AllocCounters::default(),
+        }
     }
 
+    /// Pages currently live (refcount > 0).
     pub fn in_use(&self) -> usize {
         self.in_use
     }
 
+    /// Peak concurrent live pages.
     pub fn peak(&self) -> usize {
         self.peak
     }
 
+    /// Page ids ever materialized (live + freelist).
+    pub fn allocated(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    /// Free pages immediately available without growth.
     pub fn available(&self) -> usize {
-        self.free.len()
+        match self.capacity {
+            Some(c) => c - self.in_use,
+            None => self.free.len(),
+        }
     }
 
-    pub fn utilization(&self) -> f64 {
-        self.in_use as f64 / self.capacity.max(1) as f64
+    pub fn refcount(&self, page: PageId) -> u32 {
+        self.refcounts.get(page.0 as usize).copied().unwrap_or(0)
     }
 
-    pub fn bytes_in_use(&self) -> usize {
-        self.in_use * self.slot_bytes
-    }
-
-    /// Try to admit a request; None when at capacity (the batcher then
-    /// leaves it queued — backpressure).
-    pub fn acquire(&mut self) -> Option<SlotId> {
-        let id = self.free.pop()?;
+    /// Allocate a page at refcount 1. Errors only at a fixed capacity
+    /// limit.
+    pub fn alloc(&mut self) -> Result<PageId> {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                anyhow::ensure!(
+                    self.capacity.is_none(),
+                    "page pool exhausted ({} pages)",
+                    self.refcounts.len()
+                );
+                let id = self.refcounts.len() as u32;
+                self.refcounts.push(0);
+                id
+            }
+        };
+        debug_assert_eq!(self.refcounts[id as usize], 0);
+        self.refcounts[id as usize] = 1;
         self.in_use += 1;
         self.peak = self.peak.max(self.in_use);
-        Some(SlotId(id))
+        self.counters.allocs += 1;
+        Ok(PageId(id))
     }
 
+    /// Bump the refcount of a live page (cache fork).
+    pub fn retain(&mut self, page: PageId) -> Result<()> {
+        let rc = self
+            .refcounts
+            .get_mut(page.0 as usize)
+            .ok_or_else(|| anyhow::anyhow!("retain of unknown page {}", page.0))?;
+        anyhow::ensure!(*rc > 0, "retain of freed page {}", page.0);
+        *rc += 1;
+        self.counters.retains += 1;
+        Ok(())
+    }
+
+    /// Drop one reference; returns true when the page was freed (its
+    /// refcount hit zero exactly now).
+    pub fn release(&mut self, page: PageId) -> Result<bool> {
+        let rc = self
+            .refcounts
+            .get_mut(page.0 as usize)
+            .ok_or_else(|| anyhow::anyhow!("release of unknown page {}", page.0))?;
+        anyhow::ensure!(*rc > 0, "double free of page {}", page.0);
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page.0);
+            self.in_use -= 1;
+            self.counters.frees += 1;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+}
+
+/// A typed page pool: the [`PageAllocator`] plus the page payloads.
+/// Both backends keep one pool per model; every cache of that model is
+/// a page table into it. `make_unique` is the copy-on-write primitive:
+/// a shared page is copied on first divergent write, an exclusive page
+/// is written in place.
+#[derive(Debug)]
+pub struct PagePool<T> {
+    alloc: PageAllocator,
+    page_elems: usize,
+    data: Vec<Vec<T>>,
+}
+
+impl<T: Clone + Default> PagePool<T> {
+    pub fn new_growable(page_elems: usize) -> PagePool<T> {
+        PagePool {
+            alloc: PageAllocator::new_growable(),
+            page_elems,
+            data: Vec::new(),
+        }
+    }
+
+    /// Elements per page.
+    pub fn page_elems(&self) -> usize {
+        self.page_elems
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.alloc.in_use()
+    }
+
+    pub fn counters(&self) -> AllocCounters {
+        self.alloc.counters
+    }
+
+    /// Allocate a zero-filled page at refcount 1.
+    pub fn alloc_zeroed(&mut self) -> Result<PageId> {
+        let id = self.alloc.alloc()?;
+        let idx = id.0 as usize;
+        if idx == self.data.len() {
+            self.data.push(vec![T::default(); self.page_elems]);
+        } else {
+            self.data[idx].fill(T::default());
+        }
+        Ok(id)
+    }
+
+    pub fn retain(&mut self, page: PageId) -> Result<()> {
+        self.alloc.retain(page)
+    }
+
+    pub fn release(&mut self, page: PageId) -> Result<bool> {
+        self.alloc.release(page)
+    }
+
+    pub fn refcount(&self, page: PageId) -> u32 {
+        self.alloc.refcount(page)
+    }
+
+    /// Read a page (shared access is fine at any refcount).
+    pub fn page(&self, page: PageId) -> &[T] {
+        &self.data[page.0 as usize]
+    }
+
+    /// Write a page. Legal only on an exclusively held page — callers
+    /// go through [`PagePool::make_unique`] first.
+    pub fn page_mut(&mut self, page: PageId) -> Result<&mut [T]> {
+        anyhow::ensure!(
+            self.alloc.refcount(page) == 1,
+            "write to shared page {} (refcount {})",
+            page.0,
+            self.alloc.refcount(page)
+        );
+        Ok(&mut self.data[page.0 as usize])
+    }
+
+    /// Copy-on-write: return a page id the caller may write through.
+    /// Exclusive pages come back unchanged (`copied == false`); shared
+    /// pages are copied into a fresh page, the caller's reference moves
+    /// to the copy, and the original keeps its other holders.
+    pub fn make_unique(&mut self, page: PageId) -> Result<(PageId, bool)> {
+        anyhow::ensure!(
+            self.alloc.refcount(page) > 0,
+            "make_unique of freed page {}",
+            page.0
+        );
+        if self.alloc.refcount(page) == 1 {
+            return Ok((page, false));
+        }
+        let copy = self.data[page.0 as usize].clone();
+        let fresh = self.alloc.alloc()?;
+        // the allocator may have grown past the payload vec (freelist
+        // empty): materialize the new page's payload slot
+        let idx = fresh.0 as usize;
+        if idx == self.data.len() {
+            self.data.push(copy);
+        } else {
+            self.data[idx] = copy;
+        }
+        let freed = self.alloc.release(page)?;
+        debug_assert!(!freed, "shared page cannot free on CoW release");
+        Ok((fresh, true))
+    }
+}
+
+/// Pages needed to hold `tokens` tokens at `page_size` tokens per page.
+pub fn pages_for(tokens: usize, page_size: usize) -> usize {
+    tokens.div_ceil(page_size.max(1))
+}
+
+/// Serving-side KV admission accounting (paged replacement for the old
+/// full-sequence slot manager). Three budgets interact:
+///
+///  * **lanes** — fixed batch lanes in the cache store (one resident
+///    session each), exactly the old slot semantics;
+///  * **device pages** — a session is admitted only when
+///    `pinned + reserve_pages <= device_capacity`, where `reserve_pages`
+///    is the worst case (full sequence, both models). With the default
+///    capacity of `lanes * reserve_pages` this degenerates to pure lane
+///    admission — which is what keeps paged and monolithic serve runs
+///    byte-identical — while `--kv-pages` can tighten it so page budget,
+///    not lane count, becomes the admission gate;
+///  * **host pages** — suspended sessions retain their (unpinned) pages
+///    here; when retention would overflow, the caller spills (drops the
+///    pages, falls back to resume-by-re-prefill).
+#[derive(Debug)]
+pub struct KvPageManager {
+    lanes: usize,
+    free_lanes: Vec<usize>,
+    page_size: usize,
+    /// Worst-case pages pinned per resident session (main [+ proxy],
+    /// full sequence).
+    reserve_pages: usize,
+    device_capacity: usize,
+    host_capacity: usize,
+    /// Reserved pages of resident sessions.
+    pinned: usize,
+    /// Retained pages of suspended sessions.
+    host_held: usize,
+    peak_sessions: usize,
+    peak_pinned: usize,
+}
+
+impl KvPageManager {
+    /// `kv_pages` overrides the device capacity *and* bounds the
+    /// host-side retention of suspended pages. `None` keeps the
+    /// lane-equivalent device default (`lanes * reserve_pages`) with
+    /// unbounded host retention — so the default paged configuration
+    /// never spills, which is what keeps its serve runs byte-identical
+    /// to the monolithic store's.
+    pub fn new(
+        lanes: usize,
+        page_size: usize,
+        reserve_pages: usize,
+        kv_pages: Option<usize>,
+    ) -> KvPageManager {
+        let reserve_pages = reserve_pages.max(1);
+        let default_cap = lanes * reserve_pages;
+        // at least one worst-case session must fit, or admission could
+        // never make progress
+        let cap = kv_pages.unwrap_or(default_cap).max(reserve_pages);
+        KvPageManager {
+            lanes,
+            free_lanes: (0..lanes).rev().collect(),
+            page_size,
+            reserve_pages,
+            device_capacity: cap,
+            host_capacity: kv_pages.map(|p| p.max(reserve_pages)).unwrap_or(usize::MAX),
+            pinned: 0,
+            host_held: 0,
+            peak_sessions: 0,
+            peak_pinned: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn reserve_pages(&self) -> usize {
+        self.reserve_pages
+    }
+
+    pub fn device_capacity_pages(&self) -> usize {
+        self.device_capacity
+    }
+
+    /// Resident sessions.
+    pub fn in_use(&self) -> usize {
+        self.lanes - self.free_lanes.len()
+    }
+
+    /// Peak resident sessions.
+    pub fn peak(&self) -> usize {
+        self.peak_sessions
+    }
+
+    pub fn pinned_pages(&self) -> usize {
+        self.pinned
+    }
+
+    pub fn peak_pinned_pages(&self) -> usize {
+        self.peak_pinned
+    }
+
+    pub fn host_held_pages(&self) -> usize {
+        self.host_held
+    }
+
+    /// Sessions admissible right now: free lanes AND device page
+    /// headroom for a worst-case reservation each.
+    pub fn available(&self) -> usize {
+        let by_pages = (self.device_capacity - self.pinned.min(self.device_capacity))
+            / self.reserve_pages;
+        self.free_lanes.len().min(by_pages)
+    }
+
+    /// Resident-session utilization (lane-based, matching the old slot
+    /// manager's meaning for the metrics endpoint).
+    pub fn utilization(&self) -> f64 {
+        self.in_use() as f64 / self.lanes.max(1) as f64
+    }
+
+    /// Admit a session: claims a lane and pins a worst-case page
+    /// reservation. None when at lane or page capacity (backpressure).
+    pub fn acquire(&mut self) -> Option<SlotId> {
+        if self.pinned + self.reserve_pages > self.device_capacity {
+            return None;
+        }
+        let lane = self.free_lanes.pop()?;
+        self.pinned += self.reserve_pages;
+        self.peak_pinned = self.peak_pinned.max(self.pinned);
+        self.peak_sessions = self.peak_sessions.max(self.in_use());
+        Some(SlotId(lane))
+    }
+
+    /// Release a session's lane + pinned reservation (retire or
+    /// preemption).
     pub fn release(&mut self, slot: SlotId) -> Result<()> {
         anyhow::ensure!(
-            slot.0 < self.capacity && !self.free.contains(&slot.0),
-            "double free of KV slot {}",
+            slot.0 < self.lanes && !self.free_lanes.contains(&slot.0),
+            "double free of KV lane {}",
             slot.0
         );
-        self.free.push(slot.0);
-        self.in_use -= 1;
+        self.free_lanes.push(slot.0);
+        self.pinned -= self.reserve_pages;
         Ok(())
+    }
+
+    /// Try to retain `pages` unpinned pages of a suspending session on
+    /// the host-side budget. False = no room: the caller must spill
+    /// (drop the pages; the session resumes by re-prefill).
+    pub fn try_hold_suspended(&mut self, pages: usize) -> bool {
+        if self.host_held + pages > self.host_capacity {
+            return false;
+        }
+        self.host_held += pages;
+        true
+    }
+
+    /// Return a resuming (or spilled-at-resume) session's retained pages
+    /// to the host budget.
+    pub fn release_suspended(&mut self, pages: usize) {
+        debug_assert!(pages <= self.host_held, "suspended page accounting underflow");
+        self.host_held = self.host_held.saturating_sub(pages);
     }
 }
 
@@ -84,36 +455,106 @@ mod tests {
     use super::*;
 
     #[test]
-    fn acquire_release_cycle() {
-        let mut m = KvSlotManager::new(2, 1024);
+    fn alloc_retain_release_cycle() {
+        let mut a = PageAllocator::new_fixed(2);
+        let p = a.alloc().unwrap();
+        let q = a.alloc().unwrap();
+        assert_ne!(p, q);
+        assert!(a.alloc().is_err(), "over-allocation");
+        a.retain(p).unwrap();
+        assert_eq!(a.refcount(p), 2);
+        assert!(!a.release(p).unwrap(), "still referenced");
+        assert!(a.release(p).unwrap(), "freed exactly at zero");
+        assert!(a.release(p).is_err(), "double free undetected");
+        assert_eq!(a.in_use(), 1);
+        let r = a.alloc().unwrap();
+        assert_eq!(r, p, "freed page id reused");
+        let _ = q;
+    }
+
+    #[test]
+    fn retain_after_free_is_an_error() {
+        let mut a = PageAllocator::new_growable();
+        let p = a.alloc().unwrap();
+        a.release(p).unwrap();
+        assert!(a.retain(p).is_err());
+        assert_eq!(a.counters.allocs, 1);
+        assert_eq!(a.counters.frees, 1);
+    }
+
+    #[test]
+    fn pool_cow_copies_shared_pages_only() {
+        let mut pool: PagePool<u32> = PagePool::new_growable(4);
+        let p = pool.alloc_zeroed().unwrap();
+        pool.page_mut(p).unwrap()[0] = 7;
+        // exclusive: write in place
+        let (same, copied) = pool.make_unique(p).unwrap();
+        assert_eq!(same, p);
+        assert!(!copied);
+        // shared: copy, original preserved
+        pool.retain(p).unwrap();
+        let (fresh, copied) = pool.make_unique(p).unwrap();
+        assert!(copied);
+        assert_ne!(fresh, p);
+        assert_eq!(pool.page(fresh)[0], 7);
+        pool.page_mut(fresh).unwrap()[0] = 9;
+        assert_eq!(pool.page(p)[0], 7, "CoW leaked into the shared page");
+        assert_eq!(pool.refcount(p), 1);
+        assert_eq!(pool.refcount(fresh), 1);
+    }
+
+    #[test]
+    fn shared_page_write_refused() {
+        let mut pool: PagePool<u32> = PagePool::new_growable(2);
+        let p = pool.alloc_zeroed().unwrap();
+        pool.retain(p).unwrap();
+        assert!(pool.page_mut(p).is_err(), "write through a shared page");
+    }
+
+    #[test]
+    fn manager_defaults_degenerate_to_lane_admission() {
+        let mut m = KvPageManager::new(2, 16, 8, None);
+        assert_eq!(m.available(), 2);
         let a = m.acquire().unwrap();
         let b = m.acquire().unwrap();
         assert_ne!(a, b);
         assert!(m.acquire().is_none(), "over-admission");
         assert_eq!(m.in_use(), 2);
-        assert_eq!(m.bytes_in_use(), 2048);
+        assert_eq!(m.pinned_pages(), 16);
         m.release(a).unwrap();
+        assert!(m.release(a).is_err(), "double lane free");
         assert_eq!(m.available(), 1);
         let c = m.acquire().unwrap();
-        assert_eq!(c, a); // slot reused
+        assert_eq!(c, a, "lane reused");
     }
 
     #[test]
-    fn double_free_detected() {
-        let mut m = KvSlotManager::new(1, 1);
+    fn tight_page_budget_gates_admission_below_lane_count() {
+        // 4 lanes but pages for only one worst-case session
+        let mut m = KvPageManager::new(4, 16, 8, Some(8));
+        assert_eq!(m.available(), 1);
         let a = m.acquire().unwrap();
+        assert!(m.acquire().is_none(), "page budget must gate admission");
         m.release(a).unwrap();
-        assert!(m.release(a).is_err());
+        assert!(m.acquire().is_some());
     }
 
     #[test]
-    fn peak_tracking() {
-        let mut m = KvSlotManager::new(3, 1);
-        let a = m.acquire().unwrap();
-        let b = m.acquire().unwrap();
-        m.release(a).unwrap();
-        let _c = m.acquire().unwrap();
-        assert_eq!(m.peak(), 2);
-        let _ = b;
+    fn host_budget_spill_accounting() {
+        let mut m = KvPageManager::new(1, 16, 8, Some(8));
+        assert!(m.try_hold_suspended(5));
+        assert!(m.try_hold_suspended(3));
+        assert!(!m.try_hold_suspended(1), "host budget exceeded");
+        m.release_suspended(5);
+        assert!(m.try_hold_suspended(4));
+        assert_eq!(m.host_held_pages(), 7);
+    }
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(pages_for(0, 16), 0);
+        assert_eq!(pages_for(1, 16), 1);
+        assert_eq!(pages_for(16, 16), 1);
+        assert_eq!(pages_for(17, 16), 2);
     }
 }

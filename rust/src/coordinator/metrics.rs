@@ -28,10 +28,17 @@ pub struct ServeMetrics {
     pub rollout_tokens: u64,
     /// KV-slot evictions of long-stalled sessions (EAT-aware mode).
     pub preemptions: u64,
-    /// Suspended sessions readmitted by re-prefill.
+    /// Suspended sessions readmitted (page repin or re-prefill).
     pub resumes: u64,
-    /// Tokens re-prefilled to rebuild evicted KV state on resume.
+    /// Tokens restored on resume — re-prefilled under the monolithic
+    /// store, repinned for free under the paged store; counted
+    /// identically in both so same-seed runs stay byte-comparable
+    /// across stores.
     pub resume_prefill_tokens: u64,
+    /// Suspended sessions whose retained pages were spilled (host page
+    /// budget full): their resume falls back to re-prefill. Always 0
+    /// on the monolithic store and under the default page budget.
+    pub kv_spills: u64,
     /// Completions that finished past their SLO deadline.
     pub deadline_misses: u64,
     pub latency_ms: Summary,
@@ -60,6 +67,7 @@ impl ServeMetrics {
             preemptions: 0,
             resumes: 0,
             resume_prefill_tokens: 0,
+            kv_spills: 0,
             deadline_misses: 0,
             latency_ms: Summary::new(),
             queue_ms: Summary::new(),
@@ -111,6 +119,10 @@ impl ServeMetrics {
     pub fn record_resume(&mut self, prefill_tokens: usize) {
         self.resumes += 1;
         self.resume_prefill_tokens += prefill_tokens as u64;
+    }
+
+    pub fn record_spill(&mut self) {
+        self.kv_spills += 1;
     }
 
     /// Append a slot-occupancy sample if occupancy changed.
@@ -194,6 +206,7 @@ impl ServeMetrics {
             ("preemptions", Json::num(self.preemptions as f64)),
             ("resumes", Json::num(self.resumes as f64)),
             ("resume_prefill_tokens", Json::num(self.resume_prefill_tokens as f64)),
+            ("kv_spills", Json::num(self.kv_spills as f64)),
             ("deadline_misses", Json::num(self.deadline_misses as f64)),
             ("elapsed_s", Json::num(self.elapsed_s())),
             ("latency_ms", summary(&self.latency_ms)),
@@ -233,8 +246,12 @@ impl ServeMetrics {
             self.reasoning_tokens, self.probe_count, self.rollout_tokens
         );
         s += &format!(
-            "scheduler          preemptions {}  resumes {} (re-prefill {} tok)  deadline misses {}\n",
-            self.preemptions, self.resumes, self.resume_prefill_tokens, self.deadline_misses
+            "scheduler          preemptions {}  resumes {} (restored {} tok)  spills {}  deadline misses {}\n",
+            self.preemptions,
+            self.resumes,
+            self.resume_prefill_tokens,
+            self.kv_spills,
+            self.deadline_misses
         );
         s += "exit reasons       ";
         for (k, v) in &self.exit_reasons {

@@ -10,9 +10,10 @@
 //!    preempt/resume-by-re-prefill under contention (DESIGN.md §3.4)
 //!  * `workload`    — open-loop Poisson workload driver (deterministic
 //!    under a virtual clock)
-//!  * `batch_cache` — slot-major cache store with dirty-slot upload
-//!    accounting
-//!  * `kv`          — KV slot manager (capacity + backpressure)
+//!  * `batch_cache` — slot-major cache store with page-granular dirty
+//!    upload accounting
+//!  * `kv`          — paged KV subsystem: refcounted page allocator,
+//!    copy-on-write page pool, page-budget admission manager
 //!  * `metrics`     — serving metrics (clock-injected, JSON snapshot)
 
 pub mod batch_cache;
@@ -28,6 +29,6 @@ pub use engine::{
     resume_session, serve_one, MonitorModel, ProbeTarget, ReasoningSession, RequestResult,
     StepWork,
 };
-pub use kv::KvSlotManager;
+pub use kv::{KvPageManager, PageAllocator, PageId, PagePool, DEFAULT_PAGE_SIZE};
 pub use metrics::ServeMetrics;
 pub use workload::{poisson_arrivals, run_open_loop};

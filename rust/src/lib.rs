@@ -13,8 +13,9 @@
 //!    the in-process reference model
 //!  * [`coordinator`] — split-phase sessions (`poll()`/`complete_*`),
 //!    continuous batcher with an EAT-aware preemptive scheduler (one
-//!    fused decode per tick, preempt/resume-by-re-prefill, virtual-clock
-//!    deterministic simulation), slot-major batch cache store, KV manager
+//!    fused decode per tick, preempt/resume by page repin with a
+//!    re-prefill fallback, virtual-clock deterministic simulation),
+//!    slot-major batch cache store, paged copy-on-write KV subsystem
 //!  * [`exit`]        — EAT (Alg. 1) + token/#UA@K/confidence baselines
 //!  * [`monitor`]     — EMA variance estimator + trajectory records
 //!  * [`blackbox`]    — streaming-API simulation + local proxy monitoring

@@ -38,6 +38,7 @@ COMMANDS
             [--delta X] [--alpha A] [--budget T] [--proxy] [--seed K]
             [--sequential] [--sched fifo|eat] [--deadline S]
             [--rate R] [--virtual] [--metrics-json FILE]
+            [--kv-store paged|mono] [--page-size P] [--kv-pages N]
   trace     --dataset D [--out FILE] [--max-questions N] [--swap-models]
             [--no-confidence] [--seed K]
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
@@ -47,8 +48,11 @@ FLAG DEFAULTS
   --artifacts artifacts   --traces-dir results/traces   --out-dir results
   --alpha 0.2  --delta 1e-3  --budget 96  --slots 4  --seed 0
   --sched fifo  --deadline 60  --rate 0 (submit all upfront)
+  --kv-store paged  --page-size 16  --kv-pages slots*pages-per-session
   (--rate R > 0 drives open-loop Poisson arrivals; with --virtual the
-   run is simulated on a virtual clock and fully seed-deterministic)
+   run is simulated on a virtual clock and fully seed-deterministic.
+   --kv-store mono keeps the monolithic full-sequence store — the
+   equivalence oracle: same seed, byte-identical metrics JSON)
 "
     );
     std::process::exit(2);
@@ -61,15 +65,42 @@ fn serve_cfg(args: &Args) -> ServeConfig {
     cfg.max_think_tokens = args.usize_or("budget", cfg.max_think_tokens);
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.prefixed_probe = !args.has("no-prefix");
+    cfg.kv_pages = args.usize_opt("kv-pages");
     cfg
 }
 
-fn load_runtime(args: &Args) -> Runtime {
-    Runtime::load_or_reference(args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS))
+/// KV store selection: `Some(page_size)` = paged (the default), `None`
+/// = monolithic full-sequence caches (the equivalence oracle). Paged
+/// tuning flags combined with the monolithic store are rejected rather
+/// than silently ignored.
+fn kv_page_size(args: &Args) -> Result<Option<usize>> {
+    match args.str_or("kv-store", "paged") {
+        "paged" => Ok(Some(args.usize_or(
+            "page-size",
+            eat_serve::coordinator::DEFAULT_PAGE_SIZE,
+        ))),
+        "mono" | "monolithic" => {
+            anyhow::ensure!(
+                !args.has("page-size"),
+                "--page-size applies to the paged store (drop it, or use --kv-store paged)"
+            );
+            Ok(None)
+        }
+        other => anyhow::bail!("unknown --kv-store `{other}` (paged|mono)"),
+    }
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    load_runtime_with(args, kv_page_size(args)?)
+}
+
+fn load_runtime_with(args: &Args, page_size: Option<usize>) -> Result<Runtime> {
+    let dir = args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS);
+    Ok(Runtime::load_or_reference_with(dir, page_size))
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let rt = load_runtime(args);
+    let rt = load_runtime(args)?;
     println!("backend         {}", rt.backend_kind());
     for b in [&rt.main, &rt.proxy] {
         println!("model {}", b.describe());
@@ -117,7 +148,14 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let rt = load_runtime(args);
+    let page_size = kv_page_size(args)?;
+    // a mono "page" is a whole full-sequence cache, so a page count is
+    // not comparable across stores — refuse the mix rather than gate
+    // admission on silently different budgets
+    if args.has("kv-pages") && page_size.is_none() {
+        anyhow::bail!("--kv-pages applies to the paged store (drop it, or use --kv-store paged)");
+    }
+    let rt = load_runtime_with(args, page_size)?;
     let mut cfg = serve_cfg(args);
     cfg.sched.mode = match args.str_or("sched", "fifo") {
         "fifo" => SchedMode::Fifo,
@@ -165,15 +203,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("{}", batcher.metrics.report());
     println!("kv slots        peak {} / {}", batcher.kv_peak(), slots);
+    let kvp = batcher.kv_pages();
+    println!(
+        "kv pages        size {} tok  reserve {}/session  peak pinned {} / {}  suspended-held {}",
+        kvp.page_size(),
+        kvp.reserve_pages(),
+        kvp.peak_pinned_pages(),
+        kvp.device_capacity_pages(),
+        kvp.host_held_pages()
+    );
     let sc = batcher.store_counters();
     let mc = rt.main.counters();
     println!(
-        "batch decode    fused_calls {}  lanes {} (resident {})  dirty uploads {}  single decodes {}",
+        "batch decode    fused_calls {}  lanes {} (resident {})  dirty uploads {} ({} pages)  single decodes {}",
         mc.batch_decodes.get(),
         mc.batch_lanes.get(),
         mc.batch_resident_lanes.get(),
         sc.dirty_lane_uploads,
+        sc.dirty_page_uploads,
         mc.decodes.get()
+    );
+    println!(
+        "paged kv        cow_forks {}  pages_shared {}  pages_copied {}  prefills {}",
+        mc.cow_forks.get(),
+        mc.pages_shared.get(),
+        mc.pages_copied.get(),
+        mc.prefills.get()
     );
     if let Some(path) = args.str_opt("metrics-json") {
         std::fs::write(path, batcher.metrics.to_json().to_string())?;
@@ -183,7 +238,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
-    let rt = load_runtime(args);
+    let rt = load_runtime(args)?;
     let cfg = serve_cfg(args);
     let dataset = args.str_or("dataset", "synth-math500");
     let swap = args.has("swap-models");
@@ -246,7 +301,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
                 Err(e) => println!("[fig{f}] skipped: {e}"),
             }
         }
-        let rt = load_runtime(args);
+        let rt = load_runtime(args)?;
         for f in figures::LIVE_FIGS {
             match figures::run_live(&ctx, &rt, f) {
                 Ok(_) => ran += 1,
@@ -256,7 +311,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     } else if figures::run_offline(&ctx, fig)? {
         ran += 1;
     } else {
-        let rt = load_runtime(args);
+        let rt = load_runtime(args)?;
         if figures::run_live(&ctx, &rt, fig)? {
             ran += 1;
         } else {
@@ -268,7 +323,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_blackbox(args: &Args) -> Result<()> {
-    let rt = load_runtime(args);
+    let rt = load_runtime(args)?;
     let ctx = {
         let mut c = FigureCtx::new(
             args.str_or("traces-dir", eat_serve::DEFAULT_TRACES),

@@ -40,6 +40,16 @@ pub struct RuntimeCounters {
     /// itself is still uploaded/downloaded once per call: the tuple
     /// output API offers no device-side buffer reuse; see DESIGN.md §6.)
     pub batch_resident_lanes: Cell<u64>,
+    /// Copy-on-write cache forks (paged store only; a monolithic fork
+    /// deep-copies and bumps nothing here).
+    pub cow_forks: Cell<u64>,
+    /// KV pages physically copied — CoW on the first divergent write of
+    /// a shared page. Zero for probe-only steps (the acceptance bar the
+    /// batching tests pin down: the EAT probe never copies cache state).
+    pub pages_copied: Cell<u64>,
+    /// Page references added by forks (refcount bumps instead of data
+    /// copies).
+    pub pages_shared: Cell<u64>,
 }
 
 impl RuntimeCounters {
@@ -117,8 +127,16 @@ pub trait Backend {
     }
 
     /// Elements of one K (or V) cache tensor per sequence — the unit the
-    /// KV slot manager budgets in.
+    /// KV page manager converts into a byte budget.
     fn cache_elems(&self) -> usize;
+
+    /// Tokens per KV page when this backend stores caches in a paged,
+    /// refcounted pool (`None` = monolithic full-sequence caches). The
+    /// batch store and the scheduler use this for page-granular dirty
+    /// tracking and page-budget admission (DESIGN.md §3.5).
+    fn page_size(&self) -> Option<usize> {
+        None
+    }
 
     /// Parameter count (for `repro info`).
     fn param_elems(&self) -> usize;

@@ -54,16 +54,22 @@ impl Runtime {
     /// `artifacts/` directory); errors otherwise so callers can skip or
     /// fall back.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        Runtime::load_impl(artifacts_dir.as_ref())
+        Runtime::load_with(artifacts_dir, None)
+    }
+
+    /// Load the AOT artifacts with an optional paged KV store
+    /// (`page_size` tokens per page; `None` = monolithic mirrors).
+    pub fn load_with(artifacts_dir: impl AsRef<Path>, page_size: Option<usize>) -> Result<Runtime> {
+        Runtime::load_impl(artifacts_dir.as_ref(), page_size)
     }
 
     #[cfg(feature = "pjrt")]
-    fn load_impl(dir: &Path) -> Result<Runtime> {
+    fn load_impl(dir: &Path, page_size: Option<usize>) -> Result<Runtime> {
         use std::rc::Rc;
         let cfg = ArtifactsConfig::load(dir)?;
         let client = Rc::new(Client::cpu()?);
-        let main = PjrtBackend::load(client.clone(), &cfg.dir, &cfg.main)?;
-        let proxy = PjrtBackend::load(client, &cfg.dir, &cfg.proxy)?;
+        let main = PjrtBackend::load_with(client.clone(), &cfg.dir, &cfg.main, page_size)?;
+        let proxy = PjrtBackend::load_with(client, &cfg.dir, &cfg.proxy, page_size)?;
         Ok(Runtime {
             vocab: cfg.vocab,
             main: Box::new(main),
@@ -73,7 +79,7 @@ impl Runtime {
     }
 
     #[cfg(not(feature = "pjrt"))]
-    fn load_impl(dir: &Path) -> Result<Runtime> {
+    fn load_impl(dir: &Path, _page_size: Option<usize>) -> Result<Runtime> {
         anyhow::bail!(
             "cannot load artifacts from {}: built without the `pjrt` feature \
              (use Runtime::reference(), or rebuild with `--features pjrt`)",
@@ -82,28 +88,77 @@ impl Runtime {
     }
 
     /// The deterministic in-process reference runtime: no artifacts, no
-    /// PJRT, bit-reproducible from seeds alone.
+    /// PJRT, bit-reproducible from seeds alone. Caches live in a paged
+    /// copy-on-write store at the default page size (DESIGN.md §3.5).
     pub fn reference() -> Runtime {
+        Runtime::reference_paged(crate::coordinator::kv::DEFAULT_PAGE_SIZE)
+    }
+
+    /// Paged reference runtime at an explicit page size.
+    pub fn reference_paged(page_size: usize) -> Runtime {
         let vocab = Vocab::default_layout();
         Runtime {
             vocab,
-            main: Box::new(RefBackend::main(vocab)),
-            proxy: Box::new(RefBackend::proxy(vocab)),
+            main: Box::new(RefBackend::with_pages(
+                "ref-main",
+                vocab,
+                128,
+                Some(8),
+                Some(page_size),
+            )),
+            proxy: Box::new(RefBackend::with_pages(
+                "ref-proxy",
+                vocab,
+                128,
+                None,
+                Some(page_size),
+            )),
+            artifacts: None,
+        }
+    }
+
+    /// Monolithic full-sequence reference runtime: the pre-paging cache
+    /// representation, kept as the equivalence oracle — same-seed serve
+    /// runs must emit byte-identical metrics against either store.
+    pub fn reference_monolithic() -> Runtime {
+        let vocab = Vocab::default_layout();
+        Runtime {
+            vocab,
+            main: Box::new(RefBackend::monolithic("ref-main", vocab, 128, Some(8))),
+            proxy: Box::new(RefBackend::monolithic("ref-proxy", vocab, 128, None)),
             artifacts: None,
         }
     }
 
     /// Artifacts when present, otherwise the reference runtime (with a
-    /// note) — the zero-setup path for the CLI and examples.
+    /// note) — the zero-setup path for the CLI and examples. Paged at
+    /// the default page size; see [`Runtime::load_or_reference_with`].
     pub fn load_or_reference(artifacts_dir: impl AsRef<Path>) -> Runtime {
-        match Runtime::load(&artifacts_dir) {
+        Runtime::load_or_reference_with(
+            artifacts_dir,
+            Some(crate::coordinator::kv::DEFAULT_PAGE_SIZE),
+        )
+    }
+
+    /// [`Runtime::load_or_reference`] with an explicit KV store choice:
+    /// `Some(page_size)` = paged, `None` = monolithic — applied to the
+    /// artifacts when they load and to the reference fallback alike
+    /// (the CLI's `--kv-store`/`--page-size` flags route here).
+    pub fn load_or_reference_with(
+        artifacts_dir: impl AsRef<Path>,
+        page_size: Option<usize>,
+    ) -> Runtime {
+        match Runtime::load_with(&artifacts_dir, page_size) {
             Ok(rt) => rt,
             Err(e) => {
                 eprintln!(
                     "note: PJRT artifacts unavailable ({e:#}); using the \
                      deterministic reference backend"
                 );
-                Runtime::reference()
+                match page_size {
+                    Some(p) => Runtime::reference_paged(p),
+                    None => Runtime::reference_monolithic(),
+                }
             }
         }
     }

@@ -6,10 +6,12 @@
 //! at load time and stay resident. Because PJRT hands multi-output
 //! results back as a *single tuple buffer* (no untupling in the `xla`
 //! crate), every step downloads the output tuple; the host mirror this
-//! produces is kept on the [`KvCache`] and doubles as the cheap
-//! cache-fork mechanism that rollout-based baselines (#UA@K, Alg. 3)
-//! need. Two things keep the batched hot path off the per-slot copy
-//! treadmill:
+//! produces is kept on the [`KvCache`] — either as dense arrays
+//! (monolithic mode) or as refcounted page tables into a shared pool
+//! (paged mode, DESIGN.md §3.5), where `fork` is O(pages) refcount
+//! bumps and a committed write scatters exactly one position with
+//! copy-on-write. Two things keep the batched hot path off the
+//! per-slot copy treadmill:
 //!
 //!  * per-slot *device* buffers are lazy — they are only materialized
 //!    when a single-sequence entry point (decode / probe) actually needs
@@ -31,12 +33,54 @@ use super::backend::{Backend, BackendCache, BatchLane, RuntimeCounters};
 use super::client::{lit_f32_scalar, lit_f32_vec, Client, Executable};
 use super::weights::Weights;
 use crate::config::ModelConfig;
+use crate::coordinator::kv::{PageId, PagePool};
 
-/// Per-sequence KV cache: host mirror + lazily materialized device
-/// buffers + write position.
+/// Paged host mirror: K and V page tables into the model's shared f32
+/// pool (DESIGN.md §3.5). One page holds `page_size` sequence positions
+/// laid out `[L, H, P, Dh]`, so a page slice of the dense `[L, H, S,
+/// Dh]` cache is a per-(layer, head) run of contiguous rows. Cloning
+/// retains every page (the CoW fork); dropping releases them; writes go
+/// through `make_unique`.
+struct PagedKv {
+    pool: Rc<RefCell<PagePool<f32>>>,
+    kp: Vec<PageId>,
+    vp: Vec<PageId>,
+}
+
+impl Clone for PagedKv {
+    fn clone(&self) -> PagedKv {
+        let mut pool = self.pool.borrow_mut();
+        for pg in self.kp.iter().chain(&self.vp) {
+            pool.retain(*pg).expect("cloning a cache with live pages");
+        }
+        PagedKv {
+            pool: self.pool.clone(),
+            kp: self.kp.clone(),
+            vp: self.vp.clone(),
+        }
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for pg in self.kp.drain(..).chain(self.vp.drain(..)) {
+            let _ = pool.release(pg);
+        }
+    }
+}
+
+/// Host-side cache representation: monolithic dense mirrors (the PR 3
+/// oracle) or refcounted page tables.
+enum KvStore {
+    Mono { kc: Vec<f32>, vc: Vec<f32> },
+    Paged(PagedKv),
+}
+
+/// Per-sequence KV cache: host mirror (dense or paged) + lazily
+/// materialized device buffers + write position.
 pub struct KvCache {
-    kc_host: Vec<f32>,
-    vc_host: Vec<f32>,
+    store: KvStore,
     /// Next write position (== number of committed tokens).
     pub pos: usize,
     /// Unique cache identity (survives moves; used by the fused-batch
@@ -58,7 +102,13 @@ struct DevBuffers {
 impl KvCache {
     /// Bytes held by this cache's K + V image, for the KV manager.
     pub fn device_bytes(&self) -> usize {
-        (self.kc_host.len() + self.vc_host.len()) * 4
+        match &self.store {
+            KvStore::Mono { kc, vc } => (kc.len() + vc.len()) * 4,
+            KvStore::Paged(p) => {
+                let per_page = p.pool.borrow().page_elems();
+                (p.kp.len() + p.vp.len()) * per_page * 4
+            }
+        }
     }
 }
 
@@ -71,6 +121,14 @@ struct BatchScratch {
     lane_tag: Vec<Option<(u64, u64)>>,
 }
 
+/// Paged-store configuration of one model: the shared f32 page pool
+/// plus the page geometry.
+struct PagedCfg {
+    pool: Rc<RefCell<PagePool<f32>>>,
+    /// Sequence positions per page.
+    page_size: usize,
+}
+
 /// One loaded model: compiled executables + resident weights.
 pub struct ModelRuntime {
     pub cfg: ModelConfig,
@@ -79,13 +137,32 @@ pub struct ModelRuntime {
     exe_decode: Executable,
     exe_probe: Executable,
     exe_decode_batch: Option<Executable>,
+    /// `Some` = caches are page tables into a shared pool (CoW forks);
+    /// `None` = monolithic dense host mirrors.
+    paged: Option<PagedCfg>,
     pub counters: RuntimeCounters,
     next_cache_id: Cell<u64>,
     batch_scratch: RefCell<BatchScratch>,
+    /// Reusable dense K/V gather target for single-sequence uploads of
+    /// paged caches (keeps the per-decode hot path allocation-free,
+    /// like the monolithic mirror it replaces).
+    dense_scratch: RefCell<(Vec<f32>, Vec<f32>)>,
 }
 
 impl ModelRuntime {
+    /// Load with monolithic caches (the PR 3 oracle representation).
     pub fn load(client: &Client, dir: &Path, cfg: &ModelConfig) -> Result<ModelRuntime> {
+        ModelRuntime::load_with(client, dir, cfg, None)
+    }
+
+    /// Load with an optional paged KV store (`page_size` tokens per
+    /// page).
+    pub fn load_with(
+        client: &Client,
+        dir: &Path,
+        cfg: &ModelConfig,
+        page_size: Option<usize>,
+    ) -> Result<ModelRuntime> {
         let weights = Weights::load(
             client,
             &dir.join(&cfg.manifest),
@@ -106,6 +183,15 @@ impl ModelRuntime {
             .as_ref()
             .map(|f| client.compile_hlo_text(&dir.join(f)))
             .transpose()?;
+        let paged = page_size.map(|p| {
+            let p = p.clamp(1, cfg.seq_len);
+            PagedCfg {
+                pool: Rc::new(RefCell::new(PagePool::new_growable(
+                    cfg.n_layer * cfg.n_head * p * cfg.d_head,
+                ))),
+                page_size: p,
+            }
+        });
         Ok(ModelRuntime {
             cfg: cfg.clone(),
             weights,
@@ -113,10 +199,17 @@ impl ModelRuntime {
             exe_decode,
             exe_probe,
             exe_decode_batch,
+            paged,
             counters: RuntimeCounters::default(),
             next_cache_id: Cell::new(0),
             batch_scratch: RefCell::new(BatchScratch::default()),
+            dense_scratch: RefCell::new((Vec::new(), Vec::new())),
         })
+    }
+
+    /// Tokens per KV page (None = monolithic caches).
+    pub fn page_size(&self) -> Option<usize> {
+        self.paged.as_ref().map(|p| p.page_size)
     }
 
     fn args_with<'a>(&'a self, extra: &[&'a PjRtBuffer]) -> Vec<&'a PjRtBuffer> {
@@ -134,12 +227,11 @@ impl ModelRuntime {
         ]
     }
 
-    fn new_cache(&self, kc_host: Vec<f32>, vc_host: Vec<f32>, pos: usize) -> KvCache {
+    fn fresh_cache(&self, store: KvStore, pos: usize) -> KvCache {
         let id = self.next_cache_id.get();
         self.next_cache_id.set(id + 1);
         KvCache {
-            kc_host,
-            vc_host,
+            store,
             pos,
             id,
             gen: 0,
@@ -147,16 +239,157 @@ impl ModelRuntime {
         }
     }
 
+    /// Build one side's page table from a downloaded dense `[L, H, S,
+    /// Dh]` image, covering `pos` committed positions.
+    fn side_pages_from_dense(
+        &self,
+        pool: &mut PagePool<f32>,
+        page_size: usize,
+        dense: &[f32],
+        pos: usize,
+    ) -> Result<Vec<PageId>> {
+        let (lh, s, dh) = (self.cfg.n_layer * self.cfg.n_head, self.cfg.seq_len, self.cfg.d_head);
+        let n_pages = crate::coordinator::kv::pages_for(pos, page_size);
+        let mut pages = Vec::with_capacity(n_pages);
+        for pi in 0..n_pages {
+            let id = pool.alloc_zeroed()?;
+            let base = pi * page_size;
+            let take = page_size.min(pos - base);
+            let page = pool.page_mut(id)?;
+            for b in 0..lh {
+                let src = (b * s + base) * dh;
+                let dst = b * page_size * dh;
+                page[dst..dst + take * dh].copy_from_slice(&dense[src..src + take * dh]);
+            }
+            pages.push(id);
+        }
+        Ok(pages)
+    }
+
+    /// Gather one side's dense `[L, H, S, Dh]` image from its page
+    /// table into `out` (zero-filled beyond the committed positions —
+    /// the kernels mask everything at or past `pos` anyway).
+    fn gather_side(
+        &self,
+        pool: &PagePool<f32>,
+        page_size: usize,
+        pages: &[PageId],
+        out: &mut [f32],
+    ) {
+        let (lh, s, dh) = (self.cfg.n_layer * self.cfg.n_head, self.cfg.seq_len, self.cfg.d_head);
+        out.fill(0.0);
+        for (pi, pg) in pages.iter().enumerate() {
+            let data = pool.page(*pg);
+            let base = pi * page_size;
+            let take = page_size.min(s - base);
+            for b in 0..lh {
+                let dst = (b * s + base) * dh;
+                let src = b * page_size * dh;
+                out[dst..dst + take * dh].copy_from_slice(&data[src..src + take * dh]);
+            }
+        }
+    }
+
+    /// Run `f` over the dense K/V image of the cache — borrowed
+    /// directly for monolithic mirrors, gathered from the page tables
+    /// into the reusable `dense_scratch` otherwise (no per-call
+    /// allocation on the hot path).
+    fn with_dense<R>(
+        &self,
+        cache: &KvCache,
+        f: impl FnOnce(&[f32], &[f32]) -> Result<R>,
+    ) -> Result<R> {
+        match &cache.store {
+            KvStore::Mono { kc, vc } => f(kc, vc),
+            KvStore::Paged(p) => {
+                let paged = self.paged.as_ref().context("paged cache on a mono runtime")?;
+                let pool = p.pool.borrow();
+                let elems: usize = self.cache_dims().iter().product();
+                let mut scratch = self.dense_scratch.borrow_mut();
+                let (kc, vc) = &mut *scratch;
+                kc.resize(elems, 0.0);
+                vc.resize(elems, 0.0);
+                self.gather_side(&pool, paged.page_size, &p.kp, kc);
+                self.gather_side(&pool, paged.page_size, &p.vp, vc);
+                drop(pool);
+                f(kc, vc)
+            }
+        }
+    }
+
+    /// Scatter the single position `s` of a downloaded dense image into
+    /// one side's page table: alloc the covering page on first touch,
+    /// CoW it if shared, write the per-(layer, head) rows. Returns true
+    /// when a page was physically copied.
+    fn scatter_position(
+        &self,
+        pool: &mut PagePool<f32>,
+        page_size: usize,
+        pages: &mut Vec<PageId>,
+        dense: &[f32],
+        s: usize,
+    ) -> Result<bool> {
+        let (lh, seq, dh) = (self.cfg.n_layer * self.cfg.n_head, self.cfg.seq_len, self.cfg.d_head);
+        let (pi, r) = (s / page_size, s % page_size);
+        while pages.len() <= pi {
+            pages.push(pool.alloc_zeroed()?);
+        }
+        let (id, copied) = pool.make_unique(pages[pi])?;
+        pages[pi] = id;
+        let page = pool.page_mut(id)?;
+        for b in 0..lh {
+            let src = (b * seq + s) * dh;
+            let dst = (b * page_size + r) * dh;
+            page[dst..dst + dh].copy_from_slice(&dense[src..src + dh]);
+        }
+        Ok(copied)
+    }
+
+    /// Install the downloaded dense K/V of a step that wrote position
+    /// `s` into the host mirror: full replacement for monolithic
+    /// mirrors, a one-position CoW scatter for paged ones.
+    fn commit_written(
+        &self,
+        cache: &mut KvCache,
+        kc: Vec<f32>,
+        vc: Vec<f32>,
+        s: usize,
+    ) -> Result<()> {
+        match &mut cache.store {
+            KvStore::Mono { kc: mkc, vc: mvc } => {
+                *mkc = kc;
+                *mvc = vc;
+            }
+            KvStore::Paged(p) => {
+                let paged = self.paged.as_ref().context("paged cache on a mono runtime")?;
+                let mut pool = p.pool.borrow_mut();
+                let ck = self.scatter_position(&mut pool, paged.page_size, &mut p.kp, &kc, s)?;
+                let cv = self.scatter_position(&mut pool, paged.page_size, &mut p.vp, &vc, s)?;
+                RuntimeCounters::add(&self.counters.pages_copied, ck as u64 + cv as u64);
+            }
+        }
+        cache.pos += 1;
+        cache.gen += 1;
+        Ok(())
+    }
+
     /// Materialize (or refresh) the per-slot device buffers from the host
     /// mirror. Lazy so that fused-batch-only slots never pay this upload.
     fn ensure_device(&self, client: &Client, cache: &KvCache) -> Result<()> {
-        let mut dev = cache.dev.borrow_mut();
-        if dev.kc.is_none() || dev.gen != cache.gen {
-            let dims = self.cache_dims();
-            dev.kc = Some(client.buf_f32(&cache.kc_host, &dims)?);
-            dev.vc = Some(client.buf_f32(&cache.vc_host, &dims)?);
-            dev.gen = cache.gen;
+        {
+            let dev = cache.dev.borrow();
+            if dev.kc.is_some() && dev.gen == cache.gen {
+                return Ok(());
+            }
         }
+        let dims = self.cache_dims();
+        let (kc_buf, vc_buf) = self.with_dense(cache, |kc, vc| {
+            Ok((client.buf_f32(kc, &dims)?, client.buf_f32(vc, &dims)?))
+        })?;
+        let mut dev = cache.dev.borrow_mut();
+        dev.kc = Some(kc_buf);
+        dev.vc = Some(vc_buf);
+        dev.gen = cache.gen;
         Ok(())
     }
 
@@ -182,9 +415,19 @@ impl ModelRuntime {
         RuntimeCounters::bump(&self.counters.prefills);
 
         let logits = lit_f32_vec(&outs[0])?;
-        let kc_host = lit_f32_vec(&outs[1])?;
-        let vc_host = lit_f32_vec(&outs[2])?;
-        Ok((logits, self.new_cache(kc_host, vc_host, tokens.len())))
+        let kc = lit_f32_vec(&outs[1])?;
+        let vc = lit_f32_vec(&outs[2])?;
+        let store = match &self.paged {
+            Some(paged) => {
+                let mut pool = paged.pool.borrow_mut();
+                let kp = self.side_pages_from_dense(&mut pool, paged.page_size, &kc, tokens.len())?;
+                let vp = self.side_pages_from_dense(&mut pool, paged.page_size, &vc, tokens.len())?;
+                drop(pool);
+                KvStore::Paged(PagedKv { pool: paged.pool.clone(), kp, vp })
+            }
+            None => KvStore::Mono { kc, vc },
+        };
+        Ok((logits, self.fresh_cache(store, tokens.len())))
     }
 
     /// One committed decode step: writes K/V at `cache.pos`, returns the
@@ -210,10 +453,12 @@ impl ModelRuntime {
         RuntimeCounters::bump(&self.counters.decodes);
 
         let logits = lit_f32_vec(&outs[0])?;
-        cache.kc_host = lit_f32_vec(&outs[1])?;
-        cache.vc_host = lit_f32_vec(&outs[2])?;
-        cache.pos += 1;
-        cache.gen += 1;
+        let kc = lit_f32_vec(&outs[1])?;
+        let vc = lit_f32_vec(&outs[2])?;
+        // the kernel wrote K/V at the old `pos` only; the paged mirror
+        // scatters exactly that position (CoW on a shared tail page)
+        let written = cache.pos;
+        self.commit_written(cache, kc, vc, written)?;
         Ok(logits)
     }
 
@@ -251,12 +496,27 @@ impl ModelRuntime {
         Ok((lit_f32_scalar(&outs[0])?, lit_f32_vec(&outs[1])?))
     }
 
-    /// Fork a cache (host mirror cloned; device buffers materialize
-    /// lazily) — used by rollout-based baselines that must decode
+    /// Fork a cache — used by rollout-based baselines that must decode
     /// hypothetical continuations without disturbing the request's real
-    /// cache.
+    /// cache. On the paged store this is O(pages) refcount bumps
+    /// (copy-on-write divergence); monolithic mirrors pay the full
+    /// deep copy.
     pub fn fork_cache(&self, _client: &Client, cache: &KvCache) -> Result<KvCache> {
-        Ok(self.new_cache(cache.kc_host.clone(), cache.vc_host.clone(), cache.pos))
+        let store = match &cache.store {
+            KvStore::Mono { kc, vc } => KvStore::Mono {
+                kc: kc.clone(),
+                vc: vc.clone(),
+            },
+            KvStore::Paged(p) => {
+                RuntimeCounters::bump(&self.counters.cow_forks);
+                RuntimeCounters::add(
+                    &self.counters.pages_shared,
+                    (p.kp.len() + p.vp.len()) as u64,
+                );
+                KvStore::Paged(p.clone())
+            }
+        };
+        Ok(self.fresh_cache(store, cache.pos))
     }
 
     pub fn has_batch(&self) -> bool {
@@ -285,7 +545,8 @@ impl ModelRuntime {
         let elems: usize = dims.iter().product();
         let bdims = [b, dims[0], dims[1], dims[2], dims[3]];
 
-        let mut scratch = self.batch_scratch.borrow_mut();
+        let mut scratch_ref = self.batch_scratch.borrow_mut();
+        let scratch: &mut BatchScratch = &mut scratch_ref;
         if scratch.kc_all.len() != b * elems {
             scratch.kc_all = vec![0.0; b * elems];
             scratch.vc_all = vec![0.0; b * elems];
@@ -312,8 +573,20 @@ impl ModelRuntime {
             if scratch.lane_tag[i] == Some((cache.id, cache.gen)) {
                 resident += 1; // lane image current from the previous call
             } else {
-                scratch.kc_all[i * elems..(i + 1) * elems].copy_from_slice(&cache.kc_host);
-                scratch.vc_all[i * elems..(i + 1) * elems].copy_from_slice(&cache.vc_host);
+                let kc_out = &mut scratch.kc_all[i * elems..(i + 1) * elems];
+                let vc_out = &mut scratch.vc_all[i * elems..(i + 1) * elems];
+                match &cache.store {
+                    KvStore::Mono { kc, vc } => {
+                        kc_out.copy_from_slice(kc);
+                        vc_out.copy_from_slice(vc);
+                    }
+                    KvStore::Paged(p) => {
+                        let paged = self.paged.as_ref().context("paged cache on a mono runtime")?;
+                        let pool = p.pool.borrow();
+                        self.gather_side(&pool, paged.page_size, &p.kp, kc_out);
+                        self.gather_side(&pool, paged.page_size, &p.vp, vc_out);
+                    }
+                }
             }
         }
         anyhow::ensure!(engaged > 0, "decode_batch needs at least one engaged lane");
@@ -343,12 +616,41 @@ impl ModelRuntime {
         for (i, lane) in lanes.iter_mut().enumerate() {
             match lane {
                 Some((cache, _)) => {
-                    cache
-                        .kc_host
-                        .copy_from_slice(&scratch.kc_all[i * elems..(i + 1) * elems]);
-                    cache
-                        .vc_host
-                        .copy_from_slice(&scratch.vc_all[i * elems..(i + 1) * elems]);
+                    let written = cache.pos;
+                    let kc_new = &scratch.kc_all[i * elems..(i + 1) * elems];
+                    let vc_new = &scratch.vc_all[i * elems..(i + 1) * elems];
+                    match &mut cache.store {
+                        KvStore::Mono { kc, vc } => {
+                            kc.copy_from_slice(kc_new);
+                            vc.copy_from_slice(vc_new);
+                        }
+                        KvStore::Paged(p) => {
+                            // the fused kernel wrote each engaged lane's
+                            // K/V at its own `pos` only — scatter exactly
+                            // that position (CoW on a shared tail page)
+                            let paged =
+                                self.paged.as_ref().context("paged cache on a mono runtime")?;
+                            let mut pool = p.pool.borrow_mut();
+                            let ck = self.scatter_position(
+                                &mut pool,
+                                paged.page_size,
+                                &mut p.kp,
+                                kc_new,
+                                written,
+                            )?;
+                            let cv = self.scatter_position(
+                                &mut pool,
+                                paged.page_size,
+                                &mut p.vp,
+                                vc_new,
+                                written,
+                            )?;
+                            RuntimeCounters::add(
+                                &self.counters.pages_copied,
+                                ck as u64 + cv as u64,
+                            );
+                        }
+                    }
                     cache.pos += 1;
                     cache.gen += 1;
                     scratch.lane_tag[i] = Some((cache.id, cache.gen));
@@ -380,7 +682,18 @@ pub struct PjrtBackend {
 
 impl PjrtBackend {
     pub fn load(client: Rc<Client>, dir: &Path, cfg: &ModelConfig) -> Result<PjrtBackend> {
-        let model = ModelRuntime::load(&client, dir, cfg)?;
+        PjrtBackend::load_with(client, dir, cfg, None)
+    }
+
+    /// Load with an optional paged KV store (`page_size` tokens per
+    /// page; `None` = monolithic dense mirrors).
+    pub fn load_with(
+        client: Rc<Client>,
+        dir: &Path,
+        cfg: &ModelConfig,
+        page_size: Option<usize>,
+    ) -> Result<PjrtBackend> {
+        let model = ModelRuntime::load_with(&client, dir, cfg, page_size)?;
         Ok(PjrtBackend { client, model })
     }
 
@@ -436,6 +749,10 @@ impl Backend for PjrtBackend {
 
     fn batch_width(&self) -> Option<usize> {
         self.model.has_batch().then_some(self.model.cfg.batch)
+    }
+
+    fn page_size(&self) -> Option<usize> {
+        self.model.page_size()
     }
 
     fn cache_elems(&self) -> usize {

@@ -18,32 +18,146 @@
 //!    optional, App. I.2).
 //!
 //! Because the distribution is a pure function of the token history,
-//! fused batched decode is bit-identical to sequential decode — which is
-//! exactly the invariant the batcher's determinism tests pin down — and
-//! every session is reproducible from its seed alone.
+//! fused batched decode is bit-identical to sequential decode, and the
+//! paged copy-on-write cache (DESIGN.md §3.5) is bit-identical to the
+//! monolithic full-sequence cache — the invariants the batcher's
+//! determinism tests pin down — and every session is reproducible from
+//! its seed alone.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use anyhow::Result;
 
 use super::backend::{Backend, BackendCache, BatchLane, RuntimeCounters};
+use crate::coordinator::kv::{PageId, PagePool, DEFAULT_PAGE_SIZE};
 use crate::vocab::Vocab;
+
+/// Paged token storage: a page table into the backend's shared
+/// [`PagePool`]. Cloning retains every page (O(pages) refcount bumps —
+/// the copy-on-write fork); dropping releases them. Writes go through
+/// the pool's `make_unique`, so a fork and its parent diverge by
+/// copying exactly the page being written.
+#[derive(Debug)]
+pub struct PagedTokens {
+    pool: Rc<RefCell<PagePool<u32>>>,
+    pages: Vec<PageId>,
+    len: usize,
+    page_size: usize,
+}
+
+impl PagedTokens {
+    fn from_slice(
+        pool: &Rc<RefCell<PagePool<u32>>>,
+        page_size: usize,
+        tokens: &[u32],
+    ) -> Result<PagedTokens> {
+        let mut pages =
+            Vec::with_capacity(crate::coordinator::kv::pages_for(tokens.len(), page_size));
+        {
+            let mut p = pool.borrow_mut();
+            for chunk in tokens.chunks(page_size) {
+                let id = p.alloc_zeroed()?;
+                p.page_mut(id)?[..chunk.len()].copy_from_slice(chunk);
+                pages.push(id);
+            }
+        }
+        Ok(PagedTokens {
+            pool: pool.clone(),
+            pages,
+            len: tokens.len(),
+            page_size,
+        })
+    }
+
+    /// Append one token: CoW the tail page if shared, or open a fresh
+    /// page at a page boundary. Returns true when a page was physically
+    /// copied.
+    fn push(&mut self, token: u32) -> Result<bool> {
+        let off = self.len % self.page_size;
+        let mut pool = self.pool.borrow_mut();
+        let mut copied = false;
+        if off == 0 {
+            self.pages.push(pool.alloc_zeroed()?);
+        } else {
+            let last = self.pages.last_mut().expect("offset > 0 implies a tail page");
+            let (id, c) = pool.make_unique(*last)?;
+            *last = id;
+            copied = c;
+        }
+        let tail = *self.pages.last().expect("page ensured above");
+        pool.page_mut(tail)?[off] = token;
+        self.len += 1;
+        Ok(copied)
+    }
+
+    /// Copy the committed tokens into `out` (cleared first).
+    fn gather_into(&self, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.len);
+        let pool = self.pool.borrow();
+        for (i, pg) in self.pages.iter().enumerate() {
+            let take = self.page_size.min(self.len - i * self.page_size);
+            out.extend_from_slice(&pool.page(*pg)[..take]);
+        }
+    }
+
+    fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+impl Clone for PagedTokens {
+    fn clone(&self) -> PagedTokens {
+        let mut pool = self.pool.borrow_mut();
+        for pg in &self.pages {
+            pool.retain(*pg).expect("cloning a cache with live pages");
+        }
+        PagedTokens {
+            pool: self.pool.clone(),
+            pages: self.pages.clone(),
+            len: self.len,
+            page_size: self.page_size,
+        }
+    }
+}
+
+impl Drop for PagedTokens {
+    fn drop(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for pg in self.pages.drain(..) {
+            // a poisoned pool during unwind must not double-panic
+            let _ = pool.release(pg);
+        }
+    }
+}
+
+/// Token storage of a reference cache: the monolithic full-sequence
+/// vector (the PR 3 oracle) or a paged table (DESIGN.md §3.5). Logits
+/// are a pure function of the token history either way, so the two
+/// representations are bit-identical in behavior.
+#[derive(Debug, Clone)]
+enum TokenStore {
+    Mono(Vec<u32>),
+    Paged(PagedTokens),
+}
 
 /// Token-history cache of the reference backend.
 #[derive(Debug, Clone)]
 pub struct RefCache {
-    tokens: Vec<u32>,
+    store: TokenStore,
 }
 
 impl RefCache {
     pub fn pos(&self) -> usize {
-        self.tokens.len()
+        match &self.store {
+            TokenStore::Mono(t) => t.len(),
+            TokenStore::Paged(p) => p.len,
+        }
     }
 
     pub fn device_bytes(&self) -> usize {
-        self.tokens.len() * 4
-    }
-
-    pub fn tokens(&self) -> &[u32] {
-        &self.tokens
+        self.pos() * 4
     }
 }
 
@@ -69,6 +183,12 @@ pub struct RefBackend {
     /// Per-model salt so main and proxy are distinct-but-correlated
     /// monitors (the black-box setting).
     salt: u64,
+    /// Shared page pool (`Some` = paged caches; `None` = monolithic).
+    pool: Option<Rc<RefCell<PagePool<u32>>>>,
+    page_size: usize,
+    /// Reusable token gather buffer: probes and decodes read the page
+    /// table through here without allocating or touching the pool.
+    scratch: RefCell<Vec<u32>>,
     counters: RuntimeCounters,
 }
 
@@ -119,8 +239,35 @@ fn entropy(logits: &[f32]) -> f32 {
 }
 
 impl RefBackend {
+    /// Paged reference model at the default page size — the mainline
+    /// cache representation since DESIGN.md §3.5.
     pub fn new(name: &str, vocab: Vocab, seq_len: usize, batch: Option<usize>) -> RefBackend {
+        RefBackend::with_pages(name, vocab, seq_len, batch, Some(DEFAULT_PAGE_SIZE))
+    }
+
+    /// Monolithic full-sequence caches: the pre-paging representation,
+    /// kept as the equivalence oracle (same-seed serve runs must emit
+    /// byte-identical metrics against either store).
+    pub fn monolithic(
+        name: &str,
+        vocab: Vocab,
+        seq_len: usize,
+        batch: Option<usize>,
+    ) -> RefBackend {
+        RefBackend::with_pages(name, vocab, seq_len, batch, None)
+    }
+
+    /// Full constructor: `page_size` `Some(p)` = paged pool at `p`
+    /// tokens per page, `None` = monolithic.
+    pub fn with_pages(
+        name: &str,
+        vocab: Vocab,
+        seq_len: usize,
+        batch: Option<usize>,
+        page_size: Option<usize>,
+    ) -> RefBackend {
         let salt = name.bytes().fold(0xEA7u64, |h, b| mix(h, b as u64));
+        let ps = page_size.unwrap_or(seq_len).max(1);
         RefBackend {
             name: name.to_string(),
             vocab,
@@ -128,6 +275,9 @@ impl RefBackend {
             probe_len: 4,
             batch,
             salt,
+            pool: page_size.map(|_| Rc::new(RefCell::new(PagePool::new_growable(ps)))),
+            page_size: ps,
+            scratch: RefCell::new(Vec::new()),
             counters: RuntimeCounters::default(),
         }
     }
@@ -142,6 +292,42 @@ impl RefBackend {
     /// and mirrored decodes are serviced out-of-band anyway).
     pub fn proxy(vocab: Vocab) -> RefBackend {
         RefBackend::new("ref-proxy", vocab, 128, None)
+    }
+
+    /// Live pages in this backend's pool (None when monolithic) — for
+    /// the leak proptests and the bench report.
+    pub fn pool_pages_in_use(&self) -> Option<usize> {
+        self.pool.as_ref().map(|p| p.borrow().pages_in_use())
+    }
+
+    /// Commit one token into a cache (CoW-aware on the paged store).
+    fn push_token(&self, cache: &mut RefCache, token: u32) -> Result<()> {
+        match &mut cache.store {
+            TokenStore::Mono(t) => t.push(token),
+            TokenStore::Paged(p) => {
+                if p.push(token)? {
+                    RuntimeCounters::bump(&self.counters.pages_copied);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Next-token logits for `cache`'s history plus an optional virtual
+    /// `suffix` — the probe path reads the page table through the
+    /// scratch buffer and never copies or allocates pool pages.
+    fn logits_for(&self, cache: &RefCache, suffix: &[u32]) -> Vec<f32> {
+        let mut scratch = self.scratch.borrow_mut();
+        match &cache.store {
+            TokenStore::Mono(t) if suffix.is_empty() => return self.next_logits(t),
+            TokenStore::Mono(t) => {
+                scratch.clear();
+                scratch.extend_from_slice(t);
+            }
+            TokenStore::Paged(p) => p.gather_into(&mut scratch),
+        }
+        scratch.extend_from_slice(suffix);
+        self.next_logits(&scratch)
     }
 
     fn parse(&self, tokens: &[u32]) -> Parsed {
@@ -351,6 +537,10 @@ impl Backend for RefBackend {
         self.batch
     }
 
+    fn page_size(&self) -> Option<usize> {
+        self.pool.as_ref().map(|_| self.page_size)
+    }
+
     fn cache_elems(&self) -> usize {
         // nominal, for KV byte accounting only
         self.seq_len * 16
@@ -367,10 +557,14 @@ impl Backend for RefBackend {
             tokens.len(),
             self.seq_len
         );
-        let cache = RefCache {
-            tokens: tokens.to_vec(),
+        let store = match &self.pool {
+            Some(pool) => {
+                TokenStore::Paged(PagedTokens::from_slice(pool, self.page_size, tokens)?)
+            }
+            None => TokenStore::Mono(tokens.to_vec()),
         };
-        let logits = self.next_logits(&cache.tokens);
+        let cache = RefCache { store };
+        let logits = self.logits_for(&cache, &[]);
         RuntimeCounters::bump(&self.counters.prefills);
         Ok((logits, BackendCache::Ref(cache)))
     }
@@ -378,14 +572,14 @@ impl Backend for RefBackend {
     fn decode(&self, cache: &mut BackendCache, token: u32) -> Result<Vec<f32>> {
         let c = ref_cache_mut(cache)?;
         anyhow::ensure!(
-            c.tokens.len() < self.seq_len,
+            c.pos() < self.seq_len,
             "KV cache full (pos {} of {})",
-            c.tokens.len(),
+            c.pos(),
             self.seq_len
         );
-        c.tokens.push(token);
+        self.push_token(c, token)?;
         RuntimeCounters::bump(&self.counters.decodes);
-        Ok(self.next_logits(&c.tokens))
+        Ok(self.logits_for(c, &[]))
     }
 
     fn probe(&self, cache: &BackendCache, suffix: &[u32]) -> Result<(f32, Vec<f32>)> {
@@ -397,18 +591,25 @@ impl Backend for RefBackend {
             self.probe_len
         );
         anyhow::ensure!(
-            c.tokens.len() + suffix.len() <= self.seq_len,
+            c.pos() + suffix.len() <= self.seq_len,
             "probe would overflow the sequence"
         );
-        let mut t = c.tokens.clone();
-        t.extend_from_slice(suffix);
-        let logits = self.next_logits(&t);
+        // virtual append through the scratch buffer: no page alloc, no
+        // page copy, no cache mutation — the paper's "free" probe
+        let logits = self.logits_for(c, suffix);
         RuntimeCounters::bump(&self.counters.probes);
         Ok((entropy(&logits), logits))
     }
 
     fn fork(&self, cache: &BackendCache) -> Result<BackendCache> {
-        Ok(BackendCache::Ref(ref_cache(cache)?.clone()))
+        let c = ref_cache(cache)?;
+        if let TokenStore::Paged(p) = &c.store {
+            // O(pages) refcount bumps; divergence copies one page at a
+            // time via CoW
+            RuntimeCounters::bump(&self.counters.cow_forks);
+            RuntimeCounters::add(&self.counters.pages_shared, p.page_count() as u64);
+        }
+        Ok(BackendCache::Ref(c.clone()))
     }
 
     fn decode_batch(&self, lanes: &mut [Option<BatchLane<'_>>]) -> Result<Vec<Option<Vec<f32>>>> {
@@ -427,13 +628,13 @@ impl Backend for RefBackend {
                 Some(l) => {
                     let c = ref_cache_mut(l.cache)?;
                     anyhow::ensure!(
-                        c.tokens.len() < self.seq_len,
+                        c.pos() < self.seq_len,
                         "KV cache full (pos {} of {})",
-                        c.tokens.len(),
+                        c.pos(),
                         self.seq_len
                     );
-                    c.tokens.push(l.token);
-                    out.push(Some(self.next_logits(&c.tokens)));
+                    self.push_token(c, l.token)?;
+                    out.push(Some(self.logits_for(c, &[])));
                     engaged += 1;
                 }
                 None => out.push(None),
@@ -554,6 +755,75 @@ mod tests {
         let spread = eats.iter().cloned().fold(f64::MIN, f64::max)
             - eats.iter().cloned().fold(f64::MAX, f64::min);
         assert!(spread > 0.01, "corrupted EAT must stay noisy: {eats:?}");
+    }
+
+    #[test]
+    fn paged_and_monolithic_stores_are_bit_identical() {
+        let v = Vocab::default_layout();
+        let paged = RefBackend::with_pages("ref-main", v, 128, Some(8), Some(4));
+        let mono = RefBackend::monolithic("ref-main", v, 128, Some(8));
+        let p = prompt(&[5, 2, 8, 1]);
+        let (mut lp, mut cp) = paged.prefill(&p).unwrap();
+        let (mut lm, mut cm) = mono.prefill(&p).unwrap();
+        assert_eq!(lp, lm, "prefill logits diverged");
+        let suffix = v.suffix_prefixed();
+        for _ in 0..60 {
+            let tok = crate::sampler::argmax(&lm);
+            if tok == v.ethink {
+                break;
+            }
+            lp = paged.decode(&mut cp, tok).unwrap();
+            lm = mono.decode(&mut cm, tok).unwrap();
+            assert_eq!(lp, lm, "decode logits diverged");
+            let (ep, glp) = paged.probe(&cp, &suffix).unwrap();
+            let (em, glm) = mono.probe(&cm, &suffix).unwrap();
+            assert_eq!(ep, em);
+            assert_eq!(glp, glm, "probe logits diverged");
+        }
+        assert_eq!(cp.pos(), cm.pos());
+        // decodes and probes never copied or shared a single page
+        assert_eq!(paged.counters().pages_copied.get(), 0);
+        assert_eq!(paged.counters().pages_shared.get(), 0);
+        assert_eq!(paged.counters().cow_forks.get(), 0);
+    }
+
+    #[test]
+    fn cow_fork_copies_exactly_the_divergent_tail_page() {
+        let v = Vocab::default_layout();
+        let b = RefBackend::with_pages("ref-main", v, 128, None, Some(4));
+        // 6 prompt tokens at page size 4: one full page + a 2-token tail
+        let (_l, cache) = b.prefill(&prompt(&[3, 7])).unwrap();
+        assert_eq!(cache.pos(), 6);
+        let mut fork = b.fork(&cache).unwrap();
+        assert_eq!(b.counters().cow_forks.get(), 1);
+        assert_eq!(b.counters().pages_shared.get(), 2);
+        assert_eq!(b.counters().pages_copied.get(), 0, "fork itself copies nothing");
+        // first divergent write CoWs the shared tail page — exactly one
+        b.decode(&mut fork, v.ver).unwrap();
+        assert_eq!(b.counters().pages_copied.get(), 1);
+        // the parent still writes its own (now exclusive) tail in place
+        let mut parent = cache;
+        b.decode(&mut parent, v.nl).unwrap();
+        assert_eq!(b.counters().pages_copied.get(), 1, "parent write must not CoW");
+        // histories diverged: logits disagree from here on
+        assert_ne!(
+            b.probe(&parent, &v.suffix_prefixed()).unwrap().1,
+            b.probe(&fork, &v.suffix_prefixed()).unwrap().1
+        );
+    }
+
+    #[test]
+    fn dropping_caches_frees_every_page_exactly_once() {
+        let v = Vocab::default_layout();
+        let b = RefBackend::with_pages("ref-main", v, 128, None, Some(4));
+        {
+            let (_l, cache) = b.prefill(&prompt(&[1, 2, 3])).unwrap();
+            let forks: Vec<BackendCache> = (0..5).map(|_| b.fork(&cache).unwrap()).collect();
+            assert!(b.pool_pages_in_use().unwrap() > 0);
+            drop(forks);
+            drop(cache);
+        }
+        assert_eq!(b.pool_pages_in_use(), Some(0), "pages leaked");
     }
 
     #[test]

@@ -61,6 +61,13 @@ impl Args {
         self.parse_or(key, default)
     }
 
+    pub fn usize_opt(&self, key: &str) -> Option<usize> {
+        self.flags.get(key).map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse `{v}`"))
+        })
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.parse_or(key, default)
     }

@@ -22,13 +22,12 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
-/// Percentile by linear interpolation on a *sorted copy* (q in [0,1]).
-pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+/// Percentile by linear interpolation over an already-sorted slice —
+/// the single definition [`percentile`] and [`Summary`] share.
+fn interp_sorted(s: &[f64], q: f64) -> f64 {
+    if s.is_empty() {
         return 0.0;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -37,6 +36,13 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     } else {
         s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
     }
+}
+
+/// Percentile by linear interpolation on a *sorted copy* (q in [0,1]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    interp_sorted(&s, q)
 }
 
 /// Area under a (x, y) curve by trapezoid rule after sorting by x and
@@ -59,10 +65,16 @@ pub fn auc_normalized(points: &[(f64, f64)]) -> f64 {
     area
 }
 
-/// Simple online latency histogram for the serving metrics.
+/// Simple latency histogram for the serving metrics, with a lazily
+/// maintained sort: every accessor used to clone + sort the sample vec
+/// (~10 sorts per metrics snapshot); now `record` marks the store
+/// unsorted and the first quantile accessor after a batch of records
+/// sorts once in place — a full `to_json()` snapshot costs one sort.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
-    samples: Vec<f64>,
+    samples: std::cell::RefCell<Vec<f64>>,
+    sorted: std::cell::Cell<bool>,
+    sum: f64,
 }
 
 impl Summary {
@@ -71,47 +83,62 @@ impl Summary {
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        self.samples.get_mut().push(v);
+        self.sorted.set(false);
+        self.sum += v;
     }
 
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.samples.borrow().len()
+    }
+
+    fn ensure_sorted(&self) {
+        if !self.sorted.get() {
+            self.samples.borrow_mut().sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted.set(true);
+        }
+    }
+
+    /// Percentile by linear interpolation on the (lazily) sorted store
+    /// — same definition as [`percentile`], without the per-call sort.
+    fn quantile(&self, q: f64) -> f64 {
+        self.ensure_sorted();
+        interp_sorted(&self.samples.borrow(), q)
     }
 
     pub fn mean(&self) -> f64 {
-        mean(&self.samples)
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
     }
 
     pub fn p50(&self) -> f64 {
-        percentile(&self.samples, 0.50)
+        self.quantile(0.50)
     }
 
     pub fn p95(&self) -> f64 {
-        percentile(&self.samples, 0.95)
+        self.quantile(0.95)
     }
 
     pub fn p99(&self) -> f64 {
-        percentile(&self.samples, 0.99)
+        self.quantile(0.99)
     }
 
     /// Largest sample (0.0 if empty, like `mean`/`percentile`).
     pub fn max(&self) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        self.samples.iter().cloned().fold(f64::MIN, f64::max)
+        self.quantile(1.0)
     }
 
     /// Smallest sample (0.0 if empty, like `mean`/`percentile`).
     pub fn min(&self) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        self.samples.iter().cloned().fold(f64::MAX, f64::min)
+        self.quantile(0.0)
     }
 
     pub fn total(&self) -> f64 {
-        self.samples.iter().sum()
+        self.sum
     }
 }
 
@@ -155,6 +182,22 @@ mod tests {
         assert_eq!(s.max(), 0.0);
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.p99(), 0.0);
+    }
+
+    #[test]
+    fn summary_interleaved_records_and_reads() {
+        // the lazy sort must re-arm after every record
+        let mut s = Summary::new();
+        s.record(5.0);
+        assert_eq!(s.p50(), 5.0);
+        s.record(1.0);
+        s.record(9.0);
+        assert_eq!(s.p50(), 5.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 9.0);
+        s.record(0.5);
+        assert_eq!(s.min(), 0.5);
+        assert!((s.total() - 15.5).abs() < 1e-12);
     }
 
     #[test]

@@ -221,6 +221,75 @@ fn batcher_matches_serve_one_for_a_single_request() {
 }
 
 #[test]
+fn probe_only_steps_copy_zero_pages() {
+    // the acceptance bar for the paged store: an EAT probe performs no
+    // full-cache copy — not a single pool page is copied, shared, or
+    // allocated by servicing it
+    use eat_serve::coordinator::engine::{service_work, start_session, StepWork};
+    use eat_serve::util::rng::Rng;
+    let rt = Runtime::reference();
+    let cfg = ServeConfig::default();
+    let q = Dataset::synth_math500(&rt.vocab, 4, 1).questions.remove(0);
+    let (mut session, mut caches) = start_session(
+        &rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        q,
+        eat_factory(&cfg)(),
+        Rng::new(3),
+    )
+    .unwrap();
+    let c = rt.main.counters();
+    let mut probes_serviced = 0;
+    loop {
+        let work = session.poll();
+        let probe_step = matches!(work, StepWork::Probe { .. });
+        let (copied, shared) = (c.pages_copied.get(), c.pages_shared.get());
+        match work {
+            StepWork::Done => break,
+            w => service_work(&rt, &mut session, &mut caches, w).unwrap(),
+        }
+        if probe_step {
+            probes_serviced += 1;
+            assert_eq!(c.pages_copied.get(), copied, "a probe copied a page");
+            assert_eq!(c.pages_shared.get(), shared, "a probe forked the cache");
+        }
+    }
+    assert!(probes_serviced > 0, "EAT never probed");
+    // the whole EAT serve (decodes + probes, no rollouts) is fork-free
+    assert_eq!(c.cow_forks.get(), 0);
+    assert_eq!(c.pages_copied.get(), 0);
+}
+
+#[test]
+fn rollout_forks_are_cow_not_full_copies() {
+    use eat_serve::exit::ConfidencePolicy;
+    let rt = Runtime::reference();
+    let cfg = ServeConfig::default();
+    let ds = Dataset::synth_math500(&rt.vocab, 4, 7);
+    let factory: eat_serve::coordinator::batcher::PolicyFactory =
+        Box::new(|| Box::new(ConfidencePolicy::new(0.2, 1e-3, 96)));
+    let mut b = Batcher::new(&rt, cfg, MonitorModel::SelfModel, 4, factory);
+    for q in &ds.questions {
+        b.submit(q.clone());
+    }
+    b.run_to_completion().unwrap();
+    assert_eq!(b.metrics.completed, 4);
+    let c = rt.main.counters();
+    assert!(c.cow_forks.get() > 0, "confidence rollouts must fork");
+    // every fork shares its parent's pages by refcount...
+    assert!(c.pages_shared.get() >= c.cow_forks.get());
+    // ...and diverges by copying AT MOST its partial tail page — never
+    // the whole cache (a full-sequence copy would be ~8 pages per fork)
+    assert!(
+        c.pages_copied.get() <= c.cow_forks.get(),
+        "forks copied {} pages over {} forks",
+        c.pages_copied.get(),
+        c.cow_forks.get()
+    );
+}
+
+#[test]
 fn token_budget_policy_needs_no_probes() {
     let rt = Runtime::reference();
     let mut cfg = ServeConfig::default();

@@ -7,7 +7,8 @@
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::kv::SlotId;
 use eat_serve::coordinator::{
-    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, KvSlotManager, MonitorModel,
+    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, KvPageManager, MonitorModel,
+    PageAllocator, PageId,
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::exit::{
@@ -230,23 +231,27 @@ fn prop_auc_bounds() {
     }
 }
 
-/// Under random acquire/release sequences the KV slot manager never
-/// leaks a slot, never double-frees, and never over-admits — the
-/// invariant the scheduler's preempt/resume churn leans on.
+/// Under random acquire/release sequences the KV page manager never
+/// leaks a lane, never double-frees, and never over-admits — the
+/// invariant the scheduler's preempt/resume churn leans on. With the
+/// default page budget, page admission must degenerate to exact lane
+/// admission.
 #[test]
-fn prop_kv_slots_never_leak_or_double_free() {
+fn prop_kv_lanes_never_leak_or_double_free() {
     for seed in 0..CASES {
         let mut rng = Rng::new(seed ^ 0x5107);
         let cap = rng.range(1, 8) as usize;
-        let mut m = KvSlotManager::new(cap, 64);
+        let reserve = rng.range(1, 20) as usize;
+        let mut m = KvPageManager::new(cap, 16, reserve, None);
         let mut held: Vec<SlotId> = Vec::new();
         for _ in 0..200 {
-            assert_eq!(held.len() + m.available(), cap, "slot leak (seed {seed})");
+            assert_eq!(held.len() + m.available(), cap, "lane leak (seed {seed})");
             assert_eq!(m.in_use(), held.len());
+            assert_eq!(m.pinned_pages(), held.len() * reserve, "page pin drift");
             if rng.chance(0.5) {
                 match m.acquire() {
                     Some(s) => {
-                        assert!(!held.contains(&s), "slot handed out twice");
+                        assert!(!held.contains(&s), "lane handed out twice");
                         held.push(s);
                     }
                     None => assert_eq!(held.len(), cap, "refused admission below capacity"),
@@ -259,6 +264,142 @@ fn prop_kv_slots_never_leak_or_double_free() {
             }
         }
         assert!(m.peak() <= cap);
+    }
+}
+
+/// Page allocator refcount discipline under random alloc/retain/release
+/// churn: every reference is dropped exactly once, pages free exactly
+/// when their last reference goes, double frees and retains-after-free
+/// error out, and the end state leaks nothing.
+#[test]
+fn prop_page_allocator_refcounts_zero_exactly_once() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xFA6E5);
+        let fixed = rng.chance(0.5);
+        let cap = rng.range(1, 12) as usize;
+        let mut a = if fixed {
+            PageAllocator::new_fixed(cap)
+        } else {
+            PageAllocator::new_growable()
+        };
+        // one entry per outstanding reference
+        let mut refs: Vec<PageId> = Vec::new();
+        for _ in 0..200 {
+            let distinct = {
+                let mut ids: Vec<u32> = refs.iter().map(|p| p.0).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                ids.len()
+            };
+            assert_eq!(a.in_use(), distinct, "live-page accounting drift (seed {seed})");
+            match rng.below(3) {
+                0 => match a.alloc() {
+                    Ok(p) => {
+                        assert_eq!(a.refcount(p), 1);
+                        refs.push(p);
+                    }
+                    Err(_) => {
+                        assert!(fixed && a.in_use() == cap, "alloc failed below capacity");
+                    }
+                },
+                1 if !refs.is_empty() => {
+                    let p = refs[rng.below(refs.len() as u64) as usize];
+                    a.retain(p).unwrap();
+                    refs.push(p);
+                }
+                _ if !refs.is_empty() => {
+                    let i = rng.below(refs.len() as u64) as usize;
+                    let p = refs.swap_remove(i);
+                    let remaining = refs.iter().filter(|&&q| q == p).count();
+                    let freed = a.release(p).unwrap();
+                    assert_eq!(freed, remaining == 0, "freed at the wrong refcount");
+                    if freed {
+                        assert!(a.release(p).is_err(), "double free undetected");
+                        assert!(a.retain(p).is_err(), "retain after free undetected");
+                    }
+                }
+                _ => {}
+            }
+        }
+        for p in refs.drain(..) {
+            let _ = a.release(p).unwrap();
+        }
+        assert_eq!(a.in_use(), 0, "references leaked (seed {seed})");
+        assert_eq!(
+            a.counters.frees,
+            a.counters.allocs,
+            "every allocated page must free exactly once (seed {seed})"
+        );
+    }
+}
+
+/// Paged-cache churn oracle: random prefill/fork/decode/probe/drop
+/// sequences on a paged reference backend must (a) produce logits
+/// bit-identical to the monolithic pure function of each cache's token
+/// history, and (b) leave zero live pages once every cache is dropped.
+#[test]
+fn prop_paged_cache_churn_matches_mono_and_never_leaks() {
+    use eat_serve::runtime::{Backend, BackendCache, RefBackend};
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0xC0117);
+        let vocab = Vocab::default_layout();
+        let page_size = rng.range(1, 9) as usize;
+        let paged = RefBackend::with_pages("ref-main", vocab, 128, None, Some(page_size));
+        let mono = RefBackend::monolithic("ref-main", vocab, 128, None);
+        // (cache, shadow token history)
+        let mut live: Vec<(BackendCache, Vec<u32>)> = Vec::new();
+        for _ in 0..60 {
+            match rng.below(5) {
+                0 => {
+                    let mut p = vec![vocab.bos, vocab.q];
+                    for _ in 0..rng.range(1, 5) {
+                        p.push(vocab.num(rng.below(vocab.modulus as u64) as u32));
+                    }
+                    p.push(vocab.sep);
+                    p.push(vocab.think);
+                    let (logits, cache) = paged.prefill(&p).unwrap();
+                    assert_eq!(logits, mono.prefill(&p).unwrap().0, "seed {seed}");
+                    live.push((cache, p));
+                }
+                1 if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let fork = paged.fork(&live[i].0).unwrap();
+                    let hist = live[i].1.clone();
+                    live.push((fork, hist));
+                }
+                2 if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let (cache, hist) = &mut live[i];
+                    if hist.len() + 1 < 100 {
+                        let tok = vocab.num(rng.below(vocab.modulus as u64) as u32);
+                        let logits = paged.decode(cache, tok).unwrap();
+                        hist.push(tok);
+                        assert_eq!(
+                            logits,
+                            mono.prefill(hist).unwrap().0,
+                            "paged decode diverged from the pure function (seed {seed})"
+                        );
+                    }
+                }
+                3 if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let (cache, hist) = &live[i];
+                    let suffix = vocab.suffix_prefixed();
+                    let (_eat, logits) = paged.probe(cache, &suffix).unwrap();
+                    let mut h = hist.clone();
+                    h.extend_from_slice(&suffix);
+                    assert_eq!(logits, mono.prefill(&h).unwrap().0, "seed {seed}");
+                    assert_eq!(cache.pos(), hist.len(), "probe mutated the cache");
+                }
+                _ if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    live.swap_remove(i);
+                }
+                _ => {}
+            }
+        }
+        drop(live);
+        assert_eq!(paged.pool_pages_in_use(), Some(0), "page leak after drop (seed {seed})");
     }
 }
 

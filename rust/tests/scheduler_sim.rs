@@ -22,12 +22,16 @@ use eat_serve::coordinator::{
     poisson_arrivals, run_open_loop, Batcher, MonitorModel, RequestResult, DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::{chainsum::Kind, Dataset, Question};
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::clock::Clock;
 
 /// One full open-loop serve run under a fresh virtual clock; returns the
-/// metrics JSON string and the results sorted by question id.
-fn run_sim(
+/// metrics JSON string and the results sorted by question id. `mono`
+/// runs the monolithic full-sequence KV store instead of the default
+/// paged copy-on-write store.
+#[allow(clippy::too_many_arguments)]
+fn run_sim_on(
+    mono: bool,
     mode: SchedMode,
     slots: usize,
     n: usize,
@@ -35,7 +39,11 @@ fn run_sim(
     seed: u64,
     sequential: bool,
 ) -> (String, Vec<RequestResult>) {
-    let rt = Runtime::reference();
+    let rt = if mono {
+        Runtime::reference_monolithic()
+    } else {
+        Runtime::reference()
+    };
     let mut cfg = ServeConfig::default();
     cfg.seed = seed;
     cfg.sched.mode = mode;
@@ -59,6 +67,17 @@ fn run_sim(
     let mut results = b.results;
     results.sort_by_key(|r| r.question_id);
     (json, results)
+}
+
+fn run_sim(
+    mode: SchedMode,
+    slots: usize,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    sequential: bool,
+) -> (String, Vec<RequestResult>) {
+    run_sim_on(false, mode, slots, n, rate, seed, sequential)
 }
 
 #[test]
@@ -125,11 +144,15 @@ fn mixed_workload(n_corrupted: usize, n_solvable: usize, seed: u64) -> Vec<Quest
 }
 
 /// Submit a fixed workload upfront (slot contention: slots < requests)
-/// and drain it.
-fn run_contended(cfg: &ServeConfig, questions: &[Question], slots: usize) -> ContendedRun {
-    let rt = Runtime::reference();
+/// and drain it on the given runtime.
+fn run_contended_on(
+    rt: &Runtime,
+    cfg: &ServeConfig,
+    questions: &[Question],
+    slots: usize,
+) -> ContendedRun {
     let mut b = Batcher::with_clock(
-        &rt,
+        rt,
         cfg.clone(),
         MonitorModel::SelfModel,
         slots,
@@ -150,9 +173,14 @@ fn run_contended(cfg: &ServeConfig, questions: &[Question], slots: usize) -> Con
         preemptions: b.metrics.preemptions,
         resumes: b.metrics.resumes,
         resume_prefill_tokens: b.metrics.resume_prefill_tokens,
+        spills: b.metrics.kv_spills,
         stalled: b.metrics.exit_reasons.get("Stalled").copied().unwrap_or(0),
         results,
     }
+}
+
+fn run_contended(cfg: &ServeConfig, questions: &[Question], slots: usize) -> ContendedRun {
+    run_contended_on(&Runtime::reference(), cfg, questions, slots)
 }
 
 struct ContendedRun {
@@ -161,6 +189,7 @@ struct ContendedRun {
     preemptions: u64,
     resumes: u64,
     resume_prefill_tokens: u64,
+    spills: u64,
     stalled: usize,
     results: Vec<RequestResult>,
 }
@@ -188,7 +217,7 @@ fn preempted_then_resumed_sessions_are_bit_identical_to_uninterrupted() {
 
     assert!(preemptive.preemptions > 0, "contended stalled sessions must get preempted");
     assert_eq!(preemptive.resumes, preemptive.preemptions, "every suspended session must resume");
-    assert!(preemptive.resume_prefill_tokens > 0, "resume must re-prefill the committed history");
+    assert!(preemptive.resume_prefill_tokens > 0, "resume must restore the committed history");
     assert_eq!(fifo.preemptions, 0, "FIFO must never preempt");
     // the acceptance bit-identity: token history, probe count, exit step
     // and answer tail all survive the suspend/re-prefill round trip
@@ -250,6 +279,104 @@ fn eat_aware_scheduler_saves_tokens_at_equal_accuracy_under_contention() {
         } else {
             assert_eq!(key(e), key(f));
         }
+    }
+}
+
+#[test]
+fn paged_and_monolithic_stores_emit_byte_identical_metrics() {
+    // the paged-store acceptance bar: same seed, same scheduler, same
+    // workload — the ENTIRE metrics JSON (counters, latency percentiles,
+    // slot timeline, resume accounting) must not depend on whether KV
+    // state lives in a paged CoW pool or monolithic full-sequence caches
+    let (json_paged, res_paged) = run_sim_on(false, SchedMode::EatAware, 2, 16, 30.0, 7, false);
+    let (json_mono, res_mono) = run_sim_on(true, SchedMode::EatAware, 2, 16, 30.0, 7, false);
+    assert_eq!(json_paged, json_mono, "paged vs monolithic metrics diverged");
+    for (p, m) in res_paged.iter().zip(&res_mono) {
+        assert_eq!(key(p), key(m), "paged vs monolithic trajectory diverged");
+    }
+    // and under FIFO too (no preemption in the mix)
+    let (json_paged, _) = run_sim_on(false, SchedMode::Fifo, 2, 12, 25.0, 11, false);
+    let (json_mono, _) = run_sim_on(true, SchedMode::Fifo, 2, 12, 25.0, 11, false);
+    assert_eq!(json_paged, json_mono);
+}
+
+#[test]
+fn page_repin_resume_skips_the_reprefill_entirely() {
+    // preempt/resume on the paged store must unpin/repin pages: zero
+    // extra prefill calls on the backend, trajectories token-for-token
+    // identical to the monolithic re-prefill path AND to an
+    // uninterrupted FIFO run
+    let questions = mixed_workload(2, 8, 5);
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 5;
+    cfg.delta = 1e-7;
+    cfg.sched.mode = SchedMode::EatAware;
+    cfg.sched.stall_stability = 0.2;
+    cfg.sched.preempt_after_ticks = 8;
+    cfg.sched.max_preemptions = 100;
+
+    let paged_rt = Runtime::reference();
+    let paged = run_contended_on(&paged_rt, &cfg, &questions, 2);
+    let mono_rt = Runtime::reference_monolithic();
+    let mono = run_contended_on(&mono_rt, &cfg, &questions, 2);
+
+    assert!(paged.preemptions > 0, "workload never hit the preemptor");
+    assert_eq!(paged.preemptions, mono.preemptions);
+    assert_eq!(paged.resumes, mono.resumes);
+    assert_eq!(paged.spills, 0, "default budget must never spill");
+    // the monolithic store re-prefills once per resume; the paged store
+    // repins — exactly one prefill per request, ever
+    assert_eq!(
+        paged_rt.main.counters().prefills.get(),
+        questions.len() as u64,
+        "paged resume must not re-prefill"
+    );
+    assert_eq!(
+        mono_rt.main.counters().prefills.get(),
+        questions.len() as u64 + mono.resumes,
+        "monolithic resume must re-prefill"
+    );
+    // the restored-token accounting is identical either way (that is
+    // what keeps the metrics JSON byte-comparable across stores)
+    assert_eq!(paged.resume_prefill_tokens, mono.resume_prefill_tokens);
+    for (p, m) in paged.results.iter().zip(&mono.results) {
+        assert_eq!(key(p), key(m), "repin changed a trajectory");
+    }
+}
+
+#[test]
+fn host_budget_pressure_spills_to_reprefill_bit_identically() {
+    // a tight --kv-pages budget: only one worst-case session resident
+    // (8 pages at page size 16 over seq 128), and suspended sessions
+    // compete for the same 8 host pages — retention overflows, pages
+    // are spilled, and the re-prefill fallback must reproduce the exact
+    // trajectories of an uncontended monolithic FIFO run
+    let questions = mixed_workload(2, 6, 5);
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 5;
+    cfg.delta = 1e-7;
+    cfg.kv_pages = Some(8);
+    cfg.sched.mode = SchedMode::EatAware;
+    cfg.sched.stall_stability = 0.2;
+    cfg.sched.preempt_after_ticks = 64; // suspendees carry ~5 pages each
+    cfg.sched.max_preemptions = 100;
+
+    let paged_rt = Runtime::reference();
+    let pressured = run_contended_on(&paged_rt, &cfg, &questions, 2);
+    assert!(pressured.preemptions > 0, "page pressure never preempted");
+    assert!(pressured.spills > 0, "host budget never overflowed");
+    assert!(
+        paged_rt.main.counters().prefills.get() > questions.len() as u64,
+        "spilled sessions must fall back to re-prefill"
+    );
+
+    let mut fifo_cfg = ServeConfig::default();
+    fifo_cfg.seed = 5;
+    fifo_cfg.delta = 1e-7;
+    let fifo = run_contended_on(&Runtime::reference_monolithic(), &fifo_cfg, &questions, 2);
+    assert_eq!(pressured.results.len(), fifo.results.len());
+    for (p, f) in pressured.results.iter().zip(&fifo.results) {
+        assert_eq!(key(p), key(f), "spill fallback changed a trajectory");
     }
 }
 
