@@ -23,6 +23,9 @@
 //! host-side budget (exceeding it spills: the pages are dropped and the
 //! session falls back to resume-by-re-prefill).
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use anyhow::Result;
 
 /// Batch lane of an admitted request (index into the
@@ -280,6 +283,104 @@ impl<T: Clone + Default> PagePool<T> {
         let freed = self.alloc.release(page)?;
         debug_assert!(!freed, "shared page cannot free on CoW release");
         Ok((fresh, true))
+    }
+}
+
+/// An *owning* page table over a shared [`PagePool`]: the
+/// retain-on-Clone / release-on-Drop refcount discipline both backends
+/// used to hand-roll (`PagedTokens` in `runtime/reference.rs`, `PagedKv`
+/// in `runtime/model.rs`), implemented once. Cloning retains every page
+/// — the O(pages) copy-on-write fork — and dropping releases them, so a
+/// table can never leak or double-free a page. Writes funnel through
+/// [`PageTable::write`], which CoWs a shared page before handing out the
+/// mutable payload.
+#[derive(Debug)]
+pub struct PageTable<T: Clone + Default> {
+    pool: Rc<RefCell<PagePool<T>>>,
+    pages: Vec<PageId>,
+}
+
+impl<T: Clone + Default> PageTable<T> {
+    /// An empty table over `pool`.
+    pub fn new(pool: Rc<RefCell<PagePool<T>>>) -> PageTable<T> {
+        PageTable {
+            pool,
+            pages: Vec::new(),
+        }
+    }
+
+    /// The shared pool this table indexes into.
+    pub fn pool(&self) -> &Rc<RefCell<PagePool<T>>> {
+        &self.pool
+    }
+
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Append a fresh zero-filled page (refcount 1, exclusively owned).
+    pub fn push_zeroed(&mut self) -> Result<PageId> {
+        let id = self.pool.borrow_mut().alloc_zeroed()?;
+        self.pages.push(id);
+        Ok(id)
+    }
+
+    /// Append zero pages until the table covers `n_pages` entries.
+    pub fn grow_to(&mut self, n_pages: usize) -> Result<()> {
+        while self.pages.len() < n_pages {
+            self.push_zeroed()?;
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write entry `idx`: after this call the table holds a page
+    /// it may write through. Returns (page id, whether a physical copy
+    /// happened).
+    pub fn make_unique(&mut self, idx: usize) -> Result<(PageId, bool)> {
+        let (id, copied) = self.pool.borrow_mut().make_unique(self.pages[idx])?;
+        self.pages[idx] = id;
+        Ok((id, copied))
+    }
+
+    /// Read page `idx`'s payload.
+    pub fn read<R>(&self, idx: usize, f: impl FnOnce(&[T]) -> R) -> R {
+        f(self.pool.borrow().page(self.pages[idx]))
+    }
+
+    /// Write through page `idx` (CoW first when shared). Returns the
+    /// closure's result and whether a page was physically copied.
+    pub fn write<R>(&mut self, idx: usize, f: impl FnOnce(&mut [T]) -> R) -> Result<(R, bool)> {
+        let (id, copied) = self.make_unique(idx)?;
+        let mut pool = self.pool.borrow_mut();
+        Ok((f(pool.page_mut(id)?), copied))
+    }
+}
+
+impl<T: Clone + Default> Clone for PageTable<T> {
+    fn clone(&self) -> PageTable<T> {
+        let mut pool = self.pool.borrow_mut();
+        for pg in &self.pages {
+            pool.retain(*pg).expect("cloning a table with live pages");
+        }
+        drop(pool);
+        PageTable {
+            pool: self.pool.clone(),
+            pages: self.pages.clone(),
+        }
+    }
+}
+
+impl<T: Clone + Default> Drop for PageTable<T> {
+    fn drop(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for pg in self.pages.drain(..) {
+            // a poisoned pool during unwind must not double-panic
+            let _ = pool.release(pg);
+        }
     }
 }
 
@@ -548,6 +649,37 @@ mod tests {
         m.release_suspended(5);
         assert!(m.try_hold_suspended(4));
         assert_eq!(m.host_held_pages(), 7);
+    }
+
+    #[test]
+    fn page_table_clone_retains_and_drop_releases() {
+        let pool = Rc::new(RefCell::new(PagePool::<u32>::new_growable(4)));
+        let mut t = PageTable::new(pool.clone());
+        t.push_zeroed().unwrap();
+        t.push_zeroed().unwrap();
+        assert_eq!(pool.borrow().pages_in_use(), 2);
+        let c = t.clone();
+        assert_eq!(pool.borrow().pages_in_use(), 2, "clone shares, not copies");
+        assert_eq!(pool.borrow().refcount(t.pages()[0]), 2);
+        drop(c);
+        assert_eq!(pool.borrow().refcount(t.pages()[0]), 1);
+        drop(t);
+        assert_eq!(pool.borrow().pages_in_use(), 0, "drop must release every page");
+    }
+
+    #[test]
+    fn page_table_write_cows_shared_pages() {
+        let pool = Rc::new(RefCell::new(PagePool::<u32>::new_growable(2)));
+        let mut t = PageTable::new(pool.clone());
+        t.push_zeroed().unwrap();
+        let ((), copied) = t.write(0, |p| p[0] = 7).unwrap();
+        assert!(!copied, "exclusive pages write in place");
+        let mut fork = t.clone();
+        let ((), copied) = fork.write(0, |p| p[1] = 9).unwrap();
+        assert!(copied, "shared pages must CoW");
+        assert_ne!(t.pages()[0], fork.pages()[0]);
+        assert_eq!(t.read(0, |p| p.to_vec()), vec![7, 0]);
+        assert_eq!(fork.read(0, |p| p.to_vec()), vec![7, 9]);
     }
 
     #[test]

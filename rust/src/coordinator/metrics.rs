@@ -262,6 +262,183 @@ impl ServeMetrics {
     }
 }
 
+/// Serving metrics of the black-box coordinator workload (DESIGN.md
+/// §3.6): stream/stop/accuracy accounting plus the Fig. 5b *overlap*
+/// bookkeeping — per-chunk local proxy compute vs the simulated chunk
+/// inter-arrival gap it must hide inside. Clock-injected like
+/// [`ServeMetrics`]; under a virtual clock `to_json()` is byte-identical
+/// across same-seed runs (the CI blackbox determinism step diffs it).
+#[derive(Debug)]
+pub struct BlackboxMetrics {
+    clock: Clock,
+    started: Option<f64>,
+    pub completed: usize,
+    pub correct: usize,
+    /// Streams the monitor stopped before the remote ran out.
+    pub stopped_early: usize,
+    /// Chunks delivered (probed or not).
+    pub chunks: u64,
+    /// Chunk-boundary EAT probes issued by the proxy monitor.
+    pub probes: u64,
+    /// Remote reasoning tokens streamed before stop/termination.
+    pub streamed_tokens: u64,
+    /// Simulated remote generation time saved by early stops, ms.
+    pub saved_ms: f64,
+    /// Probed chunks whose proxy compute exceeded the arrival gap —
+    /// monitoring that would NOT hide inside the stream latency.
+    pub overrun_chunks: u64,
+    pub arrival_gap_ms: Summary,
+    pub proxy_compute_ms: Summary,
+    /// Request latency (submit → finalize) on the shared clock.
+    pub latency_ms: Summary,
+}
+
+impl BlackboxMetrics {
+    pub fn new(clock: Clock) -> Self {
+        BlackboxMetrics {
+            clock,
+            started: None,
+            completed: 0,
+            correct: 0,
+            stopped_early: 0,
+            chunks: 0,
+            probes: 0,
+            streamed_tokens: 0,
+            saved_ms: 0.0,
+            overrun_chunks: 0,
+            arrival_gap_ms: Summary::new(),
+            proxy_compute_ms: Summary::new(),
+            latency_ms: Summary::new(),
+        }
+    }
+
+    /// Open the throughput window (idempotent, first submission).
+    pub fn mark_start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(self.clock.now());
+        }
+    }
+
+    /// One probed chunk's overlap sample.
+    pub fn record_chunk(&mut self, arrival_gap_ms: f64, proxy_compute_ms: f64) {
+        self.probes += 1;
+        self.arrival_gap_ms.record(arrival_gap_ms);
+        self.proxy_compute_ms.record(proxy_compute_ms);
+        self.overrun_chunks += (proxy_compute_ms > arrival_gap_ms) as u64;
+    }
+
+    /// One finished stream.
+    pub fn record_result(
+        &mut self,
+        correct: bool,
+        stopped_early: bool,
+        streamed_tokens: usize,
+        chunks: usize,
+        saved_ms: f64,
+        latency_ms: f64,
+    ) {
+        self.mark_start();
+        self.completed += 1;
+        self.correct += correct as usize;
+        self.stopped_early += stopped_early as usize;
+        self.streamed_tokens += streamed_tokens as u64;
+        self.chunks += chunks as u64;
+        self.saved_ms += saved_ms;
+        self.latency_ms.record(latency_ms);
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.completed.max(1) as f64
+    }
+
+    /// Seconds since the first arrival (0 before any traffic).
+    pub fn elapsed_s(&self) -> f64 {
+        match self.started {
+            Some(t0) => (self.clock.now() - t0).max(0.0),
+            None => 0.0,
+        }
+    }
+
+    /// Mean arrival gap over mean proxy compute — how many times over
+    /// the monitor could run and still hide inside the stream latency
+    /// (Fig. 5b's headroom).
+    pub fn overlap_headroom(&self) -> f64 {
+        if self.proxy_compute_ms.count() == 0 {
+            return 0.0;
+        }
+        self.arrival_gap_ms.mean() / self.proxy_compute_ms.mean().max(1e-12)
+    }
+
+    /// Deterministic JSON snapshot (byte-identical across same-seed
+    /// virtual runs).
+    pub fn to_json(&self) -> Json {
+        let summary = |s: &Summary| {
+            Json::obj(vec![
+                ("count", Json::num(s.count() as f64)),
+                ("mean", Json::num(s.mean())),
+                ("min", Json::num(s.min())),
+                ("p50", Json::num(s.p50())),
+                ("p95", Json::num(s.p95())),
+                ("p99", Json::num(s.p99())),
+                ("max", Json::num(s.max())),
+            ])
+        };
+        Json::obj(vec![
+            ("completed", Json::num(self.completed as f64)),
+            ("correct", Json::num(self.correct as f64)),
+            ("accuracy", Json::num(self.accuracy())),
+            ("stopped_early", Json::num(self.stopped_early as f64)),
+            ("chunks", Json::num(self.chunks as f64)),
+            ("probes", Json::num(self.probes as f64)),
+            ("streamed_tokens", Json::num(self.streamed_tokens as f64)),
+            ("saved_ms", Json::num(self.saved_ms)),
+            ("overrun_chunks", Json::num(self.overrun_chunks as f64)),
+            ("overlap_headroom", Json::num(self.overlap_headroom())),
+            ("elapsed_s", Json::num(self.elapsed_s())),
+            ("arrival_gap_ms", summary(&self.arrival_gap_ms)),
+            ("proxy_compute_ms", summary(&self.proxy_compute_ms)),
+            ("latency_ms", summary(&self.latency_ms)),
+        ])
+    }
+
+    /// One-block human report for `repro serve --blackbox` / examples.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s += &format!(
+            "streams            {:>8}   accuracy {:.3}   stopped early {}/{}\n",
+            self.completed,
+            self.accuracy(),
+            self.stopped_early,
+            self.completed
+        );
+        s += &format!(
+            "remote stream      {} tokens over {} chunks   saved {:.1}s simulated\n",
+            self.streamed_tokens,
+            self.chunks,
+            self.saved_ms / 1e3
+        );
+        s += &format!(
+            "proxy monitor      {} probes   compute p50 {:.2} ms  max {:.2} ms\n",
+            self.probes,
+            self.proxy_compute_ms.p50(),
+            self.proxy_compute_ms.max()
+        );
+        s += &format!(
+            "overlap (Fig. 5b)  chunk gap p50 {:.1} ms   headroom {:.0}x   overruns {}\n",
+            self.arrival_gap_ms.p50(),
+            self.overlap_headroom(),
+            self.overrun_chunks
+        );
+        s += &format!(
+            "latency ms         p50 {:>8.1}  p95 {:>8.1}  max {:>8.1}\n",
+            self.latency_ms.p50(),
+            self.latency_ms.p95(),
+            self.latency_ms.max()
+        );
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -313,6 +490,44 @@ mod tests {
         assert_eq!(m.preemptions, 1);
         assert_eq!(m.resumes, 1);
         assert_eq!(m.resume_prefill_tokens, 40);
+    }
+
+    #[test]
+    fn blackbox_overlap_accounting() {
+        let clock = Clock::virt();
+        let mut m = BlackboxMetrics::new(clock.clone());
+        assert_eq!(m.elapsed_s(), 0.0);
+        m.mark_start();
+        clock.advance(1.0);
+        m.record_chunk(500.0, 2.5); // hides inside the gap
+        m.record_chunk(100.0, 150.0); // overrun
+        m.record_result(true, true, 40, 5, 2000.0, 900.0);
+        m.record_result(false, false, 96, 9, 0.0, 4000.0);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.stopped_early, 1);
+        assert_eq!(m.chunks, 14);
+        assert_eq!(m.probes, 2);
+        assert_eq!(m.overrun_chunks, 1);
+        assert!((m.accuracy() - 0.5).abs() < 1e-12);
+        assert!((m.overlap_headroom() - 300.0 / 76.25).abs() < 1e-9);
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"overlap_headroom\""));
+        assert!(json.contains("\"overrun_chunks\""));
+        assert!(m.report().contains("overlap (Fig. 5b)"));
+    }
+
+    #[test]
+    fn blackbox_json_is_stable_under_a_virtual_clock() {
+        let build = || {
+            let clock = Clock::virt();
+            let mut m = BlackboxMetrics::new(clock.clone());
+            m.mark_start();
+            clock.advance(0.5);
+            m.record_chunk(420.0, 3.0);
+            m.record_result(true, true, 30, 4, 1500.0, 480.0);
+            m.to_json().to_string()
+        };
+        assert_eq!(build(), build());
     }
 
     #[test]

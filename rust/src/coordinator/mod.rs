@@ -9,7 +9,9 @@
 //!    probes/rollouts out-of-band, sequential fallback,
 //!    preempt/resume-by-re-prefill under contention (DESIGN.md §3.4)
 //!  * `workload`    — open-loop Poisson workload driver (deterministic
-//!    under a virtual clock)
+//!    under a virtual clock), generic over [`OpenLoopTarget`] so it
+//!    paces the white-box batcher and the black-box stream batcher
+//!    alike
 //!  * `batch_cache` — slot-major cache store with page-granular dirty
 //!    upload accounting
 //!  * `kv`          — paged KV subsystem: refcounted page allocator,
@@ -29,6 +31,6 @@ pub use engine::{
     resume_session, serve_one, MonitorModel, ProbeTarget, ReasoningSession, RequestResult,
     StepWork,
 };
-pub use kv::{KvPageManager, PageAllocator, PageId, PagePool, DEFAULT_PAGE_SIZE};
-pub use metrics::ServeMetrics;
-pub use workload::{poisson_arrivals, run_open_loop};
+pub use kv::{KvPageManager, PageAllocator, PageId, PagePool, PageTable, DEFAULT_PAGE_SIZE};
+pub use metrics::{BlackboxMetrics, ServeMetrics};
+pub use workload::{poisson_arrivals, run_open_loop, OpenLoopTarget};

@@ -4,14 +4,25 @@
 //! Under a wall clock this paces a live load test (arrivals fire in real
 //! time, the driver naps while idle). Under a virtual clock the driver
 //! advances time itself — `tick_dt` simulated seconds per scheduling
-//! tick, jumping straight to the next arrival when the batcher idles —
+//! tick, jumping straight to the next *event* when the target idles —
 //! so the entire serve run (arrival pattern, admission order, preemption
 //! decisions, latency percentiles) is a pure function of the seed.
+//!
+//! The driver is generic over [`OpenLoopTarget`], so it paces both the
+//! white-box [`Batcher`] and the black-box
+//! [`crate::blackbox::BlackboxBatcher`] (DESIGN.md §3.6). The black-box
+//! target adds a second event source besides arrivals: simulated chunk
+//! deliveries — `blocked_until` reports the earliest one whenever every
+//! active stream is parked on a future arrival, and the driver jumps to
+//! `min(next request arrival, next chunk delivery)` instead of burning
+//! empty ticks.
 
 use anyhow::Result;
 
 use super::batcher::Batcher;
+use crate::blackbox::BlackboxBatcher;
 use crate::datasets::Question;
+use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 
 /// Seeded Poisson arrival times (seconds) for `n` requests at
@@ -27,26 +38,82 @@ pub fn poisson_arrivals(n: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
         .collect()
 }
 
-/// Drive `batcher` through an open-loop arrival process until everything
+/// Anything the open-loop driver can pace: a clocked batcher that
+/// accepts submissions and advances by ticks.
+pub trait OpenLoopTarget {
+    fn clock(&self) -> &Clock;
+    fn submit(&mut self, question: Question);
+    /// Anything left to do (queued or in flight).
+    fn has_work(&self) -> bool;
+    /// Earliest *future* event the target is parked on when a tick right
+    /// now would advance nothing (e.g. every black-box stream awaiting a
+    /// scheduled chunk arrival). `None` = tick away.
+    fn blocked_until(&self) -> Option<f64> {
+        None
+    }
+    fn tick_once(&mut self) -> Result<()>;
+}
+
+impl OpenLoopTarget for Batcher<'_> {
+    fn clock(&self) -> &Clock {
+        Batcher::clock(self)
+    }
+
+    fn submit(&mut self, question: Question) {
+        Batcher::submit(self, question)
+    }
+
+    fn has_work(&self) -> bool {
+        Batcher::has_work(self)
+    }
+
+    fn tick_once(&mut self) -> Result<()> {
+        Batcher::tick(self).map(|_| ())
+    }
+}
+
+impl OpenLoopTarget for BlackboxBatcher<'_> {
+    fn clock(&self) -> &Clock {
+        BlackboxBatcher::clock(self)
+    }
+
+    fn submit(&mut self, question: Question) {
+        BlackboxBatcher::submit(self, question)
+    }
+
+    fn has_work(&self) -> bool {
+        BlackboxBatcher::has_work(self)
+    }
+
+    fn blocked_until(&self) -> Option<f64> {
+        BlackboxBatcher::blocked_until(self)
+    }
+
+    fn tick_once(&mut self) -> Result<()> {
+        BlackboxBatcher::tick(self).map(|_| ())
+    }
+}
+
+/// Drive `target` through an open-loop arrival process until everything
 /// submitted has completed. Questions are taken round-robin from
 /// `questions`; `arrivals` must be non-decreasing (as produced by
 /// [`poisson_arrivals`]).
-pub fn run_open_loop(
-    batcher: &mut Batcher,
+pub fn run_open_loop<T: OpenLoopTarget>(
+    target: &mut T,
     questions: &[Question],
     arrivals: &[f64],
     tick_dt: f64,
 ) -> Result<()> {
     anyhow::ensure!(!questions.is_empty(), "workload needs at least one question");
-    let clock = batcher.clock().clone();
+    let clock = target.clock().clone();
     let mut next = 0usize;
     loop {
         let now = clock.now();
         while next < arrivals.len() && arrivals[next] <= now {
-            batcher.submit(questions[next % questions.len()].clone());
+            target.submit(questions[next % questions.len()].clone());
             next += 1;
         }
-        if !batcher.has_work() {
+        if !target.has_work() {
             if next >= arrivals.len() {
                 break;
             }
@@ -58,7 +125,24 @@ pub fn run_open_loop(
             }
             continue;
         }
-        batcher.tick()?;
+        if let Some(until) = target.blocked_until() {
+            // parked on a future event (chunk delivery): jump to the
+            // earlier of it and the next request arrival
+            let mut at = until;
+            if next < arrivals.len() {
+                at = at.min(arrivals[next]);
+            }
+            if at > now {
+                if clock.is_virtual() {
+                    clock.advance(at - now);
+                } else {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                continue;
+            }
+            // fp edge: the event is effectively "now" — fall through
+        }
+        target.tick_once()?;
         clock.advance(tick_dt);
     }
     Ok(())

@@ -18,7 +18,10 @@
 //!    slot-major batch cache store, paged copy-on-write KV subsystem
 //!  * [`exit`]        — EAT (Alg. 1) + token/#UA@K/confidence baselines
 //!  * [`monitor`]     — EMA variance estimator + trajectory records
-//!  * [`blackbox`]    — streaming-API simulation + local proxy monitoring
+//!  * [`blackbox`]    — the black-box setting as a coordinator workload:
+//!    split-phase stream sessions, batched remote-main + local-proxy
+//!    lanes, clock-scheduled chunk arrivals (deterministic under a
+//!    virtual clock)
 //!  * [`eval`]        — trace generation, offline replay, figure drivers
 //!  * [`datasets`]    — synthetic benchmark analogues
 //!  * [`util`]        — hand-rolled substrates (JSON, CLI, RNG, stats)

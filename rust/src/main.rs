@@ -14,6 +14,10 @@
 
 use anyhow::Result;
 
+use eat_serve::blackbox::{
+    BlackboxBatcher, BlackboxConfig, LatencyModel, ProxyCostModel, CHUNK_MONITOR_ALPHA,
+    CHUNK_MONITOR_DELTA,
+};
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::{
     eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MonitorModel, DEFAULT_TICK_DT,
@@ -39,6 +43,12 @@ COMMANDS
             [--sequential] [--sched fifo|eat] [--deadline S]
             [--rate R] [--virtual] [--metrics-json FILE]
             [--kv-store paged|mono] [--page-size P] [--kv-pages N]
+  serve     --blackbox [--chunk C] [--base-ms B --tok-ms T --jitter J]
+            (black-box streams: remote main model behind a text-only
+             chunked API, local proxy monitor issues the stop; defaults
+             --dataset synth-aime --alpha 0.8 --delta 5e-2; shares
+             --requests/--slots/--rate/--virtual/--sequential/--seed/
+             --metrics-json with the white-box mode)
   trace     --dataset D [--out FILE] [--max-questions N] [--swap-models]
             [--no-confidence] [--seed K]
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
@@ -147,7 +157,80 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Black-box serving (DESIGN.md §3.6): many proxy-monitored remote
+/// streams batched through the coordinator. Deterministic under
+/// `--virtual` — CI double-runs this and diffs the metrics JSON.
+fn cmd_serve_blackbox(args: &Args) -> Result<()> {
+    let page_size = kv_page_size(args)?;
+    if args.has("kv-pages") && page_size.is_none() {
+        anyhow::bail!("--kv-pages applies to the paged store (drop it, or use --kv-store paged)");
+    }
+    let rt = load_runtime_with(args, page_size)?;
+    let mut cfg = serve_cfg(args);
+    cfg.alpha = args.f64_or("alpha", CHUNK_MONITOR_ALPHA);
+    cfg.delta = args.f64_or("delta", CHUNK_MONITOR_DELTA);
+    let defaults = LatencyModel::default();
+    let bb = BlackboxConfig {
+        chunk_tokens: args.usize_or("chunk", 12),
+        latency: LatencyModel {
+            base_ms: args.f64_or("base-ms", defaults.base_ms),
+            per_token_ms: args.f64_or("tok-ms", defaults.per_token_ms),
+            jitter: args.f64_or("jitter", defaults.jitter),
+        },
+        proxy_cost: ProxyCostModel::default(),
+    };
+    let dataset = args.str_or("dataset", "synth-aime");
+    let n = args.usize_or("requests", 8);
+    let slots = args.usize_or("slots", 4);
+    let rate = args.f64_or("rate", 0.0);
+    let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
+    let clock = if args.has("virtual") {
+        Clock::virt()
+    } else {
+        Clock::wall()
+    };
+    let seed = cfg.seed;
+    let mut batcher = BlackboxBatcher::with_clock(&rt, cfg, bb, slots, clock);
+    batcher.force_sequential = args.has("sequential");
+    if rate > 0.0 {
+        let arrivals = poisson_arrivals(n, rate, seed);
+        run_open_loop(&mut batcher, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
+    } else {
+        for q in ds.questions.iter().take(n) {
+            batcher.submit(q.clone());
+        }
+        batcher.run_to_completion()?;
+    }
+    println!("{}", batcher.metrics.report());
+    println!("kv slots        peak {} / {}", batcher.kv_peak(), slots);
+    let (mc, pc) = (rt.main.counters(), rt.proxy.counters());
+    let (ms, ps) = (batcher.main_store_counters(), batcher.proxy_store_counters());
+    println!(
+        "remote lanes    fused_calls {}  lanes {}  dirty uploads {}  single decodes {}",
+        ms.fused_calls,
+        mc.batch_lanes.get(),
+        ms.dirty_lane_uploads,
+        mc.decodes.get()
+    );
+    println!(
+        "proxy lanes     fused_calls {}  lanes {}  dirty uploads {}  single decodes {}  probes {}",
+        ps.fused_calls,
+        pc.batch_lanes.get(),
+        ps.dirty_lane_uploads,
+        pc.decodes.get(),
+        pc.probes.get()
+    );
+    if let Some(path) = args.str_opt("metrics-json") {
+        std::fs::write(path, batcher.metrics.to_json().to_string())?;
+        println!("metrics json    {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("blackbox") {
+        return cmd_serve_blackbox(args);
+    }
     let page_size = kv_page_size(args)?;
     // a mono "page" is a whole full-sequence cache, so a page count is
     // not comparable across stores — refuse the mix rather than gate
@@ -330,6 +413,9 @@ fn cmd_blackbox(args: &Args) -> Result<()> {
             args.str_or("out-dir", eat_serve::DEFAULT_RESULTS),
         );
         c.cfg = serve_cfg(args);
+        // chunk-granularity monitoring defaults (see serve --blackbox)
+        c.cfg.alpha = args.f64_or("alpha", CHUNK_MONITOR_ALPHA);
+        c.cfg.delta = args.f64_or("delta", CHUNK_MONITOR_DELTA);
         c
     };
     figures::fig5a(&ctx, &rt, args.usize_or("questions", 8))

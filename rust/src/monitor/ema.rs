@@ -63,9 +63,22 @@ impl EmaVar {
         if self.n == 0 {
             return f64::INFINITY;
         }
-        let denom = 1.0 - (1.0 - self.alpha).powi(self.n as i32);
-        self.var / denom
+        self.var / debias_denom(self.alpha, self.n)
     }
+}
+
+/// The de-bias denominator 1 - (1-a)^n with the exponent clamped to
+/// `i32::MAX`. A long-running monitor (the serving stack keeps one per
+/// stream) can push `n` past `i32::MAX`, where the old `n as i32` cast
+/// wrapped to a *negative* exponent and `(1-a)^-k` blew the denominator
+/// up (or negative) instead of converging to 1. The clamp is exact in
+/// f64: for any alpha in (0,1) the factor underflows to 0 long before
+/// the exponent approaches `i32::MAX`, so the clamped denominator is
+/// already 1.0 there.
+fn debias_denom(alpha: f64, n: u64) -> f64 {
+    debug_assert!(n > 0, "de-bias is undefined before the first observation");
+    let e = i32::try_from(n).unwrap_or(i32::MAX);
+    1.0 - (1.0 - alpha).powi(e)
 }
 
 #[cfg(test)]
@@ -135,6 +148,28 @@ mod tests {
             m.update(0.5);
         }
         assert!(m.debiased_var() < 1e-6, "v={}", m.debiased_var());
+    }
+
+    #[test]
+    fn debias_denominator_clamps_at_the_i32_boundary() {
+        // the regression: `n as i32` wrapped to a negative exponent one
+        // past i32::MAX, corrupting the denominator; the clamped version
+        // is continuous across the boundary (both sides are exactly 1.0
+        // in f64 — the bias factor underflowed ages ago)
+        let below = debias_denom(0.2, i32::MAX as u64);
+        let above = debias_denom(0.2, i32::MAX as u64 + 1);
+        assert_eq!(below, 1.0);
+        assert_eq!(above, 1.0);
+        assert_eq!(debias_denom(0.2, u64::MAX), 1.0);
+        // sanity on the small-n exact values and monotonicity
+        assert!((debias_denom(0.3, 1) - 0.3).abs() < 1e-15);
+        let mut prev = 0.0;
+        for n in [1u64, 2, 10, 100, 10_000, 1 << 22, 1 << 40, u64::MAX] {
+            let d = debias_denom(0.35, n);
+            assert!(d > 0.0 && d <= 1.0, "denominator out of (0,1] at n={n}: {d}");
+            assert!(d >= prev, "denominator must not decrease in n");
+            prev = d;
+        }
     }
 
     #[test]

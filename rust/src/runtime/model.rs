@@ -33,41 +33,18 @@ use super::backend::{Backend, BackendCache, BatchLane, RuntimeCounters};
 use super::client::{lit_f32_scalar, lit_f32_vec, Client, Executable};
 use super::weights::Weights;
 use crate::config::ModelConfig;
-use crate::coordinator::kv::{PageId, PagePool};
+use crate::coordinator::kv::{PageId, PagePool, PageTable};
 
-/// Paged host mirror: K and V page tables into the model's shared f32
+/// Paged host mirror: K and V [`PageTable`]s into the model's shared f32
 /// pool (DESIGN.md §3.5). One page holds `page_size` sequence positions
 /// laid out `[L, H, P, Dh]`, so a page slice of the dense `[L, H, S,
-/// Dh]` cache is a per-(layer, head) run of contiguous rows. Cloning
-/// retains every page (the CoW fork); dropping releases them; writes go
-/// through `make_unique`.
+/// Dh]` cache is a per-(layer, head) run of contiguous rows. The
+/// retain-on-Clone / release-on-Drop refcount discipline lives on the
+/// generic table; writes go through its CoW `write`/`make_unique`.
+#[derive(Clone)]
 struct PagedKv {
-    pool: Rc<RefCell<PagePool<f32>>>,
-    kp: Vec<PageId>,
-    vp: Vec<PageId>,
-}
-
-impl Clone for PagedKv {
-    fn clone(&self) -> PagedKv {
-        let mut pool = self.pool.borrow_mut();
-        for pg in self.kp.iter().chain(&self.vp) {
-            pool.retain(*pg).expect("cloning a cache with live pages");
-        }
-        PagedKv {
-            pool: self.pool.clone(),
-            kp: self.kp.clone(),
-            vp: self.vp.clone(),
-        }
-    }
-}
-
-impl Drop for PagedKv {
-    fn drop(&mut self) {
-        let mut pool = self.pool.borrow_mut();
-        for pg in self.kp.drain(..).chain(self.vp.drain(..)) {
-            let _ = pool.release(pg);
-        }
-    }
+    kp: PageTable<f32>,
+    vp: PageTable<f32>,
 }
 
 /// Host-side cache representation: monolithic dense mirrors (the PR 3
@@ -105,8 +82,8 @@ impl KvCache {
         match &self.store {
             KvStore::Mono { kc, vc } => (kc.len() + vc.len()) * 4,
             KvStore::Paged(p) => {
-                let per_page = p.pool.borrow().page_elems();
-                (p.kp.len() + p.vp.len()) * per_page * 4
+                let per_page = p.kp.pool().borrow().page_elems();
+                (p.kp.page_count() + p.vp.page_count()) * per_page * 4
             }
         }
     }
@@ -241,29 +218,29 @@ impl ModelRuntime {
 
     /// Build one side's page table from a downloaded dense `[L, H, S,
     /// Dh]` image, covering `pos` committed positions.
-    fn side_pages_from_dense(
+    fn side_table_from_dense(
         &self,
-        pool: &mut PagePool<f32>,
+        pool: &Rc<RefCell<PagePool<f32>>>,
         page_size: usize,
         dense: &[f32],
         pos: usize,
-    ) -> Result<Vec<PageId>> {
+    ) -> Result<PageTable<f32>> {
         let (lh, s, dh) = (self.cfg.n_layer * self.cfg.n_head, self.cfg.seq_len, self.cfg.d_head);
         let n_pages = crate::coordinator::kv::pages_for(pos, page_size);
-        let mut pages = Vec::with_capacity(n_pages);
+        let mut table = PageTable::new(pool.clone());
         for pi in 0..n_pages {
-            let id = pool.alloc_zeroed()?;
+            table.push_zeroed()?;
             let base = pi * page_size;
             let take = page_size.min(pos - base);
-            let page = pool.page_mut(id)?;
-            for b in 0..lh {
-                let src = (b * s + base) * dh;
-                let dst = b * page_size * dh;
-                page[dst..dst + take * dh].copy_from_slice(&dense[src..src + take * dh]);
-            }
-            pages.push(id);
+            table.write(pi, |page| {
+                for b in 0..lh {
+                    let src = (b * s + base) * dh;
+                    let dst = b * page_size * dh;
+                    page[dst..dst + take * dh].copy_from_slice(&dense[src..src + take * dh]);
+                }
+            })?;
         }
-        Ok(pages)
+        Ok(table)
     }
 
     /// Gather one side's dense `[L, H, S, Dh]` image from its page
@@ -303,14 +280,14 @@ impl ModelRuntime {
             KvStore::Mono { kc, vc } => f(kc, vc),
             KvStore::Paged(p) => {
                 let paged = self.paged.as_ref().context("paged cache on a mono runtime")?;
-                let pool = p.pool.borrow();
+                let pool = p.kp.pool().borrow();
                 let elems: usize = self.cache_dims().iter().product();
                 let mut scratch = self.dense_scratch.borrow_mut();
                 let (kc, vc) = &mut *scratch;
                 kc.resize(elems, 0.0);
                 vc.resize(elems, 0.0);
-                self.gather_side(&pool, paged.page_size, &p.kp, kc);
-                self.gather_side(&pool, paged.page_size, &p.vp, vc);
+                self.gather_side(&pool, paged.page_size, p.kp.pages(), kc);
+                self.gather_side(&pool, paged.page_size, p.vp.pages(), vc);
                 drop(pool);
                 f(kc, vc)
             }
@@ -323,25 +300,21 @@ impl ModelRuntime {
     /// when a page was physically copied.
     fn scatter_position(
         &self,
-        pool: &mut PagePool<f32>,
+        table: &mut PageTable<f32>,
         page_size: usize,
-        pages: &mut Vec<PageId>,
         dense: &[f32],
         s: usize,
     ) -> Result<bool> {
         let (lh, seq, dh) = (self.cfg.n_layer * self.cfg.n_head, self.cfg.seq_len, self.cfg.d_head);
         let (pi, r) = (s / page_size, s % page_size);
-        while pages.len() <= pi {
-            pages.push(pool.alloc_zeroed()?);
-        }
-        let (id, copied) = pool.make_unique(pages[pi])?;
-        pages[pi] = id;
-        let page = pool.page_mut(id)?;
-        for b in 0..lh {
-            let src = (b * seq + s) * dh;
-            let dst = (b * page_size + r) * dh;
-            page[dst..dst + dh].copy_from_slice(&dense[src..src + dh]);
-        }
+        table.grow_to(pi + 1)?;
+        let ((), copied) = table.write(pi, |page| {
+            for b in 0..lh {
+                let src = (b * seq + s) * dh;
+                let dst = (b * page_size + r) * dh;
+                page[dst..dst + dh].copy_from_slice(&dense[src..src + dh]);
+            }
+        })?;
         Ok(copied)
     }
 
@@ -362,9 +335,8 @@ impl ModelRuntime {
             }
             KvStore::Paged(p) => {
                 let paged = self.paged.as_ref().context("paged cache on a mono runtime")?;
-                let mut pool = p.pool.borrow_mut();
-                let ck = self.scatter_position(&mut pool, paged.page_size, &mut p.kp, &kc, s)?;
-                let cv = self.scatter_position(&mut pool, paged.page_size, &mut p.vp, &vc, s)?;
+                let ck = self.scatter_position(&mut p.kp, paged.page_size, &kc, s)?;
+                let cv = self.scatter_position(&mut p.vp, paged.page_size, &vc, s)?;
                 RuntimeCounters::add(&self.counters.pages_copied, ck as u64 + cv as u64);
             }
         }
@@ -419,11 +391,10 @@ impl ModelRuntime {
         let vc = lit_f32_vec(&outs[2])?;
         let store = match &self.paged {
             Some(paged) => {
-                let mut pool = paged.pool.borrow_mut();
-                let kp = self.side_pages_from_dense(&mut pool, paged.page_size, &kc, tokens.len())?;
-                let vp = self.side_pages_from_dense(&mut pool, paged.page_size, &vc, tokens.len())?;
-                drop(pool);
-                KvStore::Paged(PagedKv { pool: paged.pool.clone(), kp, vp })
+                let n = tokens.len();
+                let kp = self.side_table_from_dense(&paged.pool, paged.page_size, &kc, n)?;
+                let vp = self.side_table_from_dense(&paged.pool, paged.page_size, &vc, n)?;
+                KvStore::Paged(PagedKv { kp, vp })
             }
             None => KvStore::Mono { kc, vc },
         };
@@ -511,7 +482,7 @@ impl ModelRuntime {
                 RuntimeCounters::bump(&self.counters.cow_forks);
                 RuntimeCounters::add(
                     &self.counters.pages_shared,
-                    (p.kp.len() + p.vp.len()) as u64,
+                    (p.kp.page_count() + p.vp.page_count()) as u64,
                 );
                 KvStore::Paged(p.clone())
             }
@@ -582,9 +553,9 @@ impl ModelRuntime {
                     }
                     KvStore::Paged(p) => {
                         let paged = self.paged.as_ref().context("paged cache on a mono runtime")?;
-                        let pool = p.pool.borrow();
-                        self.gather_side(&pool, paged.page_size, &p.kp, kc_out);
-                        self.gather_side(&pool, paged.page_size, &p.vp, vc_out);
+                        let pool = p.kp.pool().borrow();
+                        self.gather_side(&pool, paged.page_size, p.kp.pages(), kc_out);
+                        self.gather_side(&pool, paged.page_size, p.vp.pages(), vc_out);
                     }
                 }
             }
@@ -630,18 +601,15 @@ impl ModelRuntime {
                             // that position (CoW on a shared tail page)
                             let paged =
                                 self.paged.as_ref().context("paged cache on a mono runtime")?;
-                            let mut pool = p.pool.borrow_mut();
                             let ck = self.scatter_position(
-                                &mut pool,
-                                paged.page_size,
                                 &mut p.kp,
+                                paged.page_size,
                                 kc_new,
                                 written,
                             )?;
                             let cv = self.scatter_position(
-                                &mut pool,
-                                paged.page_size,
                                 &mut p.vp,
+                                paged.page_size,
                                 vc_new,
                                 written,
                             )?;

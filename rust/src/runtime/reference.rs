@@ -30,18 +30,17 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use super::backend::{Backend, BackendCache, BatchLane, RuntimeCounters};
-use crate::coordinator::kv::{PageId, PagePool, DEFAULT_PAGE_SIZE};
+use crate::coordinator::kv::{PagePool, PageTable, DEFAULT_PAGE_SIZE};
 use crate::vocab::Vocab;
 
-/// Paged token storage: a page table into the backend's shared
-/// [`PagePool`]. Cloning retains every page (O(pages) refcount bumps —
-/// the copy-on-write fork); dropping releases them. Writes go through
-/// the pool's `make_unique`, so a fork and its parent diverge by
-/// copying exactly the page being written.
-#[derive(Debug)]
+/// Paged token storage: a [`PageTable`] into the backend's shared
+/// [`PagePool`]. The retain-on-Clone / release-on-Drop ownership
+/// discipline lives on the generic table; this wrapper only adds the
+/// token-length bookkeeping. A fork and its parent diverge by copying
+/// exactly the page being written (the table's `write` CoW).
+#[derive(Debug, Clone)]
 pub struct PagedTokens {
-    pool: Rc<RefCell<PagePool<u32>>>,
-    pages: Vec<PageId>,
+    table: PageTable<u32>,
     len: usize,
     page_size: usize,
 }
@@ -52,19 +51,13 @@ impl PagedTokens {
         page_size: usize,
         tokens: &[u32],
     ) -> Result<PagedTokens> {
-        let mut pages =
-            Vec::with_capacity(crate::coordinator::kv::pages_for(tokens.len(), page_size));
-        {
-            let mut p = pool.borrow_mut();
-            for chunk in tokens.chunks(page_size) {
-                let id = p.alloc_zeroed()?;
-                p.page_mut(id)?[..chunk.len()].copy_from_slice(chunk);
-                pages.push(id);
-            }
+        let mut table = PageTable::new(pool.clone());
+        for (i, chunk) in tokens.chunks(page_size).enumerate() {
+            table.push_zeroed()?;
+            table.write(i, |page| page[..chunk.len()].copy_from_slice(chunk))?;
         }
         Ok(PagedTokens {
-            pool: pool.clone(),
-            pages,
+            table,
             len: tokens.len(),
             page_size,
         })
@@ -75,18 +68,11 @@ impl PagedTokens {
     /// copied.
     fn push(&mut self, token: u32) -> Result<bool> {
         let off = self.len % self.page_size;
-        let mut pool = self.pool.borrow_mut();
-        let mut copied = false;
         if off == 0 {
-            self.pages.push(pool.alloc_zeroed()?);
-        } else {
-            let last = self.pages.last_mut().expect("offset > 0 implies a tail page");
-            let (id, c) = pool.make_unique(*last)?;
-            *last = id;
-            copied = c;
+            self.table.push_zeroed()?;
         }
-        let tail = *self.pages.last().expect("page ensured above");
-        pool.page_mut(tail)?[off] = token;
+        let idx = self.table.page_count() - 1;
+        let ((), copied) = self.table.write(idx, |page| page[off] = token)?;
         self.len += 1;
         Ok(copied)
     }
@@ -95,40 +81,15 @@ impl PagedTokens {
     fn gather_into(&self, out: &mut Vec<u32>) {
         out.clear();
         out.reserve(self.len);
-        let pool = self.pool.borrow();
-        for (i, pg) in self.pages.iter().enumerate() {
+        let pool = self.table.pool().borrow();
+        for (i, pg) in self.table.pages().iter().enumerate() {
             let take = self.page_size.min(self.len - i * self.page_size);
             out.extend_from_slice(&pool.page(*pg)[..take]);
         }
     }
 
     fn page_count(&self) -> usize {
-        self.pages.len()
-    }
-}
-
-impl Clone for PagedTokens {
-    fn clone(&self) -> PagedTokens {
-        let mut pool = self.pool.borrow_mut();
-        for pg in &self.pages {
-            pool.retain(*pg).expect("cloning a cache with live pages");
-        }
-        PagedTokens {
-            pool: self.pool.clone(),
-            pages: self.pages.clone(),
-            len: self.len,
-            page_size: self.page_size,
-        }
-    }
-}
-
-impl Drop for PagedTokens {
-    fn drop(&mut self) {
-        let mut pool = self.pool.borrow_mut();
-        for pg in self.pages.drain(..) {
-            // a poisoned pool during unwind must not double-panic
-            let _ = pool.release(pg);
-        }
+        self.table.page_count()
     }
 }
 

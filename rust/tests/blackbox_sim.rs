@@ -1,0 +1,255 @@
+//! Deterministic black-box serving simulator suite (DESIGN.md §3.6):
+//! end-to-end proxy-monitored stream runs on the reference backend under
+//! a VIRTUAL clock, pinning down
+//!
+//!  * same seed ⇒ byte-identical metrics JSON (stream/stop counts,
+//!    overlap accounting, latency percentiles) across runs;
+//!  * fused vs `force_sequential` decode paths ⇒ identical metrics —
+//!    on the remote-main lanes AND on the local-proxy lanes (asserted
+//!    against a proxy that carries a fused batch entry point);
+//!  * per-stream trajectories are invariant to the batch width: B
+//!    concurrent streams produce exactly the single-lane trajectories;
+//!  * trajectories are bit-identical under different [`LatencyModel`]
+//!    settings — the RNG-split regression: latency jitter draws from a
+//!    dedicated stream and can only move timestamps.
+
+use eat_serve::blackbox::{
+    BlackboxBatcher, BlackboxConfig, BlackboxResult, LatencyModel, ProxyCostModel,
+    CHUNK_MONITOR_ALPHA, CHUNK_MONITOR_DELTA,
+};
+use eat_serve::config::ServeConfig;
+use eat_serve::coordinator::{poisson_arrivals, run_open_loop, DEFAULT_TICK_DT};
+use eat_serve::datasets::Dataset;
+use eat_serve::runtime::{Backend, RefBackend, Runtime};
+use eat_serve::util::clock::Clock;
+use eat_serve::vocab::Vocab;
+
+fn bb_cfg(chunk_tokens: usize, latency: LatencyModel) -> BlackboxConfig {
+    BlackboxConfig {
+        chunk_tokens,
+        latency,
+        proxy_cost: ProxyCostModel::default(),
+    }
+}
+
+fn serve_cfg(seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.alpha = CHUNK_MONITOR_ALPHA;
+    cfg.delta = CHUNK_MONITOR_DELTA;
+    cfg.seed = seed;
+    cfg
+}
+
+/// The comparable portion of a stream result: everything except the
+/// shared-clock latency — including the bit patterns of every monitor
+/// point (eat, vhat, arrival gap, proxy compute).
+#[allow(clippy::type_complexity)]
+fn key(r: &BlackboxResult) -> (usize, Option<usize>, usize, usize, Vec<u32>, bool, Vec<[u64; 4]>) {
+    (
+        r.question_id,
+        r.stop_chunk,
+        r.tokens_at_stop,
+        r.chunks,
+        r.answer_tail.clone(),
+        r.correct,
+        r.points
+            .iter()
+            .map(|p| {
+                [
+                    p.eat.to_bits(),
+                    p.vhat.to_bits(),
+                    p.arrival_gap_ms.to_bits(),
+                    p.proxy_compute_ms.to_bits(),
+                ]
+            })
+            .collect(),
+    )
+}
+
+/// One full open-loop black-box serve run under a fresh virtual clock.
+fn run_sim_on(
+    rt: &Runtime,
+    slots: usize,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    sequential: bool,
+    latency: LatencyModel,
+) -> (String, Vec<BlackboxResult>) {
+    let cfg = serve_cfg(seed);
+    let ds = Dataset::synth_aime(&rt.vocab, n.max(4), seed);
+    let mut b =
+        BlackboxBatcher::with_clock(rt, cfg, bb_cfg(8, latency), slots, Clock::virt());
+    b.force_sequential = sequential;
+    let arrivals = poisson_arrivals(n, rate, seed);
+    run_open_loop(&mut b, &ds.questions, &arrivals, DEFAULT_TICK_DT).unwrap();
+    assert_eq!(b.metrics.completed, n);
+    assert_eq!(b.pending(), 0);
+    assert_eq!(b.active_count(), 0);
+    let json = b.metrics.to_json().to_string();
+    let mut results = b.results;
+    results.sort_by_key(|r| r.question_id);
+    (json, results)
+}
+
+fn run_sim(
+    slots: usize,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    sequential: bool,
+) -> (String, Vec<BlackboxResult>) {
+    run_sim_on(
+        &Runtime::reference(),
+        slots,
+        n,
+        rate,
+        seed,
+        sequential,
+        LatencyModel::default(),
+    )
+}
+
+#[test]
+fn same_seed_blackbox_runs_are_byte_identical() {
+    // the golden determinism guarantee: a many-stream proxy-monitored
+    // serve run — arrivals, chunk deliveries, stops, overlap accounting
+    // — is a pure function of the seed under the virtual clock
+    let (json_a, res_a) = run_sim(4, 10, 3.0, 7, false);
+    let (json_b, res_b) = run_sim(4, 10, 3.0, 7, false);
+    assert_eq!(json_a, json_b, "same-seed blackbox metrics JSON diverged");
+    assert_eq!(res_a.len(), res_b.len());
+    for (a, b) in res_a.iter().zip(&res_b) {
+        assert_eq!(key(a), key(b));
+    }
+    // the snapshot carries the overlap accounting
+    assert!(json_a.contains("\"overlap_headroom\""));
+    assert!(json_a.contains("\"proxy_compute_ms\""));
+    // a different seed produces a different run
+    let (json_c, _) = run_sim(4, 10, 3.0, 8, false);
+    assert_ne!(json_a, json_c, "seed is not reaching the simulation");
+}
+
+#[test]
+fn fused_and_sequential_paths_emit_identical_metrics() {
+    // the stream protocol cannot observe which decode path serviced it
+    let (json_fused, res_fused) = run_sim(4, 8, 3.0, 11, false);
+    let (json_seq, res_seq) = run_sim(4, 8, 3.0, 11, true);
+    assert_eq!(json_fused, json_seq, "fused vs sequential metrics diverged");
+    for (a, b) in res_fused.iter().zip(&res_seq) {
+        assert_eq!(key(a), key(b));
+    }
+}
+
+/// A reference runtime whose PROXY also carries a fused batch entry
+/// point, so the local-proxy lanes exercise `decode_batch` too.
+fn batched_proxy_runtime() -> Runtime {
+    let vocab = Vocab::default_layout();
+    Runtime {
+        vocab,
+        main: Box::new(RefBackend::new("ref-main", vocab, 128, Some(8))),
+        proxy: Box::new(RefBackend::new("ref-proxy", vocab, 128, Some(8))),
+        artifacts: None,
+    }
+}
+
+#[test]
+fn batched_proxy_decode_is_bit_identical_to_sequential() {
+    // acceptance bar: batched vs sequential PROXY decode cannot change a
+    // thing — neither within one runtime (force_sequential A/B) nor
+    // against the default runtime whose proxy has no batch entry point
+    let rt_batched = batched_proxy_runtime();
+    let (json_fused, res_fused) = run_sim_on(
+        &rt_batched, 4, 8, 3.0, 13, false, LatencyModel::default(),
+    );
+    let (json_seq, res_seq) = run_sim_on(
+        &rt_batched, 4, 8, 3.0, 13, true, LatencyModel::default(),
+    );
+    assert_eq!(json_fused, json_seq, "batched proxy lanes changed the run");
+    // the fused path actually engaged the proxy's batch entry point
+    assert!(
+        rt_batched.main.counters().batch_decodes.get() > 0,
+        "main fused path never engaged"
+    );
+    assert!(
+        rt_batched.proxy.counters().batch_decodes.get() > 0,
+        "proxy fused path never engaged"
+    );
+    let (json_unbatched, res_unbatched) = run_sim(4, 8, 3.0, 13, false);
+    assert_eq!(json_fused, json_unbatched, "proxy batch width leaked into metrics");
+    for ((a, b), c) in res_fused.iter().zip(&res_seq).zip(&res_unbatched) {
+        assert_eq!(key(a), key(b));
+        assert_eq!(key(a), key(c));
+    }
+}
+
+#[test]
+fn trajectories_are_invariant_to_batch_width() {
+    // B concurrent streams must produce exactly the trajectories of a
+    // single-lane run: per-stream RNGs are seeded by submission seq and
+    // monitor decisions depend only on delivered content
+    let (_json_wide, res_wide) = run_sim(4, 8, 3.0, 5, false);
+    let (_json_narrow, res_narrow) = run_sim(1, 8, 3.0, 5, false);
+    assert_eq!(res_wide.len(), res_narrow.len());
+    for (w, n) in res_wide.iter().zip(&res_narrow) {
+        assert_eq!(key(w), key(n), "batch width changed a trajectory");
+    }
+}
+
+#[test]
+fn trajectories_are_invariant_to_the_latency_model() {
+    // the RNG-split regression at serve scale: a slower, noisier remote
+    // moves every timestamp but not a single sampled token or stop
+    let rt = Runtime::reference();
+    let slow = LatencyModel {
+        base_ms: 300.0,
+        per_token_ms: 80.0,
+        jitter: 0.5,
+    };
+    let fast = LatencyModel {
+        base_ms: 2.0,
+        per_token_ms: 0.5,
+        jitter: 0.0,
+    };
+    let (json_slow, res_slow) = run_sim_on(&rt, 4, 8, 3.0, 9, false, slow);
+    let rt2 = Runtime::reference();
+    let (json_fast, res_fast) = run_sim_on(&rt2, 4, 8, 3.0, 9, false, fast);
+    assert_ne!(json_slow, json_fast, "latency must move the timestamps");
+    for (s, f) in res_slow.iter().zip(&res_fast) {
+        assert_eq!(s.question_id, f.question_id);
+        assert_eq!(s.stop_chunk, f.stop_chunk, "latency changed a stop decision");
+        assert_eq!(s.tokens_at_stop, f.tokens_at_stop);
+        assert_eq!(s.chunks, f.chunks);
+        assert_eq!(s.answer_tail, f.answer_tail, "latency changed a trajectory");
+        assert_eq!(s.points.len(), f.points.len());
+        for (ps, pf) in s.points.iter().zip(&f.points) {
+            assert_eq!(ps.eat.to_bits(), pf.eat.to_bits());
+            assert_eq!(ps.vhat.to_bits(), pf.vhat.to_bits());
+        }
+    }
+}
+
+#[test]
+fn monitor_stops_streams_and_overlap_holds() {
+    // qualitative Fig. 5 behavior at serve scale: a good share of the
+    // solvable streams stop early, the saving is positive, and the
+    // modeled proxy compute hides inside every chunk gap
+    let (json, res) = run_sim(4, 12, 3.0, 21, false);
+    let stopped = res.iter().filter(|r| r.stop_chunk.is_some()).count();
+    assert!(stopped >= 2, "expected early stops, got {stopped}/12");
+    let saved: f64 = res.iter().map(|r| r.saved_ms).sum();
+    assert!(saved > 0.0);
+    assert!(json.contains("\"overrun_chunks\":0"), "proxy compute overran a gap: {json}");
+    for r in &res {
+        for p in &r.points {
+            assert!(
+                p.proxy_compute_ms < p.arrival_gap_ms,
+                "q{} chunk {}: compute {} ms vs gap {} ms",
+                r.question_id,
+                p.chunk,
+                p.proxy_compute_ms,
+                p.arrival_gap_ms
+            );
+        }
+    }
+}

@@ -333,6 +333,104 @@ fn prop_page_allocator_refcounts_zero_exactly_once() {
     }
 }
 
+/// Generic [`PageTable`] ownership discipline — ONE property routine
+/// instantiated for both element types the backends use: `u32` (the
+/// reference backend's token tables) and `f32` (the pjrt backend's K/V
+/// tables). Random push/clone/drop/overwrite sequences against a shared
+/// pool must (a) keep every table's gathered contents equal to an
+/// independent dense mirror — CoW isolation: writing through one table
+/// never leaks into another — and (b) return the pool to zero live
+/// pages with allocs == frees once every table is dropped.
+#[test]
+fn prop_page_table_cow_discipline_covers_both_element_types() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    use eat_serve::coordinator::{PagePool, PageTable};
+
+    fn gather<T: Clone + Default>(table: &PageTable<T>, len: usize, page: usize) -> Vec<T> {
+        let pool = table.pool().borrow();
+        let mut out = Vec::with_capacity(len);
+        for (i, pg) in table.pages().iter().enumerate() {
+            let take = page.min(len - i * page);
+            out.extend_from_slice(&pool.page(*pg)[..take]);
+        }
+        out
+    }
+
+    fn check<T, F>(mk: F)
+    where
+        T: Clone + Default + PartialEq + std::fmt::Debug,
+        F: Fn(u64) -> T,
+    {
+        const PAGE: usize = 4;
+        for seed in 0..60u64 {
+            let mut rng = Rng::new(seed ^ 0x7AB1E);
+            let pool = Rc::new(RefCell::new(PagePool::<T>::new_growable(PAGE)));
+            // each entry: (table, dense mirror of its logical contents)
+            let mut tables: Vec<(PageTable<T>, Vec<T>)> =
+                vec![(PageTable::new(pool.clone()), Vec::new())];
+            for _ in 0..rng.range(20, 80) {
+                match rng.below(4) {
+                    // append one element (opens a page at boundaries,
+                    // CoWs a shared tail otherwise)
+                    0 => {
+                        let i = rng.below(tables.len() as u64) as usize;
+                        let (t, mirror) = &mut tables[i];
+                        let off = mirror.len() % PAGE;
+                        if off == 0 {
+                            t.push_zeroed().unwrap();
+                        }
+                        let idx = t.page_count() - 1;
+                        let v = mk(rng.next_u64());
+                        t.write(idx, |p| p[off] = v.clone()).unwrap();
+                        mirror.push(v);
+                    }
+                    // fork: retain-on-Clone
+                    1 if tables.len() < 6 => {
+                        let i = rng.below(tables.len() as u64) as usize;
+                        let c = (tables[i].0.clone(), tables[i].1.clone());
+                        tables.push(c);
+                    }
+                    // drop: release-on-Drop (keep at least one table)
+                    2 if tables.len() > 1 => {
+                        let i = rng.below(tables.len() as u64) as usize;
+                        tables.swap_remove(i);
+                    }
+                    // overwrite a random committed element in place
+                    _ => {
+                        let i = rng.below(tables.len() as u64) as usize;
+                        let (t, mirror) = &mut tables[i];
+                        if mirror.is_empty() {
+                            continue;
+                        }
+                        let at = rng.below(mirror.len() as u64) as usize;
+                        let v = mk(rng.next_u64());
+                        t.write(at / PAGE, |p| p[at % PAGE] = v.clone()).unwrap();
+                        mirror[at] = v;
+                    }
+                }
+                // CoW isolation: every table still reads exactly its own
+                // mirror, no matter what the others did
+                for (t, mirror) in &tables {
+                    assert_eq!(
+                        &gather(t, mirror.len(), PAGE),
+                        mirror,
+                        "table contents diverged from mirror (seed {seed})"
+                    );
+                }
+            }
+            drop(tables);
+            assert_eq!(pool.borrow().pages_in_use(), 0, "pages leaked (seed {seed})");
+            let c = pool.borrow().counters();
+            assert_eq!(c.allocs, c.frees, "alloc/free imbalance (seed {seed})");
+        }
+    }
+
+    check::<u32, _>(|x| x as u32);
+    check::<f32, _>(|x| (x % 1000) as f32);
+}
+
 /// Paged-cache churn oracle: random prefill/fork/decode/probe/drop
 /// sequences on a paged reference backend must (a) produce logits
 /// bit-identical to the monolithic pure function of each cache's token

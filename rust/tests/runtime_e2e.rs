@@ -249,12 +249,11 @@ fn batcher_completes_workload() {
 #[test]
 fn blackbox_stops_early_on_solvable() {
     let Some(rt) = runtime() else { return };
-    // chunk-granularity monitoring sees far fewer observations than the
-    // per-line default, so the EMA window is scaled (alpha 0.5) and the
-    // threshold loosened — same settings as examples/blackbox_claude.rs
+    // chunk-granularity monitoring defaults — same settings as the CLI
+    // and examples/blackbox_claude.rs
     let mut cfg = ServeConfig::default();
-    cfg.delta = 5e-2;
-    cfg.alpha = 0.5;
+    cfg.delta = eat_serve::blackbox::CHUNK_MONITOR_DELTA;
+    cfg.alpha = eat_serve::blackbox::CHUNK_MONITOR_ALPHA;
     // medium-hard questions have the long overthinking tails the monitor
     // can cut (easy ones self-terminate within a chunk or two — nothing to
     // save there)
