@@ -19,7 +19,7 @@ use eat_serve::blackbox::{
     CHUNK_MONITOR_DELTA,
 };
 use eat_serve::config::ServeConfig;
-use eat_serve::coordinator::{poisson_arrivals, run_open_loop, DEFAULT_TICK_DT};
+use eat_serve::coordinator::{poisson_arrivals, run_open_loop, MetricsReport, DEFAULT_TICK_DT};
 use eat_serve::datasets::Dataset;
 use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::cli::Args;

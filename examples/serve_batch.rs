@@ -23,7 +23,8 @@ use anyhow::Result;
 
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::{
-    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MonitorModel, DEFAULT_TICK_DT,
+    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MetricsReport, MonitorModel,
+    DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::exit::TokenBudgetPolicy;

@@ -1,0 +1,91 @@
+//! Cluster goodput scaling (DESIGN.md §3.7): the same contended
+//! workload drained by N = 1/2/4 engine replicas behind the EAT-aware
+//! router with live session migration on. Reports both the wall-clock
+//! cost of simulating the cluster and the *virtual* goodput — completed
+//! requests per simulated second — which is the paper-facing scaling
+//! number, and snapshots everything to `BENCH_cluster.json`.
+//!
+//!     cargo bench --bench bench_cluster
+//!
+//! Runs on the deterministic reference backend under a virtual clock,
+//! so every number here is a pure function of the seed.
+
+use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::coordinator::{
+    eat_policy_factory, Cluster, ClusterConfig, ClusterMetrics, MonitorModel, RoutePolicy,
+};
+use eat_serve::datasets::Dataset;
+use eat_serve::runtime::Runtime;
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::clock::Clock;
+use eat_serve::util::json::Json;
+
+const N_REQ: usize = 24;
+const SLOTS: usize = 3;
+
+/// Drain `N_REQ` upfront arrivals through an N-replica cluster on a
+/// virtual clock; the drain duration is the goodput window.
+fn simulate(rt: &Runtime, replicas: usize) -> ClusterMetrics {
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 11;
+    cfg.sched.mode = SchedMode::EatAware;
+    let ccfg = ClusterConfig {
+        replicas,
+        slots_per_replica: SLOTS,
+        route: RoutePolicy::EatAware,
+        migrate: replicas > 1,
+    };
+    let factories = (0..replicas).map(|_| eat_policy_factory(&cfg)).collect();
+    let ds = Dataset::synth_gpqa(&rt.vocab, N_REQ, cfg.seed);
+    let mut c = Cluster::with_clock(
+        rt,
+        cfg,
+        MonitorModel::SelfModel,
+        ccfg,
+        factories,
+        Clock::virt(),
+    );
+    for q in ds.questions.iter().take(N_REQ) {
+        c.submit(q.clone());
+    }
+    c.run_to_completion().unwrap();
+    let m = c.metrics();
+    assert_eq!(m.completed, N_REQ);
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::reference();
+    println!("backend: {} (virtual clock)\n", rt.backend_kind());
+
+    let mut results = Vec::new();
+    let mut scaling = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let name = format!("cluster_sim/replicas_{replicas}");
+        let r = bench(&name, || {
+            simulate(&rt, replicas);
+        });
+        let m = simulate(&rt, replicas);
+        println!(
+            "  {name}: {:.1} sim req/s goodput over {:.2} sim s  \
+             (migrations {}, reroutes {})\n",
+            m.goodput_rps(),
+            m.elapsed_s,
+            m.migrations,
+            m.reroutes
+        );
+        scaling.push(Json::obj(vec![
+            ("replicas", Json::num(replicas as f64)),
+            ("completed", Json::num(m.completed as f64)),
+            ("elapsed_virtual_s", Json::num(m.elapsed_s)),
+            ("goodput_rps", Json::num(m.goodput_rps())),
+            ("migrations", Json::num(m.migrations as f64)),
+            ("reroutes", Json::num(m.reroutes as f64)),
+        ]));
+        results.push(r);
+    }
+    let extra = vec![("goodput_scaling", Json::arr(scaling))];
+    let path = write_snapshot("cluster", &results, extra)?;
+    println!("snapshot: {path}");
+    Ok(())
+}

@@ -15,8 +15,9 @@ use eat_serve::coordinator::{
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::runtime::Runtime;
-use eat_serve::util::bench::bench;
+use eat_serve::util::bench::{bench, write_snapshot};
 use eat_serve::util::clock::Clock;
+use eat_serve::util::json::Json;
 
 fn simulate(rt: &Runtime, cfg: &ServeConfig, n: usize, slots: usize) -> (u64, u64, u64) {
     let ds = Dataset::synth_gpqa(&rt.vocab, 24, cfg.seed);
@@ -40,6 +41,7 @@ fn main() -> anyhow::Result<()> {
 
     const N: usize = 24;
     const SLOTS: usize = 3;
+    let mut results = Vec::new();
     for mode in [SchedMode::Fifo, SchedMode::EatAware] {
         let mut cfg = ServeConfig::default();
         cfg.seed = 11;
@@ -53,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         });
         let req_per_s = N as f64 / (r.mean_ns / 1e9);
         println!("  {name}: {req_per_s:.0} simulated req/s\n");
+        results.push(r);
     }
 
     // event mix of one contended EAT-aware run
@@ -66,5 +69,14 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  restored tokens     {re_prefill:>8}  (repinned pages on paged; re-prefilled on mono)"
     );
+    let event_mix = Json::obj(vec![
+        ("requests", Json::num(N as f64)),
+        ("slots", Json::num(SLOTS as f64)),
+        ("preemptions", Json::num(preemptions as f64)),
+        ("resumes", Json::num(resumes as f64)),
+        ("restored_tokens", Json::num(re_prefill as f64)),
+    ]);
+    let path = write_snapshot("scheduler", &results, vec![("event_mix", event_mix)])?;
+    println!("snapshot: {path}");
     Ok(())
 }

@@ -144,6 +144,32 @@ enum AdmitPick {
     Resume(SuspendedSession),
 }
 
+/// A unit of work in flight between replicas (cluster migration,
+/// DESIGN.md §3.7): either a queued request rerouted before first
+/// admission, or a mid-flight suspended session whose retained KV pages
+/// ride along — both replicas draw on one shared page pool, so the
+/// handoff moves budget accounting, never page contents.
+pub enum Migration {
+    Fresh(QueuedRequest),
+    Session(Box<SuspendedSession>),
+}
+
+impl Migration {
+    /// Committed tokens the migrated state carries (0 for a queued
+    /// request that never prefilled).
+    pub fn tokens(&self) -> usize {
+        match self {
+            Migration::Fresh(_) => 0,
+            Migration::Session(s) => s.session.pos(),
+        }
+    }
+
+    /// True for a mid-flight session handoff (vs a queue reroute).
+    pub fn is_session(&self) -> bool {
+        matches!(self, Migration::Session(_))
+    }
+}
+
 /// Policy factory: each admitted request gets a fresh policy instance.
 pub type PolicyFactory = Box<dyn Fn() -> Box<dyn ExitPolicy>>;
 
@@ -255,10 +281,17 @@ impl<'a> Batcher<'a> {
     }
 
     pub fn submit(&mut self, question: Question) {
+        self.submit_seq(question, self.next_seq);
+    }
+
+    /// Submit with an externally assigned sequence number (the cluster
+    /// router hands out globally unique seqs so a request's RNG — and
+    /// therefore its trajectory — is invariant to replica placement).
+    /// `submit` delegates here with the local counter.
+    pub fn submit_seq(&mut self, question: Question, seq: u64) {
         self.metrics.mark_start();
+        self.next_seq = self.next_seq.max(seq + 1);
         let now = self.clock.now();
-        let seq = self.next_seq;
-        self.next_seq += 1;
         let req = QueuedRequest {
             question,
             arrived: now,
@@ -289,6 +322,30 @@ impl<'a> Batcher<'a> {
     /// Anything left to do: queued, resident, or suspended work.
     pub fn has_work(&self) -> bool {
         self.pending() > 0 || !self.active.is_empty() || self.suspended_count() > 0
+    }
+
+    /// KV lanes currently free (admission capacity) — a router load
+    /// signal.
+    pub fn free_lanes(&self) -> usize {
+        self.kv.available()
+    }
+
+    /// Waiters not yet resident: queued requests plus suspended
+    /// sessions — the router's backlog signal.
+    pub fn waiters(&self) -> usize {
+        self.pending() + self.suspended_count()
+    }
+
+    /// Σ over resident sessions of `1 − stability`: the EAT
+    /// distance-to-exit load signal (DESIGN.md §3.7). 0 when every
+    /// resident session sits at its exit threshold, so a replica about
+    /// to free its lanes looks cheap to the router. Sessions without a
+    /// stability estimate yet count 0.5.
+    pub fn drain_distance(&self) -> f64 {
+        self.active
+            .iter()
+            .map(|a| 1.0 - a.session.stability().unwrap_or(0.5))
+            .sum()
     }
 
     pub fn kv_utilization(&self) -> f64 {
@@ -531,6 +588,124 @@ impl<'a> Batcher<'a> {
             self.suspend(a, main, proxy);
         }
         Ok(())
+    }
+
+    /// Lift one unit of work off this replica for migration (cluster
+    /// rebalancing, DESIGN.md §3.7). Preference order:
+    ///
+    /// 1. the waiter that would be admitted next ([`Self::pick_admission`],
+    ///    so migration respects the same priority the local scheduler
+    ///    would have) — a suspended session leaves with its retained
+    ///    pages still charged to this manager's host budget until
+    ///    [`Self::inject_migration`] transfers the charge;
+    /// 2. with no waiters, a resident session is suspended out
+    ///    mid-flight (lowest stability first, like preemption but
+    ///    without the aging/count gates — migration is the router's
+    ///    decision, not a starvation guard), its pages retained the
+    ///    same way.
+    ///
+    /// Returns `Ok(None)` when nothing is movable.
+    pub fn extract_migration(&mut self) -> Result<Option<Migration>> {
+        self.promote_aged();
+        if let Some(pick) = self.pick_admission() {
+            self.metrics.record_migration_out();
+            return Ok(Some(match pick {
+                AdmitPick::Fresh(req) => Migration::Fresh(req),
+                AdmitPick::Resume(s) => Migration::Session(Box::new(s)),
+            }));
+        }
+        let victim = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.session.can_suspend() && !a.session.eliciting())
+            .min_by(|(_, a), (_, b)| {
+                let sa = a.session.stability().unwrap_or(1.0);
+                let sb = b.session.stability().unwrap_or(1.0);
+                (sa, a.seq).partial_cmp(&(sb, b.seq)).unwrap()
+            })
+            .map(|(i, _)| i);
+        let Some(i) = victim else {
+            return Ok(None);
+        };
+        let a = self.active.swap_remove(i);
+        let (main, proxy) = self.store.take(a.slot)?;
+        self.kv.release(a.slot)?;
+        self.metrics.sample_slots(self.kv.in_use());
+        let now = self.clock.now();
+        let (caches, held_pages) = if self.paged {
+            let pages = pages_for(main.pos(), self.main_page_size)
+                + proxy
+                    .as_ref()
+                    .map(|p| pages_for(p.pos(), self.proxy_page_size))
+                    .unwrap_or(0);
+            if self.kv.try_hold_suspended(pages) {
+                (Some(SessionCaches { main, proxy }), pages)
+            } else {
+                self.metrics.record_spill();
+                (None, 0)
+            }
+        } else {
+            (None, 0)
+        };
+        self.metrics.record_migration_out();
+        Ok(Some(Migration::Session(Box::new(SuspendedSession {
+            session: a.session,
+            arrived: a.arrived,
+            admitted: a.admitted,
+            deadline: a.deadline,
+            seq: a.seq,
+            preemptions: a.preemptions,
+            suspended_at: now,
+            caches,
+            held_pages,
+        }))))
+    }
+
+    /// Receive a migrated unit of work from `src`. A rerouted request
+    /// just joins the local waiters; a migrated session's retained-page
+    /// charge moves from `src`'s host budget to ours
+    /// ([`KvPageManager::transfer_suspended`] — the pages themselves
+    /// never move, both managers draw on one shared pool), spilling to
+    /// the re-prefill fallback when our budget cannot absorb it. The
+    /// session keeps its seq (RNG), deadline and suspension time, so
+    /// its trajectory is bit-identical to an unmigrated run.
+    pub fn inject_migration(&mut self, src: &mut Batcher<'_>, m: Migration) {
+        self.metrics.mark_start();
+        match m {
+            Migration::Fresh(req) => {
+                self.next_seq = self.next_seq.max(req.seq + 1);
+                self.metrics.record_migration_in(0);
+                match self.cfg.sched.mode {
+                    SchedMode::Fifo => self.queue.push_back(req),
+                    SchedMode::EatAware => {
+                        let key = (req.deadline, req.seq);
+                        heap_push(&mut self.fresh, key, req);
+                    }
+                }
+            }
+            Migration::Session(mut s) => {
+                self.next_seq = self.next_seq.max(s.seq + 1);
+                if s.held_pages > 0 && !src.kv.transfer_suspended(&mut self.kv, s.held_pages) {
+                    // our host budget is full: drop the retained pages,
+                    // resume falls back to re-prefill
+                    s.caches = None;
+                    s.held_pages = 0;
+                    self.metrics.record_spill();
+                }
+                self.metrics.record_migration_in(s.session.pos());
+                let s = *s;
+                if self.cfg.sched.mode == SchedMode::EatAware
+                    && s.preemptions >= self.cfg.sched.max_preemptions
+                {
+                    let key = (s.deadline, s.seq);
+                    heap_push(&mut self.suspended_aged, key, s);
+                } else {
+                    let key = (s.suspended_at, s.seq);
+                    heap_push(&mut self.suspended_wait, key, s);
+                }
+            }
+        }
     }
 
     /// One scheduling tick: preempt (EAT-aware mode); admit/resume; poll

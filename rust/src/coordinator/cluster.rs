@@ -1,0 +1,443 @@
+//! Multi-replica cluster serving (DESIGN.md §3.7): N engine replicas —
+//! each its own [`Batcher`] with private lanes and page budgets — behind
+//! one router, all drawing on the *same* shared runtime page pools.
+//!
+//! The router does EAT-aware placement: a new arrival goes to the
+//! replica with the least pressure, where pressure is the backlog
+//! (queued + suspended waiters) plus the [`Batcher::drain_distance`] —
+//! the Σ of `1 − stability` over resident sessions. A replica whose
+//! sessions all sit near their exit threshold is about to free its
+//! lanes, so the distance-to-exit signal the paper uses to *stop*
+//! reasoning doubles as the load signal for *placing* it. Monitors with
+//! the same distance-to-exit shape (Dynamic Early Exit, Think Just
+//! Enough) plug in through [`crate::exit::ExitPolicy::stability`]
+//! unchanged.
+//!
+//! Under skewed load the router also performs **live session
+//! migration**: when one replica is saturated with a backlog while
+//! another has idle lanes, a waiter is lifted off the hot replica
+//! ([`Batcher::extract_migration`]) and injected into the cold one
+//! ([`Batcher::inject_migration`]). Because KV caches are refcounted
+//! [`crate::coordinator::PageTable`]s into pools owned by the shared
+//! runtime, migrating a mid-flight session is a page handoff — budget
+//! accounting moves via
+//! [`crate::coordinator::KvPageManager::transfer_suspended`], the pages
+//! themselves never copy and resumption repins them with **zero
+//! re-prefill** (asserted against the runtime prefill counters by the
+//! cluster suite).
+//!
+//! Determinism is pinned cluster-wide: every replica shares one
+//! [`Clock`], [`Cluster::tick_once`] ticks replicas in ascending id
+//! order — so all scheduling events are totally ordered by
+//! `(virtual_time, replica_id)` — and the router hands out globally
+//! unique submission seqs, which seed the per-request RNGs. A request's
+//! trajectory is therefore invariant to placement and migration, and a
+//! same-seed N-replica run serializes byte-identical
+//! [`ClusterMetrics`] JSON. With one replica the router degenerates to
+//! a pass-through: `cluster(N=1)` emits byte-identical [`ServeMetrics`]
+//! to a plain single-batcher run (the CI equivalence check).
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, PolicyFactory, DEFAULT_TICK_DT};
+use super::engine::{MonitorModel, RequestResult};
+use super::metrics::{ClusterMetrics, MetricsReport};
+use super::workload::OpenLoopTarget;
+use crate::config::ServeConfig;
+use crate::datasets::Question;
+use crate::runtime::Runtime;
+use crate::util::clock::Clock;
+
+/// Arrival placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle replicas in submission order (load-oblivious baseline).
+    RoundRobin,
+    /// Least pressure first: backlog + EAT distance-to-exit of the
+    /// resident sessions (ties break to the lowest replica id).
+    EatAware,
+}
+
+/// Cluster shape. Bundled so call sites stay readable as knobs grow.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    pub replicas: usize,
+    /// KV lanes per replica (each replica gets its own page budget).
+    pub slots_per_replica: usize,
+    pub route: RoutePolicy,
+    /// Rebalance skewed load by migrating waiters between replicas.
+    pub migrate: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            slots_per_replica: 4,
+            route: RoutePolicy::EatAware,
+            migrate: false,
+        }
+    }
+}
+
+/// N replicas behind an EAT-aware router; see the module docs.
+pub struct Cluster<'a> {
+    replicas: Vec<Batcher<'a>>,
+    clock: Clock,
+    route: RoutePolicy,
+    migrate: bool,
+    /// Globally unique submission seq — the per-request RNG seed, so a
+    /// trajectory is invariant to which replica serves it.
+    next_seq: u64,
+    rr_next: usize,
+    /// First cluster arrival (the goodput window).
+    started: Option<f64>,
+    /// Arrivals placed per replica, by replica id.
+    routed: Vec<u64>,
+    /// Mid-flight sessions handed between replicas.
+    migrations: u64,
+    /// Queued requests rerouted before first admission.
+    reroutes: u64,
+    /// Committed tokens carried by migrated sessions.
+    migrated_tokens: u64,
+}
+
+impl<'a> Cluster<'a> {
+    /// Wall-clock cluster (live serving).
+    pub fn new(
+        rt: &'a Runtime,
+        cfg: ServeConfig,
+        monitor: MonitorModel,
+        cluster_cfg: ClusterConfig,
+        factories: Vec<PolicyFactory>,
+    ) -> Cluster<'a> {
+        Cluster::with_clock(rt, cfg, monitor, cluster_cfg, factories, Clock::wall())
+    }
+
+    /// Full constructor: one policy factory per replica (so every
+    /// replica mints fresh policy instances), one shared clock.
+    pub fn with_clock(
+        rt: &'a Runtime,
+        cfg: ServeConfig,
+        monitor: MonitorModel,
+        cluster_cfg: ClusterConfig,
+        factories: Vec<PolicyFactory>,
+        clock: Clock,
+    ) -> Cluster<'a> {
+        assert!(cluster_cfg.replicas >= 1, "cluster needs at least one replica");
+        assert_eq!(
+            factories.len(),
+            cluster_cfg.replicas,
+            "one policy factory per replica"
+        );
+        let replicas: Vec<Batcher<'a>> = factories
+            .into_iter()
+            .map(|f| {
+                Batcher::with_clock(
+                    rt,
+                    cfg.clone(),
+                    monitor,
+                    cluster_cfg.slots_per_replica,
+                    f,
+                    clock.clone(),
+                )
+            })
+            .collect();
+        let n = replicas.len();
+        Cluster {
+            replicas,
+            clock,
+            route: cluster_cfg.route,
+            migrate: cluster_cfg.migrate,
+            next_seq: 0,
+            rr_next: 0,
+            started: None,
+            routed: vec![0; n],
+            migrations: 0,
+            reroutes: 0,
+            migrated_tokens: 0,
+        }
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replica(&self, id: usize) -> &Batcher<'a> {
+        &self.replicas[id]
+    }
+
+    /// Per-token sequential decode on every replica (the A/B check
+    /// against fused batch decode; see [`Batcher::force_sequential`]).
+    pub fn set_force_sequential(&mut self, on: bool) {
+        for b in self.replicas.iter_mut() {
+            b.force_sequential = on;
+        }
+    }
+
+    /// Router pressure of one replica: waiters plus the distance-to-exit
+    /// mass of its resident sessions.
+    fn pressure(b: &Batcher<'_>) -> f64 {
+        b.waiters() as f64 + b.drain_distance()
+    }
+
+    /// Pick the replica for the next arrival.
+    fn route_pick(&mut self) -> usize {
+        match self.route {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.replicas.len();
+                i
+            }
+            RoutePolicy::EatAware => {
+                let mut best = 0usize;
+                for (i, b) in self.replicas.iter().enumerate().skip(1) {
+                    // strict < keeps ties on the lowest id (determinism)
+                    if Self::pressure(b) < Self::pressure(&self.replicas[best]) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Route one arrival; the replica records it under a globally
+    /// unique seq so its trajectory is placement-invariant.
+    pub fn submit(&mut self, question: Question) {
+        if self.started.is_none() {
+            self.started = Some(self.clock.now());
+        }
+        let id = self.route_pick();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.routed[id] += 1;
+        self.replicas[id].submit_seq(question, seq);
+    }
+
+    /// Move waiters off saturated replicas onto idle lanes: repeatedly
+    /// pair the most-backlogged replica with zero free lanes against the
+    /// most-free replica with zero waiters, and migrate one unit of work
+    /// between them. Each handoff gives the destination a waiter
+    /// (disqualifying it as a destination), so the loop terminates
+    /// within `replicas` iterations per tick.
+    fn rebalance(&mut self) -> Result<()> {
+        loop {
+            let mut src: Option<usize> = None;
+            let mut dst: Option<usize> = None;
+            for (i, b) in self.replicas.iter().enumerate() {
+                // strict > keeps ties on the lowest id
+                if b.free_lanes() == 0
+                    && b.waiters() > 0
+                    && src.is_none_or(|j| b.waiters() > self.replicas[j].waiters())
+                {
+                    src = Some(i);
+                }
+                if b.free_lanes() > 0
+                    && b.waiters() == 0
+                    && dst.is_none_or(|j| b.free_lanes() > self.replicas[j].free_lanes())
+                {
+                    dst = Some(i);
+                }
+            }
+            let (Some(si), Some(di)) = (src, dst) else {
+                return Ok(());
+            };
+            // saturated and idle are disjoint, so si != di; split-borrow
+            // the pair out of the replica vec
+            let (lo, hi) = (si.min(di), si.max(di));
+            let (left, right) = self.replicas.split_at_mut(hi);
+            let (a, b) = (&mut left[lo], &mut right[0]);
+            let (s, d) = if si < di { (a, b) } else { (b, a) };
+            let Some(m) = s.extract_migration()? else {
+                return Ok(());
+            };
+            if m.is_session() {
+                self.migrations += 1;
+                self.migrated_tokens += m.tokens() as u64;
+            } else {
+                self.reroutes += 1;
+            }
+            d.inject_migration(s, m);
+        }
+    }
+
+    /// One cluster tick at the current virtual time: rebalance (when
+    /// migration is on and there are ≥ 2 replicas), then tick every
+    /// replica in ascending id order — the `(virtual_time, replica_id)`
+    /// total order all cluster determinism rests on.
+    pub fn tick(&mut self) -> Result<()> {
+        if self.migrate && self.replicas.len() >= 2 {
+            self.rebalance()?;
+        }
+        for b in self.replicas.iter_mut() {
+            b.tick()?;
+        }
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.replicas.iter().map(|b| b.pending()).sum()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.replicas.iter().map(|b| b.active_count()).sum()
+    }
+
+    pub fn suspended_count(&self) -> usize {
+        self.replicas.iter().map(|b| b.suspended_count()).sum()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.replicas.iter().any(|b| b.has_work())
+    }
+
+    /// Drain: tick until every replica is empty (virtual clocks advance
+    /// [`DEFAULT_TICK_DT`] per tick, like [`Batcher::run_to_completion`]).
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.tick()?;
+            self.clock.advance(DEFAULT_TICK_DT);
+        }
+        Ok(())
+    }
+
+    /// Drain every replica's completed results, sorted by question id.
+    pub fn all_results(&mut self) -> Vec<RequestResult> {
+        let mut out: Vec<RequestResult> = Vec::new();
+        for b in self.replicas.iter_mut() {
+            out.append(&mut b.results);
+        }
+        out.sort_by_key(|r| r.question_id);
+        out
+    }
+
+    /// Deterministic cluster snapshot: router counters, totals summed
+    /// over replicas, and each replica's full [`ServeMetrics`] JSON
+    /// embedded by id (what makes the `cluster(N=1) ≡ single` CI check
+    /// a plain byte diff).
+    ///
+    /// [`ServeMetrics`]: super::metrics::ServeMetrics
+    pub fn metrics(&self) -> ClusterMetrics {
+        let elapsed_s = match self.started {
+            Some(t0) => (self.clock.now() - t0).max(0.0),
+            None => 0.0,
+        };
+        ClusterMetrics {
+            replicas: self.replicas.len(),
+            routed: self.routed.clone(),
+            migrations: self.migrations,
+            reroutes: self.reroutes,
+            migrated_tokens: self.migrated_tokens,
+            completed: self.replicas.iter().map(|b| b.metrics.completed).sum(),
+            correct: self.replicas.iter().map(|b| b.metrics.correct).sum(),
+            reasoning_tokens: self.replicas.iter().map(|b| b.metrics.reasoning_tokens).sum(),
+            preemptions: self.replicas.iter().map(|b| b.metrics.preemptions).sum(),
+            resumes: self.replicas.iter().map(|b| b.metrics.resumes).sum(),
+            kv_spills: self.replicas.iter().map(|b| b.metrics.kv_spills).sum(),
+            deadline_misses: self.replicas.iter().map(|b| b.metrics.deadline_misses).sum(),
+            elapsed_s,
+            per_replica: self.replicas.iter().map(|b| b.metrics.to_json()).collect(),
+        }
+    }
+}
+
+impl OpenLoopTarget for Cluster<'_> {
+    fn clock(&self) -> &Clock {
+        Cluster::clock(self)
+    }
+
+    fn submit(&mut self, question: Question) {
+        Cluster::submit(self, question)
+    }
+
+    fn has_work(&self) -> bool {
+        Cluster::has_work(self)
+    }
+
+    fn tick_once(&mut self) -> Result<()> {
+        Cluster::tick(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::eat_policy_factory;
+    use crate::datasets::Dataset;
+
+    fn mk_cluster(rt: &Runtime, ccfg: ClusterConfig, seed: u64) -> Cluster<'_> {
+        let mut cfg = ServeConfig::default();
+        cfg.seed = seed;
+        let factories = (0..ccfg.replicas).map(|_| eat_policy_factory(&cfg)).collect();
+        Cluster::with_clock(rt, cfg, MonitorModel::SelfModel, ccfg, factories, Clock::virt())
+    }
+
+    #[test]
+    fn round_robin_cycles_replicas() {
+        let rt = Runtime::reference();
+        let ccfg = ClusterConfig {
+            replicas: 3,
+            slots_per_replica: 2,
+            route: RoutePolicy::RoundRobin,
+            migrate: false,
+        };
+        let mut c = mk_cluster(&rt, ccfg, 1);
+        let ds = Dataset::synth_gpqa(&rt.vocab, 6, 1);
+        for q in ds.questions.iter().take(6) {
+            c.submit(q.clone());
+        }
+        assert_eq!(c.metrics().routed, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn eat_aware_routing_avoids_the_loaded_replica() {
+        let rt = Runtime::reference();
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            slots_per_replica: 2,
+            route: RoutePolicy::EatAware,
+            migrate: false,
+        };
+        let mut c = mk_cluster(&rt, ccfg, 2);
+        let ds = Dataset::synth_gpqa(&rt.vocab, 4, 2);
+        // both idle: ties go to replica 0; its backlog then pushes the
+        // next arrival to replica 1, and so on
+        for q in ds.questions.iter().take(4) {
+            c.submit(q.clone());
+        }
+        assert_eq!(c.metrics().routed, vec![2, 2]);
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics().completed, 4);
+        assert!(!c.has_work());
+    }
+
+    #[test]
+    fn cluster_drains_and_aggregates() {
+        let rt = Runtime::reference();
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            slots_per_replica: 2,
+            route: RoutePolicy::RoundRobin,
+            migrate: true,
+        };
+        let mut c = mk_cluster(&rt, ccfg, 3);
+        let ds = Dataset::synth_gpqa(&rt.vocab, 6, 3);
+        for q in ds.questions.iter().take(6) {
+            c.submit(q.clone());
+        }
+        c.run_to_completion().unwrap();
+        let m = c.metrics();
+        assert_eq!(m.completed, 6);
+        assert_eq!(c.all_results().len(), 6);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.active_count(), 0);
+        assert_eq!(c.suspended_count(), 0);
+        assert_eq!(m.per_replica.len(), 2);
+        assert!(m.elapsed_s > 0.0);
+    }
+}

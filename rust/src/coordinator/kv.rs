@@ -549,6 +549,18 @@ impl KvPageManager {
         debug_assert!(pages <= self.host_held, "suspended page accounting underflow");
         self.host_held = self.host_held.saturating_sub(pages);
     }
+
+    /// Move `pages` of suspended-retention accounting from this manager
+    /// to `dst` (cluster session migration, DESIGN.md §3.7). The pages
+    /// themselves never move — every replica's manager draws on one
+    /// shared [`PagePool`] — only the host-budget charge does. The
+    /// charge leaves this manager either way; false means `dst` could
+    /// not absorb it and the caller must spill (drop the retained
+    /// caches, resume by re-prefill).
+    pub fn transfer_suspended(&mut self, dst: &mut KvPageManager, pages: usize) -> bool {
+        self.release_suspended(pages);
+        dst.try_hold_suspended(pages)
+    }
 }
 
 #[cfg(test)]
@@ -649,6 +661,22 @@ mod tests {
         m.release_suspended(5);
         assert!(m.try_hold_suspended(4));
         assert_eq!(m.host_held_pages(), 7);
+    }
+
+    #[test]
+    fn transfer_suspended_moves_the_charge_between_managers() {
+        let mut src = KvPageManager::new(1, 16, 8, Some(8));
+        let mut dst = KvPageManager::new(1, 16, 8, Some(8));
+        assert!(src.try_hold_suspended(6));
+        assert!(src.transfer_suspended(&mut dst, 6));
+        assert_eq!(src.host_held_pages(), 0, "charge left the source");
+        assert_eq!(dst.host_held_pages(), 6, "charge landed at the destination");
+        // destination budget full: the charge still leaves the source
+        // and the caller must spill
+        assert!(src.try_hold_suspended(4));
+        assert!(!src.transfer_suspended(&mut dst, 4));
+        assert_eq!(src.host_held_pages(), 0);
+        assert_eq!(dst.host_held_pages(), 6);
     }
 
     #[test]

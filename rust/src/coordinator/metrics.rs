@@ -5,9 +5,13 @@
 //! Time is read through an injected [`Clock`] rather than
 //! `std::time::Instant`, and the throughput window opens at the *first
 //! arrival* (`mark_start`) instead of at construction — metrics built
-//! before traffic no longer skew elapsed/throughput. Under a virtual
-//! clock `to_json()` is byte-identical across same-seed runs; the CI
-//! determinism step diffs it.
+//! before traffic no longer skew elapsed/throughput.
+//!
+//! Every metrics type here emits through the one [`MetricsReport`]
+//! interface: a deterministic JSON snapshot (under a virtual clock two
+//! same-seed runs serialize byte-identically — the CI determinism steps
+//! diff it) plus a one-block human report, with the percentile-summary
+//! shape shared via [`summary_json`] instead of re-rolled per type.
 
 use std::collections::BTreeMap;
 
@@ -15,6 +19,34 @@ use crate::exit::ExitReason;
 use crate::util::clock::Clock;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Unified metrics emission (DESIGN.md §3.7): one serializer contract
+/// for [`ServeMetrics`], [`BlackboxMetrics`] and [`ClusterMetrics`], so
+/// the CI determinism diffs and the CLI `--metrics-json` path run
+/// against a single interface instead of three hand-rolled bodies.
+pub trait MetricsReport {
+    /// Deterministic JSON snapshot: under a virtual clock two same-seed
+    /// runs must serialize byte-identically.
+    fn to_json(&self) -> Json;
+
+    /// One-block human report for the CLI and examples.
+    fn report(&self) -> String;
+}
+
+/// The shared percentile-summary serializer
+/// (count/mean/min/p50/p95/p99/max) every [`MetricsReport`] embeds for
+/// its latency-shaped [`Summary`] fields.
+pub fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count() as f64)),
+        ("mean", Json::num(s.mean())),
+        ("min", Json::num(s.min())),
+        ("p50", Json::num(s.p50())),
+        ("p95", Json::num(s.p95())),
+        ("p99", Json::num(s.p99())),
+        ("max", Json::num(s.max())),
+    ])
+}
 
 #[derive(Debug)]
 pub struct ServeMetrics {
@@ -39,6 +71,16 @@ pub struct ServeMetrics {
     /// budget full): their resume falls back to re-prefill. Always 0
     /// on the monolithic store and under the default page budget.
     pub kv_spills: u64,
+    /// Waiters (queued requests or suspended sessions) handed to another
+    /// replica by the cluster router. 0 outside cluster serving.
+    pub migrations_out: u64,
+    /// Waiters received from another replica.
+    pub migrations_in: u64,
+    /// Committed tokens carried by received migrated sessions — their KV
+    /// repins from the shared pool on the paged store and re-prefills on
+    /// mono, but is counted identically in both so same-seed runs stay
+    /// byte-comparable across stores.
+    pub migrated_tokens: u64,
     /// Completions that finished past their SLO deadline.
     pub deadline_misses: u64,
     pub latency_ms: Summary,
@@ -68,6 +110,9 @@ impl ServeMetrics {
             resumes: 0,
             resume_prefill_tokens: 0,
             kv_spills: 0,
+            migrations_out: 0,
+            migrations_in: 0,
+            migrated_tokens: 0,
             deadline_misses: 0,
             latency_ms: Summary::new(),
             queue_ms: Summary::new(),
@@ -125,6 +170,19 @@ impl ServeMetrics {
         self.kv_spills += 1;
     }
 
+    /// A waiter left this replica for another (cluster migration).
+    pub fn record_migration_out(&mut self) {
+        self.migrations_out += 1;
+    }
+
+    /// A waiter arrived from another replica; `tokens` is the incoming
+    /// session's committed history length (0 for a queued request that
+    /// never prefilled).
+    pub fn record_migration_in(&mut self, tokens: usize) {
+        self.migrations_in += 1;
+        self.migrated_tokens += tokens as u64;
+    }
+
     /// Append a slot-occupancy sample if occupancy changed.
     pub fn sample_slots(&mut self, in_use: usize) {
         if self.slot_timeline.last().map(|&(_, u)| u) == Some(in_use) {
@@ -171,21 +229,12 @@ impl ServeMetrics {
         }
     }
 
+}
+
+impl MetricsReport for ServeMetrics {
     /// Deterministic JSON snapshot: every counter plus latency/queue
-    /// percentiles and the slot timeline. Under a virtual clock two
-    /// same-seed runs serialize byte-identically.
-    pub fn to_json(&self) -> Json {
-        let summary = |s: &Summary| {
-            Json::obj(vec![
-                ("count", Json::num(s.count() as f64)),
-                ("mean", Json::num(s.mean())),
-                ("min", Json::num(s.min())),
-                ("p50", Json::num(s.p50())),
-                ("p95", Json::num(s.p95())),
-                ("p99", Json::num(s.p99())),
-                ("max", Json::num(s.max())),
-            ])
-        };
+    /// percentiles and the slot timeline.
+    fn to_json(&self) -> Json {
         let reasons: Vec<(&str, Json)> = self
             .exit_reasons
             .iter()
@@ -207,17 +256,20 @@ impl ServeMetrics {
             ("resumes", Json::num(self.resumes as f64)),
             ("resume_prefill_tokens", Json::num(self.resume_prefill_tokens as f64)),
             ("kv_spills", Json::num(self.kv_spills as f64)),
+            ("migrations_out", Json::num(self.migrations_out as f64)),
+            ("migrations_in", Json::num(self.migrations_in as f64)),
+            ("migrated_tokens", Json::num(self.migrated_tokens as f64)),
             ("deadline_misses", Json::num(self.deadline_misses as f64)),
             ("elapsed_s", Json::num(self.elapsed_s())),
-            ("latency_ms", summary(&self.latency_ms)),
-            ("queue_ms", summary(&self.queue_ms)),
+            ("latency_ms", summary_json(&self.latency_ms)),
+            ("queue_ms", summary_json(&self.queue_ms)),
             ("exit_reasons", Json::obj(reasons)),
             ("slot_timeline", Json::arr(timeline)),
         ])
     }
 
     /// One-block human report for examples / `repro serve`.
-    pub fn report(&self) -> String {
+    fn report(&self) -> String {
         let mut s = String::new();
         s += &format!(
             "requests           {:>8}   accuracy {:.3}\n",
@@ -253,6 +305,12 @@ impl ServeMetrics {
             self.kv_spills,
             self.deadline_misses
         );
+        if self.migrations_in + self.migrations_out > 0 {
+            s += &format!(
+                "migration          out {}  in {} ({} tok handed off)\n",
+                self.migrations_out, self.migrations_in, self.migrated_tokens
+            );
+        }
         s += "exit reasons       ";
         for (k, v) in &self.exit_reasons {
             s += &format!("{k}:{v} ");
@@ -369,20 +427,12 @@ impl BlackboxMetrics {
         self.arrival_gap_ms.mean() / self.proxy_compute_ms.mean().max(1e-12)
     }
 
+}
+
+impl MetricsReport for BlackboxMetrics {
     /// Deterministic JSON snapshot (byte-identical across same-seed
     /// virtual runs).
-    pub fn to_json(&self) -> Json {
-        let summary = |s: &Summary| {
-            Json::obj(vec![
-                ("count", Json::num(s.count() as f64)),
-                ("mean", Json::num(s.mean())),
-                ("min", Json::num(s.min())),
-                ("p50", Json::num(s.p50())),
-                ("p95", Json::num(s.p95())),
-                ("p99", Json::num(s.p99())),
-                ("max", Json::num(s.max())),
-            ])
-        };
+    fn to_json(&self) -> Json {
         Json::obj(vec![
             ("completed", Json::num(self.completed as f64)),
             ("correct", Json::num(self.correct as f64)),
@@ -395,14 +445,14 @@ impl BlackboxMetrics {
             ("overrun_chunks", Json::num(self.overrun_chunks as f64)),
             ("overlap_headroom", Json::num(self.overlap_headroom())),
             ("elapsed_s", Json::num(self.elapsed_s())),
-            ("arrival_gap_ms", summary(&self.arrival_gap_ms)),
-            ("proxy_compute_ms", summary(&self.proxy_compute_ms)),
-            ("latency_ms", summary(&self.latency_ms)),
+            ("arrival_gap_ms", summary_json(&self.arrival_gap_ms)),
+            ("proxy_compute_ms", summary_json(&self.proxy_compute_ms)),
+            ("latency_ms", summary_json(&self.latency_ms)),
         ])
     }
 
     /// One-block human report for `repro serve --blackbox` / examples.
-    pub fn report(&self) -> String {
+    fn report(&self) -> String {
         let mut s = String::new();
         s += &format!(
             "streams            {:>8}   accuracy {:.3}   stopped early {}/{}\n",
@@ -434,6 +484,101 @@ impl BlackboxMetrics {
             self.latency_ms.p50(),
             self.latency_ms.p95(),
             self.latency_ms.max()
+        );
+        s
+    }
+}
+
+/// Cluster-level serving metrics (DESIGN.md §3.7): a deterministic
+/// snapshot assembled by
+/// [`crate::coordinator::cluster::Cluster::metrics`] — router counters
+/// plus replica-aggregated totals, with each replica's full
+/// [`ServeMetrics`] JSON embedded by replica id. Embedding the replica
+/// snapshots verbatim is what makes the CI `cluster(N=1) ≡ single`
+/// equivalence check a plain byte diff.
+#[derive(Debug, Clone)]
+pub struct ClusterMetrics {
+    pub replicas: usize,
+    /// Requests routed to each replica at submission, by replica id.
+    pub routed: Vec<u64>,
+    /// Mid-flight sessions handed between replicas (state + KV pages).
+    pub migrations: u64,
+    /// Queued requests rerouted between replicas before first admission.
+    pub reroutes: u64,
+    /// Committed tokens carried by migrated sessions (repinned from the
+    /// shared page pool, never re-prefilled, on the paged store).
+    pub migrated_tokens: u64,
+    pub completed: usize,
+    pub correct: usize,
+    pub reasoning_tokens: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub kv_spills: u64,
+    pub deadline_misses: u64,
+    /// Seconds from the first cluster arrival to the snapshot.
+    pub elapsed_s: f64,
+    /// Per-replica [`ServeMetrics`] snapshots, by replica id.
+    pub per_replica: Vec<Json>,
+}
+
+impl ClusterMetrics {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.completed.max(1) as f64
+    }
+
+    /// Completed requests per second over the cluster window — the
+    /// goodput the N=1/2/4 scaling bench reports.
+    pub fn goodput_rps(&self) -> f64 {
+        self.completed as f64 / self.elapsed_s.max(1e-9)
+    }
+}
+
+impl MetricsReport for ClusterMetrics {
+    fn to_json(&self) -> Json {
+        let routed: Vec<Json> = self.routed.iter().map(|&r| Json::num(r as f64)).collect();
+        Json::obj(vec![
+            ("replicas", Json::num(self.replicas as f64)),
+            ("routed", Json::arr(routed)),
+            ("migrations", Json::num(self.migrations as f64)),
+            ("reroutes", Json::num(self.reroutes as f64)),
+            ("migrated_tokens", Json::num(self.migrated_tokens as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("correct", Json::num(self.correct as f64)),
+            ("accuracy", Json::num(self.accuracy())),
+            ("reasoning_tokens", Json::num(self.reasoning_tokens as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("resumes", Json::num(self.resumes as f64)),
+            ("kv_spills", Json::num(self.kv_spills as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("goodput_rps", Json::num(self.goodput_rps())),
+            ("per_replica", Json::arr(self.per_replica.clone())),
+        ])
+    }
+
+    fn report(&self) -> String {
+        let mut s = String::new();
+        s += &format!(
+            "cluster            {} replicas   routed {:?}\n",
+            self.replicas, self.routed
+        );
+        s += &format!(
+            "requests           {:>8}   accuracy {:.3}   goodput {:.2} req/s\n",
+            self.completed,
+            self.accuracy(),
+            self.goodput_rps()
+        );
+        s += &format!(
+            "migration          sessions {} ({} tok handed off)   reroutes {}\n",
+            self.migrations, self.migrated_tokens, self.reroutes
+        );
+        s += &format!(
+            "scheduler          preemptions {}  resumes {}  spills {}  deadline misses {}\n",
+            self.preemptions, self.resumes, self.kv_spills, self.deadline_misses
+        );
+        s += &format!(
+            "tokens             reasoning {}   elapsed {:.2}s\n",
+            self.reasoning_tokens, self.elapsed_s
         );
         s
     }
@@ -545,5 +690,54 @@ mod tests {
         assert_eq!(a, b, "same-virtual-run snapshots must be byte-identical");
         assert!(a.contains("\"preemptions\""));
         assert!(a.contains("\"p99\""));
+    }
+
+    #[test]
+    fn migration_counters_round_trip() {
+        let mut m = ServeMetrics::default();
+        m.record_migration_out();
+        m.record_migration_in(42);
+        m.record_migration_in(0); // a rerouted queued request carries no KV
+        assert_eq!(m.migrations_out, 1);
+        assert_eq!(m.migrations_in, 2);
+        assert_eq!(m.migrated_tokens, 42);
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"migrations_in\""));
+        assert!(json.contains("\"migrated_tokens\""));
+        assert!(m.report().contains("migration"));
+    }
+
+    #[test]
+    fn cluster_metrics_snapshot_is_deterministic() {
+        let build = || {
+            let mut r0 = ServeMetrics::new(Clock::virt());
+            r0.record_completion(true, 20, 5, 0, 100.0, 1.0, false, ExitReason::Stable);
+            ClusterMetrics {
+                replicas: 2,
+                routed: vec![1, 0],
+                migrations: 1,
+                reroutes: 2,
+                migrated_tokens: 17,
+                completed: r0.completed,
+                correct: r0.correct,
+                reasoning_tokens: r0.reasoning_tokens,
+                preemptions: 0,
+                resumes: 1,
+                kv_spills: 0,
+                deadline_misses: 0,
+                elapsed_s: 2.0,
+                per_replica: vec![
+                    r0.to_json(),
+                    ServeMetrics::new(Clock::virt()).to_json(),
+                ],
+            }
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!((a.goodput_rps() - 0.5).abs() < 1e-12);
+        let json = a.to_json().to_string();
+        assert!(json.contains("\"per_replica\""));
+        assert!(json.contains("\"goodput_rps\""));
+        assert!(a.report().contains("cluster"));
     }
 }

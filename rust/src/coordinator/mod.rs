@@ -16,21 +16,29 @@
 //!    upload accounting
 //!  * `kv`          — paged KV subsystem: refcounted page allocator,
 //!    copy-on-write page pool, page-budget admission manager
-//!  * `metrics`     — serving metrics (clock-injected, JSON snapshot)
+//!  * `cluster`     — multi-replica router: EAT-aware placement over N
+//!    batchers sharing one runtime, with live session migration as a
+//!    page handoff (DESIGN.md §3.7)
+//!  * `metrics`     — serving metrics behind the one [`MetricsReport`]
+//!    interface (clock-injected, deterministic JSON snapshot)
 
 pub mod batch_cache;
 pub mod batcher;
+pub mod cluster;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod workload;
 
 pub use batch_cache::BatchCacheStore;
-pub use batcher::{eat_policy_factory, Batcher, SuspendedSession, DEFAULT_TICK_DT};
+pub use batcher::{
+    eat_policy_factory, Batcher, Migration, PolicyFactory, SuspendedSession, DEFAULT_TICK_DT,
+};
+pub use cluster::{Cluster, ClusterConfig, RoutePolicy};
 pub use engine::{
     resume_session, serve_one, MonitorModel, ProbeTarget, ReasoningSession, RequestResult,
     StepWork,
 };
 pub use kv::{KvPageManager, PageAllocator, PageId, PagePool, PageTable, DEFAULT_PAGE_SIZE};
-pub use metrics::{BlackboxMetrics, ServeMetrics};
+pub use metrics::{summary_json, BlackboxMetrics, ClusterMetrics, MetricsReport, ServeMetrics};
 pub use workload::{poisson_arrivals, run_open_loop, OpenLoopTarget};

@@ -20,17 +20,23 @@ use eat_serve::blackbox::{
 };
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::{
-    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MonitorModel, DEFAULT_TICK_DT,
+    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, Cluster, ClusterConfig,
+    MetricsReport, MonitorModel, PolicyFactory, RoutePolicy, DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::eval::figures::{self, FigureCtx};
 use eat_serve::eval::{TraceGen, TraceSet};
 use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
 use eat_serve::runtime::{Backend, Runtime};
-use eat_serve::util::cli::Args;
+use eat_serve::util::cli::{
+    render_flags, Args, ServeArgs, ServeMode, SERVE_BLACKBOX_FLAGS, SERVE_CLUSTER_FLAGS,
+    SERVE_ENGINE_FLAGS, SERVE_SHARED_FLAGS,
+};
 use eat_serve::util::clock::Clock;
 
 fn usage() -> ! {
+    // the serve flag sections are generated from the FlagSpec tables in
+    // util/cli.rs, so this text cannot drift from the accepted flags
     eprintln!(
         "repro — EAT early-exit reasoning serving (paper reproduction)
 
@@ -38,32 +44,41 @@ USAGE: repro <command> [flags]
 
 COMMANDS
   info                          backend inventory + smoke execution
-  serve     --dataset D --requests N [--slots S] [--policy eat|token]
-            [--delta X] [--alpha A] [--budget T] [--proxy] [--seed K]
-            [--sequential] [--sched fifo|eat] [--deadline S]
-            [--rate R] [--virtual] [--metrics-json FILE]
-            [--kv-store paged|mono] [--page-size P] [--kv-pages N]
-  serve     --blackbox [--chunk C] [--base-ms B --tok-ms T --jitter J]
-            (black-box streams: remote main model behind a text-only
-             chunked API, local proxy monitor issues the stop; defaults
-             --dataset synth-aime --alpha 0.8 --delta 5e-2; shares
-             --requests/--slots/--rate/--virtual/--sequential/--seed/
-             --metrics-json with the white-box mode)
+  serve [single]                continuous-batch serving, one engine
+  serve cluster                 N engine replicas behind the EAT-aware
+                                router with KV-page session migration
+  serve blackbox                black-box streams: remote main model
+                                behind a text-only chunked API, local
+                                proxy monitor issues the stop
+                                (legacy spellings unchanged: bare
+                                 `serve` = single, `serve --blackbox`
+                                 = blackbox)
   trace     --dataset D [--out FILE] [--max-questions N] [--swap-models]
             [--no-confidence] [--seed K]
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
   blackbox  [--questions N] [--chunk C] [--delta X]
 
+SERVE FLAGS (all modes)
+{shared}
+SERVE FLAGS (single, cluster)
+{engine}
+SERVE FLAGS (cluster)
+{cluster}
+SERVE FLAGS (blackbox)
+{blackbox}
 FLAG DEFAULTS
   --artifacts artifacts   --traces-dir results/traces   --out-dir results
-  --alpha 0.2  --delta 1e-3  --budget 96  --slots 4  --seed 0
-  --sched fifo  --deadline 60  --rate 0 (submit all upfront)
-  --kv-store paged  --page-size 16  --kv-pages slots*pages-per-session
+  --alpha 0.2  --delta 1e-3  --budget 96  (blackbox: --alpha 0.8
+  --delta 5e-2)
   (--rate R > 0 drives open-loop Poisson arrivals; with --virtual the
    run is simulated on a virtual clock and fully seed-deterministic.
    --kv-store mono keeps the monolithic full-sequence store — the
    equivalence oracle: same seed, byte-identical metrics JSON)
-"
+",
+        shared = render_flags("  ", SERVE_SHARED_FLAGS),
+        engine = render_flags("  ", SERVE_ENGINE_FLAGS),
+        cluster = render_flags("  ", SERVE_CLUSTER_FLAGS),
+        blackbox = render_flags("  ", SERVE_BLACKBOX_FLAGS),
     );
     std::process::exit(2);
 }
@@ -107,6 +122,40 @@ fn load_runtime(args: &Args) -> Result<Runtime> {
 fn load_runtime_with(args: &Args, page_size: Option<usize>) -> Result<Runtime> {
     let dir = args.str_or("artifacts", eat_serve::DEFAULT_ARTIFACTS);
     Ok(Runtime::load_or_reference_with(dir, page_size))
+}
+
+/// Scheduler flags shared by `serve single` and `serve cluster`.
+fn sched_from_args(args: &Args, cfg: &mut ServeConfig) -> Result<()> {
+    cfg.sched.mode = match args.str_or("sched", "fifo") {
+        "fifo" => SchedMode::Fifo,
+        "eat" | "eat-aware" => SchedMode::EatAware,
+        other => anyhow::bail!("unknown --sched `{other}` (fifo|eat)"),
+    };
+    cfg.sched.deadline_s = args.f64_or("deadline", cfg.sched.deadline_s);
+    Ok(())
+}
+
+/// Exit-policy factory shared by `serve single` and `serve cluster`
+/// (the cluster mints one per replica).
+fn policy_from_args(args: &Args, cfg: &ServeConfig) -> Result<PolicyFactory> {
+    let budget = cfg.max_think_tokens;
+    match args.str_or("policy", "eat") {
+        "eat" => Ok(eat_policy_factory(cfg)),
+        "token" => Ok(Box::new(move || Box::new(TokenBudgetPolicy::new(budget)))),
+        other => anyhow::bail!("unknown --policy `{other}`"),
+    }
+}
+
+/// Paged store selection + tuning-flag validation shared by every
+/// engine-serving mode: a mono "page" is a whole full-sequence cache,
+/// so a page count is not comparable across stores — refuse the mix
+/// rather than gate admission on silently different budgets.
+fn engine_runtime(args: &Args) -> Result<Runtime> {
+    let page_size = kv_page_size(args)?;
+    if args.has("kv-pages") && page_size.is_none() {
+        anyhow::bail!("--kv-pages applies to the paged store (drop it, or use --kv-store paged)");
+    }
+    load_runtime_with(args, page_size)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -160,12 +209,8 @@ fn cmd_info(args: &Args) -> Result<()> {
 /// Black-box serving (DESIGN.md §3.6): many proxy-monitored remote
 /// streams batched through the coordinator. Deterministic under
 /// `--virtual` — CI double-runs this and diffs the metrics JSON.
-fn cmd_serve_blackbox(args: &Args) -> Result<()> {
-    let page_size = kv_page_size(args)?;
-    if args.has("kv-pages") && page_size.is_none() {
-        anyhow::bail!("--kv-pages applies to the paged store (drop it, or use --kv-store paged)");
-    }
-    let rt = load_runtime_with(args, page_size)?;
+fn cmd_serve_blackbox(args: &Args, serve: &ServeArgs) -> Result<()> {
+    let rt = engine_runtime(args)?;
     let mut cfg = serve_cfg(args);
     cfg.alpha = args.f64_or("alpha", CHUNK_MONITOR_ALPHA);
     cfg.delta = args.f64_or("delta", CHUNK_MONITOR_DELTA);
@@ -179,24 +224,21 @@ fn cmd_serve_blackbox(args: &Args) -> Result<()> {
         },
         proxy_cost: ProxyCostModel::default(),
     };
-    let dataset = args.str_or("dataset", "synth-aime");
-    let n = args.usize_or("requests", 8);
-    let slots = args.usize_or("slots", 4);
-    let rate = args.f64_or("rate", 0.0);
-    let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
-    let clock = if args.has("virtual") {
+    let slots = serve.slots;
+    let ds = Dataset::by_name(&serve.dataset, &rt.vocab, cfg.seed)?;
+    let clock = if serve.virtual_clock {
         Clock::virt()
     } else {
         Clock::wall()
     };
     let seed = cfg.seed;
     let mut batcher = BlackboxBatcher::with_clock(&rt, cfg, bb, slots, clock);
-    batcher.force_sequential = args.has("sequential");
-    if rate > 0.0 {
-        let arrivals = poisson_arrivals(n, rate, seed);
+    batcher.force_sequential = serve.sequential;
+    if serve.rate > 0.0 {
+        let arrivals = poisson_arrivals(serve.requests, serve.rate, seed);
         run_open_loop(&mut batcher, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
     } else {
-        for q in ds.questions.iter().take(n) {
+        for q in ds.questions.iter().take(serve.requests) {
             batcher.submit(q.clone());
         }
         batcher.run_to_completion()?;
@@ -220,66 +262,52 @@ fn cmd_serve_blackbox(args: &Args) -> Result<()> {
         pc.decodes.get(),
         pc.probes.get()
     );
-    if let Some(path) = args.str_opt("metrics-json") {
+    if let Some(path) = &serve.metrics_json {
         std::fs::write(path, batcher.metrics.to_json().to_string())?;
         println!("metrics json    {path}");
     }
     Ok(())
 }
 
+/// `serve` dispatcher: the mode word (`single`/`cluster`/`blackbox`)
+/// picks the engine; legacy spellings (`serve`, `serve --blackbox`)
+/// resolve through [`ServeMode::from_args`] unchanged.
 fn cmd_serve(args: &Args) -> Result<()> {
-    if args.has("blackbox") {
-        return cmd_serve_blackbox(args);
+    let serve = ServeArgs::parse(args)?;
+    match serve.mode {
+        ServeMode::Single => cmd_serve_single(args, &serve),
+        ServeMode::Cluster => cmd_serve_cluster(args, &serve),
+        ServeMode::Blackbox => cmd_serve_blackbox(args, &serve),
     }
-    let page_size = kv_page_size(args)?;
-    // a mono "page" is a whole full-sequence cache, so a page count is
-    // not comparable across stores — refuse the mix rather than gate
-    // admission on silently different budgets
-    if args.has("kv-pages") && page_size.is_none() {
-        anyhow::bail!("--kv-pages applies to the paged store (drop it, or use --kv-store paged)");
-    }
-    let rt = load_runtime_with(args, page_size)?;
+}
+
+fn cmd_serve_single(args: &Args, serve: &ServeArgs) -> Result<()> {
+    let rt = engine_runtime(args)?;
     let mut cfg = serve_cfg(args);
-    cfg.sched.mode = match args.str_or("sched", "fifo") {
-        "fifo" => SchedMode::Fifo,
-        "eat" | "eat-aware" => SchedMode::EatAware,
-        other => anyhow::bail!("unknown --sched `{other}` (fifo|eat)"),
-    };
-    cfg.sched.deadline_s = args.f64_or("deadline", cfg.sched.deadline_s);
-    let dataset = args.str_or("dataset", "synth-math500-small");
-    let n = args.usize_or("requests", 16);
-    let slots = args.usize_or("slots", 4);
-    let rate = args.f64_or("rate", 0.0);
+    sched_from_args(args, &mut cfg)?;
+    let slots = serve.slots;
     let monitor = if args.has("proxy") {
         MonitorModel::Proxy
     } else {
         MonitorModel::SelfModel
     };
-    let ds = Dataset::by_name(dataset, &rt.vocab, cfg.seed)?;
-
-    let policy_kind = args.str_or("policy", "eat").to_string();
-    let budget = cfg.max_think_tokens;
-    let factory: eat_serve::coordinator::batcher::PolicyFactory = match policy_kind.as_str() {
-        "eat" => eat_policy_factory(&cfg),
-        "token" => Box::new(move || Box::new(TokenBudgetPolicy::new(budget))),
-        other => anyhow::bail!("unknown --policy `{other}`"),
-    };
-
-    let clock = if args.has("virtual") {
+    let ds = Dataset::by_name(&serve.dataset, &rt.vocab, cfg.seed)?;
+    let factory = policy_from_args(args, &cfg)?;
+    let clock = if serve.virtual_clock {
         Clock::virt()
     } else {
         Clock::wall()
     };
     let seed = cfg.seed;
     let mut batcher = Batcher::with_clock(&rt, cfg, monitor, slots, factory, clock);
-    batcher.force_sequential = args.has("sequential");
-    if rate > 0.0 {
+    batcher.force_sequential = serve.sequential;
+    if serve.rate > 0.0 {
         // open-loop Poisson arrivals at `rate` req/s (deterministic
         // under --virtual: the whole run is a pure function of the seed)
-        let arrivals = poisson_arrivals(n, rate, seed);
+        let arrivals = poisson_arrivals(serve.requests, serve.rate, seed);
         run_open_loop(&mut batcher, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
     } else {
-        for q in ds.questions.iter().take(n) {
+        for q in ds.questions.iter().take(serve.requests) {
             batcher.submit(q.clone());
         }
         batcher.run_to_completion()?;
@@ -313,9 +341,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mc.pages_copied.get(),
         mc.prefills.get()
     );
-    if let Some(path) = args.str_opt("metrics-json") {
+    if let Some(path) = &serve.metrics_json {
         std::fs::write(path, batcher.metrics.to_json().to_string())?;
         println!("metrics json    {path}");
+    }
+    Ok(())
+}
+
+/// `serve cluster` (DESIGN.md §3.7): N engine replicas over the one
+/// runtime behind the EAT-aware router, with optional live session
+/// migration as a KV-page handoff. Deterministic under `--virtual` —
+/// CI double-runs N=3 and diffs the metrics JSON byte-for-byte, and
+/// diffs `cluster --replicas 1` per-replica metrics against `single`.
+fn cmd_serve_cluster(args: &Args, serve: &ServeArgs) -> Result<()> {
+    let rt = engine_runtime(args)?;
+    let mut cfg = serve_cfg(args);
+    sched_from_args(args, &mut cfg)?;
+    let route = match serve.route.as_str() {
+        "eat" => RoutePolicy::EatAware,
+        "rr" | "round-robin" => RoutePolicy::RoundRobin,
+        other => anyhow::bail!("unknown --route `{other}` (eat|rr)"),
+    };
+    let monitor = if args.has("proxy") {
+        MonitorModel::Proxy
+    } else {
+        MonitorModel::SelfModel
+    };
+    let ds = Dataset::by_name(&serve.dataset, &rt.vocab, cfg.seed)?;
+    let cluster_cfg = ClusterConfig {
+        replicas: serve.replicas,
+        slots_per_replica: serve.slots,
+        route,
+        migrate: serve.migrate,
+    };
+    let factories = (0..serve.replicas)
+        .map(|_| policy_from_args(args, &cfg))
+        .collect::<Result<Vec<_>>>()?;
+    let clock = if serve.virtual_clock {
+        Clock::virt()
+    } else {
+        Clock::wall()
+    };
+    let seed = cfg.seed;
+    let mut cluster = Cluster::with_clock(&rt, cfg, monitor, cluster_cfg, factories, clock);
+    cluster.set_force_sequential(serve.sequential);
+    if serve.rate > 0.0 {
+        let arrivals = poisson_arrivals(serve.requests, serve.rate, seed);
+        run_open_loop(&mut cluster, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
+    } else {
+        for q in ds.questions.iter().take(serve.requests) {
+            cluster.submit(q.clone());
+        }
+        cluster.run_to_completion()?;
+    }
+    let metrics = cluster.metrics();
+    println!("{}", metrics.report());
+    let mc = rt.main.counters();
+    println!(
+        "paged kv        cow_forks {}  pages_shared {}  pages_copied {}  prefills {}",
+        mc.cow_forks.get(),
+        mc.pages_shared.get(),
+        mc.pages_copied.get(),
+        mc.prefills.get()
+    );
+    if let Some(path) = &serve.metrics_json {
+        std::fs::write(path, metrics.to_json().to_string())?;
+        println!("metrics json    {path}");
+    }
+    if let Some(prefix) = &serve.replica_metrics_json {
+        for id in 0..cluster.replica_count() {
+            let path = format!("{prefix}.{id}.json");
+            let json = cluster.replica(id).metrics.to_json().to_string();
+            std::fs::write(&path, json)?;
+            println!("replica json    {path}");
+        }
     }
     Ok(())
 }

@@ -138,6 +138,20 @@ pub trait Backend {
         None
     }
 
+    /// Live pages in this backend's shared KV pool (`None` when the
+    /// store is monolithic) — the cross-replica leak audits assert this
+    /// returns to zero once every cache is dropped.
+    fn pool_pages_in_use(&self) -> Option<usize> {
+        None
+    }
+
+    /// Lifetime `(allocs, frees)` of the pool's page allocator (`None`
+    /// when monolithic): with no live caches the two must be equal —
+    /// every page freed exactly once.
+    fn pool_alloc_free(&self) -> Option<(u64, u64)> {
+        None
+    }
+
     /// Parameter count (for `repro info`).
     fn param_elems(&self) -> usize;
 

@@ -255,12 +255,6 @@ impl RefBackend {
         RefBackend::new("ref-proxy", vocab, 128, None)
     }
 
-    /// Live pages in this backend's pool (None when monolithic) — for
-    /// the leak proptests and the bench report.
-    pub fn pool_pages_in_use(&self) -> Option<usize> {
-        self.pool.as_ref().map(|p| p.borrow().pages_in_use())
-    }
-
     /// Commit one token into a cache (CoW-aware on the paged store).
     fn push_token(&self, cache: &mut RefCache, token: u32) -> Result<()> {
         match &mut cache.store {
@@ -500,6 +494,17 @@ impl Backend for RefBackend {
 
     fn page_size(&self) -> Option<usize> {
         self.pool.as_ref().map(|_| self.page_size)
+    }
+
+    fn pool_pages_in_use(&self) -> Option<usize> {
+        self.pool.as_ref().map(|p| p.borrow().pages_in_use())
+    }
+
+    fn pool_alloc_free(&self) -> Option<(u64, u64)> {
+        self.pool.as_ref().map(|p| {
+            let c = p.borrow().counters();
+            (c.allocs, c.frees)
+        })
     }
 
     fn cache_elems(&self) -> usize {

@@ -1,10 +1,14 @@
 //! Micro-benchmark harness substrate (no `criterion` offline).
 //!
 //! Warmup + adaptive-iteration timing with mean/p50/p95 reporting in a
-//! stable text format that `cargo bench` prints and EXPERIMENTS.md quotes.
+//! stable text format that `cargo bench` prints and EXPERIMENTS.md
+//! quotes, plus a `BENCH_<name>.json` snapshot writer so CI and the
+//! experiment log can diff machine-readable numbers instead of scraping
+//! stdout.
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::percentile;
 
 pub struct BenchResult {
@@ -26,6 +30,39 @@ impl BenchResult {
             fmt_ns(self.p95_ns),
         );
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+        ])
+    }
+}
+
+/// The snapshot document: the timing rows plus bench-specific context
+/// (e.g. the cluster goodput-scaling table) under caller-chosen keys.
+pub fn snapshot_json(bench: &str, results: &[BenchResult], extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("bench", Json::str(bench)),
+        ("results", Json::arr(results.iter().map(BenchResult::to_json))),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+/// Write `BENCH_<bench>.json` in the working directory (the repo root
+/// under `cargo bench`) and return the path.
+pub fn write_snapshot(
+    bench: &str,
+    results: &[BenchResult],
+    extra: Vec<(&str, Json)>,
+) -> anyhow::Result<String> {
+    let path = format!("BENCH_{bench}.json");
+    std::fs::write(&path, snapshot_json(bench, results, extra).to_string())?;
+    Ok(path)
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -95,6 +132,24 @@ mod tests {
         );
         assert!(r.iters >= 5);
         assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_carries_rows_and_extras() {
+        let r = BenchResult {
+            name: "x/y".into(),
+            iters: 3,
+            mean_ns: 10.0,
+            p50_ns: 9.0,
+            p95_ns: 12.0,
+        };
+        let j = snapshot_json("demo", &[r], vec![("note", Json::str("hi"))]);
+        assert_eq!(j.get("bench").as_str(), Some("demo"));
+        assert_eq!(j.get("note").as_str(), Some("hi"));
+        let rows = j.get("results").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").as_str(), Some("x/y"));
+        assert_eq!(rows[0].get("iters").as_usize(), Some(3));
     }
 
     #[test]

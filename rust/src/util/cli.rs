@@ -1,9 +1,19 @@
 //! Tiny argument-parsing substrate (no `clap` offline).
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional args,
-//! with typed accessors and a generated usage string.
+//! with typed accessors and a generated usage string. On top of the raw
+//! [`Args`] map sit the typed `serve` subcommands: [`ServeMode`] selects
+//! `serve single | cluster | blackbox` (legacy spellings — a bare
+//! `serve` and the old `--blackbox` flag — keep working unchanged), and
+//! [`ServeArgs`] is the shared parse of every serve mode's common flags
+//! with per-mode defaults and cluster extras (`--replicas`,
+//! `--migrate`). Flag documentation lives in [`FlagSpec`] tables the
+//! usage string is generated from, so the help text cannot drift from
+//! the accepted flags.
 
 use std::collections::BTreeMap;
+
+use anyhow::Result;
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -101,6 +111,144 @@ impl Args {
     }
 }
 
+/// Which serving engine `serve` drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// One batcher (the PR 3–5 engine). The legacy bare `serve` spelling.
+    Single,
+    /// N replicas behind the EAT-aware router (`coordinator/cluster.rs`).
+    Cluster,
+    /// Proxy-monitored remote streams. The legacy `--blackbox` flag
+    /// spelling still selects this.
+    Blackbox,
+}
+
+impl ServeMode {
+    /// Parse the mode word after `serve`. No mode word keeps the legacy
+    /// spellings intact: bare `serve` is `single`, `serve --blackbox`
+    /// is `blackbox`.
+    pub fn from_args(args: &Args) -> Result<ServeMode> {
+        match args.positional(1) {
+            Some("single") => Ok(ServeMode::Single),
+            Some("cluster") => Ok(ServeMode::Cluster),
+            Some("blackbox") => Ok(ServeMode::Blackbox),
+            Some(other) => {
+                anyhow::bail!("unknown serve mode `{other}` (single|cluster|blackbox)")
+            }
+            None => Ok(if args.has("blackbox") {
+                ServeMode::Blackbox
+            } else {
+                ServeMode::Single
+            }),
+        }
+    }
+}
+
+/// The flags every `serve` mode shares, parsed once with per-mode
+/// defaults, plus the cluster extras. Mode-specific knobs that touch
+/// model config (alpha/delta/sched/kv) stay on the raw [`Args`] — this
+/// struct owns the workload shape and output plumbing.
+#[derive(Debug)]
+pub struct ServeArgs {
+    pub mode: ServeMode,
+    pub dataset: String,
+    pub requests: usize,
+    pub slots: usize,
+    /// Open-loop Poisson arrival rate (req/s); 0 = submit all upfront.
+    pub rate: f64,
+    pub virtual_clock: bool,
+    pub sequential: bool,
+    pub metrics_json: Option<String>,
+    /// Cluster: engine replica count.
+    pub replicas: usize,
+    /// Cluster: migrate waiters between skewed replicas.
+    pub migrate: bool,
+    /// Cluster: `eat` (least distance-to-exit pressure) or `rr`.
+    pub route: String,
+    /// Cluster: write each replica's ServeMetrics to `PREFIX.<id>.json`
+    /// (the CI `cluster(N=1) ≡ single` equivalence diff).
+    pub replica_metrics_json: Option<String>,
+}
+
+impl ServeArgs {
+    pub fn parse(args: &Args) -> Result<ServeArgs> {
+        let mode = ServeMode::from_args(args)?;
+        let (dataset_default, requests_default) = match mode {
+            ServeMode::Blackbox => ("synth-aime", 8),
+            ServeMode::Single | ServeMode::Cluster => ("synth-math500-small", 16),
+        };
+        Ok(ServeArgs {
+            mode,
+            dataset: args.str_or("dataset", dataset_default).to_string(),
+            requests: args.usize_or("requests", requests_default),
+            slots: args.usize_or("slots", 4),
+            rate: args.f64_or("rate", 0.0),
+            virtual_clock: args.has("virtual"),
+            sequential: args.has("sequential"),
+            metrics_json: args.str_opt("metrics-json").map(str::to_string),
+            replicas: args.usize_or("replicas", 2),
+            migrate: args.bool_or("migrate", false),
+            route: args.str_or("route", "eat").to_string(),
+            replica_metrics_json: args.str_opt("replica-metrics-json").map(str::to_string),
+        })
+    }
+}
+
+/// One documented flag for the generated usage string.
+pub struct FlagSpec {
+    /// Spelling with value placeholder, e.g. `--dataset D`.
+    pub flag: &'static str,
+    pub help: &'static str,
+}
+
+/// Flags every `serve` mode accepts ([`ServeArgs`] + model config).
+pub const SERVE_SHARED_FLAGS: &[FlagSpec] = &[
+    FlagSpec { flag: "--dataset D", help: "workload dataset (mode-specific default)" },
+    FlagSpec { flag: "--requests N", help: "requests to serve (default 16; blackbox 8)" },
+    FlagSpec { flag: "--slots S", help: "KV lanes per engine (default 4)" },
+    FlagSpec { flag: "--rate R", help: "open-loop Poisson req/s; 0 = submit all upfront" },
+    FlagSpec { flag: "--virtual", help: "virtual clock: the run is a pure function of --seed" },
+    FlagSpec { flag: "--sequential", help: "disable fused batch decode (A/B determinism checks)" },
+    FlagSpec { flag: "--metrics-json FILE", help: "write the metrics snapshot as JSON" },
+    FlagSpec { flag: "--seed K", help: "workload + RNG seed (default 0)" },
+];
+
+/// `serve single` / `serve cluster` engine flags.
+pub const SERVE_ENGINE_FLAGS: &[FlagSpec] = &[
+    FlagSpec { flag: "--policy eat|token", help: "exit policy (default eat)" },
+    FlagSpec { flag: "--sched fifo|eat", help: "scheduler mode (default fifo)" },
+    FlagSpec { flag: "--deadline S", help: "SLO deadline seconds (default 60)" },
+    FlagSpec { flag: "--proxy", help: "proxy-monitored (black-box) probes" },
+    FlagSpec { flag: "--kv-store paged|mono", help: "KV store (default paged)" },
+    FlagSpec { flag: "--page-size P", help: "tokens per KV page (default 16)" },
+    FlagSpec { flag: "--kv-pages N", help: "device/host page budget (default slots*reserve)" },
+];
+
+/// `serve cluster` extras.
+pub const SERVE_CLUSTER_FLAGS: &[FlagSpec] = &[
+    FlagSpec { flag: "--replicas N", help: "engine replicas (default 2)" },
+    FlagSpec { flag: "--route eat|rr", help: "placement: EAT distance-to-exit or round-robin" },
+    FlagSpec { flag: "--migrate", help: "migrate waiters between skewed replicas (page handoff)" },
+    FlagSpec { flag: "--replica-metrics-json P", help: "write per-replica metrics to P.<id>.json" },
+];
+
+/// `serve blackbox` extras.
+pub const SERVE_BLACKBOX_FLAGS: &[FlagSpec] = &[
+    FlagSpec { flag: "--chunk C", help: "streamed tokens per chunk (default 12)" },
+    FlagSpec { flag: "--base-ms B", help: "remote latency base (default model)" },
+    FlagSpec { flag: "--tok-ms T", help: "remote latency per token" },
+    FlagSpec { flag: "--jitter J", help: "remote latency jitter fraction" },
+];
+
+/// Render one flag table, aligned, for the usage string.
+pub fn render_flags(indent: &str, specs: &[FlagSpec]) -> String {
+    let width = specs.iter().map(|s| s.flag.len()).max().unwrap_or(0);
+    specs
+        .iter()
+        .map(|s| format!("{indent}{:<width$}  {}\n", s.flag, s.help))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +293,73 @@ mod tests {
     fn float_list() {
         let a = mk(&["--deltas", "0.5,0.25, 0.125"]);
         assert_eq!(a.f64_list("deltas", &[]), vec![0.5, 0.25, 0.125]);
+    }
+
+    #[test]
+    fn serve_mode_words_and_legacy_spellings() {
+        // typed subcommands
+        assert_eq!(
+            ServeMode::from_args(&mk(&["serve", "single"])).unwrap(),
+            ServeMode::Single
+        );
+        assert_eq!(
+            ServeMode::from_args(&mk(&["serve", "cluster", "--replicas", "3"])).unwrap(),
+            ServeMode::Cluster
+        );
+        assert_eq!(
+            ServeMode::from_args(&mk(&["serve", "blackbox"])).unwrap(),
+            ServeMode::Blackbox
+        );
+        // legacy spellings, unchanged behavior
+        assert_eq!(
+            ServeMode::from_args(&mk(&["serve", "--requests", "24"])).unwrap(),
+            ServeMode::Single
+        );
+        assert_eq!(
+            ServeMode::from_args(&mk(&["serve", "--blackbox", "--chunk", "12"])).unwrap(),
+            ServeMode::Blackbox
+        );
+        assert!(ServeMode::from_args(&mk(&["serve", "fleet"])).is_err());
+    }
+
+    #[test]
+    fn serve_args_mode_defaults_and_cluster_extras() {
+        let single = ServeArgs::parse(&mk(&["serve", "--virtual"])).unwrap();
+        assert_eq!(single.dataset, "synth-math500-small");
+        assert_eq!(single.requests, 16);
+        assert!(single.virtual_clock);
+        assert!(!single.migrate);
+
+        let bb = ServeArgs::parse(&mk(&["serve", "--blackbox"])).unwrap();
+        assert_eq!(bb.dataset, "synth-aime");
+        assert_eq!(bb.requests, 8);
+
+        let cl = ServeArgs::parse(&mk(&[
+            "serve",
+            "cluster",
+            "--replicas",
+            "4",
+            "--migrate",
+            "--route",
+            "rr",
+            "--replica-metrics-json",
+            "out/replica",
+        ]))
+        .unwrap();
+        assert_eq!(cl.mode, ServeMode::Cluster);
+        assert_eq!(cl.replicas, 4);
+        assert!(cl.migrate);
+        assert_eq!(cl.route, "rr");
+        assert_eq!(cl.replica_metrics_json.as_deref(), Some("out/replica"));
+    }
+
+    #[test]
+    fn usage_is_generated_from_the_flag_tables() {
+        let s = render_flags("  ", SERVE_CLUSTER_FLAGS);
+        assert!(s.contains("--replicas N"));
+        assert!(s.contains("--migrate"));
+        for spec in SERVE_SHARED_FLAGS {
+            assert!(render_flags("", SERVE_SHARED_FLAGS).contains(spec.flag));
+        }
     }
 }

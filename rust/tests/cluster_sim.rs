@@ -1,0 +1,351 @@
+//! Deterministic cluster serving suite (DESIGN.md §3.7): N engine
+//! replicas behind the EAT-aware router on the reference backend under a
+//! VIRTUAL clock, pinning down
+//!
+//!  * same seed ⇒ byte-identical cluster metrics JSON (router counters,
+//!    per-replica snapshots, latency percentiles) across runs;
+//!  * `cluster(N=1)` ⇒ byte-identical replica metrics and bit-identical
+//!    trajectories vs a plain single-batcher run (the router degenerates
+//!    to a pass-through);
+//!  * live session migration is a KV-page handoff, not a re-prefill:
+//!    after a run with migrations the runtime prefill counter equals the
+//!    request count exactly, and every migrated trajectory matches the
+//!    unmigrated same-seed run token for token — on the paged *and* the
+//!    monolithic store.
+//!
+//! Per-request RNGs are seeded from the globally unique submission seq
+//! the router assigns, so a trajectory is invariant to placement and
+//! migration — that invariance is what makes every comparison here exact.
+
+mod common;
+
+use common::{eat_factory, key};
+use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::coordinator::{
+    poisson_arrivals, run_open_loop, Batcher, Cluster, ClusterConfig, MetricsReport, MonitorModel,
+    RequestResult, RoutePolicy, DEFAULT_TICK_DT,
+};
+use eat_serve::datasets::{chainsum::Kind, Dataset, Question};
+use eat_serve::runtime::{Backend, Runtime};
+use eat_serve::util::clock::Clock;
+
+fn mk_cluster<'a>(rt: &'a Runtime, cfg: &ServeConfig, ccfg: ClusterConfig) -> Cluster<'a> {
+    let factories = (0..ccfg.replicas).map(|_| eat_factory(cfg)).collect();
+    Cluster::with_clock(rt, cfg.clone(), MonitorModel::SelfModel, ccfg, factories, Clock::virt())
+}
+
+/// One full open-loop cluster run under a fresh virtual clock; returns
+/// the cluster metrics JSON, each replica's ServeMetrics JSON by id, and
+/// the results sorted by question id.
+fn run_cluster(
+    replicas: usize,
+    slots: usize,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    migrate: bool,
+) -> (String, Vec<String>, Vec<RequestResult>) {
+    let rt = Runtime::reference();
+    let mut cfg = ServeConfig::default();
+    cfg.seed = seed;
+    cfg.sched.mode = SchedMode::EatAware;
+    let ds = Dataset::synth_gpqa(&rt.vocab, n.max(4), seed);
+    let ccfg = ClusterConfig {
+        replicas,
+        slots_per_replica: slots,
+        route: RoutePolicy::EatAware,
+        migrate,
+    };
+    let mut c = mk_cluster(&rt, &cfg, ccfg);
+    let arrivals = poisson_arrivals(n, rate, seed);
+    run_open_loop(&mut c, &ds.questions, &arrivals, DEFAULT_TICK_DT).unwrap();
+    let m = c.metrics();
+    assert_eq!(m.completed, n);
+    assert!(!c.has_work());
+    assert_eq!(c.pending(), 0);
+    assert_eq!(c.active_count(), 0);
+    assert_eq!(c.suspended_count(), 0);
+    let per: Vec<String> = (0..replicas)
+        .map(|i| c.replica(i).metrics.to_json().to_string())
+        .collect();
+    let json = m.to_json().to_string();
+    (json, per, c.all_results())
+}
+
+#[test]
+fn same_seed_cluster_runs_are_byte_identical() {
+    // the cluster determinism guarantee: shared virtual clock, replicas
+    // ticked in id order, routing ties broken to the lowest id — the
+    // whole N-replica run is a pure function of the seed
+    let (json_a, per_a, res_a) = run_cluster(3, 2, 18, 30.0, 7, true);
+    let (json_b, per_b, res_b) = run_cluster(3, 2, 18, 30.0, 7, true);
+    assert_eq!(json_a, json_b, "same-seed cluster JSON diverged");
+    assert_eq!(per_a, per_b, "same-seed replica snapshots diverged");
+    assert_eq!(res_a.len(), res_b.len());
+    for (a, b) in res_a.iter().zip(&res_b) {
+        assert_eq!(key(a), key(b));
+        assert_eq!(a.wall_ms, b.wall_ms, "virtual latencies must be exact");
+    }
+    assert!(json_a.contains("\"per_replica\""));
+    assert!(json_a.contains("\"goodput_rps\""));
+    // a different seed produces a different run
+    let (json_c, _, _) = run_cluster(3, 2, 18, 30.0, 8, true);
+    assert_ne!(json_a, json_c, "seed is not reaching the cluster");
+}
+
+#[test]
+fn cluster_of_one_is_byte_identical_to_a_single_batcher() {
+    // the API-redesign acceptance bar: with one replica the router is a
+    // pass-through — same submission seqs, same tick cadence, and the
+    // migrate flag is inert — so the replica's ServeMetrics JSON matches
+    // a plain Batcher run byte for byte
+    let rt = Runtime::reference();
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 7;
+    cfg.sched.mode = SchedMode::EatAware;
+    let ds = Dataset::synth_gpqa(&rt.vocab, 16, 7);
+    let mut b = Batcher::with_clock(
+        &rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        2,
+        eat_factory(&cfg),
+        Clock::virt(),
+    );
+    let arrivals = poisson_arrivals(16, 30.0, 7);
+    run_open_loop(&mut b, &ds.questions, &arrivals, DEFAULT_TICK_DT).unwrap();
+    let single_json = b.metrics.to_json().to_string();
+    let mut single_res = b.results;
+    single_res.sort_by_key(|r| r.question_id);
+
+    let (cluster_json, per, cluster_res) = run_cluster(1, 2, 16, 30.0, 7, true);
+    assert_eq!(per[0], single_json, "cluster(N=1) replica metrics must match single");
+    assert_eq!(cluster_res.len(), single_res.len());
+    for (c, s) in cluster_res.iter().zip(&single_res) {
+        assert_eq!(key(c), key(s), "cluster(N=1) trajectory diverged from single");
+        assert_eq!(c.wall_ms, s.wall_ms);
+    }
+    assert!(cluster_json.contains("\"replicas\""));
+}
+
+/// Corrupted questions at even indices, easy ones filling the rest:
+/// round-robin placement lands every corrupted (stalling) question on
+/// replica 0, so replica 1 drains its easy share and goes idle while
+/// replica 0 is still saturated — the rebalance precondition.
+fn skewed_workload(n_corrupted: usize, n_easy: usize, seed: u64) -> Vec<Question> {
+    let rt = Runtime::reference();
+    let pool = Dataset::synth_gpqa(&rt.vocab, 120, seed);
+    let corrupted: Vec<Question> = pool
+        .questions
+        .iter()
+        .filter(|q| q.kind == Kind::Corrupted)
+        .take(n_corrupted)
+        .cloned()
+        .collect();
+    let easy: Vec<Question> = pool
+        .questions
+        .iter()
+        .filter(|q| q.kind == Kind::ChainSum && q.n_ops() <= 4)
+        .take(n_easy)
+        .cloned()
+        .collect();
+    assert_eq!(corrupted.len(), n_corrupted, "pool too small");
+    assert_eq!(easy.len(), n_easy, "pool too small");
+    let mut qs = Vec::new();
+    let (mut ci, mut ei) = (corrupted.into_iter(), easy.into_iter());
+    loop {
+        match (ci.next(), ei.next()) {
+            (None, None) => break,
+            (c, e) => {
+                qs.extend(c);
+                qs.extend(e);
+            }
+        }
+    }
+    qs
+}
+
+/// The contended scheduler configuration of scheduler_sim.rs: stalled
+/// (corrupted) sessions get preempted aggressively, but the starvation
+/// guard never lets stall retirement fire — so WHAT every session
+/// computes is identical to an uninterrupted FIFO run, only WHEN it runs
+/// differs.
+fn preemptive_cfg(seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.seed = seed;
+    cfg.delta = 1e-7;
+    cfg.sched.mode = SchedMode::EatAware;
+    cfg.sched.stall_stability = 0.2;
+    cfg.sched.preempt_after_ticks = 8;
+    cfg.sched.max_preemptions = 100;
+    cfg
+}
+
+/// Uninterrupted reference: the same workload through one FIFO batcher
+/// with plenty of lanes, results sorted by question id.
+fn unmigrated_reference(questions: &[Question], seed: u64) -> Vec<RequestResult> {
+    let rt = Runtime::reference();
+    let mut cfg = preemptive_cfg(seed);
+    cfg.sched.mode = SchedMode::Fifo;
+    let mut b = Batcher::with_clock(
+        &rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        4,
+        eat_factory(&cfg),
+        Clock::virt(),
+    );
+    for q in questions {
+        b.submit(q.clone());
+    }
+    b.run_to_completion().unwrap();
+    assert_eq!(b.metrics.preemptions, 0, "FIFO must never preempt");
+    let mut results = b.results;
+    results.sort_by_key(|r| r.question_id);
+    results
+}
+
+#[test]
+fn cluster_rebalance_migrates_without_reprefill_or_trajectory_change() {
+    // end-to-end through Cluster::tick: skewed load triggers the
+    // rebalancer, sessions/waiters hop replicas, and on the paged store
+    // the shared-pool page handoff means the backend prefills exactly
+    // once per request — migration never re-prefills
+    let questions = skewed_workload(3, 5, 5);
+    let rt = Runtime::reference();
+    let cfg = preemptive_cfg(5);
+    let ccfg = ClusterConfig {
+        replicas: 2,
+        slots_per_replica: 2,
+        route: RoutePolicy::RoundRobin,
+        migrate: true,
+    };
+    let mut c = mk_cluster(&rt, &cfg, ccfg);
+    for q in &questions {
+        c.submit(q.clone());
+    }
+    c.run_to_completion().unwrap();
+    let m = c.metrics();
+    assert_eq!(m.completed, questions.len());
+    assert!(m.migrations + m.reroutes > 0, "skewed load never rebalanced");
+    assert_eq!(m.kv_spills, 0, "default budget must never spill");
+    assert_eq!(
+        rt.main.counters().prefills.get(),
+        questions.len() as u64,
+        "migration or resume re-prefilled on the paged store"
+    );
+    let reference = unmigrated_reference(&questions, 5);
+    let migrated = c.all_results();
+    assert_eq!(migrated.len(), reference.len());
+    for (mres, f) in migrated.iter().zip(&reference) {
+        assert_eq!(key(mres), key(f), "migration changed a trajectory");
+    }
+}
+
+/// Manual two-batcher handoff on one shared runtime: tick the loaded
+/// batcher until `extract_migration` yields a mid-flight *session*
+/// (committed tokens > 0), injecting every extracted waiter into the
+/// idle batcher, then drain both on the shared clock. Returns the merged
+/// sorted results, the migrated session's committed tokens, and the
+/// (spills, resumes) totals.
+fn manual_migration_run(
+    rt: &Runtime,
+    questions: &[Question],
+    seed: u64,
+) -> (Vec<RequestResult>, usize, u64, u64) {
+    let cfg = preemptive_cfg(seed);
+    let clock = Clock::virt();
+    let mut b0 = Batcher::with_clock(
+        rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        2,
+        eat_factory(&cfg),
+        clock.clone(),
+    );
+    let mut b1 = Batcher::with_clock(
+        rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        2,
+        eat_factory(&cfg),
+        clock.clone(),
+    );
+    for (i, q) in questions.iter().enumerate() {
+        b0.submit_seq(q.clone(), i as u64);
+    }
+    let mut session_tokens = 0usize;
+    let mut guard = 0;
+    while session_tokens == 0 {
+        b0.tick().unwrap();
+        clock.advance(DEFAULT_TICK_DT);
+        if b0.suspended_count() > 0 {
+            if let Some(m) = b0.extract_migration().unwrap() {
+                if m.is_session() {
+                    session_tokens = m.tokens();
+                }
+                b1.inject_migration(&mut b0, m);
+            }
+        }
+        guard += 1;
+        assert!(guard < 5_000, "no suspended session ever became migratable");
+    }
+    while b0.has_work() || b1.has_work() {
+        b0.tick().unwrap();
+        b1.tick().unwrap();
+        clock.advance(DEFAULT_TICK_DT);
+    }
+    assert!(b0.metrics.migrations_out >= 1);
+    assert!(b1.metrics.migrations_in >= 1);
+    assert!(b1.metrics.migrated_tokens > 0, "session handoff carried no tokens");
+    let spills = b0.metrics.kv_spills + b1.metrics.kv_spills;
+    let resumes = b0.metrics.resumes + b1.metrics.resumes;
+    let mut results = b0.results;
+    results.append(&mut b1.results);
+    results.sort_by_key(|r| r.question_id);
+    assert_eq!(results.len(), questions.len());
+    (results, session_tokens, spills, resumes)
+}
+
+#[test]
+fn migrated_session_repins_pages_on_paged_and_reprefills_on_mono() {
+    // the page-handoff acceptance bar, on both stores: the same manual
+    // migration scenario repins from the shared pool on the paged store
+    // (prefills == requests, zero spills) and falls back to re-prefill on
+    // the monolithic store (one extra prefill per resume) — with
+    // bit-identical trajectories everywhere
+    let questions = skewed_workload(3, 5, 5);
+    let reference = unmigrated_reference(&questions, 5);
+
+    let paged_rt = Runtime::reference();
+    let (paged_res, tokens, spills, _) = manual_migration_run(&paged_rt, &questions, 5);
+    assert!(tokens > 0, "migrated session carried no committed history");
+    assert_eq!(spills, 0, "default budget must never spill");
+    assert_eq!(
+        paged_rt.main.counters().prefills.get(),
+        questions.len() as u64,
+        "paged migration must repin, not re-prefill"
+    );
+    for (p, f) in paged_res.iter().zip(&reference) {
+        assert_eq!(key(p), key(f), "paged migration changed a trajectory");
+    }
+
+    let mono_rt = Runtime::reference_monolithic();
+    let (mono_res, _, _, mono_resumes) = manual_migration_run(&mono_rt, &questions, 5);
+    assert!(
+        mono_rt.main.counters().prefills.get() > questions.len() as u64,
+        "monolithic resume must re-prefill"
+    );
+    assert_eq!(
+        mono_rt.main.counters().prefills.get(),
+        questions.len() as u64 + mono_resumes,
+        "monolithic store must re-prefill exactly once per resume"
+    );
+    for (m, f) in mono_res.iter().zip(&reference) {
+        assert_eq!(key(m), key(f), "monolithic migration changed a trajectory");
+    }
+    // and the two stores agree with each other, token for token
+    for (p, m) in paged_res.iter().zip(&mono_res) {
+        assert_eq!(key(p), key(m), "paged vs monolithic migration diverged");
+    }
+}

@@ -4,6 +4,9 @@
 //! many seeded random inputs from the repo's own RNG — same idea, no
 //! shrinking. Each property runs a few hundred cases.
 
+mod common;
+
+use common::{eat_factory, key};
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::kv::SlotId;
 use eat_serve::coordinator::{
@@ -545,6 +548,217 @@ fn prop_scheduler_never_starves_or_leaks() {
             n as u64 + b.metrics.resumes,
             "install accounting broken (seed {seed})"
         );
+    }
+}
+
+/// Random submit/tick/migrate interleavings across a pool of batchers
+/// sharing one runtime (the cluster substrate): every request completes
+/// exactly once, migration bookkeeping balances, and once everything
+/// drains the shared page pool holds zero pages with allocs == frees —
+/// no leak, no double-free, regardless of where sessions wandered.
+#[test]
+fn prop_cluster_migration_interleavings_never_leak_pages() {
+    use eat_serve::runtime::Backend;
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0xC7057E);
+        let rt = Runtime::reference();
+        let mut cfg = ServeConfig::default();
+        cfg.seed = seed;
+        cfg.sched.mode = SchedMode::EatAware;
+        cfg.sched.preempt_after_ticks = rng.range(2, 24);
+        cfg.sched.max_preemptions = rng.range(0, 4) as u32;
+        cfg.sched.stall_stability = 0.1 + 0.3 * rng.f64();
+        let n_replicas = rng.range(2, 4) as usize;
+        let slots = rng.range(1, 3) as usize;
+        let n = rng.range(4, 10) as usize;
+        let ds = Dataset::synth_gpqa(&rt.vocab, n, seed);
+        let clock = Clock::virt();
+        let mut bs: Vec<Batcher> = (0..n_replicas)
+            .map(|_| {
+                Batcher::with_clock(
+                    &rt,
+                    cfg.clone(),
+                    MonitorModel::SelfModel,
+                    slots,
+                    eat_policy_factory(&cfg),
+                    clock.clone(),
+                )
+            })
+            .collect();
+        let mut seq = 0u64;
+        for _ in 0..300 {
+            match rng.below(6) {
+                0 if (seq as usize) < n => {
+                    let i = rng.below(n_replicas as u64) as usize;
+                    bs[i].submit_seq(ds.questions[seq as usize].clone(), seq);
+                    seq += 1;
+                }
+                1 => {
+                    let si = rng.below(n_replicas as u64) as usize;
+                    let di = rng.below(n_replicas as u64) as usize;
+                    if si != di {
+                        let (lo, hi) = (si.min(di), si.max(di));
+                        let (left, right) = bs.split_at_mut(hi);
+                        let (s, d) = if si < di {
+                            (&mut left[lo], &mut right[0])
+                        } else {
+                            (&mut right[0], &mut left[lo])
+                        };
+                        if let Some(m) = s.extract_migration().unwrap() {
+                            d.inject_migration(s, m);
+                        }
+                    }
+                }
+                _ => {
+                    for b in bs.iter_mut() {
+                        b.tick().unwrap();
+                    }
+                    clock.advance(0.01);
+                }
+            }
+        }
+        // whatever the interleaving left unsubmitted goes in round-robin,
+        // then the pool drains with no further migrations
+        while (seq as usize) < n {
+            let i = (seq as usize) % n_replicas;
+            bs[i].submit_seq(ds.questions[seq as usize].clone(), seq);
+            seq += 1;
+        }
+        let mut guard = 0;
+        while bs.iter().any(|b| b.has_work()) {
+            for b in bs.iter_mut() {
+                b.tick().unwrap();
+            }
+            clock.advance(0.01);
+            guard += 1;
+            assert!(guard < 200_000, "cluster failed to drain (seed {seed})");
+        }
+        let completed: usize = bs.iter().map(|b| b.metrics.completed).sum();
+        assert_eq!(completed, n, "request lost in migration (seed {seed})");
+        let out: u64 = bs.iter().map(|b| b.metrics.migrations_out).sum();
+        let inn: u64 = bs.iter().map(|b| b.metrics.migrations_in).sum();
+        assert_eq!(out, inn, "migration bookkeeping imbalance (seed {seed})");
+        for b in &bs {
+            assert_eq!(b.pending(), 0);
+            assert_eq!(b.active_count(), 0);
+            assert_eq!(b.suspended_count(), 0);
+            assert_eq!(b.kv_utilization(), 0.0, "KV slot leaked (seed {seed})");
+        }
+        drop(bs);
+        assert_eq!(
+            rt.main.pool_pages_in_use(),
+            Some(0),
+            "page leak across migrations (seed {seed})"
+        );
+        let (allocs, frees) = rt.main.pool_alloc_free().unwrap();
+        assert_eq!(allocs, frees, "page alloc/free imbalance (seed {seed})");
+    }
+}
+
+/// A session handed between batchers at random moments (KV pages and
+/// all) must replay bit-identically to the same-seed run that never
+/// migrates: per-request RNGs are seeded by the submission seq, so
+/// WHERE a session runs can never change WHAT it computes.
+#[test]
+fn prop_migrated_trajectories_bit_identical_to_unmigrated() {
+    use eat_serve::datasets::chainsum::Kind;
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0x316A7E);
+        let rt = Runtime::reference();
+        // corrupted questions stall (so preemption and migration have
+        // victims to move); easy ones finish fast
+        let pool = Dataset::synth_gpqa(&rt.vocab, 120, seed);
+        let mut questions: Vec<_> = pool
+            .questions
+            .iter()
+            .filter(|q| q.kind == Kind::Corrupted)
+            .take(2)
+            .cloned()
+            .collect();
+        questions.extend(
+            pool.questions
+                .iter()
+                .filter(|q| q.kind == Kind::ChainSum && q.n_ops() <= 4)
+                .take(5)
+                .cloned(),
+        );
+        assert_eq!(questions.len(), 7, "pool too small (seed {seed})");
+        let mut cfg = ServeConfig::default();
+        cfg.seed = seed;
+        cfg.delta = 1e-7;
+        cfg.sched.mode = SchedMode::EatAware;
+        cfg.sched.stall_stability = 0.2;
+        cfg.sched.preempt_after_ticks = rng.range(4, 16);
+        cfg.sched.max_preemptions = 100; // retirement never fires
+
+        // migrated run: two batchers over one shared runtime, random
+        // handoffs in both directions while the workload drains
+        let clock = Clock::virt();
+        let mut b0 = Batcher::with_clock(
+            &rt,
+            cfg.clone(),
+            MonitorModel::SelfModel,
+            2,
+            eat_factory(&cfg),
+            clock.clone(),
+        );
+        let mut b1 = Batcher::with_clock(
+            &rt,
+            cfg.clone(),
+            MonitorModel::SelfModel,
+            2,
+            eat_factory(&cfg),
+            clock.clone(),
+        );
+        for (i, q) in questions.iter().enumerate() {
+            b0.submit_seq(q.clone(), i as u64);
+        }
+        let mut guard = 0;
+        while b0.has_work() || b1.has_work() {
+            if rng.chance(0.25) {
+                let (s, d) = if rng.chance(0.5) {
+                    (&mut b0, &mut b1)
+                } else {
+                    (&mut b1, &mut b0)
+                };
+                if let Some(m) = s.extract_migration().unwrap() {
+                    d.inject_migration(s, m);
+                }
+            }
+            b0.tick().unwrap();
+            b1.tick().unwrap();
+            clock.advance(0.01);
+            guard += 1;
+            assert!(guard < 100_000, "migrated run failed to drain (seed {seed})");
+        }
+        let mut migrated = b0.results;
+        migrated.append(&mut b1.results);
+        migrated.sort_by_key(|r| r.question_id);
+
+        // reference: the same workload through one FIFO batcher, never
+        // interrupted
+        let ref_rt = Runtime::reference();
+        let mut fifo_cfg = cfg.clone();
+        fifo_cfg.sched.mode = SchedMode::Fifo;
+        let mut f = Batcher::with_clock(
+            &ref_rt,
+            fifo_cfg.clone(),
+            MonitorModel::SelfModel,
+            2,
+            eat_factory(&fifo_cfg),
+            Clock::virt(),
+        );
+        for q in &questions {
+            f.submit(q.clone());
+        }
+        f.run_to_completion().unwrap();
+        let mut reference = f.results;
+        reference.sort_by_key(|r| r.question_id);
+
+        assert_eq!(migrated.len(), reference.len(), "seed {seed}");
+        for (m, r) in migrated.iter().zip(&reference) {
+            assert_eq!(key(m), key(r), "migration changed a trajectory (seed {seed})");
+        }
     }
 }
 

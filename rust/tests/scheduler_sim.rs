@@ -19,7 +19,8 @@ mod common;
 use common::{eat_factory, key};
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::{
-    poisson_arrivals, run_open_loop, Batcher, MonitorModel, RequestResult, DEFAULT_TICK_DT,
+    poisson_arrivals, run_open_loop, Batcher, MetricsReport, MonitorModel, RequestResult,
+    DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::{chainsum::Kind, Dataset, Question};
 use eat_serve::runtime::{Backend, Runtime};
