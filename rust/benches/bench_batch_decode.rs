@@ -12,7 +12,8 @@
 
 use eat_serve::datasets::Dataset;
 use eat_serve::runtime::{Backend, BackendCache, BatchLane, Runtime};
-use eat_serve::util::bench::bench;
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::Json;
 
 fn counters_snapshot(rt: &Runtime) -> (u64, u64, u64, u64) {
     let c = rt.main.counters();
@@ -45,6 +46,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("fused batch width: {width}\n");
     let before = counters_snapshot(&rt);
+    let mut results = Vec::new();
 
     // several decode steps per forked batch, so the backend's resident
     // batch image engages from step 2 onward (steady-state serving shape)
@@ -95,6 +97,7 @@ fn main() -> anyhow::Result<()> {
             seq_tps,
             fused_tps / seq_tps
         );
+        results.extend([fused, seq]);
     }
 
     let after = counters_snapshot(&rt);
@@ -107,5 +110,19 @@ fn main() -> anyhow::Result<()> {
         "\n(one fused call commits up to {width} tokens; the batcher issues \
          exactly one per scheduling tick — see batcher_protocol.rs)"
     );
+
+    let counters = Json::obj(vec![
+        ("single_decodes", Json::num((after.0 - before.0) as f64)),
+        ("fused_calls", Json::num((after.1 - before.1) as f64)),
+        ("fused_lanes", Json::num((after.2 - before.2) as f64)),
+        ("resident_lane_hits", Json::num((after.3 - before.3) as f64)),
+    ]);
+    let extra = vec![
+        ("backend", Json::str(rt.backend_kind())),
+        ("batch_width", Json::num(width as f64)),
+        ("counters_delta", counters),
+    ];
+    let path = write_snapshot("batch_decode", &results, extra)?;
+    println!("snapshot: {path}");
     Ok(())
 }

@@ -22,11 +22,12 @@ use eat_serve::config::ServeConfig;
 use eat_serve::coordinator::{poisson_arrivals, run_open_loop, DEFAULT_TICK_DT};
 use eat_serve::datasets::Dataset;
 use eat_serve::runtime::{Backend, Runtime};
-use eat_serve::util::bench::bench;
+use eat_serve::util::bench::{bench, write_snapshot, BenchResult};
 use eat_serve::util::clock::Clock;
+use eat_serve::util::json::Json;
 use eat_serve::util::rng::Rng;
 
-fn micro(rt: &Runtime) -> anyhow::Result<()> {
+fn micro(rt: &Runtime) -> anyhow::Result<Vec<BenchResult>> {
     let vocab = rt.vocab;
     let ds = Dataset::synth_aime(&vocab, 1, 13);
     let mut prompt = ds.questions[0].prompt.clone();
@@ -35,6 +36,7 @@ fn micro(rt: &Runtime) -> anyhow::Result<()> {
     let suffix = vocab.suffix_prefixed();
 
     // chunk sizes in tokens (the paper receives ~100-token chunks)
+    let mut results = Vec::new();
     for chunk in [4usize, 12, 24] {
         let r = bench(&format!("blackbox/proxy_chunk{chunk}"), || {
             let mut fork = rt.proxy.fork(&cache).unwrap();
@@ -53,11 +55,12 @@ fn micro(rt: &Runtime) -> anyhow::Result<()> {
             mean_arrival,
             mean_arrival / (r.mean_ns / 1e6)
         );
+        results.push(r);
     }
-    Ok(())
+    Ok(results)
 }
 
-fn serve_batched(b: usize) -> anyhow::Result<()> {
+fn serve_batched(b: usize) -> anyhow::Result<Json> {
     // fresh runtime per width so the fused/decode counters are per-run
     let rt = Runtime::reference();
     let mut cfg = ServeConfig::default();
@@ -97,17 +100,37 @@ fn serve_batched(b: usize) -> anyhow::Result<()> {
         wall_s,
         m.saved_ms / 1e3,
     );
-    Ok(())
+    Ok(Json::obj(vec![
+        ("b", Json::num(b as f64)),
+        ("completed", Json::num(m.completed as f64)),
+        ("chunks", Json::num(m.chunks as f64)),
+        ("probes", Json::num(m.probes as f64)),
+        ("gap_p50_ms", Json::num(m.arrival_gap_ms.p50())),
+        ("proxy_p50_ms", Json::num(m.proxy_compute_ms.p50())),
+        ("headroom_x", Json::num(m.overlap_headroom())),
+        ("overrun_chunks", Json::num(m.overrun_chunks as f64)),
+        ("fused_main_calls", Json::num(ms.fused_calls as f64)),
+        ("sim_elapsed_s", Json::num(m.elapsed_s())),
+        ("wall_s", Json::num(wall_s)),
+    ]))
 }
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_or_reference("artifacts");
     println!("== micro: one chunk of proxy work vs simulated arrival gap ==");
-    micro(&rt)?;
+    let results = micro(&rt)?;
     println!("\n== serve: batched proxy monitoring of B concurrent streams ==");
+    let mut serve_rows = Vec::new();
     for b in [1usize, 4, 8] {
-        serve_batched(b)?;
+        serve_rows.push(serve_batched(b)?);
     }
     println!("\n(Fig. 5b: EAT computation fully overlaps the streaming API latency, B-wide)");
+
+    let extra = vec![
+        ("backend", Json::str(rt.backend_kind())),
+        ("serve", Json::arr(serve_rows)),
+    ];
+    let path = write_snapshot("blackbox", &results, extra)?;
+    println!("snapshot: {path}");
     Ok(())
 }

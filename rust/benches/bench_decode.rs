@@ -3,50 +3,57 @@
 //! in bench_batch_decode.rs.
 //!
 //!     cargo bench --bench bench_decode
+//!
+//! Runs against the AOT artifacts when available, otherwise against the
+//! deterministic reference backend — the snapshot records which.
 
 use eat_serve::datasets::Dataset;
 use eat_serve::runtime::{Backend, Runtime};
-use eat_serve::util::bench::bench;
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
-    let rt = match Runtime::load("artifacts") {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping bench (artifacts not built): {e}");
-            return Ok(());
-        }
-    };
+    let rt = Runtime::load_or_reference("artifacts");
+    println!("backend: {}", rt.backend_kind());
     let vocab = rt.vocab;
     let ds = Dataset::synth_math500(&vocab, 8, 9);
     let mut prompt = ds.questions[0].prompt.clone();
     prompt.push(vocab.think);
 
-    bench("prefill/main", || {
+    let mut results = Vec::new();
+    results.push(bench("prefill/main", || {
         rt.main.prefill(&prompt).unwrap();
-    });
-    bench("prefill/proxy", || {
+    }));
+    results.push(bench("prefill/proxy", || {
         rt.proxy.prefill(&prompt).unwrap();
-    });
+    }));
 
     let (_lg, cache) = rt.main.prefill(&prompt)?;
-    bench("decode/main_single", || {
+    results.push(bench("decode/main_single", || {
         let mut fork = rt.main.fork(&cache).unwrap();
         rt.main.decode(&mut fork, vocab.nl).unwrap();
-    });
+    }));
     let (_lgp, pcache) = rt.proxy.prefill(&prompt)?;
-    bench("decode/proxy_single", || {
+    results.push(bench("decode/proxy_single", || {
         let mut fork = rt.proxy.fork(&pcache).unwrap();
         rt.proxy.decode(&mut fork, vocab.nl).unwrap();
-    });
+    }));
 
     // fused batched decode vs sequential: see bench_batch_decode.rs
 
     // probe suffix length scaling (Eq. 12's 1-token vs Eq. 13's 3-token)
-    bench("probe/suffix1", || {
+    results.push(bench("probe/suffix1", || {
         rt.main.probe(&cache, &vocab.suffix_plain()).unwrap();
-    });
-    bench("probe/suffix3", || {
+    }));
+    results.push(bench("probe/suffix3", || {
         rt.main.probe(&cache, &vocab.suffix_prefixed()).unwrap();
-    });
+    }));
+
+    let extra = vec![
+        ("backend", Json::str(rt.backend_kind())),
+        ("prompt_tokens", Json::num(prompt.len() as f64)),
+    ];
+    let path = write_snapshot("decode", &results, extra)?;
+    println!("snapshot: {path}");
     Ok(())
 }

@@ -1,0 +1,143 @@
+//! Lazy JSON scanning vs full-tree parsing on trace files (DESIGN.md
+//! §3.8) — the acceptance check for the hot-path speed pass.
+//!
+//!     cargo bench --bench bench_json
+//!
+//! Three tiers on the same serialized `TraceSet` text:
+//!  - full tree parse (allocates a `Json` tree for every value);
+//!  - partial extraction (per trace: `question_id` + final line's
+//!    `pass1_avgk`) through the tree vs through `JsonScanner`, which
+//!    never materializes anything — the snapshot records the speedup
+//!    as `partial_speedup_x` (expected well past 5x: the scanner only
+//!    lexes past what it skips, allocating nothing);
+//!  - full decode to `Trace` structs, tree (`from_json`) vs scanner
+//!    (`from_scanner`).
+
+use eat_serve::monitor::{LinePoint, Trace};
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::{self, Json, JsonScanner};
+use eat_serve::util::rng::Rng;
+
+fn synthetic_trace(id: usize, lines: usize, rng: &mut Rng) -> Trace {
+    Trace {
+        question_id: id,
+        n_ops: 6,
+        answer: Some(3),
+        prompt_tokens: 9,
+        self_terminated: false,
+        reasoning_tokens: vec![5; lines * 3],
+        points: (1..=lines)
+            .map(|i| LinePoint {
+                line: i,
+                tokens: i * 3,
+                eat: 2.0 * rng.f64(),
+                eat_proxy: Some(rng.f64()),
+                eat_plain: Some(0.0),
+                eat_newline: Some(rng.f64()),
+                vhat: f64::INFINITY,
+                p_correct: rng.f64(),
+                pass1_avgk: rng.f64(),
+                unique_answers: 1 + (i % 5),
+                confidence: Some(0.5),
+            })
+            .collect(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    const TRACES: usize = 120;
+    const LINES: usize = 30;
+    let mut rng = Rng::new(17);
+    let traces: Vec<Trace> = (0..TRACES)
+        .map(|i| synthetic_trace(i, LINES, &mut rng))
+        .collect();
+    let text = Json::obj(vec![
+        ("dataset", Json::str("bench")),
+        ("traces", Json::arr(traces.iter().map(|t| t.to_json()))),
+    ])
+    .to_string();
+    println!(
+        "traceset: {TRACES} traces x {LINES} lines = {} KiB of JSON\n",
+        text.len() / 1024
+    );
+
+    let mut results = Vec::new();
+
+    // full tree parse, no field access — the allocation floor
+    results.push(bench("json/tree_parse", || {
+        std::hint::black_box(json::parse(&text).unwrap());
+    }));
+
+    // partial extraction: question_id + final pass1_avgk per trace
+    let tree_partial = bench("json/tree_partial_extract", || {
+        let v = json::parse(&text).unwrap();
+        let mut acc = 0.0f64;
+        for t in v.get("traces").as_arr().unwrap() {
+            acc += t.req_usize("question_id").unwrap() as f64;
+            let pts = t.get("points").as_arr().unwrap();
+            acc += pts.last().unwrap().get("pass1_avgk").as_f64().unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+    let scan_partial = bench("json/scan_partial_extract", || {
+        let sc = JsonScanner::new(&text);
+        let mut acc = 0.0f64;
+        for t in sc.path(&["traces"]).unwrap().array_items() {
+            acc += t.req_usize("question_id").unwrap() as f64;
+            let last = t
+                .path(&["points"])
+                .unwrap()
+                .array_items()
+                .last()
+                .unwrap();
+            acc += last.req_num("pass1_avgk").unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+    let partial_speedup = tree_partial.mean_ns / scan_partial.mean_ns;
+    println!(
+        "partial extraction: tree {:.3} ms vs scan {:.3} ms -> {partial_speedup:.1}x",
+        tree_partial.mean_ns / 1e6,
+        scan_partial.mean_ns / 1e6
+    );
+
+    // full decode to Trace structs
+    let tree_load = bench("json/tree_load_traces", || {
+        let v = json::parse(&text).unwrap();
+        let ts: Vec<Trace> = v
+            .get("traces")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| Trace::from_json(t).unwrap())
+            .collect();
+        std::hint::black_box(ts);
+    });
+    let scan_load = bench("json/scan_load_traces", || {
+        let sc = JsonScanner::new(&text);
+        let ts: Vec<Trace> = sc
+            .path(&["traces"])
+            .unwrap()
+            .array_items()
+            .map(|t| Trace::from_scanner(&t).unwrap())
+            .collect();
+        std::hint::black_box(ts);
+    });
+    let load_speedup = tree_load.mean_ns / scan_load.mean_ns;
+    println!(
+        "full decode: tree {:.3} ms vs scan {:.3} ms -> {load_speedup:.2}x",
+        tree_load.mean_ns / 1e6,
+        scan_load.mean_ns / 1e6
+    );
+
+    results.extend([tree_partial, scan_partial, tree_load, scan_load]);
+    let extra = vec![
+        ("text_bytes", Json::num(text.len() as f64)),
+        ("traces", Json::num(TRACES as f64)),
+        ("partial_speedup_x", Json::num(partial_speedup)),
+        ("load_speedup_x", Json::num(load_speedup)),
+    ];
+    let path = write_snapshot("json", &results, extra)?;
+    println!("snapshot: {path}");
+    Ok(())
+}

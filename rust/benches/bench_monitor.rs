@@ -1,14 +1,15 @@
 //! Coordinator-side hot paths that must never bottleneck serving: the EMA
 //! monitor update (runs every reasoning line), policy dispatch, offline
-//! replay throughput, and trace (de)serialization.
+//! replay throughput, and trace (de)serialization — tree parse vs the
+//! lazy `JsonScanner` path (DESIGN.md §3.8).
 //!
 //!     cargo bench --bench bench_monitor
 
 use eat_serve::exit::{EatPolicy, ExitPolicy, LineObs};
-use eat_serve::eval::{replay, Signal, TraceSet};
+use eat_serve::eval::{replay, replay_scanned, Signal, TraceSet};
 use eat_serve::monitor::{EmaVar, LinePoint, Trace};
-use eat_serve::util::bench::bench;
-use eat_serve::util::json;
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::{self, Json, JsonScanner};
 use eat_serve::util::rng::Rng;
 
 fn synthetic_trace(lines: usize) -> Trace {
@@ -38,14 +39,16 @@ fn synthetic_trace(lines: usize) -> Trace {
     }
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let mut results = Vec::new();
+
     // EMA update: the per-line O(1) core of Alg. 1
     let mut ema = EmaVar::new(0.2);
     let mut x = 0.0f64;
-    bench("monitor/ema_update", || {
+    results.push(bench("monitor/ema_update", || {
         x += 1.0;
         std::hint::black_box(ema.update((x % 7.0) * 0.3));
-    });
+    }));
 
     // policy observe (incl. exit decision)
     let mut policy = EatPolicy::new(0.2, 1e-9, usize::MAX);
@@ -54,23 +57,33 @@ fn main() {
         eat: Some(1.5),
         ..Default::default()
     };
-    bench("monitor/policy_observe", || {
+    results.push(bench("monitor/policy_observe", || {
         std::hint::black_box(policy.observe(&obs));
-    });
+    }));
 
     // full-trace replay (the unit of every sweep point)
     let trace = synthetic_trace(30);
-    bench("replay/trace30_eat", || {
+    results.push(bench("replay/trace30_eat", || {
         let mut p = EatPolicy::new(0.2, 1e-3, usize::MAX);
         std::hint::black_box(replay(&trace, &mut p, Signal::MainPrefixed, false));
-    });
+    }));
+
+    // the same replay straight off JSON text, no Trace materialized
+    let trace_text = trace.to_json().to_string();
+    results.push(bench("replay/trace30_eat_scanned", || {
+        let sc = JsonScanner::new(&trace_text);
+        let mut p = EatPolicy::new(0.2, 1e-3, usize::MAX);
+        std::hint::black_box(
+            replay_scanned(&sc, &mut p, Signal::MainPrefixed, false).unwrap(),
+        );
+    }));
 
     // sweep scale: 500 traces x 24 thresholds happens per figure panel
     let set = TraceSet {
         dataset: "bench".into(),
         traces: (0..100).map(|_| synthetic_trace(25)).collect(),
     };
-    bench("replay/sweep_100x24", || {
+    results.push(bench("replay/sweep_100x24", || {
         for i in 0..24 {
             let delta = 2f64.powi(-i);
             for t in &set.traces {
@@ -78,15 +91,23 @@ fn main() {
                 std::hint::black_box(replay(t, &mut p, Signal::MainPrefixed, false));
             }
         }
-    });
+    }));
 
     // trace JSON round-trip (store/load of the App. H protocol)
     let js = trace.to_json().to_string();
-    bench("store/trace_to_json", || {
+    results.push(bench("store/trace_to_json", || {
         std::hint::black_box(trace.to_json().to_string());
-    });
-    bench("store/trace_parse", || {
+    }));
+    results.push(bench("store/trace_parse", || {
         let v = json::parse(&js).unwrap();
         std::hint::black_box(Trace::from_json(&v).unwrap());
-    });
+    }));
+    results.push(bench("store/trace_scan", || {
+        std::hint::black_box(Trace::from_scanner(&JsonScanner::new(&js)).unwrap());
+    }));
+
+    let extra = vec![("trace_lines", Json::num(30.0))];
+    let path = write_snapshot("monitor", &results, extra)?;
+    println!("snapshot: {path}");
+    Ok(())
 }

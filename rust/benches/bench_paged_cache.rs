@@ -15,7 +15,8 @@ use std::time::Duration;
 
 use eat_serve::coordinator::DEFAULT_PAGE_SIZE;
 use eat_serve::runtime::{Backend, BackendCache, RefBackend};
-use eat_serve::util::bench::bench_with;
+use eat_serve::util::bench::{bench_with, default_budget, write_snapshot};
+use eat_serve::util::json::Json;
 use eat_serve::vocab::Vocab;
 
 const ROLLOUT_LEN: usize = 5;
@@ -49,7 +50,8 @@ fn main() -> anyhow::Result<()> {
     let paged = RefBackend::with_pages("ref-main", vocab, 128, Some(8), Some(DEFAULT_PAGE_SIZE));
     let mono = RefBackend::monolithic("ref-main", vocab, 128, Some(8));
     let suffix = vocab.suffix_prefixed();
-    let budget = Duration::from_millis(400);
+    let budget = default_budget().min(Duration::from_millis(400));
+    let mut results = Vec::new();
 
     println!("paged page size: {DEFAULT_PAGE_SIZE} tok  (mono = one full-sequence block)\n");
     for b in [1usize, 4, 8] {
@@ -95,6 +97,7 @@ fn main() -> anyhow::Result<()> {
             pr_mono.mean_ns / pr_paged.mean_ns.max(1.0),
             fk_mono.mean_ns / fk_paged.mean_ns.max(1.0),
         );
+        results.extend([pr_paged, pr_mono, fk_paged, fk_mono]);
     }
 
     let c = paged.counters();
@@ -118,5 +121,14 @@ fn main() -> anyhow::Result<()> {
         "\n(the probe itself allocates, shares and copies ZERO pages — asserted \
          in batcher_protocol.rs; this table is the rollout-fork story)"
     );
+
+    let cow_audit = Json::obj(vec![
+        ("page_size_tok", Json::num(DEFAULT_PAGE_SIZE as f64)),
+        ("cow_forks", Json::num(c.cow_forks.get() as f64)),
+        ("pages_shared", Json::num(c.pages_shared.get() as f64)),
+        ("pages_copied", Json::num(c.pages_copied.get() as f64)),
+    ]);
+    let path = write_snapshot("paged_cache", &results, vec![("cow_audit", cow_audit)])?;
+    println!("snapshot: {path}");
     Ok(())
 }

@@ -5,19 +5,18 @@
 //! in |R|, "roughly equivalent to generating one extra token".
 //!
 //!     cargo bench --bench bench_probe
+//!
+//! Runs against the AOT artifacts when available, otherwise against the
+//! deterministic reference backend — the snapshot records which.
 
 use eat_serve::datasets::Dataset;
 use eat_serve::runtime::{Backend, Runtime};
-use eat_serve::util::bench::bench;
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
-    let rt = match Runtime::load("artifacts") {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping bench (artifacts not built): {e}");
-            return Ok(());
-        }
-    };
+    let rt = Runtime::load_or_reference("artifacts");
+    println!("backend: {}", rt.backend_kind());
     let vocab = rt.vocab;
     let ds = Dataset::synth_aime(&vocab, 1, 3);
     let mut prompt = ds.questions[0].prompt.clone();
@@ -26,6 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     let suffix = vocab.suffix_prefixed();
     let mut results = Vec::new();
+    let mut scaling = Vec::new();
     // grow the committed context and measure the probe at checkpoints
     for target in [16usize, 32, 64, 96, 120] {
         while cache.pos() < target {
@@ -34,7 +34,8 @@ fn main() -> anyhow::Result<()> {
         let r = bench(&format!("eat_probe/ctx{target}"), || {
             rt.main.probe(&cache, &suffix).unwrap();
         });
-        results.push((target, r.mean_ns));
+        scaling.push((target, r.mean_ns));
+        results.push(r);
     }
 
     // one committed decode step for the "one extra token" comparison
@@ -42,24 +43,39 @@ fn main() -> anyhow::Result<()> {
     while c2.pos() < 64 {
         rt.main.decode(&mut c2, vocab.nl)?;
     }
-    let probe_at_64 = results.iter().find(|r| r.0 == 64).unwrap().1;
+    let probe_at_64 = scaling.iter().find(|r| r.0 == 64).unwrap().1;
     let d = bench("decode_step/ctx64", || {
         let mut fork = rt.main.fork(&c2).unwrap();
         rt.main.decode(&mut fork, vocab.nl).unwrap();
     });
+    let probe_vs_decode = probe_at_64 / d.mean_ns;
     println!(
-        "\nEAT probe at ctx=64 is {:.2}x one decode step (paper: ~1 extra token; \
-         our probe runs a 3-token suffix)",
-        probe_at_64 / d.mean_ns
+        "\nEAT probe at ctx=64 is {probe_vs_decode:.2}x one decode step (paper: ~1 extra \
+         token; our probe runs a 3-token suffix)"
     );
     println!("probe scaling (should be ~flat-to-linear in context):");
-    for (ctx, ns) in &results {
+    for (ctx, ns) in &scaling {
         println!("  ctx {ctx:>4}: {:.3} ms", ns / 1e6);
     }
+    results.push(d);
     // proxy-model probe for the black-box path
     let (_l, pc) = rt.proxy.prefill(&prompt)?;
-    bench("eat_probe/proxy_ctx_prompt", || {
+    results.push(bench("eat_probe/proxy_ctx_prompt", || {
         rt.proxy.probe(&pc, &suffix).unwrap();
+    }));
+
+    let scaling_rows = scaling.iter().map(|(ctx, ns)| {
+        Json::obj(vec![
+            ("ctx", Json::num(*ctx as f64)),
+            ("probe_mean_ns", Json::num(*ns)),
+        ])
     });
+    let extra = vec![
+        ("backend", Json::str(rt.backend_kind())),
+        ("probe_vs_decode_x", Json::num(probe_vs_decode)),
+        ("probe_scaling", Json::arr(scaling_rows)),
+    ];
+    let path = write_snapshot("probe", &results, extra)?;
+    println!("snapshot: {path}");
     Ok(())
 }

@@ -6,21 +6,20 @@
 //! cache through the AOT decode executable.
 //!
 //!     cargo bench --bench bench_rollout
+//!
+//! Runs against the AOT artifacts when available, otherwise against the
+//! deterministic reference backend — the snapshot records which.
 
 use eat_serve::datasets::Dataset;
 use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::sampler::Sampler;
-use eat_serve::util::bench::bench;
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::Json;
 use eat_serve::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let rt = match Runtime::load("artifacts") {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping bench (artifacts not built): {e}");
-            return Ok(());
-        }
-    };
+    let rt = Runtime::load_or_reference("artifacts");
+    println!("backend: {}", rt.backend_kind());
     let vocab = rt.vocab;
     let ds = Dataset::synth_aime(&vocab, 1, 5);
     let mut prompt = ds.questions[0].prompt.clone();
@@ -68,5 +67,14 @@ fn main() -> anyhow::Result<()> {
     println!("  1 rollout : {:.1}x", r1.mean_ns / probe.mean_ns);
     println!("  8 rollouts: {:.1}x", r8.mean_ns / probe.mean_ns);
     println!("  32 rollouts: {:.1}x", r32.mean_ns / probe.mean_ns);
+
+    let extra = vec![
+        ("backend", Json::str(rt.backend_kind())),
+        ("rollout1_vs_probe_x", Json::num(r1.mean_ns / probe.mean_ns)),
+        ("rollout32_vs_probe_x", Json::num(r32.mean_ns / probe.mean_ns)),
+    ];
+    let results = vec![probe, r1, r8, r32];
+    let path = write_snapshot("rollout", &results, extra)?;
+    println!("snapshot: {path}");
     Ok(())
 }

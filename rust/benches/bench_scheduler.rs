@@ -14,7 +14,7 @@ use eat_serve::coordinator::{
     eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, MonitorModel, DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::Dataset;
-use eat_serve::runtime::Runtime;
+use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::bench::{bench, write_snapshot};
 use eat_serve::util::clock::Clock;
 use eat_serve::util::json::Json;
@@ -62,19 +62,31 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ServeConfig::default();
     cfg.seed = 11;
     cfg.sched.mode = SchedMode::EatAware;
+    let c = rt.main.counters();
+    let (ticks0, allocs0) = (c.sched_ticks.get(), c.sched_allocs.get());
     let (preemptions, resumes, re_prefill) = simulate(&rt, &cfg, N, SLOTS);
+    let (ticks, allocs) = (
+        c.sched_ticks.get() - ticks0,
+        c.sched_allocs.get() - allocs0,
+    );
+    let allocs_per_tick = allocs as f64 / (ticks.max(1)) as f64;
     println!("scheduler event mix ({N} requests, {SLOTS} slots):");
     println!("  preemptions         {preemptions:>8}");
     println!("  resumes             {resumes:>8}");
     println!(
         "  restored tokens     {re_prefill:>8}  (repinned pages on paged; re-prefilled on mono)"
     );
+    println!("  ticks               {ticks:>8}");
+    println!("  scratch allocs      {allocs:>8}  ({allocs_per_tick:.4} per tick; steady state is 0)");
     let event_mix = Json::obj(vec![
         ("requests", Json::num(N as f64)),
         ("slots", Json::num(SLOTS as f64)),
         ("preemptions", Json::num(preemptions as f64)),
         ("resumes", Json::num(resumes as f64)),
         ("restored_tokens", Json::num(re_prefill as f64)),
+        ("sched_ticks", Json::num(ticks as f64)),
+        ("sched_allocs", Json::num(allocs as f64)),
+        ("allocs_per_tick", Json::num(allocs_per_tick)),
     ]);
     let path = write_snapshot("scheduler", &results, vec![("event_mix", event_mix)])?;
     println!("snapshot: {path}");

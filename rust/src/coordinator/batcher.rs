@@ -50,7 +50,7 @@ use super::metrics::ServeMetrics;
 use crate::config::{SchedMode, ServeConfig};
 use crate::datasets::Question;
 use crate::exit::{EatPolicy, ExitPolicy, ExitReason};
-use crate::runtime::{Backend, BackendCache, Runtime};
+use crate::runtime::{Backend, BackendCache, Runtime, RuntimeCounters};
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 
@@ -186,6 +186,34 @@ pub fn eat_policy_factory(cfg: &ServeConfig) -> PolicyFactory {
 /// and as the workload driver's default.
 pub const DEFAULT_TICK_DT: f64 = 0.01;
 
+/// Per-tick work lists, hoisted out of `Batcher::tick` so steady-state
+/// ticks are allocation-free (DESIGN.md §3.8): the vectors are
+/// preallocated to the slot count and only grow — a growth event bumps
+/// `RuntimeCounters::sched_allocs` — if the active set ever outgrows
+/// every previous tick.
+#[derive(Default)]
+struct TickScratch {
+    /// (active index, token, mirror-to-proxy)
+    decodes: Vec<(usize, u32, bool)>,
+    finished: Vec<usize>,
+    /// Fused-path lane picks for the current chunk.
+    picks: Vec<(SlotId, u32)>,
+}
+
+impl TickScratch {
+    fn with_slots(slots: usize) -> TickScratch {
+        TickScratch {
+            decodes: Vec::with_capacity(slots),
+            finished: Vec::with_capacity(slots),
+            picks: Vec::with_capacity(slots),
+        }
+    }
+
+    fn capacity_sum(&self) -> usize {
+        self.decodes.capacity() + self.finished.capacity() + self.picks.capacity()
+    }
+}
+
 pub struct Batcher<'a> {
     rt: &'a Runtime,
     cfg: ServeConfig,
@@ -214,6 +242,8 @@ pub struct Batcher<'a> {
     main_page_size: usize,
     proxy_page_size: usize,
     next_seq: u64,
+    /// Reusable per-tick work lists (see [`TickScratch`]).
+    scratch: TickScratch,
     /// Disable the fused path even when the backend has one (A/B
     /// determinism checks, ablations).
     pub force_sequential: bool,
@@ -271,6 +301,7 @@ impl<'a> Batcher<'a> {
             suspended_aged: BinaryHeap::new(),
             suspended_wait: BinaryHeap::new(),
             next_seq: 0,
+            scratch: TickScratch::with_slots(slots),
             force_sequential: false,
             results: Vec::new(),
         }
@@ -720,11 +751,14 @@ impl<'a> Batcher<'a> {
         let force_sequential = self.force_sequential;
         let store = &mut self.store;
         let active = &mut self.active;
+        let scratch = &mut self.scratch;
 
         let mut advanced = 0usize;
-        // (active index, token, mirror-to-proxy)
-        let mut decodes: Vec<(usize, u32, bool)> = Vec::new();
-        let mut finished: Vec<usize> = Vec::new();
+        // reuse the hoisted work lists: steady-state ticks must not
+        // allocate, and any capacity growth is counted below
+        let cap_before = scratch.capacity_sum();
+        scratch.decodes.clear();
+        scratch.finished.clear();
 
         // phase A: drive each session to its next decode or completion
         for (i, a) in active.iter_mut().enumerate() {
@@ -732,11 +766,11 @@ impl<'a> Batcher<'a> {
             loop {
                 match a.session.poll() {
                     StepWork::Done => {
-                        finished.push(i);
+                        scratch.finished.push(i);
                         break;
                     }
                     StepWork::Decode { token, mirror } => {
-                        decodes.push((i, token, mirror));
+                        scratch.decodes.push((i, token, mirror));
                         break;
                     }
                     StepWork::Probe { suffix, target } => {
@@ -767,12 +801,12 @@ impl<'a> Batcher<'a> {
             Some(w) => {
                 // one fused decode_batch per tick (chunked only when the
                 // active set exceeds the batch width)
-                for chunk in decodes.chunks(w) {
-                    let picks: Vec<(SlotId, u32)> = chunk
-                        .iter()
-                        .map(|&(i, tok, _)| (active[i].slot, tok))
-                        .collect();
-                    let logits = store.fused_decode(rt.main.as_ref(), &picks)?;
+                for chunk in scratch.decodes.chunks(w) {
+                    scratch.picks.clear();
+                    scratch
+                        .picks
+                        .extend(chunk.iter().map(|&(i, tok, _)| (active[i].slot, tok)));
+                    let logits = store.fused_decode(rt.main.as_ref(), &scratch.picks)?;
                     for (&(i, token, mirror), lg) in chunk.iter().zip(logits) {
                         if mirror {
                             if let Some(pc) = store.proxy_mut(active[i].slot) {
@@ -786,7 +820,7 @@ impl<'a> Batcher<'a> {
             None => {
                 // sequential fallback, admission order: same results,
                 // one decode per session
-                for &(i, token, mirror) in &decodes {
+                for &(i, token, mirror) in &scratch.decodes {
                     let slot = active[i].slot;
                     let lg = rt.main.decode(store.main_mut(slot)?, token)?;
                     store.mark_dirty(slot)?;
@@ -800,9 +834,16 @@ impl<'a> Batcher<'a> {
             }
         }
 
+        // tick accounting: a capacity change means a work list reallocated
+        let ctr = rt.main.counters();
+        RuntimeCounters::bump(&ctr.sched_ticks);
+        if self.scratch.capacity_sum() != cap_before {
+            RuntimeCounters::bump(&ctr.sched_allocs);
+        }
+
         // phase C: retire in reverse index order to keep indices valid
         let now = self.clock.now();
-        for &i in finished.iter().rev() {
+        for &i in self.scratch.finished.iter().rev() {
             let a = self.active.swap_remove(i);
             self.store.retire(a.slot)?;
             self.kv.release(a.slot)?;

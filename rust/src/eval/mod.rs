@@ -8,7 +8,7 @@ pub mod store;
 pub mod sweep;
 pub mod tracegen;
 
-pub use replay::{replay, ReplayOutcome, Signal};
+pub use replay::{replay, replay_scanned, ReplayOutcome, Signal};
 pub use store::TraceSet;
 pub use sweep::{Curve, CurvePoint};
 pub use tracegen::TraceGen;

@@ -4,6 +4,7 @@
 
 use crate::exit::{ExitDecision, ExitPolicy, ExitReason, LineObs};
 use crate::monitor::Trace;
+use crate::util::json::JsonScanner;
 
 /// Which recorded entropy stream feeds the policy (models x prefix
 /// variants of the paper's ablations).
@@ -149,6 +150,110 @@ pub fn replay(
     }
 }
 
+/// `from_json`-compatible numeric read for a point field: the key must
+/// exist, a non-numeric value decays to 0.0.
+fn req_point_num(p: &JsonScanner, key: &str) -> anyhow::Result<f64> {
+    Ok(p.path(&[key])
+        .ok_or_else(|| anyhow::anyhow!("missing JSON key `{key}`"))?
+        .path_num(&[])
+        .unwrap_or(0.0))
+}
+
+/// Lazy twin of [`replay`]: runs the policy straight off JSON text via
+/// [`JsonScanner`], reading only the 2–4 fields per line the policy
+/// actually needs instead of materializing an 11-field `Trace` first.
+/// On well-formed trace JSON it is exactly equivalent to
+/// `replay(&Trace::from_scanner(..)?, ..)` — pinned by the differential
+/// in `tests/proptests.rs` and the unit test below.
+pub fn replay_scanned(
+    trace: &JsonScanner,
+    policy: &mut dyn ExitPolicy,
+    signal: Signal,
+    charge_overhead: bool,
+) -> anyhow::Result<ReplayOutcome> {
+    policy.reset();
+    let needs = policy.needs();
+    let cost = CostModel::default();
+    let mut overhead = 0usize;
+
+    let points = trace
+        .path(&["points"])
+        .ok_or_else(|| anyhow::anyhow!("missing JSON key `points`"))?;
+    let mut last = None;
+    for (i, p) in points.array_items().enumerate() {
+        let mut obs = LineObs {
+            tokens: p.req_usize("tokens")?,
+            ..Default::default()
+        };
+        if needs.eat {
+            obs.eat = match signal {
+                // `eat` is a required key in the trace schema; missing
+                // optional streams replay as NaN (no-exit), like `replay`.
+                Signal::MainPrefixed => Some(req_point_num(&p, "eat")?),
+                Signal::MainPlain => p.path_num(&["eat_plain"]),
+                Signal::Proxy => p.path_num(&["eat_proxy"]),
+                Signal::Newline => p.path_num(&["eat_newline"]),
+            };
+            if obs.eat.is_none() {
+                obs.eat = Some(f64::NAN);
+            }
+            overhead += cost.eat_eval();
+        }
+        if needs.rollouts_k > 0 {
+            obs.unique_answers =
+                Some(p.req_usize("unique_answers")?.min(needs.rollouts_k));
+            if (i + 1) % needs.rollout_every == 0 {
+                overhead += cost.ua_eval(needs.rollouts_k);
+            }
+        }
+        if needs.confidence {
+            obs.confidence = p.path_num(&["confidence"]);
+            overhead += cost.confidence_eval();
+        }
+        if let ExitDecision::Exit(reason) = policy.observe(&obs) {
+            return Ok(ReplayOutcome {
+                exit_line: Some(p.req_usize("line")?),
+                exit_reason: reason,
+                reasoning_tokens: obs.tokens,
+                overhead_tokens: if charge_overhead { overhead } else { 0 },
+                accuracy: req_point_num(&p, "pass1_avgk")?,
+                accuracy_exact: req_point_num(&p, "p_correct")?,
+            });
+        }
+        last = Some(p);
+    }
+
+    let (accuracy, accuracy_exact) = match &last {
+        Some(p) => (
+            req_point_num(p, "pass1_avgk")?,
+            req_point_num(p, "p_correct")?,
+        ),
+        None => (0.0, 0.0),
+    };
+    Ok(ReplayOutcome {
+        exit_line: None,
+        exit_reason: if trace.path_bool(&["self_terminated"]).unwrap_or(false)
+        {
+            ExitReason::SelfTerminated
+        } else {
+            ExitReason::TokenBudget
+        },
+        // `from_json` drops non-numeric reasoning tokens, so count only
+        // the items that would survive it.
+        reasoning_tokens: trace
+            .path(&["reasoning_tokens"])
+            .map(|r| {
+                r.array_items()
+                    .filter(|t| t.path_num(&[]).is_some())
+                    .count()
+            })
+            .unwrap_or(0),
+        overhead_tokens: if charge_overhead { overhead } else { 0 },
+        accuracy,
+        accuracy_exact,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +341,50 @@ mod tests {
         let mut p = EatPolicy::new(0.2, 1e-2, 10_000);
         let out = replay(&t, &mut p, Signal::Proxy, false);
         assert!(out.exit_line.is_some());
+    }
+
+    #[test]
+    fn lazy_replay_matches_tree_replay() {
+        let t = synthetic_trace(30, 5);
+        let text = t.to_json().to_string();
+        let sc = JsonScanner::new(&text);
+        let make = |which: usize| -> Box<dyn crate::exit::ExitPolicy> {
+            match which {
+                0 => Box::new(EatPolicy::new(0.2, 0.05, 10_000)),
+                1 => Box::new(TokenBudgetPolicy::new(9)),
+                _ => Box::new(UniqueAnswersPolicy::new(32, 1, 10_000)),
+            }
+        };
+        for which in 0..3 {
+            for signal in [
+                Signal::MainPrefixed,
+                Signal::MainPlain,
+                Signal::Proxy,
+                Signal::Newline,
+            ] {
+                for charge in [false, true] {
+                    let tree = replay(&t, &mut *make(which), signal, charge);
+                    let lazy =
+                        replay_scanned(&sc, &mut *make(which), signal, charge)
+                            .unwrap();
+                    assert_eq!(lazy.exit_line, tree.exit_line);
+                    assert_eq!(lazy.exit_reason, tree.exit_reason);
+                    assert_eq!(
+                        lazy.reasoning_tokens,
+                        tree.reasoning_tokens
+                    );
+                    assert_eq!(lazy.overhead_tokens, tree.overhead_tokens);
+                    assert_eq!(
+                        lazy.accuracy.to_bits(),
+                        tree.accuracy.to_bits()
+                    );
+                    assert_eq!(
+                        lazy.accuracy_exact.to_bits(),
+                        tree.accuracy_exact.to_bits()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

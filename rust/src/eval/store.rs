@@ -35,16 +35,20 @@ impl TraceSet {
     pub fn load(path: &Path) -> Result<TraceSet> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {} (run `repro trace` first)", path.display()))?;
-        let js = json::parse(&text)?;
-        let traces = js
-            .req("traces")?
-            .as_arr()
-            .context("traces must be an array")?
-            .iter()
-            .map(Trace::from_json)
+        // Lazy scan (DESIGN.md §3.8): decode straight from the text
+        // without building a `Json` tree. `save` still writes through the
+        // tree, which doubles as the differential oracle in tests.
+        let sc = json::JsonScanner::new(&text);
+        let traces_sc = sc
+            .path(&["traces"])
+            .context("missing JSON key `traces`")?;
+        anyhow::ensure!(traces_sc.is_array(), "traces must be an array");
+        let traces = traces_sc
+            .array_items()
+            .map(|t| Trace::from_scanner(&t))
             .collect::<Result<Vec<_>>>()?;
         Ok(TraceSet {
-            dataset: js.req_str("dataset")?.to_string(),
+            dataset: sc.req_str("dataset")?.into_owned(),
             traces,
         })
     }
@@ -111,6 +115,14 @@ mod tests {
         assert_eq!(back.dataset, "unit");
         assert_eq!(back.traces.len(), 2);
         assert_eq!(back.traces[1].question_id, 1);
+    }
+
+    #[test]
+    fn load_rejects_non_array_traces() {
+        let path = std::env::temp_dir().join("eat_traceset_badshape.json");
+        std::fs::write(&path, "{\"dataset\":\"x\",\"traces\":3}").unwrap();
+        let err = TraceSet::load(&path).unwrap_err();
+        assert!(err.to_string().contains("array"), "{err}");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! deterministic in-process reference backend, so the whole CLI works in
 //! a clean checkout.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use eat_serve::blackbox::{
     BlackboxBatcher, BlackboxConfig, LatencyModel, ProxyCostModel, CHUNK_MONITOR_ALPHA,
@@ -57,6 +57,9 @@ COMMANDS
             [--no-confidence] [--seed K]
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
   blackbox  [--questions N] [--chunk C] [--delta X]
+  bench-diff BASE NEW [--tol X]  compare BENCH_*.json snapshots (two
+            files, or two dirs matched by file name); exits non-zero
+            when a bench's mean slows past 1+tol (default tol 1.0)
 
 SERVE FLAGS (all modes)
 {shared}
@@ -341,6 +344,12 @@ fn cmd_serve_single(args: &Args, serve: &ServeArgs) -> Result<()> {
         mc.pages_copied.get(),
         mc.prefills.get()
     );
+    println!(
+        "tick scratch    ticks {}  allocs {}  allocs/tick {:.4}",
+        mc.sched_ticks.get(),
+        mc.sched_allocs.get(),
+        mc.sched_allocs.get() as f64 / mc.sched_ticks.get().max(1) as f64
+    );
     if let Some(path) = &serve.metrics_json {
         std::fs::write(path, batcher.metrics.to_json().to_string())?;
         println!("metrics json    {path}");
@@ -520,6 +529,75 @@ fn cmd_blackbox(args: &Args) -> Result<()> {
     figures::fig5a(&ctx, &rt, args.usize_or("questions", 8))
 }
 
+/// The CI bench regression gate: diff two snapshot files, or every
+/// `BENCH_*.json` the two directories share. Added/removed benches are
+/// reported but never fail the gate (benches come and go); only a mean
+/// slowdown past `1 + tol` does.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let (Some(base), Some(new)) = (args.positional(1), args.positional(2)) else {
+        usage();
+    };
+    let tol = args.f64_or("tol", 1.0);
+    let pairs: Vec<(String, std::path::PathBuf, std::path::PathBuf)> =
+        if std::path::Path::new(base).is_dir() {
+            let mut names: Vec<String> = std::fs::read_dir(base)?
+                .filter_map(|e| e.ok()?.file_name().into_string().ok())
+                .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .collect();
+            names.sort();
+            names
+                .into_iter()
+                .map(|n| {
+                    let b = std::path::Path::new(base).join(&n);
+                    let w = std::path::Path::new(new).join(&n);
+                    (n, b, w)
+                })
+                .collect()
+        } else {
+            vec![(base.to_string(), base.into(), new.into())]
+        };
+
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for (name, base_path, new_path) in pairs {
+        if !new_path.exists() {
+            println!("{name}: only in base (skipped)");
+            continue;
+        }
+        let base_text = std::fs::read_to_string(&base_path)
+            .with_context(|| format!("reading {}", base_path.display()))?;
+        let new_text = std::fs::read_to_string(&new_path)
+            .with_context(|| format!("reading {}", new_path.display()))?;
+        let diff = eat_serve::util::bench::diff_snapshots(&base_text, &new_text, tol)
+            .with_context(|| format!("diffing {name}"))?;
+        for d in &diff.deltas {
+            let flag = if d.regressed { "  <-- REGRESSED" } else { "" };
+            println!(
+                "{name} {:<44} {:>12.0} ns -> {:>12.0} ns  {:>+7.1}%{flag}",
+                d.name,
+                d.base_mean_ns,
+                d.new_mean_ns,
+                d.ratio * 100.0
+            );
+            compared += 1;
+        }
+        for n in &diff.only_base {
+            println!("{name} {n}: removed (not failed)");
+        }
+        for n in &diff.only_new {
+            println!("{name} {n}: added (not failed)");
+        }
+        regressions += diff.regressions();
+    }
+    println!("\n{compared} rows compared, {regressions} regression(s) at tol {tol}");
+    anyhow::ensure!(
+        regressions == 0,
+        "{regressions} bench regression(s) past {:.0}% slower",
+        tol * 100.0
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional(0) {
@@ -528,6 +606,7 @@ fn main() -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("figures") => cmd_figures(&args),
         Some("blackbox") => cmd_blackbox(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         _ => usage(),
     }
 }

@@ -14,6 +14,14 @@ pub struct EmaVar {
     mean: f64,
     var: f64,
     n: u64,
+    /// Running bias factor (1-a)^n, maintained by one multiply per
+    /// observation instead of a `powi(n)` in every `debiased_var` call
+    /// (DESIGN.md §3.8). Branchless — no exponent clamp needed: the
+    /// product underflows to exactly 0.0 (denominator 1) long before `n`
+    /// could trouble any integer cast. Sequential rounding can differ
+    /// from `powi`'s repeated squaring by a few ULPs; the tolerance test
+    /// `running_power_tracks_powi_denominator` bounds the drift.
+    bias_pow: f64,
 }
 
 impl EmaVar {
@@ -27,6 +35,7 @@ impl EmaVar {
             mean: 0.0,
             var: 0.0,
             n: 0,
+            bias_pow: 1.0,
         }
     }
 
@@ -34,6 +43,7 @@ impl EmaVar {
     pub fn update(&mut self, x: f64) -> f64 {
         let a = self.alpha;
         self.n += 1;
+        self.bias_pow *= 1.0 - a;
         self.mean = (1.0 - a) * self.mean + a * x;
         let d = x - self.mean;
         self.var = (1.0 - a) * self.var + a * d * d;
@@ -58,23 +68,27 @@ impl EmaVar {
     }
 
     /// V'_n = V_n / (1 - (1-a)^n); +inf before any observation so that a
-    /// fresh monitor can never trigger an exit.
+    /// fresh monitor can never trigger an exit. The denominator reads the
+    /// running `bias_pow` product — no `powi`, no exponent clamp.
     pub fn debiased_var(&self) -> f64 {
         if self.n == 0 {
             return f64::INFINITY;
         }
-        self.var / debias_denom(self.alpha, self.n)
+        self.var / (1.0 - self.bias_pow)
     }
 }
 
-/// The de-bias denominator 1 - (1-a)^n with the exponent clamped to
-/// `i32::MAX`. A long-running monitor (the serving stack keeps one per
-/// stream) can push `n` past `i32::MAX`, where the old `n as i32` cast
-/// wrapped to a *negative* exponent and `(1-a)^-k` blew the denominator
-/// up (or negative) instead of converging to 1. The clamp is exact in
-/// f64: for any alpha in (0,1) the factor underflows to 0 long before
-/// the exponent approaches `i32::MAX`, so the clamped denominator is
-/// already 1.0 there.
+/// The de-bias denominator 1 - (1-a)^n via `powi` with the exponent
+/// clamped to `i32::MAX` — the pre-running-power formulation, kept as the
+/// test oracle. The clamp was a real bugfix: a long-running monitor can
+/// push `n` past `i32::MAX`, where a bare `n as i32` cast wrapped to a
+/// *negative* exponent and `(1-a)^-k` blew the denominator up (or
+/// negative) instead of converging to 1. The clamp is exact in f64: for
+/// any alpha in (0,1) the factor underflows to 0 long before the
+/// exponent approaches `i32::MAX`, so the clamped denominator is already
+/// 1.0 there. The live `bias_pow` product inherits that safety by
+/// construction (it underflows to exactly 0.0).
+#[cfg(test)]
 fn debias_denom(alpha: f64, n: u64) -> f64 {
     debug_assert!(n > 0, "de-bias is undefined before the first observation");
     let e = i32::try_from(n).unwrap_or(i32::MAX);
@@ -169,6 +183,26 @@ mod tests {
             assert!(d > 0.0 && d <= 1.0, "denominator out of (0,1] at n={n}: {d}");
             assert!(d >= prev, "denominator must not decrease in n");
             prev = d;
+        }
+    }
+
+    #[test]
+    fn running_power_tracks_powi_denominator() {
+        // one multiply per update replaces powi(n); sequential rounding
+        // differs from repeated squaring by at most a few ULPs and both
+        // forms converge to exactly 1.0 once the bias factor underflows
+        for alpha in [0.05, 0.2, 0.5, 0.9] {
+            let mut m = EmaVar::new(alpha);
+            for n in 1..=5000u64 {
+                m.update(1.0 + (n % 7) as f64);
+                let live = 1.0 - m.bias_pow;
+                let oracle = debias_denom(alpha, n);
+                assert!(
+                    (live - oracle).abs() <= 1e-12 * oracle,
+                    "alpha={alpha} n={n}: live={live} oracle={oracle}"
+                );
+            }
+            assert_eq!(1.0 - m.bias_pow, 1.0, "alpha={alpha}");
         }
     }
 

@@ -2,7 +2,7 @@
 //! replay early-exit decisions offline (the paper's "simulated early
 //! exiting", App. H) and to draw the figures.
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonScanner};
 
 /// One monitored reasoning line boundary.
 #[derive(Debug, Clone)]
@@ -148,6 +148,113 @@ impl Trace {
             points,
         })
     }
+
+    /// Lazy-scan twin of [`Trace::from_json`]: decodes a trace straight
+    /// from JSON text in one forward pass per object, never materializing
+    /// a `Json` tree (DESIGN.md §3.8). Field semantics match `from_json`
+    /// exactly — pinned by `scanner_load_matches_tree_load` here and the
+    /// differential proptest in `tests/proptests.rs`.
+    pub fn from_scanner(v: &JsonScanner) -> anyhow::Result<Trace> {
+        use anyhow::Context;
+        let mut question_id = None;
+        let mut n_ops = None;
+        let mut answer = None;
+        let mut prompt_tokens = None;
+        let mut self_terminated = false;
+        let mut reasoning_tokens = Vec::new();
+        let mut points = None;
+        for (key, val) in v.entries() {
+            match key.as_ref() {
+                "question_id" => question_id = val.path_usize(&[]),
+                "n_ops" => n_ops = val.path_usize(&[]),
+                "answer" => answer = val.path_num(&[]).map(|a| a as u32),
+                "prompt_tokens" => prompt_tokens = val.path_usize(&[]),
+                "self_terminated" => {
+                    self_terminated = val.path_bool(&[]).unwrap_or(false)
+                }
+                "reasoning_tokens" => {
+                    reasoning_tokens = val
+                        .array_items()
+                        .filter_map(|t| t.path_num(&[]).map(|x| x as u32))
+                        .collect()
+                }
+                "points" => {
+                    points = Some(
+                        val.array_items()
+                            .map(|p| LinePoint::from_scanner(&p))
+                            .collect::<anyhow::Result<Vec<_>>>()?,
+                    )
+                }
+                _ => {}
+            }
+        }
+        Ok(Trace {
+            question_id: question_id
+                .context("JSON key `question_id` not a usize")?,
+            n_ops: n_ops.context("JSON key `n_ops` not a usize")?,
+            answer,
+            prompt_tokens: prompt_tokens
+                .context("JSON key `prompt_tokens` not a usize")?,
+            self_terminated,
+            reasoning_tokens,
+            points: points.context("missing JSON key `points`")?,
+        })
+    }
+}
+
+impl LinePoint {
+    fn from_scanner(p: &JsonScanner) -> anyhow::Result<LinePoint> {
+        use anyhow::Context;
+        let mut line = None;
+        let mut tokens = None;
+        // `Some(..)` records key presence: `from_json` requires the key
+        // but decays a non-numeric value to 0.0.
+        let mut eat = None;
+        let mut eat_proxy = None;
+        let mut eat_plain = None;
+        let mut eat_newline = None;
+        let mut vhat = None;
+        let mut p_correct = None;
+        let mut pass1_avgk = None;
+        let mut unique_answers = None;
+        let mut confidence = None;
+        for (key, val) in p.entries() {
+            match key.as_ref() {
+                "line" => line = val.path_usize(&[]),
+                "tokens" => tokens = val.path_usize(&[]),
+                "eat" => eat = Some(val.path_num(&[]).unwrap_or(0.0)),
+                "eat_proxy" => eat_proxy = val.path_num(&[]),
+                "eat_plain" => eat_plain = val.path_num(&[]),
+                "eat_newline" => eat_newline = val.path_num(&[]),
+                "vhat" => vhat = val.path_num(&[]),
+                "p_correct" => {
+                    p_correct = Some(val.path_num(&[]).unwrap_or(0.0))
+                }
+                "pass1_avgk" => {
+                    pass1_avgk = Some(val.path_num(&[]).unwrap_or(0.0))
+                }
+                "unique_answers" => unique_answers = val.path_usize(&[]),
+                "confidence" => confidence = val.path_num(&[]),
+                _ => {}
+            }
+        }
+        let vhat = vhat.unwrap_or(-1.0);
+        Ok(LinePoint {
+            line: line.context("JSON key `line` not a usize")?,
+            tokens: tokens.context("JSON key `tokens` not a usize")?,
+            eat: eat.context("missing JSON key `eat`")?,
+            eat_proxy,
+            eat_plain,
+            eat_newline,
+            vhat: if vhat < 0.0 { f64::INFINITY } else { vhat },
+            p_correct: p_correct.context("missing JSON key `p_correct`")?,
+            pass1_avgk: pass1_avgk
+                .context("missing JSON key `pass1_avgk`")?,
+            unique_answers: unique_answers
+                .context("JSON key `unique_answers` not a usize")?,
+            confidence,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +299,54 @@ mod tests {
         assert_eq!(p.eat_proxy, Some(3.0));
         assert_eq!(p.eat_plain, None);
         assert_eq!(p.unique_answers, 21);
+    }
+
+    #[test]
+    fn scanner_load_matches_tree_load() {
+        let mut t = sample_trace();
+        t.points.push(LinePoint {
+            line: 2,
+            tokens: 6,
+            eat: 0.125,
+            eat_proxy: None,
+            eat_plain: Some(-0.5),
+            eat_newline: None,
+            vhat: 0.25,
+            p_correct: 0.5,
+            pass1_avgk: 0.75,
+            unique_answers: 3,
+            confidence: None,
+        });
+        let text = t.to_json().to_string();
+        let tree = Trace::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        let scan = Trace::from_scanner(&JsonScanner::new(&text)).unwrap();
+        assert_eq!(scan.question_id, tree.question_id);
+        assert_eq!(scan.n_ops, tree.n_ops);
+        assert_eq!(scan.answer, tree.answer);
+        assert_eq!(scan.prompt_tokens, tree.prompt_tokens);
+        assert_eq!(scan.self_terminated, tree.self_terminated);
+        assert_eq!(scan.reasoning_tokens, tree.reasoning_tokens);
+        assert_eq!(scan.points.len(), tree.points.len());
+        for (a, b) in scan.points.iter().zip(tree.points.iter()) {
+            assert_eq!(a.line, b.line);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.eat.to_bits(), b.eat.to_bits());
+            assert_eq!(a.eat_proxy, b.eat_proxy);
+            assert_eq!(a.eat_plain, b.eat_plain);
+            assert_eq!(a.eat_newline, b.eat_newline);
+            assert_eq!(a.vhat.to_bits(), b.vhat.to_bits());
+            assert_eq!(a.p_correct.to_bits(), b.p_correct.to_bits());
+            assert_eq!(a.pass1_avgk.to_bits(), b.pass1_avgk.to_bits());
+            assert_eq!(a.unique_answers, b.unique_answers);
+            assert_eq!(a.confidence, b.confidence);
+        }
+    }
+
+    #[test]
+    fn scanner_load_requires_points() {
+        let err = Trace::from_scanner(&JsonScanner::new("{\"question_id\":1}"))
+            .unwrap_err();
+        assert!(err.to_string().contains("points"), "{err}");
     }
 
     #[test]

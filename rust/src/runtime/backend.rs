@@ -50,6 +50,14 @@ pub struct RuntimeCounters {
     /// Page references added by forks (refcount bumps instead of data
     /// copies).
     pub pages_shared: Cell<u64>,
+    /// Scheduler ticks driven through `Batcher::tick` on this backend.
+    pub sched_ticks: Cell<u64>,
+    /// Heap allocations performed by the tick hot loop — scratch-vector
+    /// capacity growth events. The batcher preallocates its per-tick work
+    /// lists to the slot count, so this stays at ~0 after warmup
+    /// (`allocs_per_tick` in BENCH_scheduler.json; asserted in
+    /// scheduler_sim).
+    pub sched_allocs: Cell<u64>,
 }
 
 impl RuntimeCounters {

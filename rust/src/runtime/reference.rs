@@ -150,6 +150,9 @@ pub struct RefBackend {
     /// Reusable token gather buffer: probes and decodes read the page
     /// table through here without allocating or touching the pool.
     scratch: RefCell<Vec<u32>>,
+    /// Reusable f64 exp buffer for the fused entropy kernel, so a probe
+    /// performs no per-call allocation beyond its logits.
+    entropy_scratch: RefCell<Vec<f64>>,
     counters: RuntimeCounters,
 }
 
@@ -184,14 +187,33 @@ fn peaked(n: usize, idx: usize, margin: f32) -> Vec<f32> {
 }
 
 /// Shannon entropy (nats, temperature 1) of softmax(logits), computed in
-/// f64 the way the Pallas entropy kernel does.
-fn entropy(logits: &[f32]) -> f32 {
+/// f64 with the exact accumulation order of the Pallas entropy kernel:
+/// max reduction, then one fused exp+sum sweep (exps staged into
+/// `scratch`), then the `-p·ln(p)` reduction over the staged exps.
+///
+/// The fusion folds the old separate `exps.iter().sum()` pass into the
+/// exp sweep — a sequential left fold either way, so the result is
+/// bit-identical to the unfused three-pass form (pinned by
+/// `fused_entropy_bit_matches_unfused`). Deeper fusion (online max
+/// renormalization à la one-pass softmax) would change the f64 op order
+/// and break that equality, so it is deliberately NOT done. `scratch` is
+/// reused across calls, making the probe hot path allocation-free at
+/// steady state.
+fn entropy_into(logits: &[f32], scratch: &mut Vec<f64>) -> f32 {
     let mx = logits.iter().cloned().fold(f32::MIN, f32::max) as f64;
-    let exps: Vec<f64> = logits.iter().map(|&z| (z as f64 - mx).exp()).collect();
-    let zsum: f64 = exps.iter().sum();
+    scratch.clear();
+    scratch.reserve(logits.len());
+    let mut zsum = 0.0f64;
+    for &z in logits {
+        let e = (z as f64 - mx).exp();
+        scratch.push(e);
+        zsum += e;
+    }
     let mut h = 0.0f64;
-    for &e in &exps {
+    for &e in scratch.iter() {
         let p = e / zsum;
+        // guard, not branchless: p == 0 (exp underflow) would contribute
+        // 0 · ln 0 = NaN
         if p > 0.0 {
             h -= p * p.ln();
         }
@@ -239,6 +261,7 @@ impl RefBackend {
             pool: page_size.map(|_| Rc::new(RefCell::new(PagePool::new_growable(ps)))),
             page_size: ps,
             scratch: RefCell::new(Vec::new()),
+            entropy_scratch: RefCell::new(Vec::new()),
             counters: RuntimeCounters::default(),
         }
     }
@@ -564,7 +587,8 @@ impl Backend for RefBackend {
         // page copy, no cache mutation — the paper's "free" probe
         let logits = self.logits_for(c, suffix);
         RuntimeCounters::bump(&self.counters.probes);
-        Ok((entropy(&logits), logits))
+        let h = entropy_into(&logits, &mut self.entropy_scratch.borrow_mut());
+        Ok((h, logits))
     }
 
     fn fork(&self, cache: &BackendCache) -> Result<BackendCache> {
@@ -826,5 +850,55 @@ mod tests {
         }
         assert_eq!(b.counters().batch_decodes.get(), 1);
         assert_eq!(b.counters().batch_lanes.get(), 3);
+    }
+
+    #[test]
+    fn fused_entropy_bit_matches_unfused() {
+        // the pre-fusion three-pass formulation (allocated per call)
+        fn unfused(logits: &[f32]) -> f32 {
+            let mx = logits.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let exps: Vec<f64> =
+                logits.iter().map(|&z| (z as f64 - mx).exp()).collect();
+            let zsum: f64 = exps.iter().sum();
+            let mut h = 0.0f64;
+            for &e in &exps {
+                let p = e / zsum;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            h as f32
+        }
+        let mut scratch = Vec::new();
+        for case in 0..200u64 {
+            let n = 1 + (mix(case, 17) % 96) as usize;
+            let logits: Vec<f32> = (0..n)
+                .map(|i| (unit(mix(case, i as u64)) - 0.5) * 40.0)
+                .collect();
+            assert_eq!(
+                entropy_into(&logits, &mut scratch).to_bits(),
+                unfused(&logits).to_bits(),
+                "case {case}"
+            );
+        }
+        // extreme spread drives exp to underflow: the p > 0 guard
+        let logits = vec![0.0f32, -800.0, 30.0, -1000.0];
+        assert_eq!(
+            entropy_into(&logits, &mut scratch).to_bits(),
+            unfused(&logits).to_bits()
+        );
+    }
+
+    #[test]
+    fn entropy_scratch_capacity_is_reused() {
+        let mut scratch = Vec::new();
+        let logits = vec![0.5f32; 64];
+        entropy_into(&logits, &mut scratch);
+        let cap = scratch.capacity();
+        assert!(cap >= 64);
+        for _ in 0..10 {
+            entropy_into(&logits, &mut scratch);
+        }
+        assert_eq!(scratch.capacity(), cap, "entropy scratch reallocated");
     }
 }

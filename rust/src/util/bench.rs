@@ -8,7 +8,9 @@
 
 use std::time::{Duration, Instant};
 
-use super::json::Json;
+use anyhow::Context;
+
+use super::json::{Json, JsonScanner};
 use super::stats::percentile;
 
 pub struct BenchResult {
@@ -53,16 +55,101 @@ pub fn snapshot_json(bench: &str, results: &[BenchResult], extra: Vec<(&str, Jso
     Json::obj(pairs)
 }
 
-/// Write `BENCH_<bench>.json` in the working directory (the repo root
-/// under `cargo bench`) and return the path.
+/// Snapshot directory: `$BENCH_DIR` when set (CI collects per-run
+/// artifact dirs), else the workspace root — so every bench's
+/// `BENCH_<name>.json` lands in one place no matter what working
+/// directory the bench was invoked from.
+pub fn snapshot_dir() -> std::path::PathBuf {
+    match std::env::var_os("BENCH_DIR") {
+        Some(d) if !d.is_empty() => std::path::PathBuf::from(d),
+        _ => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+    }
+}
+
+/// Write `BENCH_<bench>.json` into [`snapshot_dir`] and return the path.
 pub fn write_snapshot(
     bench: &str,
     results: &[BenchResult],
     extra: Vec<(&str, Json)>,
 ) -> anyhow::Result<String> {
-    let path = format!("BENCH_{bench}.json");
-    std::fs::write(&path, snapshot_json(bench, results, extra).to_string())?;
-    Ok(path)
+    let dir = snapshot_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, snapshot_json(bench, results, extra).to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path.display().to_string())
+}
+
+/// One row-level comparison out of [`diff_snapshots`].
+#[derive(Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_mean_ns: f64,
+    pub new_mean_ns: f64,
+    /// `new/base - 1`: positive = slower.
+    pub ratio: f64,
+    /// Slowed down past the tolerance.
+    pub regressed: bool,
+}
+
+/// Row sets of two snapshots, matched by row name.
+#[derive(Debug, Default)]
+pub struct SnapshotDiff {
+    /// Rows present on both sides, in base order.
+    pub deltas: Vec<BenchDelta>,
+    /// Row names only in the base snapshot (bench removed).
+    pub only_base: Vec<String>,
+    /// Row names only in the new snapshot (bench added).
+    pub only_new: Vec<String>,
+}
+
+impl SnapshotDiff {
+    pub fn regressions(&self) -> usize {
+        self.deltas.iter().filter(|d| d.regressed).count()
+    }
+}
+
+/// Compare two `BENCH_*.json` snapshot documents (the CI regression
+/// gate). Rows are matched by name; a row regresses when its mean slows
+/// down by more than `tol` (`tol = 1.0` → flag at > 2x slower — micro
+/// benches are noisy, the gate is for order-of-magnitude cliffs). Rows
+/// present on only one side are reported, never failed. Reads go through
+/// [`JsonScanner`], so the CI diff path exercises the lazy layer.
+pub fn diff_snapshots(base: &str, new: &str, tol: f64) -> anyhow::Result<SnapshotDiff> {
+    let base_rows = snapshot_rows(base).context("base snapshot")?;
+    let new_rows = snapshot_rows(new).context("new snapshot")?;
+    let mut diff = SnapshotDiff::default();
+    for (name, base_mean) in &base_rows {
+        match new_rows.iter().find(|(n, _)| n == name) {
+            Some((_, new_mean)) => {
+                let ratio = new_mean / base_mean - 1.0;
+                diff.deltas.push(BenchDelta {
+                    name: name.clone(),
+                    base_mean_ns: *base_mean,
+                    new_mean_ns: *new_mean,
+                    ratio,
+                    regressed: ratio > tol,
+                });
+            }
+            None => diff.only_base.push(name.clone()),
+        }
+    }
+    for (name, _) in &new_rows {
+        if !base_rows.iter().any(|(n, _)| n == name) {
+            diff.only_new.push(name.clone());
+        }
+    }
+    Ok(diff)
+}
+
+fn snapshot_rows(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let sc = JsonScanner::new(text);
+    let rows = sc
+        .path(&["results"])
+        .context("snapshot carries no `results` array")?;
+    rows.array_items()
+        .map(|r| Ok((r.req_str("name")?.into_owned(), r.req_num("mean_ns")?)))
+        .collect()
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -77,10 +164,21 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Per-call sampling budget: 2 s, or `BENCH_BUDGET_MS` when set (the CI
+/// bench-smoke job shrinks it so the snapshots stay cheap to produce —
+/// fewer samples, same schema).
+pub fn default_budget() -> Duration {
+    std::env::var("BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_secs(2))
+}
+
 /// Time `f` with `warmup` throwaway calls, then sample wall-clock per call
-/// until `budget` elapses (at least `min_iters` samples).
+/// until the [`default_budget`] elapses (at least `min_iters` samples).
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    bench_with(name, Duration::from_secs(2), 3, 10, &mut f)
+    bench_with(name, default_budget(), 3, 10, &mut f)
 }
 
 pub fn bench_with<F: FnMut()>(
@@ -150,6 +248,47 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].get("name").as_str(), Some("x/y"));
         assert_eq!(rows[0].get("iters").as_usize(), Some(3));
+    }
+
+    fn snap(rows: &[(&str, f64)]) -> String {
+        let results: Vec<BenchResult> = rows
+            .iter()
+            .map(|(n, m)| BenchResult {
+                name: n.to_string(),
+                iters: 10,
+                mean_ns: *m,
+                p50_ns: *m,
+                p95_ns: *m,
+            })
+            .collect();
+        snapshot_json("t", &results, vec![]).to_string()
+    }
+
+    #[test]
+    fn diff_flags_only_regressions_past_tolerance() {
+        let base = snap(&[("a", 100.0), ("b", 100.0), ("gone", 5.0)]);
+        let new = snap(&[("a", 150.0), ("b", 250.0), ("fresh", 5.0)]);
+        let d = diff_snapshots(&base, &new, 1.0).unwrap();
+        assert_eq!(d.deltas.len(), 2);
+        let a = &d.deltas[0];
+        assert_eq!(a.name, "a");
+        assert!(!a.regressed, "1.5x is within tol=1.0");
+        assert!((a.ratio - 0.5).abs() < 1e-12);
+        let b = &d.deltas[1];
+        assert!(b.regressed, "2.5x must regress at tol=1.0");
+        assert_eq!(d.regressions(), 1);
+        assert_eq!(d.only_base, vec!["gone".to_string()]);
+        assert_eq!(d.only_new, vec!["fresh".to_string()]);
+        // speedups never regress, at any tolerance
+        let faster = snap(&[("a", 10.0), ("b", 1.0), ("gone", 5.0)]);
+        assert_eq!(diff_snapshots(&base, &faster, 0.0).unwrap().regressions(), 0);
+    }
+
+    #[test]
+    fn diff_rejects_malformed_snapshots() {
+        assert!(diff_snapshots("{}", "{}", 1.0).is_err());
+        let ok = snap(&[("a", 1.0)]);
+        assert!(diff_snapshots(&ok, "{\"results\":[{}]}", 1.0).is_err());
     }
 
     #[test]

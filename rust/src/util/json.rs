@@ -1,10 +1,24 @@
-//! Minimal JSON parser/writer substrate.
+//! Minimal JSON parser/writer substrate + a lazy scanning layer.
 //!
 //! The offline registry has no `serde_json`, so the repo carries its own
 //! small, well-tested JSON implementation. It supports the full JSON value
 //! model (objects, arrays, strings with escapes, numbers, booleans, null)
 //! which is all the artifact manifests, configs, trace stores and result
 //! CSV/JSON writers need.
+//!
+//! Two read paths share one lexer (DESIGN.md §3.8):
+//!
+//!  * [`parse`] builds a full [`Json`] tree — the writer substrate and
+//!    the differential oracle;
+//!  * [`JsonScanner`] finds values by scanning bytes, zero-copy and
+//!    allocation-free until a value is actually extracted — the hot
+//!    path for trace replay, store loads and bench-snapshot diffing,
+//!    where a reader wants three fields out of a megabyte document.
+//!
+//! Both decode strings through the same `scan_string_body` /
+//! `unescape_body` pair, so escape semantics cannot drift; a seeded
+//! differential property test (`tests/proptests.rs`) additionally pins
+//! every scanner extraction byte-identical to the tree result.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -245,76 +259,15 @@ impl<'a> Parser<'a> {
 
     fn string(&mut self) -> anyhow::Result<String> {
         self.expect(b'"')?;
-        let mut out = String::new();
-        loop {
-            match self.bump()? {
-                b'"' => return Ok(out),
-                b'\\' => match self.bump()? {
-                    b'"' => out.push('"'),
-                    b'\\' => out.push('\\'),
-                    b'/' => out.push('/'),
-                    b'b' => out.push('\u{0008}'),
-                    b'f' => out.push('\u{000C}'),
-                    b'n' => out.push('\n'),
-                    b'r' => out.push('\r'),
-                    b't' => out.push('\t'),
-                    b'u' => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump()? as char;
-                            code = code * 16
-                                + c.to_digit(16).ok_or_else(|| {
-                                    anyhow::anyhow!("bad \\u escape")
-                                })?;
-                        }
-                        out.push(
-                            char::from_u32(code)
-                                .unwrap_or(char::REPLACEMENT_CHARACTER),
-                        );
-                    }
-                    c => anyhow::bail!("bad escape `\\{}`", c as char),
-                },
-                c if c < 0x20 => anyhow::bail!("control char in string"),
-                c => {
-                    // re-assemble UTF-8 multibyte sequences
-                    let start = self.pos - 1;
-                    let len = utf8_len(c);
-                    self.pos = start + len;
-                    if self.pos > self.bytes.len() {
-                        anyhow::bail!("truncated UTF-8");
-                    }
-                    out.push_str(
-                        std::str::from_utf8(&self.bytes[start..self.pos])
-                            .map_err(|_| anyhow::anyhow!("invalid UTF-8"))?,
-                    );
-                }
-            }
-        }
+        let (end, has_escape) = scan_string_body(self.bytes, self.pos)?;
+        let body = &self.bytes[self.pos..end];
+        self.pos = end + 1; // past the closing quote
+        Ok(unescape_body(body, has_escape)?.into_owned())
     }
 
     fn number(&mut self) -> anyhow::Result<Json> {
         let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.pos += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e' | b'E')) {
-            self.pos += 1;
-            if matches!(self.peek(), Some(b'+' | b'-')) {
-                self.pos += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
+        self.pos = scan_number(self.bytes, start);
         let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         Ok(Json::Num(s.parse::<f64>().map_err(|e| {
             anyhow::anyhow!("bad number `{s}`: {e}")
@@ -322,12 +275,490 @@ impl<'a> Parser<'a> {
     }
 }
 
-fn utf8_len(first: u8) -> usize {
-    match first {
-        0x00..=0x7F => 1,
-        0xC0..=0xDF => 2,
-        0xE0..=0xEF => 3,
-        _ => 4,
+// ---------------------------------------------------------------------------
+// Shared lexer pieces (tree parser + lazy scanner)
+// ---------------------------------------------------------------------------
+
+/// Find the end of a string body starting just past the opening quote.
+/// Returns (index of the closing quote, whether any `\` escape occurred).
+/// Input comes from a `&str`, so multibyte UTF-8 runs are walked
+/// byte-wise (no continuation byte can alias `"` or `\`).
+fn scan_string_body(bytes: &[u8], start: usize) -> anyhow::Result<(usize, bool)> {
+    let mut pos = start;
+    let mut has_escape = false;
+    while let Some(&b) = bytes.get(pos) {
+        match b {
+            b'"' => return Ok((pos, has_escape)),
+            b'\\' => {
+                has_escape = true;
+                pos += 2; // escape head consumed; \u digits are plain bytes
+            }
+            c if c < 0x20 => anyhow::bail!("control char in string"),
+            _ => pos += 1,
+        }
+    }
+    anyhow::bail!("unexpected end of JSON")
+}
+
+/// Decode a string body (escapes intact, quotes excluded). Zero-copy
+/// when no escape occurred. Escape semantics are THE definition for both
+/// read paths: `\u` decodes through `char::from_u32` with lone
+/// surrogates mapped to U+FFFD, exactly like the original parser.
+fn unescape_body(body: &[u8], has_escape: bool) -> anyhow::Result<std::borrow::Cow<'_, str>> {
+    use std::borrow::Cow;
+    let as_str = |b: &[u8]| -> anyhow::Result<&str> {
+        std::str::from_utf8(b).map_err(|_| anyhow::anyhow!("invalid UTF-8"))
+    };
+    if !has_escape {
+        return Ok(Cow::Borrowed(as_str(body)?));
+    }
+    let mut out = String::with_capacity(body.len());
+    let mut pos = 0usize;
+    while pos < body.len() {
+        if body[pos] != b'\\' {
+            // copy the maximal escape-free run in one shot
+            let run = pos
+                + body[pos..]
+                    .iter()
+                    .position(|&b| b == b'\\')
+                    .unwrap_or(body.len() - pos);
+            out.push_str(as_str(&body[pos..run])?);
+            pos = run;
+            continue;
+        }
+        let esc = *body
+            .get(pos + 1)
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))?;
+        pos += 2;
+        match esc {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{0008}'),
+            b'f' => out.push('\u{000C}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let mut code = 0u32;
+                for _ in 0..4 {
+                    let c = *body
+                        .get(pos)
+                        .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?
+                        as char;
+                    pos += 1;
+                    code = code * 16
+                        + c.to_digit(16)
+                            .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                }
+                out.push(char::from_u32(code).unwrap_or(char::REPLACEMENT_CHARACTER));
+            }
+            c => anyhow::bail!("bad escape `\\{}`", c as char),
+        }
+    }
+    Ok(Cow::Owned(out))
+}
+
+/// Advance past a number token (sign, digits, fraction, exponent) and
+/// return the end index. Shared by both read paths so they accept the
+/// same lexical grammar; the caller validates via `str::parse::<f64>`.
+fn scan_number(bytes: &[u8], start: usize) -> usize {
+    let mut pos = start;
+    if bytes.get(pos) == Some(&b'-') {
+        pos += 1;
+    }
+    while matches!(bytes.get(pos), Some(c) if c.is_ascii_digit()) {
+        pos += 1;
+    }
+    if bytes.get(pos) == Some(&b'.') {
+        pos += 1;
+        while matches!(bytes.get(pos), Some(c) if c.is_ascii_digit()) {
+            pos += 1;
+        }
+    }
+    if matches!(bytes.get(pos), Some(b'e' | b'E')) {
+        pos += 1;
+        if matches!(bytes.get(pos), Some(b'+' | b'-')) {
+            pos += 1;
+        }
+        while matches!(bytes.get(pos), Some(c) if c.is_ascii_digit()) {
+            pos += 1;
+        }
+    }
+    pos
+}
+
+// ---------------------------------------------------------------------------
+// Lazy scanning (ADR-002 idiom: find values by scanning bytes, no tree)
+// ---------------------------------------------------------------------------
+
+/// A lazy, zero-copy view over one JSON value in a text buffer.
+///
+/// Nothing is parsed up front: `path`/`entries`/`array_items` walk the
+/// bytes with the same lexer the tree parser uses and return sub-views;
+/// only a terminal `path_str` (on an escaped string) or `path_num`
+/// allocates/converts. Partial extraction — a few fields out of a large
+/// trace store or metrics snapshot — skips whole subtrees instead of
+/// materializing them, which is where the measured `bench_json` speedup
+/// comes from.
+///
+/// Error model: malformed input yields `None` (a miss), not a parse
+/// error — the loaders convert misses into `anyhow` context. Duplicate
+/// object keys resolve to the FIRST occurrence (the writer, backed by
+/// `BTreeMap`, never emits duplicates).
+#[derive(Clone, Copy)]
+pub struct JsonScanner<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> JsonScanner<'a> {
+    pub fn new(text: &'a str) -> JsonScanner<'a> {
+        JsonScanner {
+            bytes: text.as_bytes(),
+        }
+    }
+
+    /// The exact byte slice of this view's value (whitespace trimmed,
+    /// well-formedness checked by walking it). Cheap for scalars; for
+    /// containers this walks the subtree, so hot paths prefer
+    /// `entries`/`array_items`, which never need the end up front.
+    fn trim_exact(&self) -> Option<&'a [u8]> {
+        let s = skip_ws_at(self.bytes, 0);
+        let e = skip_value(self.bytes, s)?;
+        Some(&self.bytes[s..e])
+    }
+
+    /// Raw text of the value (escapes intact, subtrees unparsed).
+    pub fn raw(&self) -> Option<&'a str> {
+        std::str::from_utf8(self.trim_exact()?).ok()
+    }
+
+    /// Descend through object keys; `&[]` returns this value itself.
+    /// Each hop short-circuits at the matching key — siblings after it
+    /// are never scanned, siblings before it are skipped, not parsed.
+    pub fn path(&self, path: &[&str]) -> Option<JsonScanner<'a>> {
+        let mut cur = *self;
+        for key in path {
+            cur = cur
+                .entries()
+                .find(|(k, _)| k.as_ref() == *key)
+                .map(|(_, v)| v)?;
+        }
+        Some(cur)
+    }
+
+    /// Iterate an object's `(key, value)` pairs in document order.
+    /// Yields nothing when the value is not an object. Key decoding is
+    /// zero-copy unless the key contains escapes.
+    pub fn entries(&self) -> Entries<'a> {
+        let s = skip_ws_at(self.bytes, 0);
+        if self.bytes.get(s) != Some(&b'{') {
+            return Entries::dead();
+        }
+        Entries {
+            bytes: self.bytes,
+            pos: s + 1,
+            expect_first: true,
+            dead: false,
+        }
+    }
+
+    /// Iterate an array's elements as sub-scanners. Yields nothing when
+    /// the value is not an array.
+    pub fn array_items(&self) -> ArrayItems<'a> {
+        let s = skip_ws_at(self.bytes, 0);
+        if self.bytes.get(s) != Some(&b'[') {
+            return ArrayItems::dead();
+        }
+        ArrayItems {
+            bytes: self.bytes,
+            pos: s + 1,
+            expect_first: true,
+            dead: false,
+        }
+    }
+
+    /// Cheap first-byte check: does this value start an array? (No walk —
+    /// loaders use it to reject wrong shapes before iterating.)
+    pub fn is_array(&self) -> bool {
+        self.bytes.get(skip_ws_at(self.bytes, 0)) == Some(&b'[')
+    }
+
+    // -- terminal extraction -----------------------------------------------
+
+    /// String value at `path`, unescaped (`Cow::Borrowed` when the text
+    /// carries no escapes).
+    pub fn path_str(&self, path: &[&str]) -> Option<std::borrow::Cow<'a, str>> {
+        let v = self.path(path)?;
+        let s = skip_ws_at(v.bytes, 0);
+        if v.bytes.get(s) != Some(&b'"') {
+            return None;
+        }
+        let (end, has_escape) = scan_string_body(v.bytes, s + 1).ok()?;
+        unescape_body(&v.bytes[s + 1..end], has_escape).ok()
+    }
+
+    /// Number value at `path` — the raw token through the same
+    /// `str::parse::<f64>` the tree parser uses, so the result is
+    /// bit-identical to `parse(...)` + `as_f64`.
+    pub fn path_num(&self, path: &[&str]) -> Option<f64> {
+        let v = self.path(path)?.trim_exact()?;
+        match v.first() {
+            Some(b'-') | Some(b'0'..=b'9') => {}
+            _ => return None,
+        }
+        std::str::from_utf8(v).ok()?.parse::<f64>().ok()
+    }
+
+    pub fn path_bool(&self, path: &[&str]) -> Option<bool> {
+        match self.path(path)?.trim_exact()? {
+            b"true" => Some(true),
+            b"false" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// `path_num` with the same integrality/sign gate as
+    /// [`Json::as_usize`].
+    pub fn path_usize(&self, path: &[&str]) -> Option<usize> {
+        let n = self.path_num(path)?;
+        if n >= 0.0 && n.fract() == 0.0 {
+            Some(n as usize)
+        } else {
+            None
+        }
+    }
+
+    /// True when `path` exists and holds literal `null`.
+    pub fn path_is_null(&self, path: &[&str]) -> bool {
+        matches!(
+            self.path(path).and_then(|v| v.trim_exact()),
+            Some(b"null")
+        )
+    }
+
+    // -- anyhow wrappers for loader code -----------------------------------
+
+    pub fn req_num(&self, key: &str) -> anyhow::Result<f64> {
+        self.path_num(&[key])
+            .ok_or_else(|| anyhow::anyhow!("missing or non-numeric JSON key `{key}`"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.path_usize(&[key])
+            .ok_or_else(|| anyhow::anyhow!("JSON key `{key}` not a usize"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<std::borrow::Cow<'a, str>> {
+        self.path_str(&[key])
+            .ok_or_else(|| anyhow::anyhow!("JSON key `{key}` not a string"))
+    }
+}
+
+pub struct Entries<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    expect_first: bool,
+    dead: bool,
+}
+
+impl<'a> Entries<'a> {
+    fn dead() -> Entries<'a> {
+        Entries {
+            bytes: &[],
+            pos: 0,
+            expect_first: false,
+            dead: true,
+        }
+    }
+}
+
+impl<'a> Iterator for Entries<'a> {
+    type Item = (std::borrow::Cow<'a, str>, JsonScanner<'a>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.dead {
+            return None;
+        }
+        self.pos = skip_ws_at(self.bytes, self.pos);
+        if self.expect_first {
+            self.expect_first = false;
+            if self.bytes.get(self.pos) == Some(&b'}') {
+                self.dead = true;
+                return None;
+            }
+        } else {
+            match self.bytes.get(self.pos) {
+                Some(b',') => self.pos = skip_ws_at(self.bytes, self.pos + 1),
+                _ => {
+                    // `}` or malformed: either way the iteration is over
+                    self.dead = true;
+                    return None;
+                }
+            }
+        }
+        // key string
+        if self.bytes.get(self.pos) != Some(&b'"') {
+            self.dead = true;
+            return None;
+        }
+        let (kend, kesc) = match scan_string_body(self.bytes, self.pos + 1) {
+            Ok(r) => r,
+            Err(_) => {
+                self.dead = true;
+                return None;
+            }
+        };
+        let key = match unescape_body(&self.bytes[self.pos + 1..kend], kesc) {
+            Ok(k) => k,
+            Err(_) => {
+                self.dead = true;
+                return None;
+            }
+        };
+        self.pos = skip_ws_at(self.bytes, kend + 1);
+        if self.bytes.get(self.pos) != Some(&b':') {
+            self.dead = true;
+            return None;
+        }
+        let vstart = skip_ws_at(self.bytes, self.pos + 1);
+        let vend = match skip_value(self.bytes, vstart) {
+            Some(e) => e,
+            None => {
+                self.dead = true;
+                return None;
+            }
+        };
+        self.pos = vend;
+        Some((
+            key,
+            JsonScanner {
+                bytes: &self.bytes[vstart..vend],
+            },
+        ))
+    }
+}
+
+pub struct ArrayItems<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    expect_first: bool,
+    dead: bool,
+}
+
+impl<'a> ArrayItems<'a> {
+    fn dead() -> ArrayItems<'a> {
+        ArrayItems {
+            bytes: &[],
+            pos: 0,
+            expect_first: false,
+            dead: true,
+        }
+    }
+}
+
+impl<'a> Iterator for ArrayItems<'a> {
+    type Item = JsonScanner<'a>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.dead {
+            return None;
+        }
+        self.pos = skip_ws_at(self.bytes, self.pos);
+        if self.expect_first {
+            self.expect_first = false;
+            if self.bytes.get(self.pos) == Some(&b']') {
+                self.dead = true;
+                return None;
+            }
+        } else {
+            match self.bytes.get(self.pos) {
+                Some(b',') => self.pos = skip_ws_at(self.bytes, self.pos + 1),
+                _ => {
+                    self.dead = true;
+                    return None;
+                }
+            }
+        }
+        let vstart = self.pos;
+        let vend = match skip_value(self.bytes, vstart) {
+            Some(e) => e,
+            None => {
+                self.dead = true;
+                return None;
+            }
+        };
+        self.pos = vend;
+        Some(JsonScanner {
+            bytes: &self.bytes[vstart..vend],
+        })
+    }
+}
+
+fn skip_ws_at(bytes: &[u8], mut pos: usize) -> usize {
+    while matches!(bytes.get(pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+        pos += 1;
+    }
+    pos
+}
+
+/// Advance past one complete value starting at `pos` (first non-ws
+/// byte); returns the end index, or `None` on malformed input. This is
+/// the scanner's workhorse: skipping a subtree costs a byte walk, not
+/// an allocation.
+fn skip_value(bytes: &[u8], pos: usize) -> Option<usize> {
+    match bytes.get(pos)? {
+        b'"' => scan_string_body(bytes, pos + 1).ok().map(|(e, _)| e + 1),
+        b'{' => skip_container(bytes, pos, b'}', true),
+        b'[' => skip_container(bytes, pos, b']', false),
+        b't' => expect_literal(bytes, pos, b"true"),
+        b'f' => expect_literal(bytes, pos, b"false"),
+        b'n' => expect_literal(bytes, pos, b"null"),
+        b'-' | b'0'..=b'9' => {
+            let end = scan_number(bytes, pos);
+            // reject a bare `-`/malformed token the f64 parser would
+            std::str::from_utf8(&bytes[pos..end])
+                .ok()?
+                .parse::<f64>()
+                .ok()?;
+            Some(end)
+        }
+        _ => None,
+    }
+}
+
+fn expect_literal(bytes: &[u8], pos: usize, word: &[u8]) -> Option<usize> {
+    if bytes.get(pos..pos + word.len()) == Some(word) {
+        Some(pos + word.len())
+    } else {
+        None
+    }
+}
+
+fn skip_container(bytes: &[u8], open: usize, close: u8, keyed: bool) -> Option<usize> {
+    let mut pos = skip_ws_at(bytes, open + 1);
+    if bytes.get(pos) == Some(&close) {
+        return Some(pos + 1);
+    }
+    loop {
+        if keyed {
+            if bytes.get(pos) != Some(&b'"') {
+                return None;
+            }
+            let (kend, _) = scan_string_body(bytes, pos + 1).ok()?;
+            pos = skip_ws_at(bytes, kend + 1);
+            if bytes.get(pos) != Some(&b':') {
+                return None;
+            }
+            pos = skip_ws_at(bytes, pos + 1);
+        }
+        pos = skip_value(bytes, pos)?;
+        pos = skip_ws_at(bytes, pos);
+        match bytes.get(pos)? {
+            b',' => pos = skip_ws_at(bytes, pos + 1),
+            c if *c == close => return Some(pos + 1),
+            _ => return None,
+        }
     }
 }
 
@@ -436,5 +867,102 @@ mod tests {
         assert_eq!(v.req_usize("n").unwrap(), 3);
         assert_eq!(v.req_str("s").unwrap(), "x");
         assert!(v.req("missing").is_err());
+    }
+
+    // -- lazy scanner -------------------------------------------------------
+
+    #[test]
+    fn scanner_finds_nested_paths() {
+        let doc = r#"{"a": {"b": {"c": 42.5, "s": "hi"}}, "z": [1, 2]}"#;
+        let sc = JsonScanner::new(doc);
+        assert_eq!(sc.path_num(&["a", "b", "c"]), Some(42.5));
+        assert_eq!(sc.path_str(&["a", "b", "s"]).as_deref(), Some("hi"));
+        assert_eq!(sc.path_num(&["missing"]), None);
+        assert_eq!(sc.path_num(&["a", "b", "s"]), None); // wrong type
+    }
+
+    #[test]
+    fn scanner_array_items_and_entries() {
+        let doc = r#" { "rows" : [ {"v": 1}, {"v": 2}, {"v": 3} ] } "#;
+        let sc = JsonScanner::new(doc);
+        let vals: Vec<f64> = sc
+            .path(&["rows"])
+            .unwrap()
+            .array_items()
+            .map(|it| it.path_num(&["v"]).unwrap())
+            .collect();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+        let keys: Vec<String> = sc.entries().map(|(k, _)| k.into_owned()).collect();
+        assert_eq!(keys, vec!["rows"]);
+        // non-containers iterate as empty, not panic
+        assert_eq!(JsonScanner::new("3").array_items().count(), 0);
+        assert_eq!(JsonScanner::new("3").entries().count(), 0);
+    }
+
+    #[test]
+    fn scanner_matches_tree_on_escapes_and_unicode() {
+        // \u escapes (incl. a lone surrogate -> U+FFFD), multibyte UTF-8,
+        // writer-style control escapes: both read paths must agree
+        for doc in [
+            r#"{"k":"a\nb\t\"q\"\\"}"#,
+            r#"{"k":"Aé\uD83D"}"#,
+            r#"{"k":"héllo → wörld"}"#,
+            r#"{"k":""}"#,
+        ] {
+            let tree = parse(doc).unwrap();
+            let lazy = JsonScanner::new(doc).path_str(&["k"]).unwrap();
+            assert_eq!(tree.get("k").as_str().unwrap(), lazy.as_ref(), "doc={doc}");
+        }
+    }
+
+    #[test]
+    fn scanner_numbers_bit_match_tree() {
+        let doc = r#"{"a": -3.5e2, "b": 0.1, "c": 12345678901234, "d": -0.0}"#;
+        let tree = parse(doc).unwrap();
+        let sc = JsonScanner::new(doc);
+        for k in ["a", "b", "c", "d"] {
+            assert_eq!(
+                tree.get(k).as_f64().unwrap().to_bits(),
+                sc.path_num(&[k]).unwrap().to_bits(),
+                "key {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn scanner_bool_null_usize() {
+        let sc = JsonScanner::new(r#"{"t": true, "f": false, "n": null, "u": 7, "x": 7.5}"#);
+        assert_eq!(sc.path_bool(&["t"]), Some(true));
+        assert_eq!(sc.path_bool(&["f"]), Some(false));
+        assert!(sc.path_is_null(&["n"]));
+        assert!(!sc.path_is_null(&["t"]));
+        assert!(!sc.path_is_null(&["missing"]));
+        assert_eq!(sc.path_usize(&["u"]), Some(7));
+        assert_eq!(sc.path_usize(&["x"]), None);
+    }
+
+    #[test]
+    fn scanner_skips_malformed_gracefully() {
+        // a miss, never a panic
+        for doc in ["{", "[1,]", "{\"a\":}", "{\"a\" 1}", "nul", "-", "\"unterminated"] {
+            let sc = JsonScanner::new(doc);
+            assert_eq!(sc.path_num(&["a"]), None, "doc={doc}");
+            assert!(sc.raw().is_none() || parse(doc).is_ok(), "doc={doc}");
+        }
+    }
+
+    #[test]
+    fn scanner_tolerates_interleaved_whitespace() {
+        let doc = "\n{\t\"a\" :\r [ 1 ,\n 2 ] , \"b\" : { \"c\" : \"x\" } }\n";
+        let sc = JsonScanner::new(doc);
+        assert_eq!(sc.path(&["a"]).unwrap().array_items().count(), 2);
+        assert_eq!(sc.path_str(&["b", "c"]).as_deref(), Some("x"));
+    }
+
+    #[test]
+    fn scanner_raw_is_exact_value_text() {
+        let sc = JsonScanner::new(r#"  {"a": [1, {"b": 2}]}  "#);
+        assert_eq!(sc.raw(), Some(r#"{"a": [1, {"b": 2}]}"#));
+        assert_eq!(sc.path(&["a"]).unwrap().raw(), Some(r#"[1, {"b": 2}]"#));
     }
 }

@@ -18,7 +18,7 @@ use eat_serve::exit::{
     ConfidencePolicy, EatPolicy, ExitDecision, ExitPolicy, ExitReason,
     LineObs, TokenBudgetPolicy, UniqueAnswersPolicy,
 };
-use eat_serve::eval::{replay, Signal};
+use eat_serve::eval::{replay, replay_scanned, Signal};
 use eat_serve::monitor::{EmaVar, LinePoint, Trace};
 use eat_serve::runtime::Runtime;
 use eat_serve::util::clock::Clock;
@@ -759,6 +759,265 @@ fn prop_migrated_trajectories_bit_identical_to_unmigrated() {
         for (m, r) in migrated.iter().zip(&reference) {
             assert_eq!(key(m), key(r), "migration changed a trajectory (seed {seed})");
         }
+    }
+}
+
+/// Differential oracle for the lazy read path (DESIGN.md §3.8): on
+/// random documents — nested containers, strings exercising every
+/// escape form (incl. `\u` and lone surrogates), numbers printed
+/// through the writer, random whitespace between tokens — every value
+/// reachable by path must come back from `JsonScanner` byte-identical
+/// to the full-tree parse of the same text.
+#[test]
+fn prop_scanner_extractions_match_tree_parse() {
+    use eat_serve::util::json::{Json, JsonScanner};
+
+    // (escaped body as it appears between quotes, expected decoded text)
+    fn gen_string(rng: &mut Rng) -> (String, String) {
+        let mut body = String::new();
+        let mut expect = String::new();
+        for _ in 0..rng.below(6) {
+            match rng.below(12) {
+                0 => {
+                    body.push_str("\\\"");
+                    expect.push('"');
+                }
+                1 => {
+                    body.push_str("\\\\");
+                    expect.push('\\');
+                }
+                2 => {
+                    body.push_str("\\/");
+                    expect.push('/');
+                }
+                3 => {
+                    body.push_str("\\n");
+                    expect.push('\n');
+                }
+                4 => {
+                    body.push_str("\\t");
+                    expect.push('\t');
+                }
+                5 => {
+                    body.push_str("\\u0041");
+                    expect.push('A');
+                }
+                6 => {
+                    body.push_str("\\u00e9");
+                    expect.push('é');
+                }
+                // every \uXXXX decodes independently; surrogate halves
+                // (paired or lone) map to U+FFFD — unescape_body is THE
+                // definition, both read paths must agree on it
+                7 => {
+                    body.push_str("\\ud800");
+                    expect.push('\u{FFFD}');
+                }
+                8 => {
+                    body.push_str("\\ud83d\\ude00");
+                    expect.push_str("\u{FFFD}\u{FFFD}");
+                }
+                9 => {
+                    body.push_str("é漢");
+                    expect.push_str("é漢");
+                }
+                _ => {
+                    body.push_str("ab c");
+                    expect.push_str("ab c");
+                }
+            }
+        }
+        (body, expect)
+    }
+
+    fn ws(rng: &mut Rng, out: &mut String) {
+        for _ in 0..rng.below(3) {
+            out.push(match rng.below(4) {
+                0 => ' ',
+                1 => '\n',
+                2 => '\t',
+                _ => '\r',
+            });
+        }
+    }
+
+    // Emit a random value as text (with whitespace) and return the tree
+    // the full parser must produce for it.
+    fn gen_value(rng: &mut Rng, depth: usize, out: &mut String) -> Json {
+        let leaf_only = depth >= 3;
+        match rng.below(if leaf_only { 4 } else { 6 }) {
+            0 => {
+                out.push_str("null");
+                Json::Null
+            }
+            1 => {
+                let b = rng.chance(0.5);
+                out.push_str(if b { "true" } else { "false" });
+                Json::Bool(b)
+            }
+            2 => {
+                // no -0.0: the writer prints it as "0" (sign lost), and
+                // this test compares round-tripped bits exactly
+                let n = match rng.below(4) {
+                    0 => rng.below(1_000_000) as f64,
+                    1 => -(1.0 + rng.below(1000) as f64),
+                    2 => rng.normal() * 1e-6,
+                    _ => rng.f64() * 1e12,
+                };
+                // numbers travel through the writer's own formatting,
+                // so text -> f64 is the shortest round trip both paths
+                // must parse to identical bits
+                out.push_str(&Json::num(n).to_string());
+                Json::Num(n)
+            }
+            3 => {
+                let (body, expect) = gen_string(rng);
+                out.push('"');
+                out.push_str(&body);
+                out.push('"');
+                Json::Str(expect)
+            }
+            4 => {
+                out.push('[');
+                let n = rng.below(4) as usize;
+                let mut items = Vec::new();
+                for i in 0..n {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    ws(rng, out);
+                    items.push(gen_value(rng, depth + 1, out));
+                    ws(rng, out);
+                }
+                out.push(']');
+                Json::Arr(items)
+            }
+            _ => {
+                out.push('{');
+                let n = rng.below(4) as usize;
+                let mut map = std::collections::BTreeMap::new();
+                for i in 0..n {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    ws(rng, out);
+                    // unique keys (duplicate-key tie-breaking is out of
+                    // contract; the writer never emits duplicates), one
+                    // escaped spelling so key decoding is exercised too
+                    let (key_body, key) = if rng.chance(0.3) {
+                        (format!("k\\u0065y{i}"), format!("key{i}"))
+                    } else {
+                        (format!("k{i}"), format!("k{i}"))
+                    };
+                    out.push('"');
+                    out.push_str(&key_body);
+                    out.push('"');
+                    ws(rng, out);
+                    out.push(':');
+                    ws(rng, out);
+                    let v = gen_value(rng, depth + 1, out);
+                    ws(rng, out);
+                    map.insert(key, v);
+                }
+                out.push('}');
+                Json::Obj(map)
+            }
+        }
+    }
+
+    fn check(sc: &JsonScanner, tree: &Json, seed: u64) {
+        match tree {
+            Json::Null => assert!(sc.path_is_null(&[]), "seed {seed}"),
+            Json::Bool(b) => assert_eq!(sc.path_bool(&[]), Some(*b), "seed {seed}"),
+            Json::Num(n) => assert_eq!(
+                sc.path_num(&[]).map(f64::to_bits),
+                Some(n.to_bits()),
+                "seed {seed}"
+            ),
+            Json::Str(s) => {
+                assert_eq!(sc.path_str(&[]).as_deref(), Some(s.as_str()), "seed {seed}")
+            }
+            Json::Arr(items) => {
+                let subs: Vec<JsonScanner> = sc.array_items().collect();
+                assert_eq!(subs.len(), items.len(), "seed {seed}");
+                for (s, t) in subs.iter().zip(items) {
+                    check(s, t, seed);
+                }
+            }
+            Json::Obj(map) => {
+                // both directions: every tree key reachable by path(),
+                // and every scanned entry present in the tree
+                let entries: Vec<_> = sc.entries().collect();
+                assert_eq!(entries.len(), map.len(), "seed {seed}");
+                for (k, v) in map {
+                    let sub = sc
+                        .path(&[k.as_str()])
+                        .unwrap_or_else(|| panic!("seed {seed}: scanner lost key `{k}`"));
+                    check(&sub, v, seed);
+                }
+                for (k, sub) in &entries {
+                    check(sub, &map[k.as_ref()], seed);
+                }
+            }
+        }
+    }
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5CA11);
+        let mut text = String::new();
+        ws(&mut rng, &mut text);
+        let tree = gen_value(&mut rng, 0, &mut text);
+        ws(&mut rng, &mut text);
+        // the generator's expected tree IS what the full parser builds
+        assert_eq!(json::parse(&text).unwrap(), tree, "seed {seed}: {text}");
+        check(&JsonScanner::new(&text), &tree, seed);
+    }
+}
+
+/// The lazy replay path decides identically to the materialized one on
+/// random traces, across all signals, policies and overhead charging.
+#[test]
+fn prop_replay_scanned_matches_tree_replay() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5CA2);
+        let trace = random_trace(&mut rng);
+        let text = trace.to_json().to_string();
+        let sc = json::JsonScanner::new(&text);
+        let signal = match rng.below(4) {
+            0 => Signal::MainPrefixed,
+            1 => Signal::MainPlain,
+            2 => Signal::Proxy,
+            _ => Signal::Newline,
+        };
+        let charge = rng.chance(0.5);
+        let mk = |r: &mut Rng| -> Box<dyn ExitPolicy> {
+            match r.below(3) {
+                0 => Box::new(EatPolicy::new(0.2, 2f64.powi(-(r.below(16) as i32)), 10_000)),
+                1 => Box::new(TokenBudgetPolicy::new(r.range(1, 120) as usize)),
+                _ => Box::new(UniqueAnswersPolicy::new(
+                    r.range(1, 32) as usize,
+                    r.range(1, 3) as usize,
+                    10_000,
+                )),
+            }
+        };
+        // identical policy from an identical rng stream for both paths
+        let mut policy_rng = Rng::new(seed ^ 0xB0);
+        let mut p_tree = mk(&mut policy_rng);
+        let mut policy_rng = Rng::new(seed ^ 0xB0);
+        let mut p_scan = mk(&mut policy_rng);
+        let a = replay(&trace, p_tree.as_mut(), signal, charge);
+        let b = replay_scanned(&sc, p_scan.as_mut(), signal, charge).unwrap();
+        assert_eq!(a.exit_line, b.exit_line, "seed {seed}");
+        assert_eq!(a.exit_reason, b.exit_reason, "seed {seed}");
+        assert_eq!(a.reasoning_tokens, b.reasoning_tokens, "seed {seed}");
+        assert_eq!(a.overhead_tokens, b.overhead_tokens, "seed {seed}");
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "seed {seed}");
+        assert_eq!(
+            a.accuracy_exact.to_bits(),
+            b.accuracy_exact.to_bits(),
+            "seed {seed}"
+        );
     }
 }
 

@@ -423,3 +423,29 @@ fn proxy_monitored_sessions_survive_preemption() {
         assert_eq!(key(p), key(f), "proxy cache not rebuilt faithfully");
     }
 }
+
+#[test]
+fn steady_state_ticks_do_not_allocate() {
+    // the per-tick work lists are preallocated to the slot count and the
+    // active set can never exceed it, so the whole run — warmup included —
+    // performs zero scratch reallocations (allocs_per_tick == 0)
+    let rt = Runtime::reference();
+    let mut cfg = ServeConfig::default();
+    cfg.seed = 7;
+    cfg.sched.mode = SchedMode::EatAware;
+    let ds = Dataset::synth_gpqa(&rt.vocab, 16, 7);
+    let mut b = Batcher::with_clock(
+        &rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        3,
+        eat_factory(&cfg),
+        Clock::virt(),
+    );
+    let arrivals = poisson_arrivals(16, 30.0, 7);
+    run_open_loop(&mut b, &ds.questions, &arrivals, DEFAULT_TICK_DT).unwrap();
+    assert_eq!(b.metrics.completed, 16);
+    let c = rt.main.counters();
+    assert!(c.sched_ticks.get() > 0, "no ticks recorded");
+    assert_eq!(c.sched_allocs.get(), 0, "tick scratch reallocated");
+}
