@@ -1,0 +1,112 @@
+//! Sweep-harness throughput: one EAT delta sweep and one full zoo race
+//! over a synthetic trace set — the offline-eval hot loop.
+//!
+//!     cargo bench --bench bench_sweep
+//!
+//! Two tiers:
+//!  - `sweep/eat_deltas`: the single-family kernel (`sweep_eat`) over
+//!    the default 24-delta grid — replay dominates; this is the cost a
+//!    figure driver pays per family;
+//!  - `sweep/zoo_race`: the whole frontier harness (`run_zoo`) — every
+//!    family x its grid, raw + charged, plus the pooled Pareto mask.
+//!
+//! The snapshot records the per-replay cost so regressions in the
+//! replay kernel (not just the harness glue) move a tracked number.
+
+use eat_serve::eval::sweep::{default_deltas, sweep_eat};
+use eat_serve::eval::{run_zoo, Signal, TraceSet, ZooConfig};
+use eat_serve::monitor::{LinePoint, Trace};
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::Json;
+use eat_serve::util::rng::Rng;
+
+/// Chain-sum-shaped step trace: noisy EAT before stabilization at line
+/// `st`, a flat low plateau after, 24-token lines (the paper's regime:
+/// probe overhead is a small fraction of line cost).
+fn step_trace(id: usize, st: usize, lines: usize, rng: &mut Rng) -> Trace {
+    Trace {
+        question_id: id,
+        n_ops: st,
+        answer: Some(1),
+        prompt_tokens: st + 3,
+        self_terminated: true,
+        reasoning_tokens: vec![5; lines * 24],
+        points: (1..=lines)
+            .map(|i| {
+                let stable = i >= st;
+                LinePoint {
+                    line: i,
+                    tokens: i * 24,
+                    eat: if stable {
+                        0.02 + 0.01 * rng.f64()
+                    } else {
+                        2.0 + rng.f64()
+                    },
+                    eat_proxy: Some(if stable { 0.05 } else { 2.2 }),
+                    eat_plain: Some(0.001),
+                    eat_newline: Some(0.5),
+                    vhat: f64::INFINITY,
+                    p_correct: if stable { 0.98 } else { 0.1 },
+                    pass1_avgk: if stable { 1.0 } else { 0.1 },
+                    unique_answers: if stable { 1 } else { 8 },
+                    confidence: Some(if stable { 0.9 } else { 0.3 }),
+                }
+            })
+            .collect(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    const TRACES: usize = 24;
+    const LINES: usize = 60;
+    let mut rng = Rng::new(23);
+    let ts = TraceSet {
+        dataset: "bench".into(),
+        traces: (0..TRACES)
+            .map(|i| step_trace(i, 3 + (i % 12) * 4, LINES, &mut rng))
+            .collect(),
+    };
+    println!("traceset: {TRACES} traces x {LINES} lines\n");
+
+    let mut results = Vec::new();
+
+    let deltas = default_deltas();
+    let eat_sweep = bench("sweep/eat_deltas", || {
+        let c = sweep_eat(&ts, Signal::MainPrefixed, 0.2, &deltas, 10_000, true, "eat");
+        std::hint::black_box(c);
+    });
+    let per_replay_ns = eat_sweep.mean_ns / (deltas.len() * TRACES) as f64;
+    println!(
+        "eat sweep: {:.3} ms for {} deltas -> {per_replay_ns:.0} ns/replay",
+        eat_sweep.mean_ns / 1e6,
+        deltas.len()
+    );
+
+    let zc = ZooConfig::default();
+    let zoo = bench("sweep/zoo_race", || {
+        let report = run_zoo(&ts, &zc);
+        std::hint::black_box(report);
+    });
+    let report = run_zoo(&ts, &zc);
+    println!(
+        "zoo race: {:.1} ms for {} families",
+        zoo.mean_ns / 1e6,
+        report.families.len()
+    );
+
+    results.extend([eat_sweep, zoo]);
+    let eat = report
+        .families
+        .iter()
+        .find(|f| f.family == "eat")
+        .expect("eat family present");
+    let extra = vec![
+        ("traces", Json::num(TRACES as f64)),
+        ("families", Json::num(report.families.len() as f64)),
+        ("per_replay_ns", Json::num(per_replay_ns)),
+        ("eat_auc_charged", Json::num(eat.auc_charged)),
+    ];
+    let path = write_snapshot("sweep", &results, extra)?;
+    println!("snapshot: {path}");
+    Ok(())
+}

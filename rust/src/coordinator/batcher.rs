@@ -49,7 +49,11 @@ use super::kv::{pages_for, KvPageManager, SlotId};
 use super::metrics::ServeMetrics;
 use crate::config::{SchedMode, ServeConfig};
 use crate::datasets::Question;
-use crate::exit::{EatPolicy, ExitPolicy, ExitReason};
+use crate::exit::{
+    AnswerConsistencyPolicy, ConfidencePolicy, CumulativeEntropyPolicy, EatPolicy, ExitPolicy,
+    ExitReason, PathDeviationPolicy, SequenceEntropyPolicy, StallAwareEatPolicy,
+    TokenBudgetPolicy, UniqueAnswersPolicy, WeightedEnsemble, DEFAULT_CUM_BUDGET_NATS,
+};
 use crate::runtime::{Backend, BackendCache, Runtime, RuntimeCounters};
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
@@ -179,6 +183,52 @@ pub type PolicyFactory = Box<dyn Fn() -> Box<dyn ExitPolicy>>;
 pub fn eat_policy_factory(cfg: &ServeConfig) -> PolicyFactory {
     let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
     Box::new(move || Box::new(EatPolicy::new(alpha, delta, budget)))
+}
+
+/// Factory for any exit-policy zoo family by name, parameterized from
+/// the serve config (alpha/delta/budget). Every family runs online in
+/// the [`Batcher`] through the same [`PolicyFactory`] seam: the engine
+/// services whatever `needs()` the policy reports and the scheduler
+/// consumes its `stability()` hint — no engine changes per policy.
+pub fn zoo_policy_factory(name: &str, cfg: &ServeConfig) -> anyhow::Result<PolicyFactory> {
+    let (alpha, delta, budget) = (cfg.alpha, cfg.delta, cfg.max_think_tokens);
+    Ok(match name {
+        "eat" => eat_policy_factory(cfg),
+        "token" => Box::new(move || Box::new(TokenBudgetPolicy::new(budget))),
+        "eat-stall" | "stall" => {
+            Box::new(move || Box::new(StallAwareEatPolicy::new(alpha, delta, budget)))
+        }
+        "ua" => Box::new(move || Box::new(UniqueAnswersPolicy::new(16, 1, budget))),
+        "confidence" => Box::new(move || Box::new(ConfidencePolicy::new(alpha, delta, budget))),
+        "path-dev" => Box::new(move || Box::new(PathDeviationPolicy::new(alpha, delta, budget))),
+        // delta doubles as the entropy level (nats) for the level rules
+        "seq-entropy" => Box::new(move || Box::new(SequenceEntropyPolicy::new(delta, budget))),
+        "cum-entropy" => Box::new(move || {
+            Box::new(CumulativeEntropyPolicy::new(
+                alpha,
+                delta,
+                DEFAULT_CUM_BUDGET_NATS,
+                budget,
+            ))
+        }),
+        "consistency" => {
+            Box::new(move || Box::new(AnswerConsistencyPolicy::with_stride(8, 2, budget, 2)))
+        }
+        "ensemble" => Box::new(move || {
+            Box::new(WeightedEnsemble::new(
+                vec![
+                    (2.0, Box::new(EatPolicy::new(alpha, delta, budget)) as Box<dyn ExitPolicy>),
+                    (1.0, Box::new(StallAwareEatPolicy::new(alpha, delta, budget))),
+                    (1.0, Box::new(ConfidencePolicy::new(alpha, delta, budget))),
+                ],
+                0.5,
+            ))
+        }),
+        other => anyhow::bail!(
+            "unknown policy `{other}` (expected eat, token, eat-stall, ua, confidence, \
+             path-dev, seq-entropy, cum-entropy, consistency or ensemble)"
+        ),
+    })
 }
 
 /// Simulated seconds charged per scheduling tick on a virtual clock

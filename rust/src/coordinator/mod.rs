@@ -32,7 +32,8 @@ pub mod workload;
 
 pub use batch_cache::BatchCacheStore;
 pub use batcher::{
-    eat_policy_factory, Batcher, Migration, PolicyFactory, SuspendedSession, DEFAULT_TICK_DT,
+    eat_policy_factory, zoo_policy_factory, Batcher, Migration, PolicyFactory, SuspendedSession,
+    DEFAULT_TICK_DT,
 };
 pub use cluster::{Cluster, ClusterConfig, RoutePolicy};
 pub use engine::{

@@ -7,8 +7,10 @@ pub mod replay;
 pub mod store;
 pub mod sweep;
 pub mod tracegen;
+pub mod zoo;
 
 pub use replay::{replay, replay_scanned, ReplayOutcome, Signal};
 pub use store::TraceSet;
 pub use sweep::{Curve, CurvePoint};
 pub use tracegen::TraceGen;
+pub use zoo::{run_zoo, zoo_report_json, ZooConfig, ZooReport};

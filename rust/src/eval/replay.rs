@@ -117,7 +117,11 @@ pub fn replay(
             }
         }
         if needs.confidence {
-            obs.confidence = p.confidence;
+            // same contract as `eat`: a trace recorded without the
+            // confidence stream replays as NaN (no adaptive exit), so a
+            // confidence policy falls through to its token backstop
+            // instead of panicking on the missing signal
+            obs.confidence = Some(p.confidence.unwrap_or(f64::NAN));
             overhead += cost.confidence_eval();
         }
         if let ExitDecision::Exit(reason) = policy.observe(&obs) {
@@ -207,7 +211,8 @@ pub fn replay_scanned(
             }
         }
         if needs.confidence {
-            obs.confidence = p.path_num(&["confidence"]);
+            // missing stream → NaN (no-exit), mirroring `replay`
+            obs.confidence = Some(p.path_num(&["confidence"]).unwrap_or(f64::NAN));
             overhead += cost.confidence_eval();
         }
         if let ExitDecision::Exit(reason) = policy.observe(&obs) {

@@ -1,8 +1,11 @@
 //! Threshold sweeps: build the Agg. Pass@1 vs total-token-usage curves of
 //! §5.2/5.3 for every policy family, and the AUC efficiency metric.
+//! [`sweep_policy`] is the one generic kernel — every named sweep (and
+//! the whole zoo harness in [`super::zoo`]) is a policy factory handed to
+//! it, so a new stopping rule costs one closure, not a new sweep loop.
 
-use crate::exit::{ConfidencePolicy, EatPolicy, TokenBudgetPolicy, UniqueAnswersPolicy};
-use crate::util::stats::auc_normalized;
+use crate::exit::{ConfidencePolicy, EatPolicy, ExitPolicy, TokenBudgetPolicy, UniqueAnswersPolicy};
+use crate::util::stats::auc_normalized_counting;
 
 use super::replay::{replay, Signal};
 use super::store::TraceSet;
@@ -30,7 +33,14 @@ pub struct Curve {
 impl Curve {
     /// AUC of accuracy over normalized token usage (§5.2).
     pub fn auc(&self) -> f64 {
-        auc_normalized(
+        self.auc_with_skipped().0
+    }
+
+    /// AUC plus the number of non-finite points the NaN contract dropped
+    /// (see [`crate::util::stats::auc_normalized_counting`]): a poisoned
+    /// replay contributes a skip count to the report, not a panic.
+    pub fn auc_with_skipped(&self) -> (f64, usize) {
+        auc_normalized_counting(
             &self
                 .points
                 .iter()
@@ -79,6 +89,33 @@ fn aggregate(
     }
 }
 
+/// The generic sweep kernel: one curve point per threshold, each built by
+/// replaying every trace against a policy minted by `mk(threshold)`.
+/// Every named sweep below delegates here, and the zoo harness
+/// ([`super::zoo::run_zoo`]) races whole families through it — the
+/// threshold is whatever dial the family sweeps (delta, T, Delta,
+/// level, patience...), always carried as f64 in `CurvePoint::threshold`.
+pub fn sweep_policy<F>(
+    traces: &TraceSet,
+    thresholds: &[f64],
+    signal: Signal,
+    charge_overhead: bool,
+    label: &str,
+    mut mk: F,
+) -> Curve
+where
+    F: FnMut(f64) -> Box<dyn ExitPolicy>,
+{
+    let points = thresholds
+        .iter()
+        .map(|&t| aggregate(traces, || mk(t), signal, charge_overhead, t))
+        .collect();
+    Curve {
+        label: label.to_string(),
+        points,
+    }
+}
+
 /// EAT sweep over variance thresholds delta (paper: 2^-{0..39}).
 pub fn sweep_eat(
     traces: &TraceSet,
@@ -89,42 +126,17 @@ pub fn sweep_eat(
     charge_overhead: bool,
     label: &str,
 ) -> Curve {
-    let points = deltas
-        .iter()
-        .map(|&d| {
-            aggregate(
-                traces,
-                || Box::new(EatPolicy::new(alpha, d, max_tokens)),
-                signal,
-                charge_overhead,
-                d,
-            )
-        })
-        .collect();
-    Curve {
-        label: label.to_string(),
-        points,
-    }
+    sweep_policy(traces, deltas, signal, charge_overhead, label, |d| {
+        Box::new(EatPolicy::new(alpha, d, max_tokens))
+    })
 }
 
 /// Token-budget sweep over T (paper: 250 * {1..40}).
 pub fn sweep_token(traces: &TraceSet, ts: &[usize], label: &str) -> Curve {
-    let points = ts
-        .iter()
-        .map(|&t| {
-            aggregate(
-                traces,
-                || Box::new(TokenBudgetPolicy::new(t)),
-                Signal::MainPrefixed,
-                false,
-                t as f64,
-            )
-        })
-        .collect();
-    Curve {
-        label: label.to_string(),
-        points,
-    }
+    let budgets: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
+    sweep_policy(traces, &budgets, Signal::MainPrefixed, false, label, |t| {
+        Box::new(TokenBudgetPolicy::new(t as usize))
+    })
 }
 
 /// #UA@K sweep over Delta for one K (paper: Delta in {1,2,3}, K in
@@ -138,22 +150,15 @@ pub fn sweep_ua(
     every: usize,
     label: &str,
 ) -> Curve {
-    let points = thresholds
-        .iter()
-        .map(|&d| {
-            aggregate(
-                traces,
-                || Box::new(UniqueAnswersPolicy::with_stride(k, d, max_tokens, every)),
-                Signal::MainPrefixed,
-                charge_overhead,
-                d as f64,
-            )
-        })
-        .collect();
-    Curve {
-        label: label.to_string(),
-        points,
-    }
+    let deltas: Vec<f64> = thresholds.iter().map(|&d| d as f64).collect();
+    sweep_policy(
+        traces,
+        &deltas,
+        Signal::MainPrefixed,
+        charge_overhead,
+        label,
+        |d| Box::new(UniqueAnswersPolicy::with_stride(k, d as usize, max_tokens, every)),
+    )
 }
 
 /// Confidence sweep over delta (Fig. 4).
@@ -165,32 +170,28 @@ pub fn sweep_confidence(
     charge_overhead: bool,
     label: &str,
 ) -> Curve {
-    let points = deltas
-        .iter()
-        .map(|&d| {
-            aggregate(
-                traces,
-                || Box::new(ConfidencePolicy::new(alpha, d, max_tokens)),
-                Signal::MainPrefixed,
-                charge_overhead,
-                d,
-            )
-        })
-        .collect();
-    Curve {
-        label: label.to_string(),
-        points,
-    }
+    sweep_policy(
+        traces,
+        deltas,
+        Signal::MainPrefixed,
+        charge_overhead,
+        label,
+        |d| Box::new(ConfidencePolicy::new(alpha, d, max_tokens)),
+    )
 }
 
-/// Default delta sweep: 2^0 .. 2^-23 (the paper sweeps to 2^-39; our EAT
-/// floors are higher because the vocab is small).
+/// Default delta sweep: the 24 thresholds 2^-i for i in 0..=23, i.e.
+/// 2^0 down to 2^-23 halving each step (the paper sweeps to 2^-39; our
+/// EAT floors are higher because the vocab is small).
 pub fn default_deltas() -> Vec<f64> {
     (0..24).map(|i| 2f64.powi(-i)).collect()
 }
 
-/// Default token budgets: 6 * {1..16} reasoning tokens (scaled from the
-/// paper's 250 * {1..40} against 10K budgets).
+/// Default token budgets: 16 evenly spaced budgets `step * {1..16}` with
+/// `step = (max/16).max(1)` — e.g. 6 * {1..16} for the default 96-token
+/// cap (scaled from the paper's 250 * {1..40} against 10K budgets). A
+/// `max` below 16 clamps the step to 1, so the grid is always 16
+/// strictly positive budgets.
 pub fn default_token_budgets(max: usize) -> Vec<usize> {
     let step = (max / 16).max(1);
     (1..=16).map(|i| i * step).collect()
@@ -294,6 +295,72 @@ mod tests {
             "eat",
         );
         assert!(ua.points[0].total_tokens > 3.0 * eat.points[0].total_tokens);
+    }
+
+    #[test]
+    fn default_grids_match_their_docs() {
+        // pins the documented shapes (the doc comments drifted once)
+        let d = default_deltas();
+        assert_eq!(d.len(), 24);
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[23], 2f64.powi(-23));
+        assert!(d.windows(2).all(|w| w[1] == w[0] / 2.0), "halving grid");
+        let b = default_token_budgets(96);
+        assert_eq!(b, (1..=16).map(|i| i * 6).collect::<Vec<_>>());
+        // a max below 16 still yields 16 strictly positive budgets
+        assert_eq!(default_token_budgets(5), (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn generic_sweep_matches_specialized_sweeps() {
+        let ts = mk_traces();
+        let spec = sweep_eat(
+            &ts,
+            Signal::MainPrefixed,
+            0.2,
+            &default_deltas(),
+            10_000,
+            true,
+            "eat",
+        );
+        let via_factory = sweep_policy(
+            &ts,
+            &default_deltas(),
+            Signal::MainPrefixed,
+            true,
+            "eat",
+            |d| Box::new(EatPolicy::new(0.2, d, 10_000)),
+        );
+        assert_eq!(spec.points.len(), via_factory.points.len());
+        for (a, b) in spec.points.iter().zip(&via_factory.points) {
+            assert_eq!(a.total_tokens.to_bits(), b.total_tokens.to_bits());
+            assert_eq!(a.agg_pass1.to_bits(), b.agg_pass1.to_bits());
+            assert_eq!(a.mean_exit_line.to_bits(), b.mean_exit_line.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_eat_sample_still_produces_a_finished_report() {
+        // the ISSUE regression: a NaN EAT sample anywhere in a trace must
+        // yield a complete sweep (the poisoned trace runs to its end —
+        // NaN means "no adaptive exit", not "panic")
+        let mut ts = mk_traces();
+        ts.traces[1].points[3].eat = f64::NAN;
+        let eat = sweep_eat(
+            &ts,
+            Signal::MainPrefixed,
+            0.2,
+            &default_deltas(),
+            10_000,
+            true,
+            "eat",
+        );
+        assert_eq!(eat.points.len(), default_deltas().len());
+        assert!(eat.points.iter().all(|p| p.total_tokens.is_finite()));
+        let (auc, skipped) = eat.auc_with_skipped();
+        assert!(auc.is_finite() && auc > 0.0);
+        assert_eq!(skipped, 0, "aggregates stay finite, nothing to skip");
+        assert!(eat.tokens_at_accuracy(0.5).is_some());
     }
 
     #[test]

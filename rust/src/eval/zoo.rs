@@ -1,0 +1,537 @@
+//! The exit-policy zoo frontier harness (DESIGN.md §3.9): race every
+//! stopping rule in [`crate::exit`] — the paper's EAT and its baselines
+//! plus the related-work policies and combinators — over one `TraceSet`,
+//! through the single generic sweep kernel [`super::sweep::sweep_policy`].
+//!
+//! Each family is swept twice (probe overhead charged and raw) and scored
+//! on the same axes: AUC of accuracy over normalized token usage,
+//! iso-accuracy token cost vs the fixed-budget family, and the mean exit
+//! line at the headline operating point. The charged curves are then
+//! pooled into one epsilon-dominance Pareto frontier, where epsilon is
+//! one reasoning line per question in total-token units — the
+//! measurement granularity of a line-boundary stopping rule, so policies
+//! that exit within a line of each other *share* the frontier instead of
+//! shadowing each other over rounding noise.
+//!
+//! Everything is deterministic given the trace set: the report JSON uses
+//! sorted keys ([`crate::util::json::Json::Obj`] is a `BTreeMap`) and two
+//! runs over the same traces are byte-identical — CI diffs them.
+
+use crate::exit::{
+    AllOf, AnswerConsistencyPolicy, ConfidencePolicy, CumulativeEntropyPolicy, EatPolicy,
+    ExitPolicy, PathDeviationPolicy, SequenceEntropyPolicy, StallAwareEatPolicy,
+    TokenBudgetPolicy, UniqueAnswersPolicy, WeightedEnsemble, DEFAULT_CUM_BUDGET_NATS,
+};
+use crate::util::json::Json;
+
+use super::replay::Signal;
+use super::store::TraceSet;
+use super::sweep::{default_deltas, default_token_budgets, sweep_policy, Curve, CurvePoint};
+
+/// Knobs shared by every family in the race (per-family thresholds are
+/// the swept dial, not config).
+#[derive(Debug, Clone)]
+pub struct ZooConfig {
+    /// EMA timescale for every EMA-based policy.
+    pub alpha: f64,
+    /// Universal token-budget backstop handed to every adaptive policy.
+    pub max_tokens: usize,
+    /// Iso-accuracy target as a fraction of the token family's best raw
+    /// accuracy (the paper's "98% of majority accuracy" convention).
+    pub iso_frac: f64,
+    /// K for the #UA@K family.
+    pub ua_k: usize,
+    /// Total-entropy budget for the cumulative-entropy family (nats).
+    pub cum_budget_nats: f64,
+    /// Quorum for the weighted-ensemble family.
+    pub ensemble_quorum: f64,
+}
+
+impl Default for ZooConfig {
+    fn default() -> Self {
+        ZooConfig {
+            alpha: 0.2,
+            max_tokens: 10_000,
+            iso_frac: 0.98,
+            ua_k: 16,
+            cum_budget_nats: DEFAULT_CUM_BUDGET_NATS,
+            ensemble_quorum: 0.5,
+        }
+    }
+}
+
+/// One row of the Pareto table.
+#[derive(Debug, Clone)]
+pub struct FamilyResult {
+    pub family: String,
+    /// AUC without probe overhead (generation tokens only).
+    pub auc_raw: f64,
+    /// AUC with the cost model's probe/rollout overhead charged.
+    pub auc_charged: f64,
+    /// Non-finite curve points the NaN contract dropped from each AUC.
+    pub skipped_raw: usize,
+    pub skipped_charged: usize,
+    /// Cheapest total tokens reaching the iso-accuracy target (None if
+    /// the family never reaches it within its sweep).
+    pub iso_tokens_raw: Option<f64>,
+    pub iso_tokens_charged: Option<f64>,
+    /// Raw-token saving vs the fixed-budget family at iso-accuracy, in
+    /// percent (None when either side never reaches the target).
+    pub saving_vs_token_pct: Option<f64>,
+    /// Mean exit line at the headline operating point: the cheapest
+    /// iso-reaching raw point, else the family's most accurate point.
+    pub mean_exit_line: f64,
+    /// Whether the family owns at least one non-dominated point of the
+    /// pooled overhead-charged frontier.
+    pub on_frontier: bool,
+    pub raw: Curve,
+    pub charged: Curve,
+}
+
+#[derive(Debug, Clone)]
+pub struct ZooReport {
+    pub dataset: String,
+    pub n_traces: usize,
+    /// The resolved iso-accuracy target (iso_frac x token-family best).
+    pub iso_accuracy: f64,
+    /// The frontier's token tolerance: one reasoning line per question.
+    pub eps_tokens: f64,
+    pub families: Vec<FamilyResult>,
+}
+
+type PolicyMk = Box<dyn Fn(f64) -> Box<dyn ExitPolicy>>;
+
+/// Non-dominated mask over `(total_tokens, accuracy)` points under
+/// epsilon-dominance: `q` dominates `p` iff `q` is weakly better on both
+/// axes *and* strictly better on at least one by more than the tolerance
+/// (`eps_tokens` on the token axis). Points within one line's worth of
+/// tokens at equal accuracy therefore share the frontier. Non-finite
+/// points are never on the frontier and never dominate.
+pub fn pareto_non_dominated(points: &[(f64, f64)], eps_tokens: f64) -> Vec<bool> {
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, &(pt, pa))| {
+            if !pt.is_finite() || !pa.is_finite() {
+                return false;
+            }
+            !points.iter().enumerate().any(|(j, &(qt, qa))| {
+                j != i
+                    && qt.is_finite()
+                    && qa.is_finite()
+                    && qt <= pt
+                    && qa >= pa
+                    && (qt <= pt - eps_tokens || qa >= pa + 1e-9)
+            })
+        })
+        .collect()
+}
+
+fn headline_exit_line(raw: &Curve, iso: f64) -> f64 {
+    let at_iso = raw
+        .points
+        .iter()
+        .filter(|p| p.agg_pass1 >= iso)
+        .min_by(|a, b| a.total_tokens.total_cmp(&b.total_tokens));
+    match at_iso {
+        Some(p) => p.mean_exit_line,
+        None => raw
+            .points
+            .iter()
+            .max_by(|a, b| a.agg_pass1.total_cmp(&b.agg_pass1))
+            .map(|p| p.mean_exit_line)
+            .unwrap_or(0.0),
+    }
+}
+
+/// Race every policy family over `traces` and score the Pareto table.
+pub fn run_zoo(traces: &TraceSet, zc: &ZooConfig) -> ZooReport {
+    let (alpha, max_tokens) = (zc.alpha, zc.max_tokens);
+    let (ua_k, cum_budget, quorum) = (zc.ua_k, zc.cum_budget_nats, zc.ensemble_quorum);
+
+    let tmax = traces
+        .traces
+        .iter()
+        .filter_map(|t| t.points.last())
+        .map(|p| p.tokens)
+        .max()
+        .unwrap_or(96);
+    let deltas = default_deltas();
+    let budgets: Vec<f64> = default_token_budgets(tmax)
+        .into_iter()
+        .map(|b| b as f64)
+        .collect();
+    // entropy levels: a geometric ladder from "any line passes" down to
+    // "essentially deterministic", the level-rule analog of the delta grid
+    let levels: Vec<f64> = (0..16).map(|i| 3.5 * 0.75f64.powi(i)).collect();
+    let ua_thresholds = vec![1.0, 2.0, 3.0];
+    let patiences = vec![1.0, 2.0, 3.0, 4.0];
+
+    let families: Vec<(&'static str, Vec<f64>, PolicyMk)> = vec![
+        (
+            "eat",
+            deltas.clone(),
+            Box::new(move |d| Box::new(EatPolicy::new(alpha, d, max_tokens))),
+        ),
+        (
+            "eat-stall",
+            deltas.clone(),
+            Box::new(move |d| Box::new(StallAwareEatPolicy::new(alpha, d, max_tokens))),
+        ),
+        (
+            "token",
+            budgets,
+            Box::new(|t| Box::new(TokenBudgetPolicy::new(t as usize))),
+        ),
+        (
+            "ua",
+            ua_thresholds,
+            Box::new(move |d| {
+                Box::new(UniqueAnswersPolicy::with_stride(
+                    ua_k, d as usize, max_tokens, 1,
+                ))
+            }),
+        ),
+        (
+            "confidence",
+            deltas.clone(),
+            Box::new(move |d| Box::new(ConfidencePolicy::new(alpha, d, max_tokens))),
+        ),
+        (
+            "path-dev",
+            deltas.clone(),
+            Box::new(move |d| Box::new(PathDeviationPolicy::new(alpha, d, max_tokens))),
+        ),
+        (
+            "seq-entropy",
+            levels.clone(),
+            Box::new(move |l| Box::new(SequenceEntropyPolicy::new(l, max_tokens))),
+        ),
+        (
+            "cum-entropy",
+            levels,
+            Box::new(move |l| {
+                Box::new(CumulativeEntropyPolicy::new(alpha, l, cum_budget, max_tokens))
+            }),
+        ),
+        (
+            "consistency",
+            patiences,
+            Box::new(move |p| {
+                Box::new(AnswerConsistencyPolicy::with_stride(
+                    8, p as usize, max_tokens, 2,
+                ))
+            }),
+        ),
+        (
+            "all(eat&conf)",
+            deltas.clone(),
+            Box::new(move |d| {
+                Box::new(AllOf::new(vec![
+                    Box::new(EatPolicy::new(alpha, d, max_tokens)),
+                    Box::new(ConfidencePolicy::new(alpha, d, max_tokens)),
+                ]))
+            }),
+        ),
+        (
+            "vote(eat+stall+conf)",
+            deltas,
+            Box::new(move |d| {
+                Box::new(WeightedEnsemble::new(
+                    vec![
+                        (2.0, Box::new(EatPolicy::new(alpha, d, max_tokens))),
+                        (1.0, Box::new(StallAwareEatPolicy::new(alpha, d, max_tokens))),
+                        (1.0, Box::new(ConfidencePolicy::new(alpha, d, max_tokens))),
+                    ],
+                    quorum,
+                ))
+            }),
+        ),
+    ];
+
+    let curves: Vec<(String, Curve, Curve)> = families
+        .into_iter()
+        .map(|(name, grid, mk)| {
+            let raw = sweep_policy(traces, &grid, Signal::MainPrefixed, false, name, |d| mk(d));
+            let charged = sweep_policy(traces, &grid, Signal::MainPrefixed, true, name, |d| mk(d));
+            (name.to_string(), raw, charged)
+        })
+        .collect();
+
+    // iso target anchored on the fixed-budget family: the universal
+    // baseline every adaptive rule is trying to beat
+    let token_raw = &curves
+        .iter()
+        .find(|(n, _, _)| n == "token")
+        .expect("zoo always includes the token family")
+        .1;
+    let token_best = token_raw
+        .points
+        .iter()
+        .map(|p| p.agg_pass1)
+        .fold(0.0f64, |m, a| if a.is_finite() { m.max(a) } else { m });
+    let iso = zc.iso_frac * token_best;
+    let token_iso_raw = token_raw.tokens_at_accuracy(iso);
+
+    // one reasoning line per question, in total-token units: the
+    // granularity below which two exit rules are indistinguishable
+    let total_last: f64 = traces
+        .traces
+        .iter()
+        .filter_map(|t| t.points.last())
+        .map(|p| p.tokens as f64)
+        .sum();
+    let total_lines: f64 = traces.traces.iter().map(|t| t.points.len() as f64).sum();
+    let n_traces = traces.traces.len();
+    let eps_tokens = if total_lines > 0.0 {
+        (total_last / total_lines) * n_traces as f64
+    } else {
+        0.0
+    };
+
+    // pooled frontier over the charged curves
+    let pool: Vec<(f64, f64)> = curves
+        .iter()
+        .flat_map(|(_, _, charged)| charged.points.iter().map(|p| (p.total_tokens, p.agg_pass1)))
+        .collect();
+    let mask = pareto_non_dominated(&pool, eps_tokens);
+    let mut offset = 0usize;
+    let families = curves
+        .into_iter()
+        .map(|(family, raw, charged)| {
+            let n_pts = charged.points.len();
+            let on_frontier = mask[offset..offset + n_pts].iter().any(|&m| m);
+            offset += n_pts;
+            let (auc_raw, skipped_raw) = raw.auc_with_skipped();
+            let (auc_charged, skipped_charged) = charged.auc_with_skipped();
+            let iso_tokens_raw = raw.tokens_at_accuracy(iso);
+            let iso_tokens_charged = charged.tokens_at_accuracy(iso);
+            let saving_vs_token_pct = match (iso_tokens_raw, token_iso_raw) {
+                (Some(f), Some(t)) if t > 0.0 => Some(100.0 * (1.0 - f / t)),
+                _ => None,
+            };
+            FamilyResult {
+                mean_exit_line: headline_exit_line(&raw, iso),
+                family,
+                auc_raw,
+                auc_charged,
+                skipped_raw,
+                skipped_charged,
+                iso_tokens_raw,
+                iso_tokens_charged,
+                saving_vs_token_pct,
+                on_frontier,
+                raw,
+                charged,
+            }
+        })
+        .collect();
+
+    ZooReport {
+        dataset: traces.dataset.clone(),
+        n_traces,
+        iso_accuracy: iso,
+        eps_tokens,
+        families,
+    }
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    x.map_or(Json::Null, num_or_null)
+}
+
+fn curve_json(c: &Curve) -> Json {
+    Json::arr(c.points.iter().map(|p: &CurvePoint| {
+        Json::obj(vec![
+            ("threshold", num_or_null(p.threshold)),
+            ("total_tokens", num_or_null(p.total_tokens)),
+            ("agg_pass1", num_or_null(p.agg_pass1)),
+            ("mean_exit_line", num_or_null(p.mean_exit_line)),
+        ])
+    }))
+}
+
+/// Serialize the Pareto table with sorted keys — byte-identical across
+/// runs over the same traces (CI double-runs `repro sweep-zoo` and diffs).
+pub fn zoo_report_json(r: &ZooReport) -> Json {
+    Json::obj(vec![
+        ("dataset", Json::str(r.dataset.clone())),
+        ("n_traces", Json::num(r.n_traces as f64)),
+        ("iso_accuracy", num_or_null(r.iso_accuracy)),
+        ("eps_tokens", num_or_null(r.eps_tokens)),
+        (
+            "families",
+            Json::arr(r.families.iter().map(|f| {
+                Json::obj(vec![
+                    ("family", Json::str(f.family.clone())),
+                    ("auc_raw", num_or_null(f.auc_raw)),
+                    ("auc_charged", num_or_null(f.auc_charged)),
+                    ("skipped_raw", Json::num(f.skipped_raw as f64)),
+                    ("skipped_charged", Json::num(f.skipped_charged as f64)),
+                    ("iso_tokens_raw", opt_num(f.iso_tokens_raw)),
+                    ("iso_tokens_charged", opt_num(f.iso_tokens_charged)),
+                    ("saving_vs_token_pct", opt_num(f.saving_vs_token_pct)),
+                    ("mean_exit_line", num_or_null(f.mean_exit_line)),
+                    ("on_frontier", Json::Bool(f.on_frontier)),
+                    ("curve_raw", curve_json(&f.raw)),
+                    ("curve_charged", curve_json(&f.charged)),
+                ])
+            })),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::{LinePoint, Trace};
+
+    /// Traces with *heterogeneous entropy scales* — the geometry the
+    /// paper's variance rule is built for. Each tuple is
+    /// `(stabilize_at, pre_mid, post_level)`: before stabilization EAT
+    /// oscillates `pre_mid ± 0.5`; after it, EAT sits flat at
+    /// `post_level` — but `post_level` differs *per question* (one
+    /// question settles near 0, another plateaus at 1.2 nats), so no
+    /// single absolute level threshold serves all questions, while a
+    /// scale-free variance rule exits each as soon as its own signal
+    /// flattens. Lines are 24 tokens, so the 3-token probe overhead is
+    /// ~12% (the paper's regime), not 100%.
+    fn step_traces(shapes: &[(usize, f64, f64)]) -> TraceSet {
+        let traces = shapes
+            .iter()
+            .enumerate()
+            .map(|(id, &(st, pre_mid, post_level))| Trace {
+                question_id: id,
+                n_ops: st,
+                answer: Some(1),
+                prompt_tokens: 6,
+                self_terminated: false,
+                reasoning_tokens: vec![0; 60 * 24],
+                points: (1..=60)
+                    .map(|i| {
+                        let osc = (i % 2) as f64; // 0/1 alternation
+                        let stable = i >= st;
+                        LinePoint {
+                            line: i,
+                            tokens: i * 24,
+                            eat: if stable {
+                                post_level
+                            } else {
+                                pre_mid - 0.5 + osc
+                            },
+                            eat_proxy: Some(if stable {
+                                post_level + 0.25
+                            } else {
+                                pre_mid - 0.25 + osc
+                            }),
+                            eat_plain: None,
+                            eat_newline: None,
+                            vhat: f64::INFINITY,
+                            p_correct: if stable { 0.98 } else { 0.1 },
+                            pass1_avgk: if stable { 1.0 } else { 0.1 },
+                            // answer consistency converges a few lines
+                            // after the entropy flattens, one answer at
+                            // a time — no oracle snap-to-1 at `st`
+                            unique_answers: if stable {
+                                (8usize).saturating_sub(i - st).max(1)
+                            } else {
+                                8
+                            },
+                            // settled confidence still jitters a little:
+                            // its variance floor is ~4e-4, not zero
+                            confidence: Some(if stable {
+                                0.88 + 0.04 * osc
+                            } else {
+                                0.2 + 0.2 * osc
+                            }),
+                        }
+                    })
+                    .collect(),
+            })
+            .collect();
+        TraceSet {
+            dataset: "zoo-unit".into(),
+            traces,
+        }
+    }
+
+    /// Easy / medium / hard questions stabilizing at lines 2, 10 and 40,
+    /// settling onto *different* entropy plateaus (0.02, 1.2, 0.5 nats).
+    fn zoo_traces() -> TraceSet {
+        step_traces(&[(2, 2.5, 0.02), (10, 3.5, 1.2), (40, 2.0, 0.5)])
+    }
+
+    #[test]
+    fn zoo_covers_required_families_with_eat_on_frontier() {
+        let ts = zoo_traces();
+        let report = run_zoo(&ts, &ZooConfig::default());
+        let names: Vec<&str> = report.families.iter().map(|f| f.family.as_str()).collect();
+        let req = ["eat", "token", "ua", "confidence", "path-dev", "seq-entropy", "cum-entropy"];
+        for required in req {
+            assert!(names.contains(&required), "missing family {required}");
+        }
+        assert!(
+            names.iter().any(|n| n.contains('(')),
+            "at least one combinator family must race: {names:?}"
+        );
+        assert!(names.len() >= 7);
+        let eat = report.families.iter().find(|f| f.family == "eat").unwrap();
+        assert!(eat.on_frontier, "EAT must own a point of the charged frontier");
+        assert!(eat.auc_raw > 0.0 && eat.auc_charged > 0.0);
+        // the adaptive rule beats the fixed budget at iso-accuracy
+        let saving = eat.saving_vs_token_pct.expect("eat reaches iso-accuracy");
+        assert!(saving > 0.0, "saving={saving}");
+        assert!(report.iso_accuracy > 0.5);
+        assert!(report.eps_tokens > 0.0);
+    }
+
+    #[test]
+    fn zoo_json_is_deterministic_and_sorted() {
+        let ts = step_traces(&[(3, 2.5, 0.02), (20, 3.0, 0.8)]);
+        let a = zoo_report_json(&run_zoo(&ts, &ZooConfig::default())).to_string();
+        let b = zoo_report_json(&run_zoo(&ts, &ZooConfig::default())).to_string();
+        assert_eq!(a, b, "same traces must serialize byte-identically");
+        // BTreeMap keys: "auc_charged" precedes "auc_raw" in each family
+        assert!(a.find("auc_charged").unwrap() < a.find("auc_raw").unwrap());
+    }
+
+    #[test]
+    fn nan_poisoned_trace_still_yields_a_full_report() {
+        let mut ts = zoo_traces();
+        ts.traces[2].points[5].eat = f64::NAN;
+        ts.traces[2].points[5].confidence = Some(f64::NAN);
+        let report = run_zoo(&ts, &ZooConfig::default());
+        assert_eq!(report.families.len(), 11);
+        for f in &report.families {
+            assert!(
+                f.auc_raw.is_finite() && f.auc_charged.is_finite(),
+                "family {} produced a non-finite AUC",
+                f.family
+            );
+        }
+        // serialization also survives
+        let s = zoo_report_json(&report).to_string();
+        assert!(s.contains("\"families\""));
+    }
+
+    #[test]
+    fn frontier_epsilon_dominance_semantics() {
+        // a and b are within one line of tokens at equal accuracy: both
+        // survive; c is strictly worse on both axes: dominated; d is the
+        // cheapest accurate point: survives; NaN never makes the frontier
+        let pts = [(10.0, 0.9), (10.5, 0.9), (20.0, 0.5), (5.0, 0.95), (f64::NAN, 1.0)];
+        let mask = pareto_non_dominated(&pts, 1.0);
+        assert_eq!(mask, vec![true, true, false, true, false]);
+        // with a zero tolerance the strictly-cheaper twin wins alone
+        let tight = pareto_non_dominated(&[(10.0, 0.9), (10.5, 0.9)], 0.0);
+        assert_eq!(tight, vec![true, false]);
+    }
+}

@@ -1,0 +1,475 @@
+//! Policy combinators: conjunction, disjunction and weighted voting over
+//! child [`ExitPolicy`]s, so the zoo's monitors compose into ensembles
+//! without touching the engine.
+//!
+//! Semantics shared by all three:
+//!
+//! * **observe** — every still-undecided child sees every line. A child
+//!   that votes exit is *latched* (it is never observed again; its vote
+//!   stands) rather than re-polled, because a stateful child's decision
+//!   is a stopping time, not a level that can be re-read. The
+//!   combinator's own exit reason is the *binding vote*: the reason of
+//!   the child whose latch completed the quorum on that line.
+//! * **needs** — the [`SignalNeeds::union`] fold of the children, so the
+//!   engine computes every signal any child consumes (rollout strides
+//!   combine by gcd; see `union`).
+//! * **reset** — resets every child and clears all latches.
+//! * **stability** — latched children count as 1.0 (their exit is not
+//!   merely imminent, it has happened); children with no signal yet
+//!   (`None`) are skipped. `AllOf` reports the minimum (the conjunction
+//!   is only as close to exiting as its furthest member), `AnyOf` the
+//!   maximum, [`WeightedEnsemble`] the weight-weighted mean. All report
+//!   `None` until at least one child has a signal — "no data" stays
+//!   neutral for the scheduler.
+//!
+//! The token-budget backstop composes: children share the request's
+//! budget, so each latches `TokenBudget` at the backstop line and every
+//! combinator exits there (a conjunction's effective backstop is the
+//! max of its children's budgets).
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+
+fn union_needs(children: impl Iterator<Item = SignalNeeds>) -> SignalNeeds {
+    children.fold(SignalNeeds::default(), SignalNeeds::union)
+}
+
+/// Exit only when *every* child has voted exit (conservative: spurious
+/// single-monitor exits are vetoed by the rest of the ensemble).
+pub struct AllOf {
+    children: Vec<Box<dyn ExitPolicy>>,
+    latched: Vec<Option<ExitReason>>,
+}
+
+impl AllOf {
+    pub fn new(children: Vec<Box<dyn ExitPolicy>>) -> AllOf {
+        assert!(!children.is_empty(), "AllOf needs at least one child");
+        let latched = vec![None; children.len()];
+        AllOf { children, latched }
+    }
+}
+
+impl ExitPolicy for AllOf {
+    fn name(&self) -> String {
+        let names: Vec<String> = self.children.iter().map(|c| c.name()).collect();
+        format!("all({})", names.join(" & "))
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        let mut binding = None;
+        for (child, latch) in self.children.iter_mut().zip(self.latched.iter_mut()) {
+            if latch.is_some() {
+                continue;
+            }
+            if let ExitDecision::Exit(r) = child.observe(obs) {
+                *latch = Some(r);
+                binding = Some(r);
+            }
+        }
+        match binding {
+            Some(r) if self.latched.iter().all(|l| l.is_some()) => ExitDecision::Exit(r),
+            _ => ExitDecision::Continue,
+        }
+    }
+
+    fn reset(&mut self) {
+        for child in &mut self.children {
+            child.reset();
+        }
+        self.latched.fill(None);
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        union_needs(self.children.iter().map(|c| c.needs()))
+    }
+
+    fn stability(&self) -> Option<f64> {
+        self.children
+            .iter()
+            .zip(&self.latched)
+            .filter_map(|(c, l)| if l.is_some() { Some(1.0) } else { c.stability() })
+            .fold(None, |m: Option<f64>, s| Some(m.map_or(s, |m| m.min(s))))
+    }
+}
+
+/// Exit as soon as *any* child votes exit (aggressive: the cheapest
+/// monitor to trigger ends the request). Children are polled in order
+/// and the first exit short-circuits the rest for that line.
+pub struct AnyOf {
+    children: Vec<Box<dyn ExitPolicy>>,
+}
+
+impl AnyOf {
+    pub fn new(children: Vec<Box<dyn ExitPolicy>>) -> AnyOf {
+        assert!(!children.is_empty(), "AnyOf needs at least one child");
+        AnyOf { children }
+    }
+}
+
+impl ExitPolicy for AnyOf {
+    fn name(&self) -> String {
+        let names: Vec<String> = self.children.iter().map(|c| c.name()).collect();
+        format!("any({})", names.join(" | "))
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        for child in &mut self.children {
+            let d = child.observe(obs);
+            if d.is_exit() {
+                return d;
+            }
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        for child in &mut self.children {
+            child.reset();
+        }
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        union_needs(self.children.iter().map(|c| c.needs()))
+    }
+
+    fn stability(&self) -> Option<f64> {
+        self.children
+            .iter()
+            .filter_map(|c| c.stability())
+            .fold(None, |m: Option<f64>, s| Some(m.map_or(s, |m| m.max(s))))
+    }
+}
+
+/// Weighted vote: exit once the latched children carry at least
+/// `quorum` of the total weight. `quorum` in (0, 1]; 1.0 degenerates to
+/// [`AllOf`], and a quorum at or below the smallest normalized weight
+/// degenerates to [`AnyOf`].
+pub struct WeightedEnsemble {
+    children: Vec<(f64, Box<dyn ExitPolicy>)>,
+    latched: Vec<Option<ExitReason>>,
+    quorum: f64,
+    total_weight: f64,
+}
+
+impl WeightedEnsemble {
+    pub fn new(children: Vec<(f64, Box<dyn ExitPolicy>)>, quorum: f64) -> WeightedEnsemble {
+        assert!(!children.is_empty(), "WeightedEnsemble needs at least one child");
+        assert!(
+            quorum > 0.0 && quorum <= 1.0,
+            "quorum must be in (0, 1], got {quorum}"
+        );
+        let mut total_weight = 0.0;
+        for (w, _) in &children {
+            assert!(w.is_finite() && *w > 0.0, "weights must be finite and positive, got {w}");
+            total_weight += w;
+        }
+        let latched = vec![None; children.len()];
+        WeightedEnsemble {
+            children,
+            latched,
+            quorum,
+            total_weight,
+        }
+    }
+
+    fn latched_weight(&self) -> f64 {
+        self.children
+            .iter()
+            .zip(&self.latched)
+            .filter(|(_, l)| l.is_some())
+            .map(|((w, _), _)| w)
+            .sum()
+    }
+}
+
+impl ExitPolicy for WeightedEnsemble {
+    fn name(&self) -> String {
+        let names: Vec<String> = self
+            .children
+            .iter()
+            .map(|(w, c)| format!("{w}*{}", c.name()))
+            .collect();
+        format!("vote(q={}; {})", self.quorum, names.join(" + "))
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        let mut binding = None;
+        for ((_, child), latch) in self.children.iter_mut().zip(self.latched.iter_mut()) {
+            if latch.is_some() {
+                continue;
+            }
+            if let ExitDecision::Exit(r) = child.observe(obs) {
+                *latch = Some(r);
+                binding = Some(r);
+            }
+        }
+        match binding {
+            Some(r) if self.latched_weight() / self.total_weight >= self.quorum => {
+                ExitDecision::Exit(r)
+            }
+            _ => ExitDecision::Continue,
+        }
+    }
+
+    fn reset(&mut self) {
+        for (_, child) in &mut self.children {
+            child.reset();
+        }
+        self.latched.fill(None);
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        union_needs(self.children.iter().map(|(_, c)| c.needs()))
+    }
+
+    fn stability(&self) -> Option<f64> {
+        let mut wsum = 0.0;
+        let mut acc = 0.0;
+        for ((w, child), latch) in self.children.iter().zip(&self.latched) {
+            let s = if latch.is_some() {
+                Some(1.0)
+            } else {
+                child.stability()
+            };
+            if let Some(s) = s {
+                wsum += w;
+                acc += w * s;
+            }
+        }
+        if wsum > 0.0 {
+            Some(acc / wsum)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exit::{ConfidencePolicy, EatPolicy, UniqueAnswersPolicy};
+
+    /// Deterministic stub: exits with `reason` at the `at`-th observed
+    /// line, and reports a fixed stability.
+    struct ExitAtLine {
+        at: usize,
+        reason: ExitReason,
+        stab: Option<f64>,
+        seen: usize,
+    }
+
+    impl ExitAtLine {
+        fn new(at: usize, reason: ExitReason) -> Box<ExitAtLine> {
+            Box::new(ExitAtLine {
+                at,
+                reason,
+                stab: None,
+                seen: 0,
+            })
+        }
+
+        fn with_stability(at: usize, reason: ExitReason, stab: f64) -> Box<ExitAtLine> {
+            Box::new(ExitAtLine {
+                at,
+                reason,
+                stab: Some(stab),
+                seen: 0,
+            })
+        }
+    }
+
+    impl ExitPolicy for ExitAtLine {
+        fn name(&self) -> String {
+            format!("stub(at={})", self.at)
+        }
+
+        fn observe(&mut self, _obs: &LineObs) -> ExitDecision {
+            self.seen += 1;
+            if self.seen >= self.at {
+                ExitDecision::Exit(self.reason)
+            } else {
+                ExitDecision::Continue
+            }
+        }
+
+        fn reset(&mut self) {
+            self.seen = 0;
+        }
+
+        fn stability(&self) -> Option<f64> {
+            self.stab
+        }
+    }
+
+    fn line(tokens: usize) -> LineObs {
+        LineObs {
+            tokens,
+            eat: Some(1.0),
+            unique_answers: Some(5),
+            confidence: Some(0.4),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_of_waits_for_every_child() {
+        let mut p = AllOf::new(vec![
+            ExitAtLine::new(2, ExitReason::Stable) as Box<dyn ExitPolicy>,
+            ExitAtLine::new(5, ExitReason::AnswersConverged),
+        ]);
+        for i in 1..5 {
+            assert_eq!(p.observe(&line(i * 3)), ExitDecision::Continue, "line {i}");
+        }
+        // the binding vote is the child that completed the conjunction
+        assert_eq!(
+            p.observe(&line(15)),
+            ExitDecision::Exit(ExitReason::AnswersConverged)
+        );
+    }
+
+    #[test]
+    fn any_of_exits_on_first_child() {
+        let mut p = AnyOf::new(vec![
+            ExitAtLine::new(9, ExitReason::Stable) as Box<dyn ExitPolicy>,
+            ExitAtLine::new(3, ExitReason::AnswersConverged),
+        ]);
+        assert_eq!(p.observe(&line(3)), ExitDecision::Continue);
+        assert_eq!(p.observe(&line(6)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&line(9)),
+            ExitDecision::Exit(ExitReason::AnswersConverged)
+        );
+    }
+
+    #[test]
+    fn weighted_quorum_counts_latched_weight() {
+        // weights 2+1+1; quorum 0.5 needs latched weight >= 2
+        let mut p = WeightedEnsemble::new(
+            vec![
+                (2.0, ExitAtLine::new(5, ExitReason::Stable) as Box<dyn ExitPolicy>),
+                (1.0, ExitAtLine::new(2, ExitReason::AnswersConverged)),
+                (1.0, ExitAtLine::new(9, ExitReason::Stalled)),
+            ],
+            0.5,
+        );
+        for i in 1..5 {
+            assert_eq!(p.observe(&line(i * 3)), ExitDecision::Continue, "line {i}");
+        }
+        // line 5: the weight-2 child latches, total 3/4 >= 0.5 — its vote binds
+        assert_eq!(p.observe(&line(15)), ExitDecision::Exit(ExitReason::Stable));
+    }
+
+    #[test]
+    fn quorum_one_is_conjunction() {
+        let mut p = WeightedEnsemble::new(
+            vec![
+                (1.0, ExitAtLine::new(1, ExitReason::Stable) as Box<dyn ExitPolicy>),
+                (3.0, ExitAtLine::new(4, ExitReason::Stalled)),
+            ],
+            1.0,
+        );
+        for i in 1..4 {
+            assert_eq!(p.observe(&line(i * 3)), ExitDecision::Continue, "line {i}");
+        }
+        assert_eq!(p.observe(&line(12)), ExitDecision::Exit(ExitReason::Stalled));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_ensemble() {
+        AllOf::new(vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_quorum() {
+        WeightedEnsemble::new(
+            vec![(1.0, ExitAtLine::new(1, ExitReason::Stable) as Box<dyn ExitPolicy>)],
+            0.0,
+        );
+    }
+
+    #[test]
+    fn needs_is_the_union_of_children() {
+        let p = AllOf::new(vec![
+            Box::new(EatPolicy::new(0.2, 1e-3, 96)) as Box<dyn ExitPolicy>,
+            Box::new(UniqueAnswersPolicy::with_stride(16, 1, 96, 2)),
+            Box::new(ConfidencePolicy::new(0.2, 1e-3, 96)),
+        ]);
+        let n = p.needs();
+        assert!(n.eat && n.confidence);
+        assert_eq!(n.rollouts_k, 16);
+        assert_eq!(n.rollout_every, 2);
+    }
+
+    #[test]
+    fn mixed_strides_union_by_gcd() {
+        // strides 2 and 3: rollouts must be available on lines 2,3,4,6...
+        // — every multiple of gcd(2,3)=1
+        let p = AnyOf::new(vec![
+            Box::new(UniqueAnswersPolicy::with_stride(8, 1, 96, 2)) as Box<dyn ExitPolicy>,
+            Box::new(UniqueAnswersPolicy::with_stride(4, 1, 96, 3)),
+        ]);
+        let n = p.needs();
+        assert_eq!(n.rollouts_k, 8);
+        assert_eq!(n.rollout_every, 1);
+    }
+
+    #[test]
+    fn reset_clears_latches_and_children() {
+        let mut p = AllOf::new(vec![
+            ExitAtLine::new(1, ExitReason::Stable) as Box<dyn ExitPolicy>,
+            ExitAtLine::new(3, ExitReason::Stalled),
+        ]);
+        assert_eq!(p.observe(&line(3)), ExitDecision::Continue); // child 0 latches
+        p.reset();
+        // after reset the conjunction must again wait for BOTH children
+        assert_eq!(p.observe(&line(3)), ExitDecision::Continue);
+        assert_eq!(p.observe(&line(6)), ExitDecision::Continue);
+        assert!(p.observe(&line(9)).is_exit());
+    }
+
+    #[test]
+    fn stability_min_max_and_latched_as_one() {
+        let all = AllOf::new(vec![
+            ExitAtLine::with_stability(99, ExitReason::Stable, 0.3) as Box<dyn ExitPolicy>,
+            ExitAtLine::with_stability(99, ExitReason::Stable, 0.8),
+        ]);
+        assert_eq!(all.stability(), Some(0.3), "conjunction reports its furthest member");
+        let any = AnyOf::new(vec![
+            ExitAtLine::with_stability(99, ExitReason::Stable, 0.3) as Box<dyn ExitPolicy>,
+            ExitAtLine::with_stability(99, ExitReason::Stable, 0.8),
+        ]);
+        assert_eq!(any.stability(), Some(0.8), "disjunction reports its closest member");
+        // a latched child counts as 1.0, not its live stability
+        let mut latched = AllOf::new(vec![
+            ExitAtLine::with_stability(1, ExitReason::Stable, 0.1) as Box<dyn ExitPolicy>,
+            ExitAtLine::with_stability(99, ExitReason::Stable, 0.6),
+        ]);
+        latched.observe(&line(3));
+        assert_eq!(latched.stability(), Some(0.6));
+        // children without a signal are skipped; none reporting -> None
+        let dark = AllOf::new(vec![ExitAtLine::new(99, ExitReason::Stable) as Box<dyn ExitPolicy>]);
+        assert_eq!(dark.stability(), None);
+        // weighted mean over reporting children
+        let vote = WeightedEnsemble::new(
+            vec![
+                (3.0, ExitAtLine::with_stability(99, ExitReason::Stable, 1.0) as Box<dyn ExitPolicy>),
+                (1.0, ExitAtLine::with_stability(99, ExitReason::Stable, 0.0)),
+                (1.0, ExitAtLine::new(99, ExitReason::Stable)),
+            ],
+            0.5,
+        );
+        assert_eq!(vote.stability(), Some(0.75));
+    }
+
+    #[test]
+    fn names_render_the_composition() {
+        let p = WeightedEnsemble::new(
+            vec![(2.0, Box::new(EatPolicy::new(0.2, 1e-3, 96)) as Box<dyn ExitPolicy>)],
+            0.5,
+        );
+        assert!(p.name().starts_with("vote(q=0.5; 2*eat("));
+        let a = AllOf::new(vec![Box::new(EatPolicy::new(0.2, 1e-3, 96)) as Box<dyn ExitPolicy>]);
+        assert!(a.name().starts_with("all(eat("));
+    }
+}

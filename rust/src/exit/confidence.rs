@@ -71,6 +71,17 @@ impl ExitPolicy for ConfidencePolicy {
             ..Default::default()
         }
     }
+
+    fn stability(&self) -> Option<f64> {
+        if self.ema.count() == 0 {
+            // no rollout yet: neutral, never preempted
+            return None;
+        }
+        Some(super::stability_from_vhat(
+            self.ema.debiased_var(),
+            self.delta,
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -108,5 +119,23 @@ mod tests {
     fn needs_confidence_only() {
         let n = ConfidencePolicy::new(0.2, 1e-4, 10).needs();
         assert!(n.confidence && !n.eat && n.rollouts_k == 0);
+    }
+
+    #[test]
+    fn stability_neutral_then_rises_as_confidence_settles() {
+        let mut p = ConfidencePolicy::new(0.2, 1e-4, 10_000);
+        assert_eq!(p.stability(), None, "no rollout yet must read as neutral");
+        for i in 0..4 {
+            p.observe(&obs(i * 3, 0.3 + 0.4 * (i % 2) as f64));
+        }
+        let noisy = p.stability().unwrap();
+        for i in 4..60 {
+            if p.observe(&obs(i * 3, 0.97)).is_exit() {
+                break;
+            }
+        }
+        let settled = p.stability().unwrap();
+        assert!(settled > noisy, "{noisy} -> {settled}");
+        assert!(noisy > 0.0 && settled <= 1.0);
     }
 }

@@ -1,0 +1,212 @@
+//! Answer-consistency probe (Dynamic Early Exit, arxiv 2504.15895): at a
+//! fixed line stride, roll out K candidate answers and exit once they
+//! *stay* unanimous for `patience` consecutive evaluations — consistency
+//! sustained over time, not the single-shot #UA@K threshold of Alg. 3.
+//! The streak requirement is what distinguishes this probe from
+//! [`super::UniqueAnswersPolicy`]: one lucky unanimous evaluation during
+//! exploration does not end the request. Cost per evaluation is the same
+//! K rollouts, so the zoo's overhead-charged sweep prices both
+//! identically.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+
+#[derive(Debug, Clone, Copy)]
+pub struct AnswerConsistencyPolicy {
+    /// Number of rollouts K per evaluation.
+    pub k: usize,
+    /// Consecutive unanimous evaluations required before exiting.
+    pub patience: usize,
+    /// Max thinking tokens T.
+    pub max_tokens: usize,
+    /// Evaluate only every `every` lines (budget-matched sparse mode).
+    pub every: usize,
+    streak: usize,
+    seen_lines: usize,
+}
+
+impl AnswerConsistencyPolicy {
+    pub fn new(k: usize, patience: usize, max_tokens: usize) -> Self {
+        Self::with_stride(k, patience, max_tokens, 1)
+    }
+
+    pub fn with_stride(k: usize, patience: usize, max_tokens: usize, every: usize) -> Self {
+        assert!(k > 0 && patience >= 1 && every >= 1);
+        AnswerConsistencyPolicy {
+            k,
+            patience,
+            max_tokens,
+            every,
+            streak: 0,
+            seen_lines: 0,
+        }
+    }
+
+    /// Current run of consecutive unanimous evaluations.
+    pub fn streak(&self) -> usize {
+        self.streak
+    }
+}
+
+impl ExitPolicy for AnswerConsistencyPolicy {
+    fn name(&self) -> String {
+        format!(
+            "consistency(K={},patience={},T={},every={})",
+            self.k, self.patience, self.max_tokens, self.every
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        self.seen_lines += 1;
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        if self.seen_lines % self.every == 0 {
+            let ua = obs
+                .unique_answers
+                .expect("AnswerConsistencyPolicy requires rollouts");
+            if ua <= 1 {
+                self.streak += 1;
+                if self.streak >= self.patience {
+                    return ExitDecision::Exit(ExitReason::AnswersConverged);
+                }
+            } else {
+                self.streak = 0;
+            }
+        }
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.streak = 0;
+        self.seen_lines = 0;
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            rollouts_k: self.k,
+            rollout_every: self.every,
+            ..Default::default()
+        }
+    }
+
+    fn stability(&self) -> Option<f64> {
+        if self.seen_lines / self.every == 0 {
+            // no evaluation yet: neutral, never preempted
+            return None;
+        }
+        // streak progress toward the patience bar, in (0, 1]
+        Some(((self.streak + 1) as f64 / (self.patience + 1) as f64).min(1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tokens: usize, ua: usize) -> LineObs {
+        LineObs {
+            tokens,
+            unique_answers: Some(ua),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exits_after_sustained_consistency() {
+        let mut p = AnswerConsistencyPolicy::new(8, 2, 1000);
+        assert_eq!(p.observe(&obs(3, 5)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(6, 1)), ExitDecision::Continue, "streak 1 of 2");
+        assert_eq!(
+            p.observe(&obs(9, 1)),
+            ExitDecision::Exit(ExitReason::AnswersConverged)
+        );
+    }
+
+    #[test]
+    fn disagreement_resets_the_streak() {
+        let mut p = AnswerConsistencyPolicy::new(8, 2, 1000);
+        p.observe(&obs(3, 1));
+        assert_eq!(p.streak(), 1);
+        p.observe(&obs(6, 4)); // disagreement: start over
+        assert_eq!(p.streak(), 0);
+        assert_eq!(p.observe(&obs(9, 1)), ExitDecision::Continue);
+        assert!(p.observe(&obs(12, 1)).is_exit());
+    }
+
+    #[test]
+    fn stride_cannot_exit_before_the_first_evaluation_line() {
+        let mut p = AnswerConsistencyPolicy::with_stride(8, 1, 1000, 3);
+        // lines 1-2: no evaluation, unanimity invisible
+        assert_eq!(p.observe(&obs(3, 1)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(6, 1)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(9, 1)),
+            ExitDecision::Exit(ExitReason::AnswersConverged)
+        );
+    }
+
+    #[test]
+    fn budget_backstop() {
+        let mut p = AnswerConsistencyPolicy::new(8, 99, 6);
+        assert_eq!(p.observe(&obs(3, 1)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(6, 1)),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn self_termination_wins() {
+        let mut p = AnswerConsistencyPolicy::new(8, 1, 1000);
+        let d = p.observe(&LineObs {
+            tokens: 3,
+            unique_answers: Some(1),
+            self_terminated: true,
+            ..Default::default()
+        });
+        assert_eq!(d, ExitDecision::Exit(ExitReason::SelfTerminated));
+    }
+
+    #[test]
+    fn reset_clears_streak_and_stride_phase() {
+        let mut p = AnswerConsistencyPolicy::with_stride(8, 2, 1000, 2);
+        p.observe(&obs(3, 5));
+        p.observe(&obs(6, 1)); // eval line: streak 1
+        assert_eq!(p.streak(), 1);
+        p.reset();
+        assert_eq!(p.streak(), 0);
+        assert_eq!(p.stability(), None);
+        // stride phase restarted: line 1 is again a non-eval line
+        assert_eq!(
+            p.observe(&LineObs {
+                tokens: 3,
+                ..Default::default()
+            }),
+            ExitDecision::Continue
+        );
+    }
+
+    #[test]
+    fn needs_k_rollouts_at_stride() {
+        let n = AnswerConsistencyPolicy::with_stride(16, 2, 10, 4).needs();
+        assert_eq!(n.rollouts_k, 16);
+        assert_eq!(n.rollout_every, 4);
+        assert!(!n.eat && !n.confidence);
+    }
+
+    #[test]
+    fn stability_tracks_streak_progress() {
+        let mut p = AnswerConsistencyPolicy::new(8, 3, 10_000);
+        assert_eq!(p.stability(), None);
+        p.observe(&obs(3, 9));
+        let cold = p.stability().unwrap();
+        p.observe(&obs(6, 1));
+        p.observe(&obs(9, 1));
+        let warm = p.stability().unwrap();
+        assert!(warm > cold, "{cold} -> {warm}");
+        assert!(warm <= 1.0);
+    }
+}

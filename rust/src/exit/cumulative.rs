@@ -1,0 +1,227 @@
+//! Cumulative-entropy regulator (arxiv 2510.02249): budget the *total*
+//! uncertainty a request may spend, not its token count. Two dials:
+//!
+//!   * a smoothed level rule — exit `Stable` once the de-biased EMA mean
+//!     of the EAT signal drops below `level` (the model has become
+//!     confident about its answer), and
+//!   * an entropy budget — retire the request `Stalled` once the running
+//!     sum of EAT over all lines exceeds `budget_nats`: it has already
+//!     spent more total uncertainty than a productive trajectory ever
+//!     does, so further reasoning is thrash.
+//!
+//! The entropy budget is the interesting half: unlike a token budget it
+//! charges *hard* lines more than easy ones, so a request burning budget
+//! on a high-entropy plateau is cut long before an equally-long but
+//! confident trajectory would be.
+//!
+//! NaN contract: a NaN sample poisons both the EMA and the running sum;
+//! every comparison is false afterwards and only the token backstop
+//! fires — degenerate traces finish, they never panic.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+use crate::monitor::EmaVar;
+
+/// Default total-entropy budget (nats). Sized for the synthetic
+/// chainsum traces: a productive trajectory spends a few nats per
+/// exploration line for a handful of lines; thrash spends hundreds.
+pub const DEFAULT_CUM_BUDGET_NATS: f64 = 64.0;
+
+#[derive(Debug, Clone)]
+pub struct CumulativeEntropyPolicy {
+    /// EMA timescale for the smoothed level rule.
+    pub alpha: f64,
+    /// Confidence level (nats): exit when the de-biased EMA mean < level.
+    pub level: f64,
+    /// Total-entropy budget (nats): retire once sum(EAT) >= budget.
+    pub budget_nats: f64,
+    /// Max thinking tokens T (the universal backstop).
+    pub max_tokens: usize,
+    ema: EmaVar,
+    cum: f64,
+}
+
+impl CumulativeEntropyPolicy {
+    pub fn new(
+        alpha: f64,
+        level: f64,
+        budget_nats: f64,
+        max_tokens: usize,
+    ) -> CumulativeEntropyPolicy {
+        CumulativeEntropyPolicy {
+            alpha,
+            level,
+            budget_nats,
+            max_tokens,
+            ema: EmaVar::new(alpha),
+            cum: 0.0,
+        }
+    }
+
+    /// Total entropy spent so far (nats).
+    pub fn spent(&self) -> f64 {
+        self.cum
+    }
+}
+
+impl ExitPolicy for CumulativeEntropyPolicy {
+    fn name(&self) -> String {
+        format!(
+            "cum-entropy(alpha={},level={:.3e},B={},T={})",
+            self.alpha, self.level, self.budget_nats, self.max_tokens
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        let eat = obs
+            .eat
+            .expect("CumulativeEntropyPolicy requires the EAT signal (needs().eat)");
+        self.cum += eat;
+        self.ema.update(eat);
+        if self.ema.debiased_mean() < self.level {
+            return ExitDecision::Exit(ExitReason::Stable);
+        }
+        if self.cum >= self.budget_nats {
+            return ExitDecision::Exit(ExitReason::Stalled);
+        }
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.ema = EmaVar::new(self.alpha);
+        self.cum = 0.0;
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            eat: true,
+            ..Default::default()
+        }
+    }
+
+    fn stability(&self) -> Option<f64> {
+        if self.ema.count() == 0 {
+            return None;
+        }
+        Some(super::stability_from_vhat(
+            self.ema.debiased_mean(),
+            self.level,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tokens: usize, eat: f64) -> LineObs {
+        LineObs {
+            tokens,
+            eat: Some(eat),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exits_stable_when_smoothed_entropy_drops() {
+        let mut p = CumulativeEntropyPolicy::new(0.3, 0.1, 1e9, 10_000);
+        for i in 0..5 {
+            assert_eq!(p.observe(&obs(i * 3, 2.0)), ExitDecision::Continue);
+        }
+        let mut exited = false;
+        for i in 5..60 {
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, 0.01)) {
+                assert_eq!(r, ExitReason::Stable);
+                exited = true;
+                break;
+            }
+        }
+        assert!(exited);
+    }
+
+    #[test]
+    fn entropy_budget_retires_thrashing_requests() {
+        // a high-entropy plateau never satisfies the level rule but burns
+        // through the nat budget: 3 nats/line against a 10-nat budget
+        let mut p = CumulativeEntropyPolicy::new(0.3, 1e-6, 10.0, 10_000);
+        assert_eq!(p.observe(&obs(3, 3.0)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(6, 3.0)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(9, 3.0)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(12, 3.0)),
+            ExitDecision::Exit(ExitReason::Stalled)
+        );
+        assert!(p.spent() >= 10.0);
+    }
+
+    #[test]
+    fn confident_lines_charge_less_than_hard_ones() {
+        // same line count, lower entropy: the confident trajectory has
+        // spent far less of its budget
+        let mut hard = CumulativeEntropyPolicy::new(0.3, 1e-9, 1e9, 10_000);
+        let mut easy = CumulativeEntropyPolicy::new(0.3, 1e-9, 1e9, 10_000);
+        for i in 0..10 {
+            hard.observe(&obs(i * 3, 3.0));
+            easy.observe(&obs(i * 3, 0.3));
+        }
+        assert!(easy.spent() < hard.spent() / 5.0);
+    }
+
+    #[test]
+    fn budget_backstop() {
+        let mut p = CumulativeEntropyPolicy::new(0.3, 1e-12, 1e9, 6);
+        assert_eq!(p.observe(&obs(3, 2.0)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(6, 2.0)),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn self_termination_wins() {
+        let mut p = CumulativeEntropyPolicy::new(0.3, 0.1, 10.0, 1000);
+        let d = p.observe(&LineObs {
+            tokens: 3,
+            eat: Some(2.0),
+            self_terminated: true,
+            ..Default::default()
+        });
+        assert_eq!(d, ExitDecision::Exit(ExitReason::SelfTerminated));
+    }
+
+    #[test]
+    fn nan_sample_disables_adaptive_exits_not_the_backstop() {
+        let mut p = CumulativeEntropyPolicy::new(0.3, 10.0, 1.0, 9);
+        p.observe(&obs(3, f64::NAN));
+        // both the level rule and the nat budget are poisoned...
+        assert_eq!(p.observe(&obs(6, 0.01)), ExitDecision::Continue);
+        // ...but the token backstop still fires
+        assert_eq!(
+            p.observe(&obs(9, 0.01)),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = CumulativeEntropyPolicy::new(0.3, 0.1, 10.0, 1000);
+        for i in 0..3 {
+            p.observe(&obs(i * 3, 2.0));
+        }
+        assert!(p.spent() > 0.0);
+        p.reset();
+        assert_eq!(p.spent(), 0.0);
+        assert_eq!(p.stability(), None);
+    }
+
+    #[test]
+    fn needs_eat_only() {
+        let n = CumulativeEntropyPolicy::new(0.3, 0.1, 10.0, 10).needs();
+        assert!(n.eat && !n.confidence && n.rollouts_k == 0);
+    }
+}

@@ -1,19 +1,34 @@
-//! Early-exit policies: the paper's contribution (EAT, Alg. 1) and every
+//! Early-exit policies: the paper's contribution (EAT, Alg. 1), every
 //! baseline it compares against (token budget Alg. 2, #UA@K Alg. 3,
-//! confidence Eq. 16).
+//! confidence Eq. 16), and the wider stopping-rule zoo from the related
+//! literature (DESIGN.md §3.9): reasoning-path deviation (arxiv
+//! 2603.14251), sequence-level entropy (arxiv 2510.08146),
+//! answer-consistency probing (arxiv 2504.15895), cumulative-entropy
+//! regulation (arxiv 2510.02249), plus [`AllOf`]/[`AnyOf`]/
+//! [`WeightedEnsemble`] combinators that compose any of them.
 //!
 //! A policy is a pure state machine over per-line observations, so the
 //! same implementation runs both *online* in the serving engine and
 //! *offline* in the replay harness (paper App. H simulated early exiting).
 
+pub mod combinators;
 pub mod confidence;
+pub mod consistency;
+pub mod cumulative;
 pub mod eat;
+pub mod path_deviation;
+pub mod seq_entropy;
 pub mod stall;
 pub mod token_budget;
 pub mod unique_answers;
 
+pub use combinators::{AllOf, AnyOf, WeightedEnsemble};
 pub use confidence::ConfidencePolicy;
+pub use consistency::AnswerConsistencyPolicy;
+pub use cumulative::{CumulativeEntropyPolicy, DEFAULT_CUM_BUDGET_NATS};
 pub use eat::EatPolicy;
+pub use path_deviation::PathDeviationPolicy;
+pub use seq_entropy::SequenceEntropyPolicy;
 pub use stall::StallAwareEatPolicy;
 pub use token_budget::TokenBudgetPolicy;
 pub use unique_answers::UniqueAnswersPolicy;
@@ -125,6 +140,36 @@ impl Default for SignalNeeds {
     }
 }
 
+impl SignalNeeds {
+    /// Combine two requirement sets — what a combinator's `needs()` must
+    /// report so the engine computes every signal any child consumes.
+    /// Booleans and K union upward; rollout strides combine by **gcd**,
+    /// because a child with stride `s` evaluates on lines that are
+    /// multiples of `s`, and every such line is a multiple of the gcd —
+    /// the engine's single stride must serve all children's evaluation
+    /// lines. A side with no rollouts contributes no stride constraint.
+    pub fn union(self, other: SignalNeeds) -> SignalNeeds {
+        fn gcd(a: usize, b: usize) -> usize {
+            if b == 0 {
+                a
+            } else {
+                gcd(b, a % b)
+            }
+        }
+        let rollout_every = match (self.rollouts_k > 0, other.rollouts_k > 0) {
+            (true, true) => gcd(self.rollout_every, other.rollout_every).max(1),
+            (true, false) => self.rollout_every,
+            (false, _) => other.rollout_every,
+        };
+        SignalNeeds {
+            eat: self.eat || other.eat,
+            rollouts_k: self.rollouts_k.max(other.rollouts_k),
+            rollout_every,
+            confidence: self.confidence || other.confidence,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +178,40 @@ mod tests {
     fn decision_helpers() {
         assert!(!ExitDecision::Continue.is_exit());
         assert!(ExitDecision::Exit(ExitReason::Stable).is_exit());
+    }
+
+    #[test]
+    fn needs_union_folds_signals_and_strides() {
+        let eat = SignalNeeds {
+            eat: true,
+            ..Default::default()
+        };
+        let conf = SignalNeeds {
+            confidence: true,
+            ..Default::default()
+        };
+        let u = eat.union(conf);
+        assert!(u.eat && u.confidence && u.rollouts_k == 0);
+
+        // strides: gcd when both sides roll out, pass-through otherwise
+        let ua6 = SignalNeeds {
+            rollouts_k: 8,
+            rollout_every: 6,
+            ..Default::default()
+        };
+        let ua4 = SignalNeeds {
+            rollouts_k: 16,
+            rollout_every: 4,
+            ..Default::default()
+        };
+        let both = ua6.union(ua4);
+        assert_eq!(both.rollouts_k, 16);
+        assert_eq!(both.rollout_every, 2, "gcd(6,4)");
+        let one_sided = ua6.union(eat);
+        assert_eq!(one_sided.rollout_every, 6, "a rollout-free side adds no constraint");
+        assert_eq!(eat.union(ua4).rollout_every, 4);
+        // union with the default is the identity
+        assert_eq!(ua6.union(SignalNeeds::default()), ua6);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Reasoning-path-deviation monitor (arxiv 2603.14251): track the EAT
+//! trajectory as a running "reasoning path" (EMA mean) and watch the
+//! squared innovation of each new line against that path,
+//!
+//!   d_n = x_n - M_{n-1},      D_n = (1-a) D_{n-1} + a d_n^2,
+//!
+//! exiting when the de-biased innovation energy D'_n falls below delta:
+//! the model has stopped deviating from its established path, so further
+//! reasoning is re-treading it. Structurally this is Alg. 1 evaluated on
+//! the *pre-update* deviation — it shares EAT's one-probe cost and its
+//! (0,1] stability mapping, which is exactly what makes it a fair zoo
+//! competitor.
+//!
+//! NaN contract: a NaN EAT sample poisons both EMAs, every comparison
+//! against delta is false from then on, and only the token-budget
+//! backstop fires — degenerate traces finish, they never panic.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+use crate::monitor::EmaVar;
+
+#[derive(Debug, Clone)]
+pub struct PathDeviationPolicy {
+    /// EMA timescale for both the path and the deviation monitor.
+    pub alpha: f64,
+    /// Innovation-energy threshold (exit when D' < delta).
+    pub delta: f64,
+    /// Max thinking tokens T.
+    pub max_tokens: usize,
+    /// Deviation evaluations required before the adaptive exit can fire
+    /// (the first line only seeds the path and produces no deviation).
+    pub min_evals: u64,
+    path: EmaVar,
+    dev: EmaVar,
+}
+
+impl PathDeviationPolicy {
+    pub fn new(alpha: f64, delta: f64, max_tokens: usize) -> PathDeviationPolicy {
+        PathDeviationPolicy {
+            alpha,
+            delta,
+            max_tokens,
+            min_evals: 2,
+            path: EmaVar::new(alpha),
+            dev: EmaVar::new(alpha),
+        }
+    }
+
+    /// Current de-biased innovation energy D' (for traces/figures);
+    /// +inf until the second observation.
+    pub fn deviation(&self) -> f64 {
+        self.dev.debiased_mean()
+    }
+}
+
+impl ExitPolicy for PathDeviationPolicy {
+    fn name(&self) -> String {
+        format!(
+            "path-dev(alpha={},delta={:.3e},T={})",
+            self.alpha, self.delta, self.max_tokens
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        let eat = obs
+            .eat
+            .expect("PathDeviationPolicy requires the EAT signal (needs().eat)");
+        if self.path.count() == 0 {
+            // first line seeds the path; there is no deviation yet
+            self.path.update(eat);
+        } else {
+            let d = eat - self.path.mean();
+            self.dev.update(d * d);
+            self.path.update(eat);
+            if self.dev.count() >= self.min_evals && self.dev.debiased_mean() < self.delta {
+                return ExitDecision::Exit(ExitReason::Stable);
+            }
+        }
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.path = EmaVar::new(self.alpha);
+        self.dev = EmaVar::new(self.alpha);
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            eat: true,
+            ..Default::default()
+        }
+    }
+
+    fn stability(&self) -> Option<f64> {
+        if self.dev.count() == 0 {
+            // path not established yet: neutral, never preempted
+            return None;
+        }
+        Some(super::stability_from_vhat(
+            self.dev.debiased_mean(),
+            self.delta,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tokens: usize, eat: f64) -> LineObs {
+        LineObs {
+            tokens,
+            eat: Some(eat),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exits_when_path_stops_deviating() {
+        let mut p = PathDeviationPolicy::new(0.2, 1e-4, 10_000);
+        for i in 0..10 {
+            let d = p.observe(&obs(i * 3, 3.0 + (i % 3) as f64));
+            assert_eq!(d, ExitDecision::Continue, "line {i}");
+        }
+        let mut exited = false;
+        for i in 10..80 {
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, 0.05)) {
+                assert_eq!(r, ExitReason::Stable);
+                exited = true;
+                break;
+            }
+        }
+        assert!(exited);
+    }
+
+    #[test]
+    fn first_observation_only_seeds_the_path() {
+        // even a loose threshold cannot fire on line 1: there is no
+        // deviation to measure yet
+        let mut p = PathDeviationPolicy::new(0.2, 10.0, 10_000);
+        assert_eq!(p.observe(&obs(3, 0.0)), ExitDecision::Continue);
+        assert!(p.deviation().is_infinite());
+    }
+
+    #[test]
+    fn budget_backstop() {
+        let mut p = PathDeviationPolicy::new(0.2, 1e-12, 30);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut last = ExitDecision::Continue;
+        for i in 1..=11 {
+            last = p.observe(&obs(i * 3, rng.f64() * 4.0));
+            if last.is_exit() {
+                break;
+            }
+        }
+        assert_eq!(last, ExitDecision::Exit(ExitReason::TokenBudget));
+    }
+
+    #[test]
+    fn self_termination_wins() {
+        let mut p = PathDeviationPolicy::new(0.2, 1e-4, 1000);
+        let d = p.observe(&LineObs {
+            tokens: 3,
+            eat: Some(2.0),
+            self_terminated: true,
+            ..Default::default()
+        });
+        assert_eq!(d, ExitDecision::Exit(ExitReason::SelfTerminated));
+    }
+
+    #[test]
+    fn nan_sample_disables_the_adaptive_exit_not_the_backstop() {
+        let mut p = PathDeviationPolicy::new(0.2, 1.0, 12);
+        p.observe(&obs(3, 0.02));
+        p.observe(&obs(6, f64::NAN));
+        // poisoned monitor: comparisons are false, no Stable exit ever...
+        assert_eq!(p.observe(&obs(9, 0.02)), ExitDecision::Continue);
+        // ...but the token budget still terminates the request
+        assert_eq!(
+            p.observe(&obs(12, 0.02)),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = PathDeviationPolicy::new(0.2, 1e-4, 1000);
+        for i in 0..50 {
+            p.observe(&obs(i, 0.5));
+        }
+        assert!(p.deviation() < 1e-4);
+        p.reset();
+        assert!(p.deviation().is_infinite());
+        assert_eq!(p.stability(), None);
+    }
+
+    #[test]
+    fn needs_eat_only() {
+        let n = PathDeviationPolicy::new(0.2, 1e-4, 10).needs();
+        assert!(n.eat && !n.confidence && n.rollouts_k == 0);
+    }
+
+    #[test]
+    fn stability_rises_as_the_path_settles() {
+        let mut p = PathDeviationPolicy::new(0.2, 1e-4, 10_000);
+        assert_eq!(p.stability(), None);
+        for i in 0..4 {
+            p.observe(&obs(i * 3, 3.0 + (i % 2) as f64));
+        }
+        let noisy = p.stability().unwrap();
+        for i in 4..60 {
+            if p.observe(&obs(i * 3, 0.05)).is_exit() {
+                break;
+            }
+        }
+        let settled = p.stability().unwrap();
+        assert!(settled > noisy, "{noisy} -> {settled}");
+    }
+}

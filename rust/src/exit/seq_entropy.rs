@@ -1,0 +1,190 @@
+//! Sequence-level entropy as confidence (Think Just Enough, arxiv
+//! 2510.08146): treat the running *mean* EAT over all lines so far as a
+//! sequence-level confidence proxy and exit once it drops below a fixed
+//! level — the model is, on average over the whole trajectory, confident
+//! about what follows its reasoning. Unlike EAT's variance rule this is
+//! a level rule on the unwindowed mean: cheap (same one-probe signal),
+//! but it forgets nothing, so an expensive early exploration phase
+//! delays the exit long after the signal has settled — precisely the
+//! contrast the zoo's Pareto table is built to expose.
+//!
+//! NaN contract: one NaN sample poisons the running mean; the level
+//! comparison is false forever after and only the token-budget backstop
+//! fires. Degenerate traces finish, they never panic.
+
+use super::{ExitDecision, ExitPolicy, ExitReason, LineObs, SignalNeeds};
+
+#[derive(Debug, Clone, Copy)]
+pub struct SequenceEntropyPolicy {
+    /// Entropy level (nats): exit when the mean EAT so far < level.
+    pub level: f64,
+    /// Max thinking tokens T.
+    pub max_tokens: usize,
+    /// Lines required before the adaptive exit can fire (a one-line mean
+    /// is not a sequence-level statistic).
+    pub min_lines: usize,
+    sum: f64,
+    n: usize,
+}
+
+impl SequenceEntropyPolicy {
+    pub fn new(level: f64, max_tokens: usize) -> SequenceEntropyPolicy {
+        SequenceEntropyPolicy {
+            level,
+            max_tokens,
+            min_lines: 3,
+            sum: 0.0,
+            n: 0,
+        }
+    }
+
+    /// Mean EAT over every line observed so far; +inf before the first
+    /// observation (a fresh policy can never read as confident).
+    pub fn mean_entropy(&self) -> f64 {
+        if self.n == 0 {
+            return f64::INFINITY;
+        }
+        self.sum / self.n as f64
+    }
+}
+
+impl ExitPolicy for SequenceEntropyPolicy {
+    fn name(&self) -> String {
+        format!(
+            "seq-entropy(level={:.3e},T={})",
+            self.level, self.max_tokens
+        )
+    }
+
+    fn observe(&mut self, obs: &LineObs) -> ExitDecision {
+        if obs.self_terminated {
+            return ExitDecision::Exit(ExitReason::SelfTerminated);
+        }
+        let eat = obs
+            .eat
+            .expect("SequenceEntropyPolicy requires the EAT signal (needs().eat)");
+        self.sum += eat;
+        self.n += 1;
+        if self.n >= self.min_lines && self.mean_entropy() < self.level {
+            return ExitDecision::Exit(ExitReason::Stable);
+        }
+        if obs.tokens >= self.max_tokens {
+            return ExitDecision::Exit(ExitReason::TokenBudget);
+        }
+        ExitDecision::Continue
+    }
+
+    fn reset(&mut self) {
+        self.sum = 0.0;
+        self.n = 0;
+    }
+
+    fn needs(&self) -> SignalNeeds {
+        SignalNeeds {
+            eat: true,
+            ..Default::default()
+        }
+    }
+
+    fn stability(&self) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        Some(super::stability_from_vhat(self.mean_entropy(), self.level))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tokens: usize, eat: f64) -> LineObs {
+        LineObs {
+            tokens,
+            eat: Some(eat),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exits_when_mean_entropy_drops_below_level() {
+        let mut p = SequenceEntropyPolicy::new(0.5, 10_000);
+        for i in 0..5 {
+            assert_eq!(p.observe(&obs(i * 3, 2.0)), ExitDecision::Continue);
+        }
+        // mean decays as low lines accumulate: (5*2.0 + k*0.01) / (5+k)
+        let mut exited = false;
+        for i in 5..40 {
+            if let ExitDecision::Exit(r) = p.observe(&obs(i * 3, 0.01)) {
+                assert_eq!(r, ExitReason::Stable);
+                exited = true;
+                break;
+            }
+        }
+        assert!(exited);
+        assert!(p.mean_entropy() < 0.5);
+    }
+
+    #[test]
+    fn min_lines_gate_blocks_early_exit() {
+        let mut p = SequenceEntropyPolicy::new(1.0, 10_000);
+        // lines 1 and 2 sit below the level but cannot exit yet
+        assert_eq!(p.observe(&obs(3, 0.01)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(6, 0.01)), ExitDecision::Continue);
+        assert!(p.observe(&obs(9, 0.01)).is_exit());
+    }
+
+    #[test]
+    fn budget_backstop() {
+        let mut p = SequenceEntropyPolicy::new(1e-12, 9);
+        assert_eq!(p.observe(&obs(3, 2.0)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(6, 2.0)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(9, 2.0)),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn self_termination_wins() {
+        let mut p = SequenceEntropyPolicy::new(0.5, 1000);
+        let d = p.observe(&LineObs {
+            tokens: 3,
+            eat: Some(2.0),
+            self_terminated: true,
+            ..Default::default()
+        });
+        assert_eq!(d, ExitDecision::Exit(ExitReason::SelfTerminated));
+    }
+
+    #[test]
+    fn nan_sample_disables_the_adaptive_exit_not_the_backstop() {
+        let mut p = SequenceEntropyPolicy::new(10.0, 12);
+        p.observe(&obs(3, f64::NAN));
+        assert_eq!(p.observe(&obs(6, 0.01)), ExitDecision::Continue);
+        assert_eq!(p.observe(&obs(9, 0.01)), ExitDecision::Continue);
+        assert_eq!(
+            p.observe(&obs(12, 0.01)),
+            ExitDecision::Exit(ExitReason::TokenBudget)
+        );
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = SequenceEntropyPolicy::new(0.5, 1000);
+        for i in 0..10 {
+            p.observe(&obs(i, 0.01));
+        }
+        p.reset();
+        assert!(p.mean_entropy().is_infinite());
+        assert_eq!(p.stability(), None);
+        // a fresh start must again need min_lines before exiting
+        assert_eq!(p.observe(&obs(3, 0.01)), ExitDecision::Continue);
+    }
+
+    #[test]
+    fn needs_eat_only() {
+        let n = SequenceEntropyPolicy::new(0.5, 10).needs();
+        assert!(n.eat && !n.confidence && n.rollouts_k == 0);
+    }
+}

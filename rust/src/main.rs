@@ -20,13 +20,13 @@ use eat_serve::blackbox::{
 };
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::{
-    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, Cluster, ClusterConfig,
+    poisson_arrivals, run_open_loop, zoo_policy_factory, Batcher, Cluster, ClusterConfig,
     MetricsReport, MonitorModel, PolicyFactory, RoutePolicy, DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::eval::figures::{self, FigureCtx};
-use eat_serve::eval::{TraceGen, TraceSet};
-use eat_serve::exit::{EatPolicy, TokenBudgetPolicy};
+use eat_serve::eval::{run_zoo, zoo_report_json, TraceGen, TraceSet, ZooConfig};
+use eat_serve::exit::EatPolicy;
 use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::cli::{
     render_flags, Args, ServeArgs, ServeMode, SERVE_BLACKBOX_FLAGS, SERVE_CLUSTER_FLAGS,
@@ -55,6 +55,11 @@ COMMANDS
                                  = blackbox)
   trace     --dataset D [--out FILE] [--max-questions N] [--swap-models]
             [--no-confidence] [--seed K]
+  sweep-zoo [--traces FILE | --dataset D --questions N] [--iso-frac F]
+            [--out FILE]  race every exit-policy family (EAT, token,
+            #UA@K, confidence, path-dev, seq-entropy, cum-entropy,
+            consistency + combinators) over one trace set; prints the
+            per-family Pareto table, writes sorted-key JSON with --out
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
   blackbox  [--questions N] [--chunk C] [--delta X]
   bench-diff BASE NEW [--tol X]  compare BENCH_*.json snapshots (two
@@ -139,14 +144,9 @@ fn sched_from_args(args: &Args, cfg: &mut ServeConfig) -> Result<()> {
 }
 
 /// Exit-policy factory shared by `serve single` and `serve cluster`
-/// (the cluster mints one per replica).
+/// (the cluster mints one per replica): any zoo family runs online.
 fn policy_from_args(args: &Args, cfg: &ServeConfig) -> Result<PolicyFactory> {
-    let budget = cfg.max_think_tokens;
-    match args.str_or("policy", "eat") {
-        "eat" => Ok(eat_policy_factory(cfg)),
-        "token" => Ok(Box::new(move || Box::new(TokenBudgetPolicy::new(budget)))),
-        other => anyhow::bail!("unknown --policy `{other}`"),
-    }
+    zoo_policy_factory(args.str_or("policy", "eat"), cfg)
 }
 
 /// Paged store selection + tuning-flag validation shared by every
@@ -474,6 +474,72 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sweep-zoo`: the exit-policy Pareto race (DESIGN.md §3.9). Loads a
+/// recorded trace set with `--traces`, otherwise generates seeded
+/// chainsum traces on the fly (deterministic on the reference backend —
+/// CI double-runs this and diffs the JSON byte-for-byte).
+fn cmd_sweep_zoo(args: &Args) -> Result<()> {
+    let cfg = serve_cfg(args);
+    let traces = match args.str_opt("traces") {
+        Some(path) => TraceSet::load(std::path::Path::new(path))?,
+        None => {
+            let rt = load_runtime(args)?;
+            let ds = Dataset::by_name(
+                args.str_or("dataset", "synth-math500-small"),
+                &rt.vocab,
+                cfg.seed,
+            )?;
+            let n = args.usize_or("questions", 24).min(ds.questions.len());
+            let mut tracegen = TraceGen::new(&rt, cfg.clone());
+            let mut traces = Vec::new();
+            for q in ds.questions.iter().take(n) {
+                traces.push(tracegen.run(q, cfg.seed)?);
+            }
+            TraceSet {
+                dataset: ds.name.clone(),
+                traces,
+            }
+        }
+    };
+    anyhow::ensure!(!traces.traces.is_empty(), "no traces to sweep");
+
+    let zc = ZooConfig {
+        alpha: cfg.alpha,
+        iso_frac: args.f64_or("iso-frac", 0.98),
+        ..ZooConfig::default()
+    };
+    let report = run_zoo(&traces, &zc);
+
+    println!(
+        "zoo over {} traces ({})  iso-accuracy {:.3}  frontier eps {:.0} tokens",
+        report.n_traces, report.dataset, report.iso_accuracy, report.eps_tokens
+    );
+    println!(
+        "{:<22} {:>8} {:>8} {:>10} {:>10} {:>8} {:>9}  {}",
+        "family", "auc", "auc+ovh", "iso-tok", "iso+ovh", "save%", "exit-line", "frontier"
+    );
+    let fmt_opt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.0}"));
+    for f in &report.families {
+        println!(
+            "{:<22} {:>8.4} {:>8.4} {:>10} {:>10} {:>8} {:>9.1}  {}",
+            f.family,
+            f.auc_raw,
+            f.auc_charged,
+            fmt_opt(f.iso_tokens_raw),
+            fmt_opt(f.iso_tokens_charged),
+            f.saving_vs_token_pct
+                .map_or("-".to_string(), |s| format!("{s:.1}")),
+            f.mean_exit_line,
+            if f.on_frontier { "*" } else { "" }
+        );
+    }
+    if let Some(path) = args.str_opt("out") {
+        std::fs::write(path, zoo_report_json(&report).to_string())?;
+        println!("zoo json        {path}");
+    }
+    Ok(())
+}
+
 fn cmd_figures(args: &Args) -> Result<()> {
     let ctx = {
         let mut c = FigureCtx::new(
@@ -545,6 +611,10 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
                 .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
                 .collect();
             names.sort();
+            if names.is_empty() {
+                println!("no baseline snapshots in {base} — nothing to gate");
+                return Ok(());
+            }
             names
                 .into_iter()
                 .map(|n| {
@@ -553,6 +623,11 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
                     (n, b, w)
                 })
                 .collect()
+        } else if !std::path::Path::new(base).exists() {
+            // a fresh branch has no baseline yet: report, don't fail —
+            // the gate only bites when there is something to compare
+            println!("no baseline at {base} — nothing to gate");
+            return Ok(());
         } else {
             vec![(base.to_string(), base.into(), new.into())]
         };
@@ -604,6 +679,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
         Some("trace") => cmd_trace(&args),
+        Some("sweep-zoo") => cmd_sweep_zoo(&args),
         Some("figures") => cmd_figures(&args),
         Some("blackbox") => cmd_blackbox(&args),
         Some("bench-diff") => cmd_bench_diff(&args),

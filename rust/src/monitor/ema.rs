@@ -62,6 +62,17 @@ impl EmaVar {
         self.mean
     }
 
+    /// De-biased EMA mean M'_n = M_n / (1 - (1-a)^n); +inf before any
+    /// observation (mirrors [`EmaVar::debiased_var`]: a fresh monitor
+    /// can never read as converged). The level-rule policies of the exit
+    /// zoo threshold this, the same way Alg. 1 thresholds V'.
+    pub fn debiased_mean(&self) -> f64 {
+        if self.n == 0 {
+            return f64::INFINITY;
+        }
+        self.mean / (1.0 - self.bias_pow)
+    }
+
     /// Raw V_n (biased toward 0 early on).
     pub fn var(&self) -> f64 {
         self.var
@@ -136,6 +147,22 @@ mod tests {
         // EMA variance of N(0,1) noise: E[V] = var * (1-a)/(2-a)... in the
         // same ballpark as 1.0; just check the right order of magnitude.
         assert!(v > 0.2 && v < 2.5, "v={v}");
+    }
+
+    #[test]
+    fn debiased_mean_is_exact_after_one_observation() {
+        // M1 = a*x, denominator 1-(1-a) = a, so M1' = x exactly; the raw
+        // mean is still biased toward the zero init
+        let mut m = EmaVar::new(0.2);
+        assert!(m.debiased_mean().is_infinite(), "fresh monitor reads +inf");
+        m.update(7.0);
+        assert!((m.debiased_mean() - 7.0).abs() < 1e-12);
+        assert!(m.mean() < 7.0);
+        // and it converges to the signal level like the raw mean does
+        for _ in 0..200 {
+            m.update(7.0);
+        }
+        assert!((m.debiased_mean() - 7.0).abs() < 1e-9);
     }
 
     #[test]

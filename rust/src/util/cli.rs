@@ -215,7 +215,7 @@ pub const SERVE_SHARED_FLAGS: &[FlagSpec] = &[
 
 /// `serve single` / `serve cluster` engine flags.
 pub const SERVE_ENGINE_FLAGS: &[FlagSpec] = &[
-    FlagSpec { flag: "--policy eat|token", help: "exit policy (default eat)" },
+    FlagSpec { flag: "--policy NAME", help: "exit policy: eat, token, eat-stall, ua, confidence, path-dev, seq-entropy, cum-entropy, consistency, ensemble (default eat)" },
     FlagSpec { flag: "--sched fifo|eat", help: "scheduler mode (default fifo)" },
     FlagSpec { flag: "--deadline S", help: "SLO deadline seconds (default 60)" },
     FlagSpec { flag: "--proxy", help: "proxy-monitored (black-box) probes" },

@@ -39,9 +39,12 @@ fn interp_sorted(s: &[f64], q: f64) -> f64 {
 }
 
 /// Percentile by linear interpolation on a *sorted copy* (q in [0,1]).
+/// NaN-safe: `total_cmp` gives NaNs a defined order (after +inf), so a
+/// degenerate sample shifts the top quantiles instead of panicking the
+/// whole metrics snapshot.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     interp_sorted(&s, q)
 }
 
@@ -49,12 +52,28 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 /// normalizing x to [0, 1] — the paper's AUC efficiency metric (§5.2):
 /// "a more efficient early exiting approach should have a larger area
 /// under the [Agg. pass@1 vs token usage] curve".
+///
+/// NaN contract: points with a non-finite coordinate are **skipped**,
+/// never propagated and never a panic — one degenerate trace must not
+/// take down a whole sweep report. [`auc_normalized_counting`] exposes
+/// how many points were dropped so reports can surface it.
 pub fn auc_normalized(points: &[(f64, f64)]) -> f64 {
-    if points.len() < 2 {
-        return 0.0;
+    auc_normalized_counting(points).0
+}
+
+/// [`auc_normalized`] plus the number of non-finite points skipped.
+/// Fewer than two finite points leave no area to integrate: (0.0, n).
+pub fn auc_normalized_counting(points: &[(f64, f64)]) -> (f64, usize) {
+    let mut pts: Vec<(f64, f64)> = points
+        .iter()
+        .copied()
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    let skipped = points.len() - pts.len();
+    if pts.len() < 2 {
+        return (0.0, skipped);
     }
-    let mut pts = points.to_vec();
-    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0));
     let (x0, x1) = (pts[0].0, pts[pts.len() - 1].0);
     let span = (x1 - x0).max(1e-12);
     let mut area = 0.0;
@@ -62,7 +81,7 @@ pub fn auc_normalized(points: &[(f64, f64)]) -> f64 {
         let dx = (w[1].0 - w[0].0) / span;
         area += dx * 0.5 * (w[0].1 + w[1].1);
     }
-    area
+    (area, skipped)
 }
 
 /// Simple latency histogram for the serving metrics, with a lazily
@@ -94,7 +113,9 @@ impl Summary {
 
     fn ensure_sorted(&self) {
         if !self.sorted.get() {
-            self.samples.borrow_mut().sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: a NaN sample sorts last instead of panicking
+            // mid-snapshot (same contract as `percentile`)
+            self.samples.borrow_mut().sort_by(f64::total_cmp);
             self.sorted.set(true);
         }
     }
@@ -173,6 +194,41 @@ mod tests {
         let a = [(0.0, 0.0), (2.0, 1.0), (10.0, 1.0)];
         let b = [(0.0, 0.0), (8.0, 1.0), (10.0, 1.0)];
         assert!(auc_normalized(&a) > auc_normalized(&b));
+    }
+
+    #[test]
+    fn percentile_with_nan_does_not_panic() {
+        // the old partial_cmp().unwrap() sort panicked here; total_cmp
+        // orders (positive) NaN after +inf, so low quantiles are clean
+        // and only the top of the distribution reads the NaN
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 1.0).is_nan());
+    }
+
+    #[test]
+    fn auc_skips_non_finite_points_with_count() {
+        let clean = [(0.0, 0.0), (2.0, 1.0), (10.0, 1.0)];
+        let mut dirty = clean.to_vec();
+        dirty.push((5.0, f64::NAN));
+        dirty.push((f64::INFINITY, 0.5));
+        let (auc, skipped) = auc_normalized_counting(&dirty);
+        assert_eq!(skipped, 2);
+        assert!((auc - auc_normalized(&clean)).abs() < 1e-12);
+        // fewer than two finite points: no area, still no panic
+        assert_eq!(auc_normalized_counting(&[(f64::NAN, 1.0)]), (0.0, 1));
+        assert_eq!(auc_normalized(&[(1.0, f64::NAN), (2.0, 0.5)]), 0.0);
+    }
+
+    #[test]
+    fn summary_with_nan_sample_does_not_panic() {
+        let mut s = Summary::new();
+        s.record(1.0);
+        s.record(f64::NAN);
+        s.record(3.0);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.min(), 1.0);
+        assert!(s.max().is_nan());
     }
 
     #[test]

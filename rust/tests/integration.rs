@@ -213,3 +213,39 @@ fn serve_config_paper_defaults_stable() {
     assert_eq!((c.temperature, c.top_p), (0.6, 0.95));
     assert!(c.prefixed_probe);
 }
+
+#[test]
+fn zoo_races_every_family_deterministically() {
+    use eat_serve::eval::{run_zoo, zoo_report_json, ZooConfig};
+
+    // realistic chain-sum-shaped traces, heavy-tailed difficulty
+    let ns: Vec<usize> = (0..24)
+        .map(|i| if i % 8 == 0 { 20 } else { 2 + (i % 5) })
+        .collect();
+    let ts = traceset(&ns, 18, 11);
+    let report = run_zoo(&ts, &ZooConfig::default());
+
+    // every required family raced, plus at least one combinator
+    let names: Vec<&str> = report.families.iter().map(|f| f.family.as_str()).collect();
+    let req = ["eat", "token", "ua", "confidence", "path-dev", "seq-entropy", "cum-entropy"];
+    for required in req {
+        assert!(names.contains(&required), "family {required} missing: {names:?}");
+    }
+    assert!(names.iter().any(|n| n.contains('(')), "no combinator raced: {names:?}");
+    assert!(names.len() >= 7);
+
+    // the frontier is non-empty and only finite points sit on it
+    assert!(report.families.iter().any(|f| f.on_frontier));
+    for f in &report.families {
+        assert!(f.auc_raw.is_finite(), "{}: non-finite raw AUC", f.family);
+        assert!(f.auc_charged.is_finite(), "{}: non-finite charged AUC", f.family);
+    }
+
+    // the report is byte-deterministic: same traces, same JSON
+    let again = run_zoo(&ts, &ZooConfig::default());
+    assert_eq!(
+        zoo_report_json(&report).to_string(),
+        zoo_report_json(&again).to_string(),
+        "zoo report must serialize byte-identically across runs"
+    );
+}

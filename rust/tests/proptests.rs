@@ -15,8 +15,9 @@ use eat_serve::coordinator::{
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::exit::{
-    ConfidencePolicy, EatPolicy, ExitDecision, ExitPolicy, ExitReason,
-    LineObs, TokenBudgetPolicy, UniqueAnswersPolicy,
+    AllOf, AnswerConsistencyPolicy, AnyOf, ConfidencePolicy, CumulativeEntropyPolicy, EatPolicy,
+    ExitDecision, ExitPolicy, ExitReason, LineObs, PathDeviationPolicy, SequenceEntropyPolicy,
+    StallAwareEatPolicy, TokenBudgetPolicy, UniqueAnswersPolicy, WeightedEnsemble,
 };
 use eat_serve::eval::{replay, replay_scanned, Signal};
 use eat_serve::monitor::{EmaVar, LinePoint, Trace};
@@ -70,6 +71,119 @@ fn random_trace(rng: &mut Rng) -> Trace {
         self_terminated: rng.chance(0.5),
         reasoning_tokens: (0..n_lines * 3).map(|_| rng.below(48) as u32).collect(),
         points,
+    }
+}
+
+/// One instance of every exit-policy family in the zoo, including the
+/// combinators — the pool the reset/backstop properties quantify over.
+fn zoo_members(max_tokens: usize) -> Vec<Box<dyn ExitPolicy>> {
+    vec![
+        Box::new(EatPolicy::new(0.2, 1e-3, max_tokens)),
+        Box::new(StallAwareEatPolicy::new(0.2, 1e-3, max_tokens)),
+        Box::new(TokenBudgetPolicy::new(max_tokens)),
+        Box::new(UniqueAnswersPolicy::new(16, 1, max_tokens)),
+        Box::new(ConfidencePolicy::new(0.2, 1e-3, max_tokens)),
+        Box::new(PathDeviationPolicy::new(0.2, 1e-3, max_tokens)),
+        Box::new(SequenceEntropyPolicy::new(0.05, max_tokens)),
+        // effectively-infinite nat budget: only the level rule and the
+        // token backstop can fire, keeping the property about those
+        Box::new(CumulativeEntropyPolicy::new(0.2, 0.05, 1e9, max_tokens)),
+        Box::new(AnswerConsistencyPolicy::with_stride(8, 2, max_tokens, 3)),
+        Box::new(AllOf::new(vec![
+            Box::new(EatPolicy::new(0.2, 1e-3, max_tokens)),
+            Box::new(ConfidencePolicy::new(0.2, 1e-3, max_tokens)),
+        ])),
+        Box::new(AnyOf::new(vec![
+            Box::new(EatPolicy::new(0.2, 1e-3, max_tokens)),
+            Box::new(UniqueAnswersPolicy::new(16, 1, max_tokens)),
+        ])),
+        Box::new(WeightedEnsemble::new(
+            vec![
+                (2.0, Box::new(EatPolicy::new(0.2, 1e-3, max_tokens)) as Box<dyn ExitPolicy>),
+                (1.0, Box::new(StallAwareEatPolicy::new(0.2, 1e-3, max_tokens))),
+                (1.0, Box::new(ConfidencePolicy::new(0.2, 1e-3, max_tokens))),
+            ],
+            0.5,
+        )),
+    ]
+}
+
+/// Every zoo member is reusable: a policy that already replayed one
+/// (unrelated) trace must replay a second trace bit-identically to a
+/// freshly constructed twin — the reset() contract the sweep harness
+/// leans on when it reuses one policy across a whole grid.
+#[test]
+fn prop_zoo_reused_policy_replays_bit_identical_to_fresh() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x200E);
+        let dirty = random_trace(&mut rng);
+        let target = random_trace(&mut rng);
+        let signal = if rng.chance(0.5) {
+            Signal::MainPrefixed
+        } else {
+            Signal::Proxy
+        };
+        let charge = rng.chance(0.5);
+        let fresh = zoo_members(10_000);
+        let reused = zoo_members(10_000);
+        for (mut f, mut r) in fresh.into_iter().zip(reused) {
+            let name = f.name();
+            // dirty the reused policy with a full unrelated replay;
+            // replay() itself calls reset() up front, which is exactly
+            // the contract under test
+            let _ = replay(&dirty, r.as_mut(), signal, charge);
+            let a = replay(&target, f.as_mut(), signal, charge);
+            let b = replay(&target, r.as_mut(), signal, charge);
+            assert_eq!(a.exit_line, b.exit_line, "seed {seed} policy {name}");
+            assert_eq!(a.exit_reason, b.exit_reason, "seed {seed} policy {name}");
+            assert_eq!(a.reasoning_tokens, b.reasoning_tokens, "seed {seed} policy {name}");
+            assert_eq!(a.overhead_tokens, b.overhead_tokens, "seed {seed} policy {name}");
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "seed {seed} policy {name}");
+        }
+    }
+}
+
+/// Two universal zoo invariants: (a) no member exits Stable on the very
+/// first evaluated observation (one sample is never evidence of
+/// stability), and (b) every member honours the token-budget backstop —
+/// replay never runs past the first line boundary at or beyond budget.
+#[test]
+fn prop_zoo_budget_backstop_and_no_zero_evidence_exit() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xBAC5);
+        let budget = rng.range(1, 120) as usize;
+        for mut p in zoo_members(budget) {
+            let name = p.name();
+            p.reset();
+            let d = p.observe(&LineObs {
+                tokens: 0,
+                eat: Some(1.7),
+                unique_answers: Some(5),
+                confidence: Some(0.42),
+                self_terminated: false,
+            });
+            assert_eq!(
+                d,
+                ExitDecision::Continue,
+                "seed {seed} policy {name}: exited on first observation"
+            );
+        }
+        let trace = random_trace(&mut rng);
+        let backstop_line = trace
+            .points
+            .iter()
+            .find(|pt| pt.tokens >= budget)
+            .map(|pt| pt.line);
+        for mut p in zoo_members(budget) {
+            let name = p.name();
+            let out = replay(&trace, p.as_mut(), Signal::MainPrefixed, false);
+            if let (Some(exit), Some(stop)) = (out.exit_line, backstop_line) {
+                assert!(
+                    exit <= stop,
+                    "seed {seed} policy {name}: exit line {exit} past budget line {stop}"
+                );
+            }
+        }
     }
 }
 
@@ -991,14 +1105,42 @@ fn prop_replay_scanned_matches_tree_replay() {
         };
         let charge = rng.chance(0.5);
         let mk = |r: &mut Rng| -> Box<dyn ExitPolicy> {
-            match r.below(3) {
+            match r.below(8) {
                 0 => Box::new(EatPolicy::new(0.2, 2f64.powi(-(r.below(16) as i32)), 10_000)),
                 1 => Box::new(TokenBudgetPolicy::new(r.range(1, 120) as usize)),
-                _ => Box::new(UniqueAnswersPolicy::new(
+                2 => Box::new(UniqueAnswersPolicy::new(
                     r.range(1, 32) as usize,
                     r.range(1, 3) as usize,
                     10_000,
                 )),
+                3 => Box::new(PathDeviationPolicy::new(
+                    0.2,
+                    2f64.powi(-(r.below(16) as i32)),
+                    10_000,
+                )),
+                4 => Box::new(SequenceEntropyPolicy::new(0.03 + r.f64(), 10_000)),
+                5 => Box::new(CumulativeEntropyPolicy::new(
+                    0.2,
+                    0.03 + r.f64(),
+                    20.0 + 100.0 * r.f64(),
+                    10_000,
+                )),
+                6 => Box::new(AnswerConsistencyPolicy::with_stride(
+                    r.range(1, 32) as usize,
+                    r.range(1, 4) as usize,
+                    10_000,
+                    r.range(1, 4) as usize,
+                )),
+                _ => {
+                    let delta = 2f64.powi(-(r.below(16) as i32));
+                    let k = r.range(1, 32) as usize;
+                    let t = r.range(1, 3) as usize;
+                    let children: Vec<(f64, Box<dyn ExitPolicy>)> = vec![
+                        (2.0, Box::new(EatPolicy::new(0.2, delta, 10_000))),
+                        (1.0, Box::new(UniqueAnswersPolicy::new(k, t, 10_000))),
+                    ];
+                    Box::new(WeightedEnsemble::new(children, 0.5))
+                }
             }
         };
         // identical policy from an identical rng stream for both paths
