@@ -1,0 +1,10 @@
+#!/usr/bin/env sh
+# Refresh the committed bench baseline in benchmarks/baseline: run every
+# registered bench under the CI sampling budget and snapshot the results
+# there. Run on a quiet machine, then commit the BENCH_*.json files.
+set -eu
+cd "$(dirname "$0")/.."
+: "${BENCH_BUDGET_MS:=60}"
+export BENCH_BUDGET_MS
+BENCH_DIR="$(pwd)/benchmarks/baseline" cargo bench 2>&1 | tail -40
+ls -l benchmarks/baseline/BENCH_*.json

@@ -1,0 +1,63 @@
+//! Soak core face-off (DESIGN.md §3.10): the event-wheel scheduling
+//! core against the pre-wheel tick-scan driver it replaced, on the
+//! identical workload. Both cores complete the same sessions with the
+//! same total tokens (cross-checked here), so the wall-clock ratio is a
+//! pure measure of scheduling overhead: O(2 events) per session versus
+//! O(ticks × residents) scans. Snapshots to `BENCH_soak.json` with a
+//! `speedup` table alongside the timing rows.
+//!
+//!     cargo bench --bench bench_soak
+//!
+//! Everything runs on virtual time; the numbers are a pure function of
+//! the seed.
+
+use eat_serve::coordinator::{run_soak, SoakConfig, SoakMode};
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::Json;
+
+fn cfg(sessions: u64) -> SoakConfig {
+    SoakConfig { sessions, seed: 11, ..SoakConfig::default() }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut results = Vec::new();
+    let mut speedups = Vec::new();
+    for sessions in [10_000u64, 100_000] {
+        let mut mean_ns = [0.0f64; 2];
+        for (i, (mode, tag)) in [(SoakMode::Events, "events"), (SoakMode::Driver, "driver")]
+            .into_iter()
+            .enumerate()
+        {
+            let name = format!("soak/{tag}_{sessions}");
+            let r = bench(&name, || {
+                run_soak(&cfg(sessions), mode).unwrap();
+            });
+            r.report();
+            mean_ns[i] = r.mean_ns;
+            results.push(r);
+        }
+        // the two cores must agree before their times are comparable
+        let ev = run_soak(&cfg(sessions), SoakMode::Events)?;
+        let dr = run_soak(&cfg(sessions), SoakMode::Driver)?;
+        assert_eq!(ev.completed, dr.completed, "cores disagree on completions");
+        assert_eq!(ev.total_tokens, dr.total_tokens, "cores disagree on tokens");
+        let speedup = mean_ns[1] / mean_ns[0].max(1.0);
+        let sps = |ns: f64| sessions as f64 / (ns.max(1.0) / 1e9);
+        println!(
+            "  {sessions} sessions: events {:.0}/s vs driver {:.0}/s -> {speedup:.1}x\n",
+            sps(mean_ns[0]),
+            sps(mean_ns[1]),
+        );
+        speedups.push(Json::obj(vec![
+            ("sessions", Json::num(sessions as f64)),
+            ("events_sessions_per_s", Json::num(sps(mean_ns[0]))),
+            ("driver_sessions_per_s", Json::num(sps(mean_ns[1]))),
+            ("speedup", Json::num(speedup)),
+            ("bytes_per_session", Json::num(ev.bytes_per_session() as f64)),
+        ]));
+    }
+    let extra = vec![("speedup", Json::arr(speedups))];
+    let path = write_snapshot("soak", &results, extra)?;
+    println!("snapshot: {path}");
+    Ok(())
+}

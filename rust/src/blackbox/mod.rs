@@ -32,7 +32,8 @@
 //!    RNG streams, so the reasoning trajectory is bit-identical under
 //!    any [`LatencyModel`] — only the timestamps move.
 
-use std::collections::VecDeque;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Result;
 
@@ -47,6 +48,7 @@ use crate::runtime::{Backend, Runtime};
 use crate::sampler::Sampler;
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
+use crate::util::wheel::EventWheel;
 use crate::vocab::{Vocab, ANSWER_SAMPLE_CAP};
 
 /// Latency model of the remote streaming API.
@@ -607,6 +609,8 @@ struct ActiveStream {
     session: BlackboxSession,
     slot: SlotId,
     arrived: f64,
+    /// Submission seq: the wait-event key into the delivery wheel.
+    seq: u64,
 }
 
 /// Continuous batcher for black-box streams: admits questions into KV
@@ -627,6 +631,14 @@ pub struct BlackboxBatcher<'a> {
     proxy_store: BatchCacheStore,
     queue: VecDeque<QueuedStream>,
     active: Vec<ActiveStream>,
+    /// Scheduled chunk deliveries (DESIGN.md §3.10), keyed
+    /// `(arrival_time, slot, seq)`. `RefCell` because [`Self::blocked_until`]
+    /// is a `&self` probe yet must lazily drop superseded events.
+    deliveries: RefCell<EventWheel<u64>>,
+    /// seq → `to_bits` of the delivery time each waiting stream is
+    /// parked on; the liveness filter for wheel events. A stream absent
+    /// here has serviceable work.
+    wait_index: BTreeMap<u64, u64>,
     next_seq: u64,
     /// Disable the fused paths even when a backend has one (A/B
     /// determinism checks, ablations).
@@ -676,6 +688,8 @@ impl<'a> BlackboxBatcher<'a> {
             clock,
             queue: VecDeque::new(),
             active: Vec::new(),
+            deliveries: RefCell::new(EventWheel::new(DEFAULT_TICK_DT)),
+            wait_index: BTreeMap::new(),
             next_seq: 0,
             force_sequential: false,
             results: Vec::new(),
@@ -766,6 +780,7 @@ impl<'a> BlackboxBatcher<'a> {
                 session,
                 slot,
                 arrived: req.arrived,
+                seq: req.seq,
             });
         }
         Ok(())
@@ -793,18 +808,26 @@ impl<'a> BlackboxBatcher<'a> {
         if !self.queue.is_empty() && self.kv.available() > 0 {
             return None;
         }
+        // a stream outside the wait index has serviceable work
+        if self.wait_index.len() < self.active.len() {
+            return None;
+        }
         let now = self.clock.now();
-        let mut earliest: Option<f64> = None;
-        for a in &self.active {
-            match a.session.waiting_until() {
-                Some(at) if at > now + DELIVERY_EPS => {
-                    earliest = Some(earliest.map_or(at, |e: f64| e.min(at)));
+        let mut deliveries = self.deliveries.borrow_mut();
+        while let Some(k) = deliveries.peek() {
+            match self.wait_index.get(&k.seq) {
+                // the earliest *live* delivery bounds every stream's wait
+                Some(&bits) if bits == k.time.to_bits() => {
+                    return (k.time > now + DELIVERY_EPS).then_some(k.time);
                 }
-                // deliverable chunk or non-wait work: progress possible
-                _ => return None,
+                // superseded: the stream moved on (chunk delivered, new
+                // wait, retired) after this event was filed — drop it
+                _ => {
+                    deliveries.pop();
+                }
             }
         }
-        earliest
+        None
     }
 
     /// One scheduling tick: admit; poll every stream to its pending
@@ -837,17 +860,37 @@ impl<'a> BlackboxBatcher<'a> {
                     }
                     BlackboxWork::MainDecode { token } => {
                         main_decodes.push((i, token));
+                        self.wait_index.remove(&self.active[i].seq);
                         advanced += 1;
                         break;
                     }
                     BlackboxWork::ProxyDecode { token } => {
                         proxy_decodes.push((i, token));
+                        self.wait_index.remove(&self.active[i].seq);
                         advanced += 1;
                         break;
                     }
-                    BlackboxWork::Wait { .. } => break,
+                    BlackboxWork::Wait { .. } => {
+                        // park the stream on the delivery wheel; re-filing
+                        // only on a *changed* wait time keeps one live
+                        // event per stream (stale ones are dropped by
+                        // `blocked_until`'s index check)
+                        let a = &self.active[i];
+                        if let Some(at) = a.session.waiting_until() {
+                            if self.wait_index.insert(a.seq, at.to_bits()) != Some(at.to_bits()) {
+                                self.deliveries.borrow_mut().schedule_at(
+                                    at,
+                                    a.slot.0 as u32,
+                                    a.seq,
+                                    a.seq,
+                                );
+                            }
+                        }
+                        break;
+                    }
                     BlackboxWork::Done => {
                         finished.push(i);
+                        self.wait_index.remove(&self.active[i].seq);
                         break;
                     }
                 }
@@ -924,6 +967,7 @@ impl<'a> BlackboxBatcher<'a> {
         // phase C: retire in reverse index order to keep indices valid
         for &i in finished.iter().rev() {
             let a = self.active.swap_remove(i);
+            self.wait_index.remove(&a.seq);
             self.main_store.retire(a.slot)?;
             self.proxy_store.retire(a.slot)?;
             self.kv.release(a.slot)?;

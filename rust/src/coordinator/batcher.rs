@@ -57,6 +57,8 @@ use crate::exit::{
 use crate::runtime::{Backend, BackendCache, Runtime, RuntimeCounters};
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
+use crate::util::slab::{GenKey, Slab};
+use crate::util::wheel::EventWheel;
 
 /// A request waiting for admission.
 pub struct QueuedRequest {
@@ -102,6 +104,10 @@ pub struct SuspendedSession {
     caches: Option<SessionCaches>,
     /// Pages the retained caches hold against the host budget.
     held_pages: usize,
+    /// Filed in the aged (deadline-ordered) class rather than the wait
+    /// class. Entries in the wait heap whose arena slot says `aged` are
+    /// stale and get skipped on pop.
+    aged: bool,
 }
 
 /// Min-heap entry ordered by an `(f64, u64)` key — deadlines or
@@ -277,13 +283,22 @@ pub struct Batcher<'a> {
     /// EAT-aware fresh requests, earliest `(deadline, seq)` first.
     fresh: MinHeap<QueuedRequest>,
     active: Vec<Active>,
-    /// Suspended sessions past the starvation guard (or aged past the
-    /// wait bound), earliest `(deadline, seq)` first — they outrank
-    /// fresh admissions.
-    suspended_aged: MinHeap<SuspendedSession>,
-    /// Remaining suspended sessions, earliest `(suspended_at, seq)`
-    /// first.
-    suspended_wait: MinHeap<SuspendedSession>,
+    /// Suspended-session arena (DESIGN.md §3.10): payloads live here in
+    /// one allocation; the admission heaps and the aging wheel hold
+    /// generational keys into it, so a session admitted or migrated out
+    /// leaves only stale keys behind — they miss on pop and are skipped.
+    suspended: Slab<SuspendedSession>,
+    /// Keys of suspended sessions past the starvation guard (or aged
+    /// past the wait bound), earliest `(deadline, seq)` first — they
+    /// outrank fresh admissions.
+    suspended_aged: MinHeap<GenKey>,
+    /// Keys of the remaining suspended sessions, earliest
+    /// `(suspended_at, seq)` first.
+    suspended_wait: MinHeap<GenKey>,
+    /// Promotion timers: one event per parked session at
+    /// `suspended_at + resume_priority_after_s`, so `promote_aged` pops
+    /// due timers instead of re-peeking the wait heap each tick.
+    aging: EventWheel<GenKey>,
     /// Caches are page tables (retain on suspend, repin on resume).
     paged: bool,
     /// Token-page geometry per model, for budget accounting in the same
@@ -348,8 +363,10 @@ impl<'a> Batcher<'a> {
             queue: VecDeque::new(),
             fresh: BinaryHeap::new(),
             active: Vec::new(),
+            suspended: Slab::new(),
             suspended_aged: BinaryHeap::new(),
             suspended_wait: BinaryHeap::new(),
+            aging: EventWheel::new(DEFAULT_TICK_DT),
             next_seq: 0,
             scratch: TickScratch::with_slots(slots),
             force_sequential: false,
@@ -397,7 +414,7 @@ impl<'a> Batcher<'a> {
     }
 
     pub fn suspended_count(&self) -> usize {
-        self.suspended_aged.len() + self.suspended_wait.len()
+        self.suspended.len()
     }
 
     /// Anything left to do: queued, resident, or suspended work.
@@ -455,23 +472,54 @@ impl<'a> Batcher<'a> {
     }
 
     /// Migrate suspended sessions whose wait crossed the aging bound
-    /// into the aged heap (EAT-aware mode). Amortized O(log n) once per
-    /// session — this plus the heaps replaces the old per-slot O(n)
-    /// rescan of queue + suspended list.
+    /// into the aged heap (EAT-aware mode), driven by the promotion
+    /// timers [`Self::park`] filed into the aging wheel. Amortized
+    /// O(log n) once per session; timers for sessions that were admitted
+    /// or migrated away in the meantime miss the arena and are dropped.
     fn promote_aged(&mut self) {
         if self.cfg.sched.mode != SchedMode::EatAware {
             return;
         }
         let now = self.clock.now();
-        let bound = self.cfg.sched.resume_priority_after_s;
-        while let Some(Reverse(head)) = self.suspended_wait.peek() {
-            if now - head.val.suspended_at < bound {
+        while let Some(ev) = self.aging.peek() {
+            if ev.time > now {
                 break;
             }
-            let s = heap_pop(&mut self.suspended_wait).expect("peeked entry exists");
-            let key = (s.deadline, s.seq);
-            heap_push(&mut self.suspended_aged, key, s);
+            let (_, key) = self.aging.pop().expect("peeked event exists");
+            let Some(s) = self.suspended.get_mut(key) else {
+                continue; // session left the arena before its timer fired
+            };
+            if s.aged {
+                continue;
+            }
+            s.aged = true;
+            let hk = (s.deadline, s.seq);
+            heap_push(&mut self.suspended_aged, hk, key);
         }
+    }
+
+    /// Pop the oldest-suspension live waiter. Skips keys whose arena
+    /// entry is gone (admitted/migrated) or was promoted to the aged
+    /// class since filing.
+    fn pop_wait(&mut self) -> Option<SuspendedSession> {
+        while let Some(key) = heap_pop(&mut self.suspended_wait) {
+            match self.suspended.get(key) {
+                Some(s) if !s.aged => return self.suspended.remove(key),
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Pop the earliest-deadline live aged session; stale keys miss the
+    /// arena and are skipped.
+    fn pop_aged(&mut self) -> Option<SuspendedSession> {
+        while let Some(key) = heap_pop(&mut self.suspended_aged) {
+            if let Some(s) = self.suspended.remove(key) {
+                return Some(s);
+            }
+        }
+        None
     }
 
     /// Pick the waiter for the next free slot.
@@ -484,18 +532,18 @@ impl<'a> Batcher<'a> {
     /// oldest suspension first.
     fn pick_admission(&mut self) -> Option<AdmitPick> {
         if self.cfg.sched.mode == SchedMode::Fifo {
-            if let Some(s) = heap_pop(&mut self.suspended_wait) {
+            if let Some(s) = self.pop_wait() {
                 return Some(AdmitPick::Resume(s));
             }
             return self.queue.pop_front().map(AdmitPick::Fresh);
         }
-        if let Some(s) = heap_pop(&mut self.suspended_aged) {
+        if let Some(s) = self.pop_aged() {
             return Some(AdmitPick::Resume(s));
         }
         if let Some(r) = heap_pop(&mut self.fresh) {
             return Some(AdmitPick::Fresh(r));
         }
-        heap_pop(&mut self.suspended_wait).map(AdmitPick::Resume)
+        self.pop_wait().map(AdmitPick::Resume)
     }
 
     /// Admit waiters while KV lanes + page budget allow: fresh requests
@@ -605,7 +653,7 @@ impl<'a> Batcher<'a> {
         } else {
             (None, 0)
         };
-        let s = SuspendedSession {
+        self.park(SuspendedSession {
             session: a.session,
             arrived: a.arrived,
             admitted: a.admitted,
@@ -615,15 +663,27 @@ impl<'a> Batcher<'a> {
             suspended_at: now,
             caches,
             held_pages,
-        };
-        if self.cfg.sched.mode == SchedMode::EatAware
-            && s.preemptions >= self.cfg.sched.max_preemptions
-        {
-            let key = (s.deadline, s.seq);
-            heap_push(&mut self.suspended_aged, key, s);
+            aged: false,
+        });
+    }
+
+    /// File a suspended session into the arena and the right admission
+    /// class: aged (out of preemption credit) straight into the
+    /// deadline-ordered heap, everything else into the wait heap with a
+    /// promotion timer on the aging wheel.
+    fn park(&mut self, mut s: SuspendedSession) {
+        let eat = self.cfg.sched.mode == SchedMode::EatAware;
+        s.aged = eat && s.preemptions >= self.cfg.sched.max_preemptions;
+        let (aged, deadline, suspended_at, seq) = (s.aged, s.deadline, s.suspended_at, s.seq);
+        let key = self.suspended.insert(s);
+        if aged {
+            heap_push(&mut self.suspended_aged, (deadline, seq), key);
         } else {
-            let key = (s.suspended_at, s.seq);
-            heap_push(&mut self.suspended_wait, key, s);
+            heap_push(&mut self.suspended_wait, (suspended_at, seq), key);
+            if eat {
+                let fire = suspended_at + self.cfg.sched.resume_priority_after_s;
+                self.aging.schedule_at(fire, 0, seq, key);
+            }
         }
     }
 
@@ -740,6 +800,7 @@ impl<'a> Batcher<'a> {
             suspended_at: now,
             caches,
             held_pages,
+            aged: false,
         }))))
     }
 
@@ -775,16 +836,7 @@ impl<'a> Batcher<'a> {
                     self.metrics.record_spill();
                 }
                 self.metrics.record_migration_in(s.session.pos());
-                let s = *s;
-                if self.cfg.sched.mode == SchedMode::EatAware
-                    && s.preemptions >= self.cfg.sched.max_preemptions
-                {
-                    let key = (s.deadline, s.seq);
-                    heap_push(&mut self.suspended_aged, key, s);
-                } else {
-                    let key = (s.suspended_at, s.seq);
-                    heap_push(&mut self.suspended_wait, key, s);
-                }
+                self.park(*s);
             }
         }
     }
@@ -915,6 +967,24 @@ impl<'a> Batcher<'a> {
             self.results.push(result);
         }
         Ok(advanced)
+    }
+
+    /// Approximate scheduler-side heap footprint (capacity-based):
+    /// admission queues, the active set, the suspended arena with its
+    /// key heaps, the aging wheel and the tick scratch. Session
+    /// *contents* (token buffers, caches) are not walked — this is the
+    /// arena-accounting number DESIGN.md §3.10 pairs with the soak's
+    /// bytes/session report.
+    pub fn approx_sched_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.queue.capacity() * size_of::<QueuedRequest>()
+            + self.fresh.capacity() * size_of::<Reverse<Prioritized<QueuedRequest>>>()
+            + self.active.capacity() * size_of::<Active>()
+            + self.suspended.approx_bytes()
+            + self.suspended_aged.capacity() * size_of::<Reverse<Prioritized<GenKey>>>()
+            + self.suspended_wait.capacity() * size_of::<Reverse<Prioritized<GenKey>>>()
+            + self.aging.approx_bytes()
+            + self.scratch.capacity_sum() * size_of::<usize>()
     }
 
     /// Drain: run ticks until queue, active set and suspended heaps are

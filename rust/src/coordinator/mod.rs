@@ -21,6 +21,9 @@
 //!    page handoff (DESIGN.md §3.7)
 //!  * `metrics`     — serving metrics behind the one [`MetricsReport`]
 //!    interface (clock-injected, deterministic JSON snapshot)
+//!  * `soak`        — memory-bounded million-session soak core on the
+//!    event wheel + slab arena (DESIGN.md §3.10), with the pre-wheel
+//!    tick-scan driver kept as the benchmarked baseline
 
 pub mod batch_cache;
 pub mod batcher;
@@ -28,6 +31,7 @@ pub mod cluster;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
+pub mod soak;
 pub mod workload;
 
 pub use batch_cache::BatchCacheStore;
@@ -42,4 +46,5 @@ pub use engine::{
 };
 pub use kv::{KvPageManager, PageAllocator, PageId, PagePool, PageTable, DEFAULT_PAGE_SIZE};
 pub use metrics::{summary_json, BlackboxMetrics, ClusterMetrics, MetricsReport, ServeMetrics};
-pub use workload::{poisson_arrivals, run_open_loop, OpenLoopTarget};
+pub use soak::{run_soak, session_demand, SoakConfig, SoakMode, SoakReport};
+pub use workload::{poisson_arrivals, run_open_loop, OpenLoopTarget, PoissonStream};

@@ -1,0 +1,569 @@
+//! Memory-bounded million-session soak core (DESIGN.md §3.10): the
+//! scale regression harness behind `repro soak` and `bench_soak`.
+//!
+//! The soak exercises the *scheduling* layer at a scale where model math
+//! is irrelevant: each synthetic session carries a seed-derived service
+//! demand (an EAT-like early-exit tick profile with a stall tail) and
+//! the question is how much coordinator work — and how much memory — it
+//! costs to push a million of them through a bounded slot pool
+//! deterministically.
+//!
+//! Two interchangeable cores produce the same completion invariants
+//! (sessions completed, total tokens, stall count):
+//!
+//!  * [`SoakMode::Events`] — the event wheel owns every future event
+//!    (arrivals one at a time off a streaming Poisson source, one
+//!    completion timer per residency), sessions live in a generational
+//!    [`Slab`], and metrics are bounded ([`Summary`] reservoirs +
+//!    streaming moments). Cost is O(events) = O(2 · sessions); idle gaps
+//!    are one wheel jump; the high-water footprint is
+//!    `peak_resident × slot_size`, which is the bytes/session the
+//!    report prints.
+//!  * [`SoakMode::Driver`] — the pre-wheel shape, kept as the honest
+//!    baseline `bench_soak` measures against: arrivals materialized
+//!    upfront, a `blocked_until`-style scan over every resident each
+//!    driver iteration, a second per-tick scan advancing every resident
+//!    by one tick, and unbounded per-sample metric vectors. Cost is
+//!    O(resident × ticks) — mean service is tens of ticks, so the event
+//!    core beats it by roughly that factor.
+//!
+//! Both cores are pure functions of [`SoakConfig`]: no wall-clock reads,
+//! no hashing — a double run serializes byte-identical JSON, which the
+//! CI `soak-smoke` job diffs, alongside an enforced memory ceiling
+//! ([`SoakConfig::mem_budget_bytes`] fails the run on breach).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::batcher::DEFAULT_TICK_DT;
+use super::metrics::summary_json;
+use super::workload::{poisson_arrivals, PoissonStream};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::slab::{GenKey, Slab};
+use crate::util::stats::{StreamingMoments, Summary, DEFAULT_SUMMARY_CAP};
+use crate::util::wheel::EventWheel;
+
+/// Soak shape. Everything the run depends on — the report is a pure
+/// function of this struct.
+#[derive(Debug, Clone, Copy)]
+pub struct SoakConfig {
+    /// Sessions to arrive (the open-loop total).
+    pub sessions: u64,
+    /// Poisson arrival rate, sessions per virtual second.
+    pub rate_per_s: f64,
+    /// Concurrent resident sessions (the slot pool).
+    pub slots: usize,
+    pub seed: u64,
+    /// Reservoir bound for the latency/wait [`Summary`]s.
+    pub summary_cap: usize,
+    /// Hard ceiling on the accounted footprint; breaching it fails the
+    /// run (the CI `soak-smoke` contract).
+    pub mem_budget_bytes: Option<u64>,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            sessions: 100_000,
+            // ~0.7 utilization at 256 slots and the mean ~37-tick demand
+            // (capacity ≈ 690/s): heavily loaded but stable, so the
+            // waiting queue — and with it the footprint — stays bounded
+            // by residency, not by how many sessions ever arrive.
+            rate_per_s: 500.0,
+            slots: 256,
+            seed: 0,
+            summary_cap: DEFAULT_SUMMARY_CAP,
+            mem_budget_bytes: None,
+        }
+    }
+}
+
+/// Which core runs the soak; see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SoakMode {
+    Events,
+    Driver,
+}
+
+/// A session's seed-derived service demand: reasoning ticks (≈ one
+/// decode per tick) already folded with the stall penalty.
+#[derive(Debug, Clone, Copy)]
+pub struct Demand {
+    pub ticks: u32,
+    pub stalled: bool,
+}
+
+/// Pure function of `(seed, seq)` — like the serving stack's per-request
+/// RNGs, a session's demand is invariant to admission order and to
+/// which soak core services it. The profile mirrors the paper's
+/// early-exit shape: most sessions exit within a few ticks, a mid band
+/// reasons longer, a thin tail runs deep, and a small fraction stalls
+/// (3× the ticks — the scheduler-level cost of a stuck stream).
+pub fn session_demand(seed: u64, seq: u64) -> Demand {
+    let mut rng = Rng::new(seed ^ 0x50AC ^ seq.wrapping_mul(0x9E3779B97F4A7C15));
+    let class = rng.f64();
+    let base = if class < 0.60 {
+        8 + rng.below(16)
+    } else if class < 0.90 {
+        24 + rng.below(48)
+    } else {
+        80 + rng.below(80)
+    };
+    let stalled = rng.chance(0.02);
+    Demand {
+        ticks: (if stalled { base * 3 } else { base }) as u32,
+        stalled,
+    }
+}
+
+/// A session parked behind the full slot pool.
+#[derive(Debug, Clone, Copy)]
+struct Waiting {
+    seq: u64,
+    arrived: f64,
+}
+
+/// A resident session in the event core: everything needed to account
+/// its completion when the timer fires.
+#[derive(Debug, Clone, Copy)]
+struct Resident {
+    arrived: f64,
+    started: f64,
+    demand: Demand,
+}
+
+/// The deterministic soak outcome. Invariant fields (`completed`,
+/// `total_tokens`, `stalled`) are identical across both cores; latency
+/// shapes differ only by the driver's tick quantization.
+pub struct SoakReport {
+    pub mode: &'static str,
+    pub arrivals: u64,
+    pub completed: u64,
+    pub stalled: u64,
+    /// Σ reasoning ticks ≈ decode tokens served.
+    pub total_tokens: u64,
+    pub peak_resident: usize,
+    pub peak_waiting: usize,
+    /// High-water accounted footprint (arena + wheel + queues + metrics).
+    pub peak_bytes: usize,
+    pub elapsed_virtual_s: f64,
+    pub latency_ms: Summary,
+    pub wait_ms: Summary,
+    /// Resident-count moments, sampled once per completion.
+    pub occupancy: StreamingMoments,
+}
+
+impl SoakReport {
+    /// Accounted bytes per concurrently-resident session — the arena
+    /// sizing number (total footprint is bounded by residency, not by
+    /// how many sessions ever pass through).
+    pub fn bytes_per_session(&self) -> usize {
+        self.peak_bytes / self.peak_resident.max(1)
+    }
+
+    /// Deterministic JSON snapshot (sorted keys; byte-identical across
+    /// same-config runs — the CI `soak-smoke` double-run diff).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("bytes_per_session", Json::num(self.bytes_per_session() as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("elapsed_virtual_s", Json::num(self.elapsed_virtual_s)),
+            ("latency_ms", summary_json(&self.latency_ms)),
+            ("mode", Json::str(self.mode)),
+            ("occupancy_mean", Json::num(self.occupancy.mean())),
+            ("occupancy_peak", Json::num(self.peak_resident as f64)),
+            ("peak_bytes", Json::num(self.peak_bytes as f64)),
+            ("peak_waiting", Json::num(self.peak_waiting as f64)),
+            ("stalled", Json::num(self.stalled as f64)),
+            ("total_tokens", Json::num(self.total_tokens as f64)),
+            ("wait_ms", summary_json(&self.wait_ms)),
+        ])
+    }
+
+    /// One-block human report for the CLI.
+    pub fn report(&self) -> String {
+        format!(
+            "soak[{mode}] {completed} sessions ({stalled} stalled), {tok} tokens \
+             over {secs:.1} virtual s\n\
+             occupancy mean {occ:.1} peak {peak} (waiting peak {pw})\n\
+             latency ms p50 {p50:.1} p95 {p95:.1} p99 {p99:.1} max {max:.1}\n\
+             memory peak {kb} KiB ({bps} bytes/session)",
+            mode = self.mode,
+            completed = self.completed,
+            stalled = self.stalled,
+            tok = self.total_tokens,
+            secs = self.elapsed_virtual_s,
+            occ = self.occupancy.mean(),
+            peak = self.peak_resident,
+            pw = self.peak_waiting,
+            p50 = self.latency_ms.p50(),
+            p95 = self.latency_ms.p95(),
+            p99 = self.latency_ms.p99(),
+            max = self.latency_ms.max(),
+            kb = self.peak_bytes / 1024,
+            bps = self.bytes_per_session(),
+        )
+    }
+}
+
+/// Run the soak with the chosen core.
+pub fn run_soak(cfg: &SoakConfig, mode: SoakMode) -> Result<SoakReport> {
+    anyhow::ensure!(cfg.sessions > 0, "soak needs at least one session");
+    anyhow::ensure!(cfg.slots > 0, "soak needs at least one slot");
+    anyhow::ensure!(
+        cfg.rate_per_s.is_finite() && cfg.rate_per_s > 0.0,
+        "soak arrival rate must be positive"
+    );
+    match mode {
+        SoakMode::Events => run_events(cfg),
+        SoakMode::Driver => run_driver(cfg),
+    }
+}
+
+/// Check the accounted footprint against the budget, tracking the peak.
+fn account(peak: &mut usize, bytes: usize, budget: Option<u64>) -> Result<()> {
+    if bytes > *peak {
+        *peak = bytes;
+    }
+    if let Some(b) = budget {
+        anyhow::ensure!(
+            bytes as u64 <= b,
+            "soak memory budget exceeded: {bytes} bytes accounted against a {b}-byte ceiling"
+        );
+    }
+    Ok(())
+}
+
+/// Event lanes: completions fire before the arrival sharing their
+/// instant, so a freed slot is visible to it.
+const LANE_FINISH: u32 = 0;
+const LANE_ARRIVAL: u32 = 1;
+
+enum SoakEvent {
+    Arrival,
+    Finish(GenKey),
+}
+
+/// How often (in events) the footprint is re-accounted. Capacities only
+/// move on container growth, so a coarse cadence loses nothing.
+const MEM_PROBE_EVERY: u64 = 4096;
+
+fn run_events(cfg: &SoakConfig) -> Result<SoakReport> {
+    let mut wheel: EventWheel<SoakEvent> = EventWheel::new(DEFAULT_TICK_DT);
+    let mut arrivals = PoissonStream::new(cfg.rate_per_s, cfg.seed);
+    let mut resident: Slab<Resident> = Slab::with_capacity(cfg.slots);
+    let mut waiting: VecDeque<Waiting> = VecDeque::new();
+
+    let mut latency_ms = Summary::bounded(cfg.summary_cap);
+    let mut wait_ms = Summary::bounded(cfg.summary_cap);
+    let mut occupancy = StreamingMoments::default();
+    let (mut completed, mut stalled, mut total_tokens) = (0u64, 0u64, 0u64);
+    let (mut peak_resident, mut peak_waiting, mut peak_bytes) = (0usize, 0usize, 0usize);
+    let mut last_t = 0.0f64;
+    let mut events = 0u64;
+
+    let mut admitted = 0u64;
+    let mut start = |w: Waiting, now: f64, resident: &mut Slab<Resident>,
+                     wheel: &mut EventWheel<SoakEvent>,
+                     wait_ms: &mut Summary| {
+        let demand = session_demand(cfg.seed, w.seq);
+        wait_ms.record((now - w.arrived) * 1e3);
+        let key = resident.insert(Resident {
+            arrived: w.arrived,
+            started: now,
+            demand,
+        });
+        let finish = now + demand.ticks as f64 * DEFAULT_TICK_DT;
+        wheel.schedule_at(finish, LANE_FINISH, w.seq, SoakEvent::Finish(key));
+        admitted += 1;
+    };
+
+    wheel.schedule_at(arrivals.next_arrival(), LANE_ARRIVAL, 0, SoakEvent::Arrival);
+    let mut next_seq = 1u64;
+
+    while let Some((k, ev)) = wheel.pop() {
+        let now = k.time;
+        last_t = now;
+        match ev {
+            SoakEvent::Arrival => {
+                let w = Waiting { seq: k.seq, arrived: now };
+                if resident.len() < cfg.slots {
+                    start(w, now, &mut resident, &mut wheel, &mut wait_ms);
+                } else {
+                    waiting.push_back(w);
+                    peak_waiting = peak_waiting.max(waiting.len());
+                }
+                peak_resident = peak_resident.max(resident.len());
+                if next_seq < cfg.sessions {
+                    wheel.schedule_at(
+                        arrivals.next_arrival(),
+                        LANE_ARRIVAL,
+                        next_seq,
+                        SoakEvent::Arrival,
+                    );
+                    next_seq += 1;
+                }
+            }
+            SoakEvent::Finish(key) => {
+                let r = resident
+                    .remove(key)
+                    .expect("one completion timer per residency");
+                completed += 1;
+                total_tokens += r.demand.ticks as u64;
+                if r.demand.stalled {
+                    stalled += 1;
+                }
+                latency_ms.record((now - r.arrived) * 1e3);
+                occupancy.record(resident.len() as f64);
+                if let Some(w) = waiting.pop_front() {
+                    start(w, now, &mut resident, &mut wheel, &mut wait_ms);
+                    peak_resident = peak_resident.max(resident.len());
+                }
+            }
+        }
+        events += 1;
+        if events % MEM_PROBE_EVERY == 0 {
+            let bytes = resident.approx_bytes()
+                + wheel.approx_bytes()
+                + waiting.capacity() * std::mem::size_of::<Waiting>()
+                + latency_ms.approx_bytes()
+                + wait_ms.approx_bytes();
+            account(&mut peak_bytes, bytes, cfg.mem_budget_bytes)?;
+        }
+    }
+    // final probe so short runs still report a footprint
+    let bytes = resident.approx_bytes()
+        + wheel.approx_bytes()
+        + waiting.capacity() * std::mem::size_of::<Waiting>()
+        + latency_ms.approx_bytes()
+        + wait_ms.approx_bytes();
+    account(&mut peak_bytes, bytes, cfg.mem_budget_bytes)?;
+
+    debug_assert!(resident.is_empty() && waiting.is_empty());
+    Ok(SoakReport {
+        mode: "events",
+        arrivals: admitted,
+        completed,
+        stalled,
+        total_tokens,
+        peak_resident,
+        peak_waiting,
+        peak_bytes,
+        elapsed_virtual_s: last_t,
+        latency_ms,
+        wait_ms,
+        occupancy,
+    })
+}
+
+/// A resident session in the driver core: advanced one tick at a time.
+struct DriverResident {
+    arrived: f64,
+    remaining: u32,
+    demand: Demand,
+}
+
+/// The pre-wheel reference core: a faithful miniature of the old
+/// `run_open_loop` + per-tick batcher shape. Every driver iteration
+/// scans the whole resident set once for the `blocked_until` probe and
+/// once to advance it a tick; arrivals are a fully materialized vector;
+/// per-sample metrics grow unbounded and sort at the end. This is the
+/// baseline `bench_soak` holds the event core's ≥5× against — do not
+/// "optimize" it.
+fn run_driver(cfg: &SoakConfig) -> Result<SoakReport> {
+    let sessions = usize::try_from(cfg.sessions).expect("driver soak within usize");
+    let arrivals = poisson_arrivals(sessions, cfg.rate_per_s, cfg.seed);
+    let mut resident: Vec<DriverResident> = Vec::new();
+    let mut waiting: VecDeque<Waiting> = VecDeque::new();
+
+    // unbounded per-sample vectors: the old Summary/ServeMetrics shape
+    let mut lat_samples: Vec<f64> = Vec::new();
+    let mut wait_samples: Vec<f64> = Vec::new();
+    let mut occupancy = StreamingMoments::default();
+    let (mut completed, mut stalled, mut total_tokens) = (0u64, 0u64, 0u64);
+    let (mut peak_resident, mut peak_waiting, mut peak_bytes) = (0usize, 0usize, 0usize);
+
+    let mut next = 0usize;
+    let mut now = 0.0f64;
+    let mut ticks = 0u64;
+    while completed < cfg.sessions {
+        while next < arrivals.len() && arrivals[next] <= now {
+            waiting.push_back(Waiting { seq: next as u64, arrived: arrivals[next] });
+            next += 1;
+        }
+        peak_waiting = peak_waiting.max(waiting.len());
+        while resident.len() < cfg.slots {
+            let Some(w) = waiting.pop_front() else {
+                break;
+            };
+            let demand = session_demand(cfg.seed, w.seq);
+            wait_samples.push((now - w.arrived) * 1e3);
+            resident.push(DriverResident { arrived: w.arrived, remaining: demand.ticks, demand });
+        }
+        peak_resident = peak_resident.max(resident.len());
+        if resident.is_empty() {
+            // idle: jump to the next arrival (the old driver did too —
+            // the per-tick cost is the busy-path scan, not idle spin)
+            if next < arrivals.len() {
+                now = arrivals[next];
+                continue;
+            }
+            break;
+        }
+        // blocked_until-style probe: scan every resident (always finds
+        // serviceable work in the white-box model, but the scan is the
+        // pre-wheel per-iteration cost being measured — black_box keeps
+        // the optimizer from deleting it)
+        let serviceable = std::hint::black_box(resident.iter().any(|r| r.remaining > 0));
+        debug_assert!(serviceable);
+        // tick: advance every resident one tick, retiring the done ones
+        let mut i = 0;
+        while i < resident.len() {
+            resident[i].remaining -= 1;
+            if resident[i].remaining == 0 {
+                let r = resident.swap_remove(i);
+                completed += 1;
+                total_tokens += r.demand.ticks as u64;
+                if r.demand.stalled {
+                    stalled += 1;
+                }
+                lat_samples.push((now + DEFAULT_TICK_DT - r.arrived) * 1e3);
+                occupancy.record(resident.len() as f64);
+            } else {
+                i += 1;
+            }
+        }
+        now += DEFAULT_TICK_DT;
+        ticks += 1;
+        if ticks % MEM_PROBE_EVERY == 0 {
+            let bytes = arrivals.capacity() * std::mem::size_of::<f64>()
+                + resident.capacity() * std::mem::size_of::<DriverResident>()
+                + waiting.capacity() * std::mem::size_of::<Waiting>()
+                + (lat_samples.capacity() + wait_samples.capacity())
+                    * std::mem::size_of::<f64>();
+            account(&mut peak_bytes, bytes, cfg.mem_budget_bytes)?;
+        }
+    }
+    let bytes = arrivals.capacity() * std::mem::size_of::<f64>()
+        + resident.capacity() * std::mem::size_of::<DriverResident>()
+        + waiting.capacity() * std::mem::size_of::<Waiting>()
+        + (lat_samples.capacity() + wait_samples.capacity()) * std::mem::size_of::<f64>();
+    account(&mut peak_bytes, bytes, cfg.mem_budget_bytes)?;
+
+    // fold the unbounded samples into Summaries for a comparable report
+    let mut latency_ms = Summary::bounded(cfg.summary_cap);
+    let mut wait_ms = Summary::bounded(cfg.summary_cap);
+    for &v in &lat_samples {
+        latency_ms.record(v);
+    }
+    for &v in &wait_samples {
+        wait_ms.record(v);
+    }
+    Ok(SoakReport {
+        mode: "driver",
+        arrivals: completed,
+        completed,
+        stalled,
+        total_tokens,
+        peak_resident,
+        peak_waiting,
+        peak_bytes,
+        elapsed_virtual_s: now,
+        latency_ms,
+        wait_ms,
+        occupancy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SoakConfig {
+        // ~0.7 utilization at 32 slots, like the default shape
+        SoakConfig {
+            sessions: 2000,
+            rate_per_s: 60.0,
+            slots: 32,
+            seed: 7,
+            ..SoakConfig::default()
+        }
+    }
+
+    #[test]
+    fn event_core_completes_every_session() {
+        let r = run_soak(&small(), SoakMode::Events).unwrap();
+        assert_eq!(r.completed, 2000);
+        assert_eq!(r.arrivals, 2000);
+        assert!(r.total_tokens > 0);
+        assert!(r.peak_resident <= 32);
+        assert!(r.elapsed_virtual_s > 0.0);
+        assert!(r.peak_bytes > 0);
+    }
+
+    #[test]
+    fn cores_agree_on_completion_invariants() {
+        let cfg = small();
+        let ev = run_soak(&cfg, SoakMode::Events).unwrap();
+        let dr = run_soak(&cfg, SoakMode::Driver).unwrap();
+        assert_eq!(ev.completed, dr.completed);
+        assert_eq!(ev.total_tokens, dr.total_tokens);
+        assert_eq!(ev.stalled, dr.stalled);
+    }
+
+    #[test]
+    fn double_runs_serialize_byte_identical_json() {
+        let cfg = small();
+        let a = run_soak(&cfg, SoakMode::Events).unwrap().to_json().to_string();
+        let b = run_soak(&cfg, SoakMode::Events).unwrap().to_json().to_string();
+        assert_eq!(a, b);
+        let c = run_soak(&cfg, SoakMode::Driver).unwrap().to_json().to_string();
+        let d = run_soak(&cfg, SoakMode::Driver).unwrap().to_json().to_string();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn event_core_memory_is_bounded_by_residency_not_arrivals() {
+        // 10x the sessions must not grow the accounted footprint
+        // (same slots, same reservoir caps; only the wheel's transient
+        // occupancy varies)
+        let small_run = run_soak(
+            &SoakConfig { sessions: 5000, summary_cap: 512, ..small() },
+            SoakMode::Events,
+        )
+        .unwrap();
+        let big_run = run_soak(
+            &SoakConfig { sessions: 50_000, summary_cap: 512, ..small() },
+            SoakMode::Events,
+        )
+        .unwrap();
+        assert!(
+            big_run.peak_bytes < small_run.peak_bytes * 4,
+            "10x sessions grew accounted bytes {} -> {}",
+            small_run.peak_bytes,
+            big_run.peak_bytes
+        );
+    }
+
+    #[test]
+    fn memory_budget_breach_fails_the_run() {
+        let cfg = SoakConfig { mem_budget_bytes: Some(64), ..small() };
+        assert!(run_soak(&cfg, SoakMode::Events).is_err());
+    }
+
+    #[test]
+    fn demand_is_a_pure_function_of_seed_and_seq() {
+        for seq in 0..100u64 {
+            let a = session_demand(3, seq);
+            let b = session_demand(3, seq);
+            assert_eq!((a.ticks, a.stalled), (b.ticks, b.stalled));
+        }
+        let changed = (0..100u64)
+            .filter(|&s| session_demand(3, s).ticks != session_demand(4, s).ticks)
+            .count();
+        assert!(changed > 50, "seed must reshuffle demands ({changed}/100 changed)");
+    }
+}

@@ -19,23 +19,45 @@
 
 use anyhow::Result;
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, DEFAULT_TICK_DT};
 use crate::blackbox::BlackboxBatcher;
 use crate::datasets::Question;
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
+use crate::util::wheel::EventWheel;
+
+/// Streaming Poisson arrival process: yields the same cumulative-sum
+/// sequence as [`poisson_arrivals`] one timestamp at a time, in O(1)
+/// state — the soak driver paces a million arrivals through this
+/// without ever materializing them.
+pub struct PoissonStream {
+    rng: Rng,
+    rate_per_s: f64,
+    t: f64,
+}
+
+impl PoissonStream {
+    pub fn new(rate_per_s: f64, seed: u64) -> PoissonStream {
+        PoissonStream {
+            rng: Rng::new(seed ^ 0xA221),
+            rate_per_s,
+            t: 0.0,
+        }
+    }
+
+    /// Next arrival time (seconds): the previous one plus an exponential
+    /// inter-arrival gap.
+    pub fn next_arrival(&mut self) -> f64 {
+        self.t += self.rng.exponential(self.rate_per_s);
+        self.t
+    }
+}
 
 /// Seeded Poisson arrival times (seconds) for `n` requests at
 /// `rate_per_s`: cumulative sums of exponential inter-arrival gaps.
 pub fn poisson_arrivals(n: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
-    let mut rng = Rng::new(seed ^ 0xA221);
-    let mut t = 0.0;
-    (0..n)
-        .map(|_| {
-            t += rng.exponential(rate_per_s);
-            t
-        })
-        .collect()
+    let mut stream = PoissonStream::new(rate_per_s, seed);
+    (0..n).map(|_| stream.next_arrival()).collect()
 }
 
 /// Anything the open-loop driver can pace: a clocked batcher that
@@ -98,6 +120,12 @@ impl OpenLoopTarget for BlackboxBatcher<'_> {
 /// submitted has completed. Questions are taken round-robin from
 /// `questions`; `arrivals` must be non-decreasing (as produced by
 /// [`poisson_arrivals`]).
+///
+/// Arrivals live on the event wheel (DESIGN.md §3.10): each loop
+/// iteration pops the due ones — `(time, seq)` order over a
+/// non-decreasing input reproduces the old slice scan exactly — and the
+/// wheel's peeked head doubles as the idle-jump target, so a long gap
+/// between arrivals costs one jump, not a bucket crawl.
 pub fn run_open_loop<T: OpenLoopTarget>(
     target: &mut T,
     questions: &[Question],
@@ -106,20 +134,23 @@ pub fn run_open_loop<T: OpenLoopTarget>(
 ) -> Result<()> {
     anyhow::ensure!(!questions.is_empty(), "workload needs at least one question");
     let clock = target.clock().clone();
-    let mut next = 0usize;
+    let mut wheel: EventWheel<usize> = EventWheel::new(DEFAULT_TICK_DT);
+    for (i, &t) in arrivals.iter().enumerate() {
+        wheel.schedule_at(t, 0, i as u64, i);
+    }
     loop {
         let now = clock.now();
-        while next < arrivals.len() && arrivals[next] <= now {
-            target.submit(questions[next % questions.len()].clone());
-            next += 1;
+        while wheel.peek_time().is_some_and(|t| t <= now) {
+            let (_, i) = wheel.pop().expect("peeked arrival exists");
+            target.submit(questions[i % questions.len()].clone());
         }
         if !target.has_work() {
-            if next >= arrivals.len() {
+            let Some(next_t) = wheel.peek_time() else {
                 break;
-            }
+            };
             // idle: jump (virtual) or wait (wall) for the next arrival
             if clock.is_virtual() {
-                clock.advance(arrivals[next] - now);
+                clock.advance(next_t - now);
             } else {
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
@@ -129,8 +160,8 @@ pub fn run_open_loop<T: OpenLoopTarget>(
             // parked on a future event (chunk delivery): jump to the
             // earlier of it and the next request arrival
             let mut at = until;
-            if next < arrivals.len() {
-                at = at.min(arrivals[next]);
+            if let Some(next_t) = wheel.peek_time() {
+                at = at.min(next_t);
             }
             if at > now {
                 if clock.is_virtual() {
@@ -173,5 +204,14 @@ mod tests {
         let a = poisson_arrivals(4000, 10.0, 1);
         let mean_gap = a.last().unwrap() / a.len() as f64;
         assert!((mean_gap - 0.1).abs() < 0.01, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn stream_reproduces_the_batch_arrivals_bit_for_bit() {
+        let batch = poisson_arrivals(256, 6.0, 77);
+        let mut stream = PoissonStream::new(6.0, 77);
+        for (i, &t) in batch.iter().enumerate() {
+            assert_eq!(stream.next_arrival().to_bits(), t.to_bits(), "arrival {i}");
+        }
     }
 }

@@ -6,6 +6,7 @@
 //!   trace                        generate monitored reasoning traces
 //!   figures                      reproduce the paper's figures
 //!   blackbox                     black-box streaming demo (Fig. 5)
+//!   soak                         million-session scheduling soak
 //!
 //! Every live command loads the AOT artifacts when present (feature
 //! `pjrt` + `make artifacts`) and otherwise falls back to the
@@ -20,8 +21,9 @@ use eat_serve::blackbox::{
 };
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::{
-    poisson_arrivals, run_open_loop, zoo_policy_factory, Batcher, Cluster, ClusterConfig,
-    MetricsReport, MonitorModel, PolicyFactory, RoutePolicy, DEFAULT_TICK_DT,
+    poisson_arrivals, run_open_loop, run_soak, zoo_policy_factory, Batcher, Cluster,
+    ClusterConfig, MetricsReport, MonitorModel, PolicyFactory, RoutePolicy, SoakConfig,
+    SoakMode, DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::eval::figures::{self, FigureCtx};
@@ -30,9 +32,10 @@ use eat_serve::exit::EatPolicy;
 use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::cli::{
     render_flags, Args, ServeArgs, ServeMode, SERVE_BLACKBOX_FLAGS, SERVE_CLUSTER_FLAGS,
-    SERVE_ENGINE_FLAGS, SERVE_SHARED_FLAGS,
+    SERVE_ENGINE_FLAGS, SERVE_SHARED_FLAGS, SOAK_FLAGS,
 };
 use eat_serve::util::clock::Clock;
+use eat_serve::util::stats::DEFAULT_SUMMARY_CAP;
 
 fn usage() -> ! {
     // the serve flag sections are generated from the FlagSpec tables in
@@ -62,6 +65,9 @@ COMMANDS
             per-family Pareto table, writes sorted-key JSON with --out
   figures   --fig N|all  [--traces-dir DIR] [--out-dir DIR]
   blackbox  [--questions N] [--chunk C] [--delta X]
+  soak      million-session scheduling soak on the event wheel + slab
+            arena (DESIGN.md §3.10); virtual-time, deterministic,
+            memory-bounded
   bench-diff BASE NEW [--tol X]  compare BENCH_*.json snapshots (two
             files, or two dirs matched by file name); exits non-zero
             when a bench's mean slows past 1+tol (default tol 1.0)
@@ -74,6 +80,8 @@ SERVE FLAGS (cluster)
 {cluster}
 SERVE FLAGS (blackbox)
 {blackbox}
+SOAK FLAGS
+{soak}
 FLAG DEFAULTS
   --artifacts artifacts   --traces-dir results/traces   --out-dir results
   --alpha 0.2  --delta 1e-3  --budget 96  (blackbox: --alpha 0.8
@@ -87,6 +95,7 @@ FLAG DEFAULTS
         engine = render_flags("  ", SERVE_ENGINE_FLAGS),
         cluster = render_flags("  ", SERVE_CLUSTER_FLAGS),
         blackbox = render_flags("  ", SERVE_BLACKBOX_FLAGS),
+        soak = render_flags("  ", SOAK_FLAGS),
     );
     std::process::exit(2);
 }
@@ -673,6 +682,39 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro soak` — the memory-bounded million-session scheduling soak
+/// (DESIGN.md §3.10). Virtual-time only, a pure function of the flags:
+/// a double run writes byte-identical `--metrics-json` output, which is
+/// exactly what the CI `soak-smoke` job diffs. `--driver` selects the
+/// pre-wheel tick-scan reference core so the two can be raced and
+/// cross-checked on completion invariants.
+fn cmd_soak(args: &Args) -> Result<()> {
+    let cfg = SoakConfig {
+        sessions: args.u64_or("sessions", 100_000),
+        rate_per_s: args.f64_or("rate", 500.0),
+        slots: args.usize_or("slots", 256),
+        seed: args.u64_or("seed", 0),
+        summary_cap: args.usize_or("summary-cap", DEFAULT_SUMMARY_CAP),
+        mem_budget_bytes: args.usize_opt("mem-mb").map(|m| m as u64 * 1024 * 1024),
+    };
+    let mode = if args.has("driver") { SoakMode::Driver } else { SoakMode::Events };
+    let t0 = std::time::Instant::now();
+    let report = run_soak(&cfg, mode)?;
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    println!("{}", report.report());
+    println!(
+        "wall {:.2}s — {:.0} sessions/s",
+        wall,
+        report.completed as f64 / wall
+    );
+    if let Some(path) = args.str_opt("metrics-json") {
+        std::fs::write(path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("soak metrics -> {path}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional(0) {
@@ -682,6 +724,7 @@ fn main() -> Result<()> {
         Some("sweep-zoo") => cmd_sweep_zoo(&args),
         Some("figures") => cmd_figures(&args),
         Some("blackbox") => cmd_blackbox(&args),
+        Some("soak") => cmd_soak(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
         _ => usage(),
     }

@@ -240,6 +240,20 @@ pub const SERVE_BLACKBOX_FLAGS: &[FlagSpec] = &[
     FlagSpec { flag: "--jitter J", help: "remote latency jitter fraction" },
 ];
 
+/// `soak` flags (DESIGN.md §3.10). The soak always runs on virtual
+/// time; `--virtual` is accepted for symmetry with `serve`.
+pub const SOAK_FLAGS: &[FlagSpec] = &[
+    FlagSpec { flag: "--sessions N", help: "sessions to push through (default 100000)" },
+    FlagSpec { flag: "--rate R", help: "Poisson arrival rate, sessions/s (default 500)" },
+    FlagSpec { flag: "--slots S", help: "concurrent resident sessions (default 256)" },
+    FlagSpec { flag: "--seed K", help: "demand + arrival seed (default 0)" },
+    FlagSpec { flag: "--mem-mb M", help: "hard accounted-memory ceiling; breach fails the run" },
+    FlagSpec { flag: "--summary-cap C", help: "latency/wait reservoir bound (default 65536)" },
+    FlagSpec { flag: "--driver", help: "pre-wheel tick-scan reference core (bench baseline)" },
+    FlagSpec { flag: "--metrics-json FILE", help: "write the deterministic soak report as JSON" },
+    FlagSpec { flag: "--virtual", help: "accepted no-op: the soak is always virtual-time" },
+];
+
 /// Render one flag table, aligned, for the usage string.
 pub fn render_flags(indent: &str, specs: &[FlagSpec]) -> String {
     let width = specs.iter().map(|s| s.flag.len()).max().unwrap_or(0);

@@ -8,4 +8,6 @@ pub mod cli;
 pub mod clock;
 pub mod json;
 pub mod rng;
+pub mod slab;
 pub mod stats;
+pub mod wheel;

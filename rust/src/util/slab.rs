@@ -1,0 +1,244 @@
+//! Generational slab arena (DESIGN.md §3.10): dense, index-stable
+//! storage for session state. Sessions churn constantly in a soak run
+//! (a million arrivals against a few hundred resident at a time);
+//! boxing each one scatters the heap and keying them by id in a map
+//! costs a lookup per event. A slab keeps every live session in one
+//! contiguous allocation, hands out O(1) generational keys, and reuses
+//! freed slots LIFO — so steady-state insert/remove allocates nothing
+//! and the arena's high-water footprint is `peak_live × slot_size`,
+//! which is exactly the bytes/session number the soak reports.
+//!
+//! Generations make dangling keys safe *and detectable*: the event
+//! wheel holds keys to sessions that may complete, migrate or stall
+//! out before their timer fires, and a stale key simply misses
+//! (`get`/`remove` return `None`) instead of aliasing whatever reused
+//! the slot. Iteration is in slot-index order — deterministic, never
+//! hash order.
+
+/// Key into a [`Slab`]: slot index plus the generation it was minted
+/// for. A key outlives its entry harmlessly — every access checks the
+/// generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GenKey {
+    index: u32,
+    gen: u32,
+}
+
+impl GenKey {
+    /// Slot index (stable while the entry lives; reused after removal).
+    pub fn index(&self) -> u32 {
+        self.index
+    }
+
+    pub fn gen(&self) -> u32 {
+        self.gen
+    }
+}
+
+struct Slot<T> {
+    /// Bumped on every removal, so old keys to this slot miss.
+    gen: u32,
+    val: Option<T>,
+}
+
+/// Generational slab arena; see the module docs.
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    /// Free slot indices, reused LIFO (cache-warm first).
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Slab<T> {
+        Slab {
+            slots: Vec::with_capacity(cap),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slots ever allocated (the high-water mark of concurrent entries).
+    pub fn capacity_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn insert(&mut self, val: T) -> GenKey {
+        self.len += 1;
+        if let Some(index) = self.free.pop() {
+            let slot = &mut self.slots[index as usize];
+            debug_assert!(slot.val.is_none(), "free-listed slot must be vacant");
+            slot.val = Some(val);
+            return GenKey {
+                index,
+                gen: slot.gen,
+            };
+        }
+        let index = u32::try_from(self.slots.len()).expect("slab capped at u32 slots");
+        self.slots.push(Slot { gen: 0, val: Some(val) });
+        GenKey { index, gen: 0 }
+    }
+
+    fn slot(&self, key: GenKey) -> Option<&Slot<T>> {
+        self.slots
+            .get(key.index as usize)
+            .filter(|s| s.gen == key.gen && s.val.is_some())
+    }
+
+    pub fn contains(&self, key: GenKey) -> bool {
+        self.slot(key).is_some()
+    }
+
+    pub fn get(&self, key: GenKey) -> Option<&T> {
+        self.slot(key).and_then(|s| s.val.as_ref())
+    }
+
+    pub fn get_mut(&mut self, key: GenKey) -> Option<&mut T> {
+        let slot = self
+            .slots
+            .get_mut(key.index as usize)
+            .filter(|s| s.gen == key.gen && s.val.is_some())?;
+        slot.val.as_mut()
+    }
+
+    /// Remove and return the entry; stale keys miss with `None`. The
+    /// slot's generation bumps so every outstanding key to it dies.
+    pub fn remove(&mut self, key: GenKey) -> Option<T> {
+        let slot = self
+            .slots
+            .get_mut(key.index as usize)
+            .filter(|s| s.gen == key.gen && s.val.is_some())?;
+        let val = slot.val.take();
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(key.index);
+        self.len -= 1;
+        val
+    }
+
+    /// Live entries in slot-index order (deterministic).
+    pub fn iter(&self) -> impl Iterator<Item = (GenKey, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| {
+            s.val.as_ref().map(|v| {
+                (
+                    GenKey {
+                        index: i as u32,
+                        gen: s.gen,
+                    },
+                    v,
+                )
+            })
+        })
+    }
+
+    /// Approximate heap footprint (capacity-based): the arena backbone
+    /// plus the free list — the denominator-side input to the soak's
+    /// bytes/session accounting.
+    pub fn approx_bytes(&self) -> usize {
+        self.slots.capacity() * std::mem::size_of::<Slot<T>>()
+            + self.free.capacity() * std::mem::size_of::<u32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_round_trip() {
+        let mut s: Slab<String> = Slab::new();
+        let a = s.insert("a".into());
+        let b = s.insert("b".into());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a).unwrap(), "a");
+        assert_eq!(s.get_mut(b).map(|v| v.push('!')), Some(()));
+        assert_eq!(s.remove(b).unwrap(), "b!");
+        assert_eq!(s.len(), 1);
+        assert!(s.get(b).is_none());
+        assert_eq!(s.remove(a).unwrap(), "a");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn stale_keys_miss_after_slot_reuse() {
+        let mut s: Slab<u64> = Slab::new();
+        let k1 = s.insert(1);
+        assert_eq!(s.remove(k1), Some(1));
+        let k2 = s.insert(2);
+        // LIFO reuse: same slot index, new generation
+        assert_eq!(k2.index(), k1.index());
+        assert_ne!(k2.gen(), k1.gen());
+        assert!(!s.contains(k1));
+        assert_eq!(s.remove(k1), None, "stale key must miss, not alias");
+        assert_eq!(s.get(k2), Some(&2));
+    }
+
+    #[test]
+    fn double_remove_is_a_miss() {
+        let mut s: Slab<u8> = Slab::new();
+        let k = s.insert(7);
+        assert_eq!(s.remove(k), Some(7));
+        assert_eq!(s.remove(k), None);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn capacity_tracks_peak_not_total_churn() {
+        let mut s: Slab<u64> = Slab::new();
+        // 1000 sequential insert/remove cycles at ≤ 2 live entries must
+        // not grow the arena past 2 slots
+        let mut held = s.insert(0);
+        for i in 1..1000u64 {
+            let k = s.insert(i);
+            s.remove(held);
+            held = k;
+        }
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.capacity_slots(), 2);
+    }
+
+    #[test]
+    fn iteration_is_index_ordered_and_skips_holes() {
+        let mut s: Slab<u32> = Slab::new();
+        let keys: Vec<GenKey> = (0..5).map(|i| s.insert(i * 10)).collect();
+        s.remove(keys[1]);
+        s.remove(keys[3]);
+        let got: Vec<u32> = s.iter().map(|(_, &v)| v).collect();
+        assert_eq!(got, vec![0, 20, 40]);
+        for (k, &v) in s.iter() {
+            assert_eq!(s.get(k), Some(&v));
+        }
+    }
+
+    #[test]
+    fn bytes_reflect_backbone_capacity() {
+        let mut s: Slab<[u64; 8]> = Slab::new();
+        let empty = s.approx_bytes();
+        for _ in 0..100 {
+            s.insert([0; 8]);
+        }
+        assert!(s.approx_bytes() >= empty + 100 * std::mem::size_of::<[u64; 8]>());
+    }
+}

@@ -84,16 +84,141 @@ pub fn auc_normalized_counting(points: &[(f64, f64)]) -> (f64, usize) {
     (area, skipped)
 }
 
-/// Simple latency histogram for the serving metrics, with a lazily
-/// maintained sort: every accessor used to clone + sort the sample vec
-/// (~10 sorts per metrics snapshot); now `record` marks the store
-/// unsorted and the first quantile accessor after a batch of records
-/// sorts once in place — a full `to_json()` snapshot costs one sort.
-#[derive(Debug, Clone, Default)]
+/// SplitMix64 finalizer: the reservoir's deterministic priority hash.
+/// A bijection on u64, so distinct insertion indices always get
+/// distinct priorities (total order, no tiebreak needed).
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Samples a [`Summary`] retains before switching from exact quantiles
+/// to reservoir quantiles. High enough that every pre-existing workload
+/// (sims, tests, CI determinism runs — thousands of requests) stays in
+/// exact mode with byte-identical JSON; only unbounded soak-scale runs
+/// cross it.
+pub const DEFAULT_SUMMARY_CAP: usize = 1 << 16;
+
+/// Exact streaming moments (Welford) plus total_cmp min/max: O(1) state
+/// per series, for metrics that must stay memory-bounded at soak scale.
+/// Count, mean, variance and the extremes are exact for *all* recorded
+/// values no matter how many.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamingMoments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    mn: f64,
+    mx: f64,
+}
+
+impl StreamingMoments {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.n += 1;
+        if self.n == 1 {
+            self.mn = v;
+            self.mx = v;
+        } else {
+            // total_cmp extremes: same NaN contract as `percentile`
+            if v.total_cmp(&self.mn).is_lt() {
+                self.mn = v;
+            }
+            if v.total_cmp(&self.mx).is_gt() {
+                self.mx = v;
+            }
+        }
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean (0.0 if empty, like [`mean`]).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance (0.0 below two samples, like [`variance`]).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mn
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mx
+        }
+    }
+}
+
+/// Latency histogram for the serving metrics, memory-bounded
+/// (DESIGN.md §3.10) with a lazily maintained sort.
+///
+/// Up to `cap` samples ([`DEFAULT_SUMMARY_CAP`] for [`Summary::new`])
+/// every value is retained and quantiles are **exact** — bit-for-bit
+/// the pre-bounded behavior, which is what keeps all pinned metrics
+/// JSON unchanged. Past the cap the store becomes a deterministic
+/// reservoir: each record's keep/evict priority is [`mix64`] of its
+/// insertion index (a pure function of the record *sequence*, never of
+/// the values or of anything wall-clock), the `cap` lowest-priority
+/// samples survive, and quantiles interpolate over the survivors.
+/// `count`/`mean`/`total` and `min`/`max` stay exact at any scale via
+/// streaming fields.
+///
+/// The lazy sort is unchanged from PR 4: `record` marks the store
+/// dirty and the first quantile accessor after a batch of records
+/// sorts once — a full `to_json()` snapshot costs one sort.
+#[derive(Debug, Clone)]
 pub struct Summary {
-    samples: std::cell::RefCell<Vec<f64>>,
-    sorted: std::cell::Cell<bool>,
+    cap: usize,
+    /// Total records ever (exact, beyond the reservoir).
+    n: u64,
     sum: f64,
+    /// Exact extremes over all records (total_cmp order).
+    mn: f64,
+    mx: f64,
+    /// Retained samples as (priority, value bits); a max-heap by
+    /// priority once at capacity, so eviction is O(log cap).
+    entries: std::collections::BinaryHeap<(u64, u64)>,
+    /// Lazily (re)built sorted view of the retained values.
+    sorted: std::cell::RefCell<Vec<f64>>,
+    dirty: std::cell::Cell<bool>,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary::bounded(DEFAULT_SUMMARY_CAP)
+    }
 }
 
 impl Summary {
@@ -101,22 +226,68 @@ impl Summary {
         Self::default()
     }
 
-    pub fn record(&mut self, v: f64) {
-        self.samples.get_mut().push(v);
-        self.sorted.set(false);
-        self.sum += v;
+    /// Summary holding at most `cap` samples (min 2). Below `cap` it is
+    /// exact; above, a deterministic reservoir.
+    pub fn bounded(cap: usize) -> Self {
+        Summary {
+            cap: cap.max(2),
+            n: 0,
+            sum: 0.0,
+            mn: 0.0,
+            mx: 0.0,
+            entries: std::collections::BinaryHeap::new(),
+            sorted: std::cell::RefCell::new(Vec::new()),
+            dirty: std::cell::Cell::new(false),
+        }
     }
 
+    pub fn record(&mut self, v: f64) {
+        let pri = mix64(self.n);
+        self.n += 1;
+        self.sum += v;
+        if self.n == 1 {
+            self.mn = v;
+            self.mx = v;
+        } else {
+            if v.total_cmp(&self.mn).is_lt() {
+                self.mn = v;
+            }
+            if v.total_cmp(&self.mx).is_gt() {
+                self.mx = v;
+            }
+        }
+        self.entries.push((pri, v.to_bits()));
+        if self.entries.len() > self.cap {
+            self.entries.pop();
+        }
+        self.dirty.set(true);
+    }
+
+    /// Total records ever (not just retained ones).
     pub fn count(&self) -> usize {
-        self.samples.borrow().len()
+        self.n as usize
+    }
+
+    /// Samples actually retained (== count below the cap).
+    pub fn retained(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True once the reservoir has started evicting (quantiles are
+    /// interpolated over a sample of the stream, extremes stay exact).
+    pub fn is_sampled(&self) -> bool {
+        (self.n as usize) > self.entries.len()
     }
 
     fn ensure_sorted(&self) {
-        if !self.sorted.get() {
+        if self.dirty.get() {
+            let mut s = self.sorted.borrow_mut();
+            s.clear();
+            s.extend(self.entries.iter().map(|&(_, bits)| f64::from_bits(bits)));
             // total_cmp: a NaN sample sorts last instead of panicking
             // mid-snapshot (same contract as `percentile`)
-            self.samples.borrow_mut().sort_by(f64::total_cmp);
-            self.sorted.set(true);
+            s.sort_by(f64::total_cmp);
+            self.dirty.set(false);
         }
     }
 
@@ -124,15 +295,14 @@ impl Summary {
     /// — same definition as [`percentile`], without the per-call sort.
     fn quantile(&self, q: f64) -> f64 {
         self.ensure_sorted();
-        interp_sorted(&self.samples.borrow(), q)
+        interp_sorted(&self.sorted.borrow(), q)
     }
 
     pub fn mean(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
+        if self.n == 0 {
             0.0
         } else {
-            self.sum / n as f64
+            self.sum / self.n as f64
         }
     }
 
@@ -148,18 +318,35 @@ impl Summary {
         self.quantile(0.99)
     }
 
-    /// Largest sample (0.0 if empty, like `mean`/`percentile`).
+    /// Largest sample ever (0.0 if empty, like `mean`/`percentile`) —
+    /// exact even when the reservoir has evicted it.
     pub fn max(&self) -> f64 {
-        self.quantile(1.0)
+        if self.is_sampled() {
+            self.mx
+        } else {
+            self.quantile(1.0)
+        }
     }
 
-    /// Smallest sample (0.0 if empty, like `mean`/`percentile`).
+    /// Smallest sample ever (0.0 if empty, like `mean`/`percentile`) —
+    /// exact even when the reservoir has evicted it.
     pub fn min(&self) -> f64 {
-        self.quantile(0.0)
+        if self.is_sampled() {
+            self.mn
+        } else {
+            self.quantile(0.0)
+        }
     }
 
     pub fn total(&self) -> f64 {
         self.sum
+    }
+
+    /// Approximate heap footprint (capacity-based): bounded by the cap,
+    /// never by the stream length.
+    pub fn approx_bytes(&self) -> usize {
+        self.entries.capacity() * std::mem::size_of::<(u64, u64)>()
+            + self.sorted.borrow().capacity() * std::mem::size_of::<f64>()
     }
 }
 
@@ -269,5 +456,112 @@ mod tests {
         assert!(s.p99() >= 99.0 && s.p99() <= 100.0);
         assert_eq!(s.max(), 100.0);
         assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn bounded_summary_is_exact_below_the_cap() {
+        // at or below the cap the retained multiset is the full stream,
+        // so every accessor must agree with an effectively-unbounded
+        // Summary bit for bit (the pinned-JSON invariant)
+        let mut small = Summary::bounded(64);
+        let mut big = Summary::bounded(1 << 20);
+        for i in 0..64 {
+            let v = ((i * 37) % 64) as f64 * 0.5;
+            small.record(v);
+            big.record(v);
+        }
+        assert!(!small.is_sampled());
+        for q in [
+            Summary::min,
+            Summary::p50,
+            Summary::p95,
+            Summary::p99,
+            Summary::max,
+            Summary::mean,
+        ] {
+            assert_eq!(q(&small).to_bits(), q(&big).to_bits());
+        }
+        assert_eq!(small.count(), big.count());
+    }
+
+    #[test]
+    fn bounded_summary_caps_memory_and_keeps_exact_aggregates() {
+        let mut s = Summary::bounded(128);
+        for i in 0..100_000u64 {
+            s.record(i as f64);
+        }
+        assert!(s.is_sampled());
+        assert_eq!(s.retained(), 128);
+        assert_eq!(s.count(), 100_000);
+        // count/mean/min/max/total are streaming-exact past the cap
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 99_999.0);
+        assert!((s.mean() - 49_999.5).abs() < 1e-6);
+        assert!((s.total() - 4_999_950_000.0).abs() < 1e-3);
+        // quantiles are reservoir estimates over a uniform ramp: loose
+        // but sane bounds
+        assert!(s.p50() > 20_000.0 && s.p50() < 80_000.0, "p50 {}", s.p50());
+        assert!(s.p95() > s.p50());
+        // bounded by the cap, not the stream
+        assert!(s.approx_bytes() < 128 * 64);
+    }
+
+    #[test]
+    fn bounded_summary_reservoir_is_deterministic() {
+        let run = || {
+            let mut s = Summary::bounded(32);
+            for i in 0..5_000u64 {
+                s.record((i as f64).sin() * 100.0);
+            }
+            (
+                s.p50().to_bits(),
+                s.p95().to_bits(),
+                s.p99().to_bits(),
+                s.min().to_bits(),
+                s.max().to_bits(),
+            )
+        };
+        assert_eq!(run(), run(), "same stream must sample identically");
+    }
+
+    #[test]
+    fn bounded_summary_keeps_nan_extremes_exact_past_the_cap() {
+        let mut s = Summary::bounded(16);
+        s.record(f64::NAN);
+        for i in 0..1_000u64 {
+            s.record(i as f64);
+        }
+        assert!(s.is_sampled());
+        // total_cmp order: positive NaN outranks every finite max
+        assert!(s.max().is_nan());
+        assert_eq!(s.min(), 0.0);
+    }
+
+    #[test]
+    fn streaming_moments_match_batch_stats() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 131) % 997) as f64 * 0.25).collect();
+        let mut m = StreamingMoments::new();
+        for &x in &xs {
+            m.record(x);
+        }
+        assert_eq!(m.count(), 1000);
+        assert!((m.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((m.variance() - variance(&xs)).abs() < 1e-6);
+        assert!((m.stddev() - stddev(&xs)).abs() < 1e-9);
+        assert_eq!(m.min(), percentile(&xs, 0.0));
+        assert_eq!(m.max(), percentile(&xs, 1.0));
+        // empty contract mirrors the slice helpers
+        let e = StreamingMoments::new();
+        assert_eq!((e.mean(), e.variance(), e.min(), e.max()), (0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn mix64_is_an_index_keyed_bijection_prefix() {
+        // sanity: no collisions over a small prefix (mix64 is bijective,
+        // so none can exist; this guards accidental edits)
+        let mut seen: Vec<u64> = (0..4096u64).map(mix64).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 4096);
     }
 }

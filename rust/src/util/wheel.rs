@@ -1,0 +1,440 @@
+//! Virtual-time event wheel (DESIGN.md §3.10): one calendar queue that
+//! owns *every* future event in a simulation — open-loop arrivals,
+//! black-box chunk deliveries, suspension aging, soak completion and
+//! stall timers — so the hot path asks "what fires next" in O(1)
+//! amortized instead of rescanning per-component sorted vectors.
+//!
+//! Structure: a ring of `nbuckets` time buckets of `width` virtual
+//! seconds each, anchored at `origin`. An event lands in the bucket its
+//! timestamp falls into; events past the ring's horizon wait in an
+//! overflow list and are re-filed when the ring rotates past them. Each
+//! bucket is a tiny binary min-heap over the **total** event order
+//!
+//! ```text
+//! (virtual_time by f64::total_cmp, lane, seq)
+//! ```
+//!
+//! which is exactly the `(virtual_time, replica_id, seq)` order the
+//! pre-wheel sorted-vec/heap schedulers dequeued in — the differential
+//! proptest in `rust/tests/proptests.rs` holds the wheel to it against
+//! a reference [`std::collections::BinaryHeap`] on random event sets.
+//!
+//! Determinism: bucket choice, heap sift order and overflow re-filing
+//! are pure functions of the (key, insertion-order) stream — no
+//! wall-clock reads, no hashing — so two same-seed simulation runs pop
+//! byte-identical event sequences.
+//!
+//! Cost model: `schedule` is O(log bucket_occupancy) (buckets hold few
+//! events, so effectively O(1)); `pop`/`peek` amortize the cursor walk
+//! over rotations; a fully drained wheel re-anchors at the next
+//! scheduled event, making long idle gaps one O(1) jump instead of a
+//! bucket crawl.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Total event order: virtual time (total_cmp, so NaN cannot panic the
+/// scheduler), then lane (replica / slot id), then submission seq.
+#[derive(Debug, Clone, Copy)]
+pub struct EventKey {
+    pub time: f64,
+    pub lane: u32,
+    pub seq: u64,
+}
+
+impl EventKey {
+    pub fn new(time: f64, lane: u32, seq: u64) -> EventKey {
+        EventKey { time, lane, seq }
+    }
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for EventKey {}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.lane.cmp(&other.lane))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Heap entry: ordered by key only, payload rides along.
+struct Entry<V> {
+    key: EventKey,
+    val: V,
+}
+
+impl<V> PartialEq for Entry<V> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl<V> Eq for Entry<V> {}
+
+impl<V> PartialOrd for Entry<V> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<V> Ord for Entry<V> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+type Bucket<V> = BinaryHeap<Reverse<Entry<V>>>;
+
+/// Hierarchical (ring + overflow) virtual-time calendar queue. See the
+/// module docs for the ordering and determinism contracts.
+pub struct EventWheel<V> {
+    buckets: Vec<Bucket<V>>,
+    /// Events at or past the ring horizon, unsorted; re-filed on rotate.
+    overflow: Vec<Entry<V>>,
+    /// Virtual time the ring starts at; bucket `i` covers
+    /// `[origin + i·width, origin + (i+1)·width)`.
+    origin: f64,
+    /// Current consumption bucket; events for earlier buckets (late
+    /// schedules) clamp here so they still pop in key order.
+    cursor: usize,
+    width: f64,
+    len: usize,
+}
+
+/// Default ring width: one [`crate::coordinator::DEFAULT_TICK_DT`]-sized
+/// bucket granularity over a ~10-virtual-second horizon.
+const DEFAULT_BUCKETS: usize = 1024;
+
+impl<V> EventWheel<V> {
+    /// Wheel with `width` virtual seconds per bucket and the default
+    /// ring size. `width` must be positive and finite.
+    pub fn new(width: f64) -> EventWheel<V> {
+        EventWheel::with_geometry(width, DEFAULT_BUCKETS)
+    }
+
+    pub fn with_geometry(width: f64, nbuckets: usize) -> EventWheel<V> {
+        assert!(width.is_finite() && width > 0.0, "bucket width must be positive");
+        assert!(nbuckets >= 1, "wheel needs at least one bucket");
+        EventWheel {
+            buckets: (0..nbuckets).map(|_| BinaryHeap::new()).collect(),
+            overflow: Vec::new(),
+            origin: 0.0,
+            cursor: 0,
+            width,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn horizon_buckets(&self) -> f64 {
+        self.buckets.len() as f64
+    }
+
+    /// File one entry into its ring bucket (clamped to the cursor for
+    /// past timestamps) or the overflow list.
+    fn file(&mut self, e: Entry<V>) {
+        let d = (e.key.time - self.origin) / self.width;
+        if d >= self.horizon_buckets() {
+            self.overflow.push(e);
+            return;
+        }
+        // `as usize` saturates negative/NaN to 0; the max() keeps late
+        // schedules poppable (they sort first inside the cursor bucket)
+        let idx = (d as usize).min(self.buckets.len() - 1).max(self.cursor);
+        self.buckets[idx].push(Reverse(e));
+    }
+
+    /// Schedule an event. Timestamps already in the past are legal: they
+    /// fire on the next pop, ahead of anything later-keyed.
+    pub fn schedule(&mut self, key: EventKey, val: V) {
+        if self.len == 0 {
+            // drained wheel: re-anchor at the new event so a long idle
+            // gap is one O(1) jump, not a bucket crawl
+            self.origin = if key.time.is_finite() { key.time } else { 0.0 };
+            self.cursor = 0;
+        }
+        self.len += 1;
+        self.file(Entry { key, val });
+    }
+
+    /// Convenience: schedule by raw key parts.
+    pub fn schedule_at(&mut self, time: f64, lane: u32, seq: u64, val: V) {
+        self.schedule(EventKey::new(time, lane, seq), val);
+    }
+
+    /// Advance the cursor to the next non-empty bucket, rotating the
+    /// ring (and re-filing overflow) as needed. Returns false when the
+    /// wheel is empty.
+    fn advance_to_nonempty(&mut self) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        loop {
+            while self.cursor < self.buckets.len() {
+                if !self.buckets[self.cursor].is_empty() {
+                    return true;
+                }
+                self.cursor += 1;
+            }
+            // ring exhausted: rotate the horizon forward
+            self.cursor = 0;
+            self.origin += self.horizon_buckets() * self.width;
+            if self.buckets.iter().all(|b| b.is_empty()) && !self.overflow.is_empty() {
+                // everything pending is far future: jump the origin to
+                // the earliest overflow event instead of rotating
+                // through empty horizons one by one
+                let min_t = self
+                    .overflow
+                    .iter()
+                    .map(|e| e.key.time)
+                    .fold(f64::INFINITY, |a, t| if t.total_cmp(&a).is_lt() { t } else { a });
+                if min_t.is_finite() {
+                    if min_t > self.origin {
+                        self.origin = min_t;
+                    }
+                } else {
+                    // every pending event sits at +inf — nothing in the
+                    // sims schedules that, but pop() must terminate
+                    // anyway. They are the global maximum, so the final
+                    // bucket (heap-ordered by lane/seq among equal
+                    // times) serves them in key order.
+                    let last = self.buckets.len() - 1;
+                    for e in self.overflow.drain(..) {
+                        self.buckets[last].push(Reverse(e));
+                    }
+                }
+            }
+            // re-file every overflow event now inside the horizon
+            let mut i = 0;
+            while i < self.overflow.len() {
+                let within =
+                    (self.overflow[i].key.time - self.origin) / self.width < self.horizon_buckets();
+                if within {
+                    let e = self.overflow.swap_remove(i);
+                    self.file(e);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Key of the next event to fire, without removing it.
+    pub fn peek(&mut self) -> Option<EventKey> {
+        if !self.advance_to_nonempty() {
+            return None;
+        }
+        self.buckets[self.cursor].peek().map(|Reverse(e)| e.key)
+    }
+
+    /// Virtual time of the next event (the idle-jump target).
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.peek().map(|k| k.time)
+    }
+
+    /// Remove and return the next event in `(time, lane, seq)` order.
+    pub fn pop(&mut self) -> Option<(EventKey, V)> {
+        if !self.advance_to_nonempty() {
+            return None;
+        }
+        let Reverse(e) = self.buckets[self.cursor].pop().expect("bucket is non-empty");
+        self.len -= 1;
+        Some((e.key, e.val))
+    }
+
+    /// Pop every event with `key.time <= now`, in order, into `out`.
+    /// Returns the number delivered.
+    pub fn pop_due(&mut self, now: f64, out: &mut Vec<(EventKey, V)>) -> usize {
+        let mut n = 0;
+        while let Some(k) = self.peek() {
+            if k.time > now {
+                break;
+            }
+            out.push(self.pop().expect("peeked event exists"));
+            n += 1;
+        }
+        n
+    }
+
+    /// Approximate heap footprint (capacity-based), for the soak's
+    /// accounted-bytes report.
+    pub fn approx_bytes(&self) -> usize {
+        let entry = std::mem::size_of::<Entry<V>>();
+        let heaps: usize = self.buckets.iter().map(|b| b.capacity() * entry).sum();
+        heaps
+            + self.overflow.capacity() * entry
+            + self.buckets.capacity() * std::mem::size_of::<Bucket<V>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<V>(w: &mut EventWheel<V>) -> Vec<EventKey> {
+        let mut out = Vec::new();
+        while let Some((k, _)) = w.pop() {
+            out.push(k);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_lane_seq_order() {
+        let mut w = EventWheel::new(0.01);
+        w.schedule_at(2.0, 1, 5, ());
+        w.schedule_at(1.0, 3, 9, ());
+        w.schedule_at(2.0, 0, 7, ());
+        w.schedule_at(2.0, 1, 4, ());
+        let ks = drain(&mut w);
+        let got: Vec<(f64, u32, u64)> = ks.iter().map(|k| (k.time, k.lane, k.seq)).collect();
+        assert_eq!(
+            got,
+            vec![(1.0, 3, 9), (2.0, 0, 7), (2.0, 1, 4), (2.0, 1, 5)]
+        );
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn far_future_events_cross_the_horizon() {
+        // 4 buckets of 1s: horizon is 4s, so these all live in overflow
+        // at least once and must still pop sorted
+        let mut w = EventWheel::with_geometry(1.0, 4);
+        for (i, t) in [100.0, 3.5, 0.5, 42.0, 7.9, 8.0].iter().enumerate() {
+            w.schedule_at(*t, 0, i as u64, ());
+        }
+        let times: Vec<f64> = drain(&mut w).iter().map(|k| k.time).collect();
+        assert_eq!(times, vec![0.5, 3.5, 7.9, 8.0, 42.0, 100.0]);
+    }
+
+    #[test]
+    fn late_schedules_fire_next() {
+        let mut w = EventWheel::new(0.5);
+        w.schedule_at(10.0, 0, 0, "later");
+        w.schedule_at(10.5, 0, 1, "last");
+        assert_eq!(w.pop().unwrap().1, "later");
+        // now in the "past" relative to the cursor: must still pop, and
+        // ahead of the remaining later event
+        w.schedule_at(3.0, 0, 2, "past");
+        assert_eq!(w.pop().unwrap().1, "past");
+        assert_eq!(w.pop().unwrap().1, "last");
+        assert!(w.pop().is_none());
+    }
+
+    #[test]
+    fn drained_wheel_reanchors_without_crawling() {
+        let mut w = EventWheel::with_geometry(0.01, 8);
+        w.schedule_at(0.02, 0, 0, ());
+        assert!(w.pop().is_some());
+        // a gap of ~10^7 bucket widths: must not rotate its way there
+        w.schedule_at(123456.0, 0, 1, ());
+        assert_eq!(w.peek_time(), Some(123456.0));
+        assert_eq!(w.pop().unwrap().0.seq, 1);
+    }
+
+    #[test]
+    fn pop_due_splits_at_now() {
+        let mut w = EventWheel::new(0.25);
+        for i in 0..10u64 {
+            w.schedule_at(i as f64 * 0.1, 0, i, i);
+        }
+        let mut due = Vec::new();
+        assert_eq!(w.pop_due(0.45, &mut due), 5);
+        assert_eq!(due.len(), 5);
+        assert!(due.iter().all(|(k, _)| k.time <= 0.45));
+        assert_eq!(w.len(), 5);
+        assert_eq!(w.peek_time(), Some(0.5));
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop_stay_sorted() {
+        // deterministic pseudo-random workload without an RNG dep
+        let mut w = EventWheel::with_geometry(0.1, 16);
+        let mut x: u64 = 0x9E3779B97F4A7C15;
+        let mut popped: Vec<EventKey> = Vec::new();
+        let mut floor = f64::NEG_INFINITY;
+        for i in 0..500u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let t = (x >> 40) as f64 / 1e4; // [0, ~1.7)
+            // never schedule before the last popped time, so the full
+            // pop sequence must be globally sorted
+            w.schedule_at(t.max(floor), (x % 3) as u32, i, ());
+            if x % 4 == 0 {
+                if let Some((k, _)) = w.pop() {
+                    floor = k.time;
+                    popped.push(k);
+                }
+            }
+        }
+        popped.extend(drain(&mut w));
+        assert_eq!(popped.len(), 500);
+        // full-key order holds within what was pending together; across
+        // schedule-after-pop boundaries only time order is guaranteed
+        for p in popped.windows(2) {
+            assert!(
+                p[0].time.total_cmp(&p[1].time).is_le(),
+                "out of order: {:?} then {:?}",
+                p[0],
+                p[1]
+            );
+        }
+    }
+
+    #[test]
+    fn nan_time_cannot_panic_or_wedge() {
+        let mut w = EventWheel::new(0.5);
+        w.schedule_at(f64::NAN, 0, 0, "nan");
+        w.schedule_at(1.0, 0, 1, "one");
+        // NaN saturates into the cursor bucket and total_cmp sorts it
+        // after +inf inside the heap; both events come out
+        let ks = drain(&mut w);
+        assert_eq!(ks.len(), 2);
+    }
+
+    #[test]
+    fn infinite_time_cannot_wedge_the_rotate() {
+        // +inf lands in overflow and can never re-file by arithmetic
+        // ((inf - origin)/width stays inf); the rotate must serve it
+        // from the final bucket instead of spinning forever
+        let mut w = EventWheel::with_geometry(0.5, 4);
+        w.schedule_at(f64::INFINITY, 1, 1, "inf-b");
+        w.schedule_at(1.0, 0, 0, "one");
+        w.schedule_at(f64::INFINITY, 0, 0, "inf-a");
+        assert_eq!(w.pop().unwrap().1, "one");
+        // equal (+inf) times fall back to (lane, seq) order
+        assert_eq!(w.pop().unwrap().1, "inf-a");
+        assert_eq!(w.pop().unwrap().1, "inf-b");
+        assert!(w.pop().is_none());
+    }
+
+    #[test]
+    fn bytes_accounting_is_capacity_based() {
+        let mut w: EventWheel<u64> = EventWheel::with_geometry(0.01, 32);
+        let empty = w.approx_bytes();
+        for i in 0..1000u64 {
+            w.schedule_at(i as f64 * 0.003, 0, i, i);
+        }
+        assert!(w.approx_bytes() > empty);
+    }
+}

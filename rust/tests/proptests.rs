@@ -1163,6 +1163,86 @@ fn prop_replay_scanned_matches_tree_replay() {
     }
 }
 
+/// Differential oracle for the event wheel (DESIGN.md §3.10): under
+/// random schedule/pop/pop_due interleavings — in-ring times, far
+/// (overflow-path) times, and late (behind-the-cursor) times — the
+/// wheel must dequeue in exactly the order of a plain binary heap over
+/// the full `(virtual_time, lane, seq)` key, bit for bit. This is the
+/// contract that let the wheel take over the batcher/cluster/workload
+/// event scheduling without moving a single metrics byte.
+#[test]
+fn prop_event_wheel_dequeues_in_exact_heap_order() {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    use eat_serve::util::wheel::{EventKey, EventWheel};
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x3EE1D);
+        let width = [0.01, 0.1, 1.0][rng.below(3) as usize];
+        let nbuckets = [2usize, 16, 1024][rng.below(3) as usize];
+        let horizon = width * nbuckets as f64;
+        let mut wheel: EventWheel<u64> = EventWheel::with_geometry(width, nbuckets);
+        let mut model: BinaryHeap<Reverse<(EventKey, u64)>> = BinaryHeap::new();
+        let mut check = |got: Option<(EventKey, u64)>,
+                         want: Option<(EventKey, u64)>,
+                         frontier: &mut f64| {
+            match (got, want) {
+                (None, None) => {}
+                (Some((g, gv)), Some((w, wv))) => {
+                    assert_eq!(g.time.to_bits(), w.time.to_bits(), "seed {seed}");
+                    assert_eq!((g.lane, g.seq, gv), (w.lane, w.seq, wv), "seed {seed}");
+                    *frontier = frontier.max(g.time);
+                }
+                (g, w) => panic!("seed {seed}: wheel {g:?} vs heap {w:?}"),
+            }
+        };
+        // rough consumption frontier the generated times straddle
+        let mut t = 0.0f64;
+        let mut id = 0u64;
+        for _ in 0..rng.range(40, 200) {
+            match rng.below(5) {
+                0 | 1 | 2 => {
+                    for _ in 0..rng.range(1, 6) {
+                        let time = match rng.below(4) {
+                            0 => t - rng.f64() * horizon, // late: clamps to cursor
+                            1 => t + rng.f64() * width,   // cursor bucket
+                            2 => t + rng.f64() * horizon, // in ring
+                            _ => t + horizon * (1.0 + rng.f64() * 3.0), // overflow
+                        };
+                        let key = EventKey::new(time, rng.below(4) as u32, rng.below(64));
+                        wheel.schedule(key, id);
+                        model.push(Reverse((key, id)));
+                        id += 1;
+                    }
+                }
+                3 => {
+                    for _ in 0..rng.range(1, 8) {
+                        check(wheel.pop(), model.pop().map(|Reverse(x)| x), &mut t);
+                    }
+                }
+                _ => {
+                    let now = t + rng.f64() * horizon;
+                    let mut due = Vec::new();
+                    wheel.pop_due(now, &mut due);
+                    for got in due {
+                        check(Some(got), model.pop().map(|Reverse(x)| x), &mut t);
+                    }
+                    if let Some(Reverse((k, _))) = model.peek() {
+                        assert!(k.time > now, "seed {seed}: pop_due left a due event");
+                    }
+                    t = t.max(now);
+                }
+            }
+        }
+        // drain: the tails agree too
+        while let Some(got) = wheel.pop() {
+            check(Some(got), model.pop().map(|Reverse(x)| x), &mut t);
+        }
+        assert!(model.pop().is_none(), "seed {seed}: heap outlived the wheel");
+    }
+}
+
 /// Dataset generation invariants across seeds and sizes.
 #[test]
 fn prop_dataset_answers_consistent() {

@@ -1,0 +1,142 @@
+//! Soak-core contracts (DESIGN.md §3.10), at scales big enough to force
+//! wheel rotation, slab reuse and reservoir sampling but small enough
+//! for tier-1:
+//!
+//!  * determinism — double runs serialize byte-identical report JSON
+//!    (the same diff the CI `soak-smoke` job performs at 100k sessions);
+//!  * core equivalence — the event core and the pre-wheel driver core
+//!    agree on every completion invariant across random configs;
+//!  * memory — the accounted footprint is bounded by residency (pushing
+//!    10x the sessions through leaves it flat) and the `--mem-mb`
+//!    ceiling actually fails a breaching run.
+
+use eat_serve::coordinator::{run_soak, session_demand, SoakConfig, SoakMode};
+use eat_serve::util::json::Json;
+use eat_serve::util::rng::Rng;
+
+fn base() -> SoakConfig {
+    SoakConfig {
+        sessions: 20_000,
+        rate_per_s: 500.0,
+        slots: 256,
+        seed: 0,
+        ..SoakConfig::default()
+    }
+}
+
+#[test]
+fn double_runs_are_byte_identical() {
+    for mode in [SoakMode::Events, SoakMode::Driver] {
+        let cfg = SoakConfig {
+            sessions: if mode == SoakMode::Events { 20_000 } else { 5_000 },
+            ..base()
+        };
+        let a = run_soak(&cfg, mode).unwrap().to_json().to_string();
+        let b = run_soak(&cfg, mode).unwrap().to_json().to_string();
+        assert_eq!(a, b, "{mode:?} soak is not a pure function of its config");
+        assert!(a.contains("\"bytes_per_session\""));
+    }
+}
+
+#[test]
+fn seed_actually_moves_the_outcome() {
+    let a = run_soak(&base(), SoakMode::Events).unwrap();
+    let b = run_soak(&SoakConfig { seed: 1, ..base() }, SoakMode::Events).unwrap();
+    assert_eq!(a.completed, b.completed);
+    assert_ne!(
+        a.total_tokens, b.total_tokens,
+        "reseeding must reshuffle the demand profile"
+    );
+}
+
+#[test]
+fn cores_agree_on_invariants_across_random_configs() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(case ^ 0x50A7);
+        let cfg = SoakConfig {
+            sessions: rng.range(500, 4000),
+            rate_per_s: 20.0 + rng.f64() * 100.0,
+            slots: rng.range(4, 64) as usize,
+            seed: case,
+            ..SoakConfig::default()
+        };
+        let ev = run_soak(&cfg, SoakMode::Events).unwrap();
+        let dr = run_soak(&cfg, SoakMode::Driver).unwrap();
+        assert_eq!(ev.completed, cfg.sessions, "case {case}: events lost a session");
+        assert_eq!(dr.completed, cfg.sessions, "case {case}: driver lost a session");
+        assert_eq!(ev.total_tokens, dr.total_tokens, "case {case}");
+        assert_eq!(ev.stalled, dr.stalled, "case {case}");
+        assert!(ev.peak_resident <= cfg.slots, "case {case}");
+        assert!(dr.peak_resident <= cfg.slots, "case {case}");
+        // expected token total straight from the demand function
+        let want: u64 = (0..cfg.sessions)
+            .map(|s| session_demand(cfg.seed, s).ticks as u64)
+            .sum();
+        assert_eq!(ev.total_tokens, want, "case {case}: tokens drifted from demand");
+    }
+}
+
+#[test]
+fn event_core_footprint_is_flat_in_session_count() {
+    // saturate the reservoirs in both runs so the only degree of freedom
+    // left is residency-bounded state
+    let cap = 2048usize;
+    let small = run_soak(
+        &SoakConfig { sessions: 10_000, summary_cap: cap, ..base() },
+        SoakMode::Events,
+    )
+    .unwrap();
+    let big = run_soak(
+        &SoakConfig { sessions: 100_000, summary_cap: cap, ..base() },
+        SoakMode::Events,
+    )
+    .unwrap();
+    assert!(
+        big.peak_bytes < small.peak_bytes * 2,
+        "10x sessions moved the accounted footprint {} -> {} bytes",
+        small.peak_bytes,
+        big.peak_bytes
+    );
+    assert!(big.bytes_per_session() > 0);
+}
+
+#[test]
+fn memory_ceiling_fails_a_breaching_run() {
+    let err = run_soak(
+        &SoakConfig { mem_budget_bytes: Some(1024), ..base() },
+        SoakMode::Events,
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("memory budget exceeded"),
+        "unexpected error: {err}"
+    );
+    // a sane ceiling passes: the 100k CI smoke runs under 64 MiB
+    run_soak(
+        &SoakConfig { mem_budget_bytes: Some(64 << 20), ..base() },
+        SoakMode::Events,
+    )
+    .unwrap();
+}
+
+#[test]
+fn report_json_shape_is_stable() {
+    let j = run_soak(&base(), SoakMode::Events).unwrap().to_json();
+    for key in [
+        "arrivals",
+        "bytes_per_session",
+        "completed",
+        "elapsed_virtual_s",
+        "latency_ms",
+        "mode",
+        "occupancy_mean",
+        "occupancy_peak",
+        "peak_bytes",
+        "peak_waiting",
+        "stalled",
+        "total_tokens",
+        "wait_ms",
+    ] {
+        assert!(!matches!(j.get(key), Json::Null), "report lost key {key}");
+    }
+}
