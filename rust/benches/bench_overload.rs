@@ -1,0 +1,80 @@
+//! Saturation sweep (DESIGN.md §3.11): goodput and SLO attainment of
+//! the overload-control policies as offered load crosses capacity —
+//! 1.0x, 1.5x and 2.0x the slot pool's sustainable completion rate.
+//! EAT-guided shedding (force-exit nearest-to-exit residents) is raced
+//! against reject-only admission on the identical arrival sequence; the
+//! equal-accuracy invariant is asserted before either timing is
+//! reported. Snapshots to `BENCH_overload.json` with a `goodput` table
+//! alongside the timing rows.
+//!
+//!     cargo bench --bench bench_overload
+//!
+//! Everything runs on virtual time; the numbers are a pure function of
+//! the seed.
+
+use eat_serve::config::OverloadPolicy;
+use eat_serve::coordinator::{run_soak, SoakConfig, SoakMode};
+use eat_serve::util::bench::{bench, write_snapshot};
+use eat_serve::util::json::Json;
+
+fn cfg(overload: f64, shed: OverloadPolicy) -> SoakConfig {
+    SoakConfig {
+        sessions: 50_000,
+        overload: Some(overload),
+        slo_s: 10.0,
+        shed,
+        seed: 11,
+        ..SoakConfig::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut results = Vec::new();
+    let mut goodput = Vec::new();
+    for overload in [1.0f64, 1.5, 2.0] {
+        for (shed, tag) in [
+            (OverloadPolicy::RejectOnly, "reject"),
+            (OverloadPolicy::EatShed, "eat"),
+        ] {
+            let name = format!("overload/{tag}_{overload:.1}x");
+            let r = bench(&name, || {
+                run_soak(&cfg(overload, shed), SoakMode::Events).unwrap();
+            });
+            r.report();
+            results.push(r);
+        }
+        let rej = run_soak(&cfg(overload, OverloadPolicy::RejectOnly), SoakMode::Events)?;
+        let eat = run_soak(&cfg(overload, OverloadPolicy::EatShed), SoakMode::Events)?;
+        assert!(
+            (eat.accuracy() - rej.accuracy()).abs() < 0.02,
+            "shedding moved accuracy: eat {} vs reject {}",
+            eat.accuracy(),
+            rej.accuracy()
+        );
+        println!(
+            "  {overload:.1}x: goodput eat {:.0}/s vs reject {:.0}/s | SLO {:.3} vs {:.3} \
+             (shed {}, rejected {})\n",
+            eat.goodput_per_s(),
+            rej.goodput_per_s(),
+            eat.slo_attainment(),
+            rej.slo_attainment(),
+            eat.shed,
+            rej.rejected,
+        );
+        goodput.push(Json::obj(vec![
+            ("overload", Json::num(overload)),
+            ("eat_goodput_per_s", Json::num(eat.goodput_per_s())),
+            ("reject_goodput_per_s", Json::num(rej.goodput_per_s())),
+            ("eat_slo_attainment", Json::num(eat.slo_attainment())),
+            ("reject_slo_attainment", Json::num(rej.slo_attainment())),
+            ("eat_shed", Json::num(eat.shed as f64)),
+            ("reject_rejected", Json::num(rej.rejected as f64)),
+            ("eat_accuracy", Json::num(eat.accuracy())),
+            ("reject_accuracy", Json::num(rej.accuracy())),
+        ]));
+    }
+    let extra = vec![("goodput", Json::arr(goodput))];
+    let path = write_snapshot("overload", &results, extra)?;
+    println!("snapshot: {path}");
+    Ok(())
+}

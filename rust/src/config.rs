@@ -163,6 +163,37 @@ impl Default for ServeConfig {
     }
 }
 
+/// What the batcher does when demand exceeds the KV/page budget
+/// (DESIGN.md §3.11). `None` (the default, the historical behavior)
+/// queues everything forever. The active policies bound the backlog
+/// against the per-request SLO deadline; `EatShed` additionally spends
+/// the EAT distance-to-exit signal to free lanes: force-exit the
+/// sessions *nearest* a safe exit first, instead of spilling resident
+/// sessions to re-prefill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Queue without bound; never reject, never shed.
+    None,
+    /// Reject queued arrivals once their SLO deadline has passed.
+    RejectOnly,
+    /// `RejectOnly` + force-exit nearest-to-exit resident sessions
+    /// (descending `ExitPolicy::stability`) while arrivals are starved
+    /// of pages.
+    EatShed,
+}
+
+impl OverloadPolicy {
+    /// Parse the shared `--shed none|reject|eat` CLI spelling.
+    pub fn from_flag(s: &str) -> anyhow::Result<OverloadPolicy> {
+        match s {
+            "none" => Ok(OverloadPolicy::None),
+            "reject" => Ok(OverloadPolicy::RejectOnly),
+            "eat" => Ok(OverloadPolicy::EatShed),
+            other => anyhow::bail!("unknown --shed `{other}` (none|reject|eat)"),
+        }
+    }
+}
+
 /// How the batcher allocates contended KV slots.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedMode {
@@ -200,6 +231,13 @@ pub struct SchedConfig {
     /// Suspended sessions waiting longer than this also outrank fresh
     /// admissions, even before hitting `max_preemptions`.
     pub resume_priority_after_s: f64,
+    /// Saturation behavior (DESIGN.md §3.11). Default `None` keeps the
+    /// historical queue-forever behavior bit-for-bit.
+    pub overload: OverloadPolicy,
+    /// Only sessions at or above this `ExitPolicy::stability` are
+    /// EAT-shed candidates — shedding is reserved for near-converged
+    /// sessions whose answer the paper's signal already trusts.
+    pub shed_min_stability: f64,
 }
 
 impl Default for SchedConfig {
@@ -211,6 +249,8 @@ impl Default for SchedConfig {
             stall_stability: 0.25,
             max_preemptions: 2,
             resume_priority_after_s: 1.0,
+            overload: OverloadPolicy::None,
+            shed_min_stability: 0.5,
         }
     }
 }
@@ -232,6 +272,18 @@ mod tests {
         assert!(c.kv_pages.is_none());
         assert!(c.sched.max_preemptions > 0);
         assert!(c.sched.stall_stability > 0.0 && c.sched.stall_stability < 1.0);
+        // default overload control is off: queueing behavior (and so all
+        // sub-capacity sim JSON) is unchanged by the saturation PR
+        assert_eq!(c.sched.overload, OverloadPolicy::None);
+        assert!(c.sched.shed_min_stability > c.sched.stall_stability);
+    }
+
+    #[test]
+    fn overload_flag_parses() {
+        assert_eq!(OverloadPolicy::from_flag("none").unwrap(), OverloadPolicy::None);
+        assert_eq!(OverloadPolicy::from_flag("reject").unwrap(), OverloadPolicy::RejectOnly);
+        assert_eq!(OverloadPolicy::from_flag("eat").unwrap(), OverloadPolicy::EatShed);
+        assert!(OverloadPolicy::from_flag("drop").is_err());
     }
 
     #[test]

@@ -47,7 +47,7 @@ use super::engine::{
 };
 use super::kv::{pages_for, KvPageManager, SlotId};
 use super::metrics::ServeMetrics;
-use crate::config::{SchedMode, ServeConfig};
+use crate::config::{OverloadPolicy, SchedMode, ServeConfig};
 use crate::datasets::Question;
 use crate::exit::{
     AnswerConsistencyPolicy, ConfidencePolicy, CumulativeEntropyPolicy, EatPolicy, ExitPolicy,
@@ -71,6 +71,10 @@ pub struct QueuedRequest {
     /// RNG seed component, so a request's trajectory does not depend on
     /// admission order or scheduling mode.
     pub seq: u64,
+    /// Owning tenant (DESIGN.md §3.11): EAT-aware admission round-robins
+    /// deficit credit across tenants so one hot tenant cannot starve the
+    /// rest. 0 for every single-tenant workload.
+    pub tenant: u32,
 }
 
 struct Active {
@@ -82,6 +86,7 @@ struct Active {
     admitted: f64,
     deadline: f64,
     seq: u64,
+    tenant: u32,
     /// Ticks since this session last entered its slot.
     resident_ticks: u64,
     preemptions: u32,
@@ -99,6 +104,7 @@ pub struct SuspendedSession {
     admitted: f64,
     deadline: f64,
     seq: u64,
+    tenant: u32,
     preemptions: u32,
     suspended_at: f64,
     caches: Option<SessionCaches>,
@@ -146,6 +152,51 @@ fn heap_push<V>(heap: &mut MinHeap<V>, key: (f64, u64), val: V) {
 
 fn heap_pop<V>(heap: &mut MinHeap<V>) -> Option<V> {
     heap.pop().map(|Reverse(p)| p.val)
+}
+
+fn heap_peek_key<V>(heap: &MinHeap<V>) -> Option<(f64, u64)> {
+    heap.peek().map(|Reverse(p)| p.key)
+}
+
+/// One tenant's fresh-request EDF heap plus its deficit-round-robin
+/// accounting (DESIGN.md §3.11). Tenant queues live in a `Vec` sorted
+/// by tenant id — binary search on submit, cursor sweep on pop — so
+/// admission order is deterministic (lowest id breaks every tie) with
+/// no hash-map iteration anywhere.
+struct TenantQueue {
+    tenant: u32,
+    heap: MinHeap<QueuedRequest>,
+    /// Deficit credit (whole admissions): refilled to `weight` when the
+    /// round-robin cursor reaches a backlogged tenant with spent
+    /// credit, decremented once per admission. A tenant that goes idle
+    /// (or runs into its page cap) forfeits leftover credit, so it
+    /// cannot hoard a burst allowance.
+    deficit: u64,
+    /// DRR quantum: admissions granted per cursor visit (default 1).
+    weight: u64,
+}
+
+/// Shed order under page pressure (DESIGN.md §3.11): victims sorted by
+/// *descending* `ExitPolicy::stability` — the sessions nearest a safe
+/// exit surrender their lanes first, the mirror image of preemption's
+/// min-stability pick — with ties broken by ascending submission seq.
+/// Sessions below `min_stability`, without a stability estimate yet, or
+/// already eliciting (including any shed on an earlier tick — shedding
+/// is one-shot per session) are not candidates.
+///
+/// Pure over `(stability, seq, eliciting)` triples so the shed-ordering
+/// unit tests and proptests can drive it directly.
+pub fn pick_shed_victims(candidates: &[(Option<f64>, u64, bool)], min_stability: f64) -> Vec<usize> {
+    let mut order: Vec<(f64, u64, usize)> = candidates
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &(stability, seq, eliciting))| {
+            let s = stability?;
+            (!eliciting && s >= min_stability).then_some((s, seq, i))
+        })
+        .collect();
+    order.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    order.into_iter().map(|(_, _, i)| i).collect()
 }
 
 /// Which waiter gets the next free slot.
@@ -280,8 +331,14 @@ pub struct Batcher<'a> {
     clock: Clock,
     /// FIFO-mode admission queue (arrival order).
     queue: VecDeque<QueuedRequest>,
-    /// EAT-aware fresh requests, earliest `(deadline, seq)` first.
-    fresh: MinHeap<QueuedRequest>,
+    /// EAT-aware fresh requests: one EDF heap per tenant (sorted by
+    /// tenant id), drained by weighted deficit-round-robin. Single-
+    /// tenant workloads hold exactly one queue, which DRR drains in
+    /// plain `(deadline, seq)` order — bit-identical to the pre-tenant
+    /// batcher.
+    fresh: Vec<TenantQueue>,
+    /// DRR cursor into `fresh`.
+    rr_cursor: usize,
     active: Vec<Active>,
     /// Suspended-session arena (DESIGN.md §3.10): payloads live here in
     /// one allocation; the admission heaps and the aging wheel hold
@@ -361,7 +418,8 @@ impl<'a> Batcher<'a> {
             make_policy,
             clock,
             queue: VecDeque::new(),
-            fresh: BinaryHeap::new(),
+            fresh: Vec::new(),
+            rr_cursor: 0,
             active: Vec::new(),
             suspended: Slab::new(),
             suspended_aged: BinaryHeap::new(),
@@ -382,11 +440,23 @@ impl<'a> Batcher<'a> {
         self.submit_seq(question, self.next_seq);
     }
 
+    /// Submit on behalf of a tenant (DESIGN.md §3.11). Tenant 0 via
+    /// [`Self::submit`] is the single-tenant legacy path.
+    pub fn submit_tenant(&mut self, question: Question, tenant: u32) {
+        self.submit_seq_tenant(question, self.next_seq, tenant);
+    }
+
     /// Submit with an externally assigned sequence number (the cluster
     /// router hands out globally unique seqs so a request's RNG — and
     /// therefore its trajectory — is invariant to replica placement).
     /// `submit` delegates here with the local counter.
     pub fn submit_seq(&mut self, question: Question, seq: u64) {
+        self.submit_seq_tenant(question, seq, 0);
+    }
+
+    /// The full submission entry point: externally assigned seq *and*
+    /// tenant.
+    pub fn submit_seq_tenant(&mut self, question: Question, seq: u64, tenant: u32) {
         self.metrics.mark_start();
         self.next_seq = self.next_seq.max(seq + 1);
         let now = self.clock.now();
@@ -395,18 +465,61 @@ impl<'a> Batcher<'a> {
             arrived: now,
             deadline: now + self.cfg.sched.deadline_s,
             seq,
+            tenant,
         };
+        self.file_fresh(req);
+    }
+
+    /// File a fresh request into the mode's admission structure: the
+    /// FIFO queue, or the owning tenant's EDF heap.
+    fn file_fresh(&mut self, req: QueuedRequest) {
         match self.cfg.sched.mode {
             SchedMode::Fifo => self.queue.push_back(req),
             SchedMode::EatAware => {
+                let idx = self.tenant_queue_idx(req.tenant);
                 let key = (req.deadline, req.seq);
-                heap_push(&mut self.fresh, key, req);
+                heap_push(&mut self.fresh[idx].heap, key, req);
             }
         }
     }
 
+    /// Index of `tenant`'s queue in the id-sorted `fresh` vec, creating
+    /// it (weight 1) on first sight. O(log tenants) search; creation is
+    /// once per tenant.
+    fn tenant_queue_idx(&mut self, tenant: u32) -> usize {
+        match self.fresh.binary_search_by_key(&tenant, |t| t.tenant) {
+            Ok(i) => i,
+            Err(i) => {
+                self.fresh.insert(
+                    i,
+                    TenantQueue { tenant, heap: BinaryHeap::new(), deficit: 0, weight: 1 },
+                );
+                i
+            }
+        }
+    }
+
+    /// Set a tenant's DRR weight: admissions granted per round-robin
+    /// visit while backlogged (default 1; clamped to at least 1).
+    pub fn set_tenant_weight(&mut self, tenant: u32, weight: u64) {
+        let idx = self.tenant_queue_idx(tenant);
+        self.fresh[idx].weight = weight.max(1);
+    }
+
+    /// Cap a tenant's pinned KV pages (hierarchical budget, DESIGN.md
+    /// §3.11): fresh admissions for a tenant at its cap are skipped by
+    /// the DRR sweep until it releases pages.
+    pub fn set_tenant_page_cap(&mut self, tenant: u32, pages: usize) {
+        self.kv.set_tenant_cap(tenant, pages);
+    }
+
+    /// Fresh requests waiting across every tenant queue.
+    fn fresh_backlog(&self) -> usize {
+        self.fresh.iter().map(|t| t.heap.len()).sum()
+    }
+
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.fresh.len()
+        self.queue.len() + self.fresh_backlog()
     }
 
     pub fn active_count(&self) -> usize {
@@ -522,14 +635,53 @@ impl<'a> Batcher<'a> {
         None
     }
 
+    /// Weighted deficit-round-robin pop over the per-tenant fresh heaps
+    /// (DESIGN.md §3.11): the cursor sweeps tenant queues in id order,
+    /// refilling a backlogged tenant's deficit to its weight on
+    /// arrival and spending one credit per admission, so long-run
+    /// admission shares track the weights while each tenant's own
+    /// requests still leave in EDF `(deadline, seq)` order. Idle or
+    /// page-capped tenants forfeit their credit and are skipped. With
+    /// one tenant queue this is exactly a plain EDF heap pop.
+    fn pop_fresh(&mut self) -> Option<QueuedRequest> {
+        let n = self.fresh.len();
+        // two sweeps: the first may only refill deficits, the second
+        // must then serve or prove every queue empty/capped
+        let mut visited = 0usize;
+        while visited < 2 * n {
+            if self.rr_cursor >= n {
+                self.rr_cursor = 0;
+            }
+            let idx = self.rr_cursor;
+            let admissible = !self.fresh[idx].heap.is_empty()
+                && self.kv.tenant_can_admit(self.fresh[idx].tenant);
+            if !admissible {
+                self.fresh[idx].deficit = 0;
+                self.rr_cursor += 1;
+                visited += 1;
+                continue;
+            }
+            if self.fresh[idx].deficit == 0 {
+                self.fresh[idx].deficit = self.fresh[idx].weight;
+            }
+            self.fresh[idx].deficit -= 1;
+            if self.fresh[idx].deficit == 0 {
+                // credit spent: the next pop starts at the next tenant
+                self.rr_cursor = idx + 1;
+            }
+            return heap_pop(&mut self.fresh[idx].heap);
+        }
+        None
+    }
+
     /// Pick the waiter for the next free slot.
     ///
     /// FIFO mode: suspended sessions first (oldest suspension), then the
     /// queue head. EAT-aware mode (DESIGN.md §3.4): (1) aged suspended
     /// sessions (preempted `max_preemptions` times, or waiting longer
     /// than `resume_priority_after_s`) by earliest deadline, (2) fresh
-    /// requests by earliest deadline, (3) remaining suspended sessions,
-    /// oldest suspension first.
+    /// requests by DRR over tenants, EDF within one (§3.11), (3)
+    /// remaining suspended sessions, oldest suspension first.
     fn pick_admission(&mut self) -> Option<AdmitPick> {
         if self.cfg.sched.mode == SchedMode::Fifo {
             if let Some(s) = self.pop_wait() {
@@ -540,7 +692,7 @@ impl<'a> Batcher<'a> {
         if let Some(s) = self.pop_aged() {
             return Some(AdmitPick::Resume(s));
         }
-        if let Some(r) = heap_pop(&mut self.fresh) {
+        if let Some(r) = self.pop_fresh() {
             return Some(AdmitPick::Fresh(r));
         }
         self.pop_wait().map(AdmitPick::Resume)
@@ -555,7 +707,20 @@ impl<'a> Batcher<'a> {
             let Some(pick) = self.pick_admission() else {
                 break;
             };
-            let slot = self.kv.acquire().expect("available() > 0 guarantees a lane");
+            let tenant = match &pick {
+                AdmitPick::Fresh(req) => req.tenant,
+                AdmitPick::Resume(s) => s.tenant,
+            };
+            let Some(slot) = self.kv.acquire_for(tenant) else {
+                // The pick's tenant is at its page cap (resumes are not
+                // pre-gated the way pop_fresh gates fresh picks): put
+                // the pick back and stop admitting this tick.
+                match pick {
+                    AdmitPick::Fresh(req) => self.file_fresh(req),
+                    AdmitPick::Resume(s) => self.park(s),
+                }
+                break;
+            };
             match pick {
                 AdmitPick::Fresh(req) => {
                     let policy = (self.make_policy)();
@@ -576,6 +741,7 @@ impl<'a> Batcher<'a> {
                         admitted: self.clock.now(),
                         deadline: req.deadline,
                         seq: req.seq,
+                        tenant: req.tenant,
                         resident_ticks: 0,
                         preemptions: 0,
                     });
@@ -618,6 +784,7 @@ impl<'a> Batcher<'a> {
                         admitted: s.admitted,
                         deadline: s.deadline,
                         seq: s.seq,
+                        tenant: s.tenant,
                         resident_ticks: 0,
                         preemptions: s.preemptions,
                     });
@@ -659,6 +826,7 @@ impl<'a> Batcher<'a> {
             admitted: a.admitted,
             deadline: a.deadline,
             seq: a.seq,
+            tenant: a.tenant,
             preemptions: a.preemptions + 1,
             suspended_at: now,
             caches,
@@ -700,7 +868,7 @@ impl<'a> Batcher<'a> {
         let aging = self.cfg.sched.preempt_after_ticks;
         let max_pre = self.cfg.sched.max_preemptions;
         let cutoff = self.cfg.sched.stall_stability;
-        while !self.fresh.is_empty() && self.kv.available() == 0 {
+        while self.fresh_backlog() > 0 && self.kv.available() == 0 {
             let victim = self
                 .active
                 .iter()
@@ -796,6 +964,7 @@ impl<'a> Batcher<'a> {
             admitted: a.admitted,
             deadline: a.deadline,
             seq: a.seq,
+            tenant: a.tenant,
             preemptions: a.preemptions,
             suspended_at: now,
             caches,
@@ -818,13 +987,7 @@ impl<'a> Batcher<'a> {
             Migration::Fresh(req) => {
                 self.next_seq = self.next_seq.max(req.seq + 1);
                 self.metrics.record_migration_in(0);
-                match self.cfg.sched.mode {
-                    SchedMode::Fifo => self.queue.push_back(req),
-                    SchedMode::EatAware => {
-                        let key = (req.deadline, req.seq);
-                        heap_push(&mut self.fresh, key, req);
-                    }
-                }
+                self.file_fresh(req);
             }
             Migration::Session(mut s) => {
                 self.next_seq = self.next_seq.max(s.seq + 1);
@@ -841,13 +1004,82 @@ impl<'a> Batcher<'a> {
         }
     }
 
-    /// One scheduling tick: preempt (EAT-aware mode); admit/resume; poll
-    /// every active session to its pending decode (probes/rollouts
-    /// serviced out-of-band); commit all pending decodes — fused when
-    /// possible, sequential otherwise; retire sessions that reported
-    /// `Done`. Returns the number of sessions advanced.
+    /// Reject queued arrivals whose SLO deadline has already passed
+    /// (overload policies only, DESIGN.md §3.11): a request that can no
+    /// longer be served in time is dropped *before* it wastes a prefill.
+    /// The FIFO queue and every tenant EDF heap keep their earliest
+    /// deadline at the front, so expiry drains from the top in O(log n)
+    /// per rejection.
+    fn reject_expired(&mut self) {
+        if self.cfg.sched.overload == OverloadPolicy::None {
+            return;
+        }
+        let now = self.clock.now();
+        while self.queue.front().is_some_and(|r| r.deadline < now) {
+            self.queue.pop_front();
+            self.metrics.record_rejection();
+        }
+        for t in &mut self.fresh {
+            while heap_peek_key(&t.heap).is_some_and(|(deadline, _)| deadline < now) {
+                heap_pop(&mut t.heap);
+                self.metrics.record_rejection();
+            }
+        }
+    }
+
+    /// EAT-guided load shedding (DESIGN.md §3.11): when fresh arrivals
+    /// are starved of pages and the policy allows, force-exit the
+    /// resident sessions *nearest* a safe exit — descending
+    /// `ExitPolicy::stability` (see [`pick_shed_victims`]) — instead of
+    /// spilling anything to re-prefill. A force-exited session flips
+    /// into elicitation, completes within a few ticks and frees its
+    /// lane; `eliciting()` excludes it from later sweeps, so a session
+    /// is never shed twice, and lanes already draining count against
+    /// the need so one starved arrival triggers at most one shed.
+    fn shed_for_pressure(&mut self) {
+        if self.cfg.sched.mode != SchedMode::EatAware
+            || self.cfg.sched.overload != OverloadPolicy::EatShed
+            || self.kv.available() > 0
+        {
+            return;
+        }
+        let starved = self.fresh_backlog();
+        if starved == 0 {
+            return;
+        }
+        let draining = self.active.iter().filter(|a| a.session.eliciting()).count();
+        let mut want = starved.min(self.active.len()).saturating_sub(draining);
+        if want == 0 {
+            return;
+        }
+        let candidates: Vec<(Option<f64>, u64, bool)> = self
+            .active
+            .iter()
+            .map(|a| (a.session.stability(), a.seq, a.session.eliciting()))
+            .collect();
+        for idx in pick_shed_victims(&candidates, self.cfg.sched.shed_min_stability) {
+            if want == 0 {
+                break;
+            }
+            // force_exit refuses mid-decode states; skip those victims
+            if self.active[idx].session.force_exit(ExitReason::Shed) {
+                self.metrics.record_shed();
+                want -= 1;
+            }
+        }
+    }
+
+    /// One scheduling tick: reject expired arrivals and shed for page
+    /// pressure (overload policies); preempt (EAT-aware mode);
+    /// admit/resume; poll every active session to its pending decode
+    /// (probes/rollouts serviced out-of-band); commit all pending
+    /// decodes — fused when possible, sequential otherwise; retire
+    /// sessions that reported `Done`. Returns the number of sessions
+    /// advanced.
     pub fn tick(&mut self) -> Result<usize> {
+        self.reject_expired();
         self.preempt()?;
+        self.shed_for_pressure();
         self.admit()?;
         let rt = self.rt;
         let force_sequential = self.force_sequential;
@@ -978,7 +1210,14 @@ impl<'a> Batcher<'a> {
     pub fn approx_sched_bytes(&self) -> usize {
         use std::mem::size_of;
         self.queue.capacity() * size_of::<QueuedRequest>()
-            + self.fresh.capacity() * size_of::<Reverse<Prioritized<QueuedRequest>>>()
+            + self
+                .fresh
+                .iter()
+                .map(|t| {
+                    size_of::<TenantQueue>()
+                        + t.heap.capacity() * size_of::<Reverse<Prioritized<QueuedRequest>>>()
+                })
+                .sum::<usize>()
             + self.active.capacity() * size_of::<Active>()
             + self.suspended.approx_bytes()
             + self.suspended_aged.capacity() * size_of::<Reverse<Prioritized<GenKey>>>()

@@ -215,6 +215,14 @@ impl<'a> Cluster<'a> {
     /// Route one arrival; the replica records it under a globally
     /// unique seq so its trajectory is placement-invariant.
     pub fn submit(&mut self, question: Question) {
+        self.submit_tenant(question, 0);
+    }
+
+    /// [`submit`](Cluster::submit) with a tenant id: the replica's
+    /// per-tenant DRR admission (DESIGN.md §3.11) sees the same tenant
+    /// wherever the router places the request. Tenant 0 is the default
+    /// path and changes nothing.
+    pub fn submit_tenant(&mut self, question: Question, tenant: u32) {
         if self.started.is_none() {
             self.started = Some(self.clock.now());
         }
@@ -222,7 +230,7 @@ impl<'a> Cluster<'a> {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.routed[id] += 1;
-        self.replicas[id].submit_seq(question, seq);
+        self.replicas[id].submit_seq_tenant(question, seq, tenant);
     }
 
     /// Move waiters off saturated replicas onto idle lanes: repeatedly
@@ -356,6 +364,8 @@ impl<'a> Cluster<'a> {
             resumes: self.replicas.iter().map(|b| b.metrics.resumes).sum(),
             kv_spills: self.replicas.iter().map(|b| b.metrics.kv_spills).sum(),
             deadline_misses: self.replicas.iter().map(|b| b.metrics.deadline_misses).sum(),
+            shed_exits: self.replicas.iter().map(|b| b.metrics.shed_exits).sum(),
+            rejected: self.replicas.iter().map(|b| b.metrics.rejected).sum(),
             elapsed_s,
             per_replica: self.replicas.iter().map(|b| b.metrics.to_json()).collect(),
         }
@@ -369,6 +379,10 @@ impl OpenLoopTarget for Cluster<'_> {
 
     fn submit(&mut self, question: Question) {
         Cluster::submit(self, question)
+    }
+
+    fn submit_tenant(&mut self, question: Question, tenant: u32) {
+        Cluster::submit_tenant(self, question, tenant)
     }
 
     fn has_work(&self) -> bool {

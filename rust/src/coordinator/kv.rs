@@ -420,6 +420,24 @@ pub struct KvPageManager {
     host_held: usize,
     peak_sessions: usize,
     peak_pinned: usize,
+    /// Hierarchical per-tenant pinned-page budgets (DESIGN.md §3.11),
+    /// sorted by tenant id — only tenants with an explicit cap appear,
+    /// so the default (empty) configuration adds zero work and zero
+    /// behavior change. No hash maps: binary search + linear vecs keep
+    /// iteration order deterministic.
+    tenant_budgets: Vec<TenantBudget>,
+    /// Which capped tenant each lane is charged to (None for lanes of
+    /// uncapped tenants), so release() can uncharge without the caller
+    /// replaying the tenant id.
+    lane_tenant: Vec<Option<u32>>,
+}
+
+/// Pinned-page accounting for one capped tenant.
+#[derive(Debug)]
+struct TenantBudget {
+    tenant: u32,
+    cap: usize,
+    pinned: usize,
 }
 
 impl KvPageManager {
@@ -451,7 +469,57 @@ impl KvPageManager {
             host_held: 0,
             peak_sessions: 0,
             peak_pinned: 0,
+            tenant_budgets: Vec::new(),
+            lane_tenant: vec![None; lanes],
         }
+    }
+
+    /// Cap a tenant's pinned pages. Clamped up to one worst-case
+    /// reservation so a capped tenant can always make progress
+    /// eventually (a zero cap would wedge its queue forever while the
+    /// round-robin keeps skipping it).
+    pub fn set_tenant_cap(&mut self, tenant: u32, pages: usize) {
+        let cap = pages.max(self.reserve_pages);
+        match self.tenant_budgets.binary_search_by_key(&tenant, |b| b.tenant) {
+            Ok(i) => self.tenant_budgets[i].cap = cap,
+            Err(i) => self.tenant_budgets.insert(
+                i,
+                TenantBudget {
+                    tenant,
+                    cap,
+                    pinned: 0,
+                },
+            ),
+        }
+    }
+
+    fn budget_idx(&self, tenant: u32) -> Option<usize> {
+        if self.tenant_budgets.is_empty() {
+            return None; // default config: nothing to look up
+        }
+        self.tenant_budgets
+            .binary_search_by_key(&tenant, |b| b.tenant)
+            .ok()
+    }
+
+    /// Would a worst-case reservation for this tenant stay inside its
+    /// cap? Uncapped tenants always pass (global gates still apply in
+    /// `acquire_for`).
+    pub fn tenant_can_admit(&self, tenant: u32) -> bool {
+        match self.budget_idx(tenant) {
+            Some(i) => {
+                let b = &self.tenant_budgets[i];
+                b.pinned + self.reserve_pages <= b.cap
+            }
+            None => true,
+        }
+    }
+
+    /// Pages currently pinned under a tenant's cap (0 for uncapped
+    /// tenants — their usage is only tracked globally).
+    pub fn tenant_pinned_pages(&self, tenant: u32) -> usize {
+        self.budget_idx(tenant)
+            .map_or(0, |i| self.tenant_budgets[i].pinned)
     }
 
     pub fn capacity(&self) -> usize {
@@ -519,6 +587,25 @@ impl KvPageManager {
         Some(SlotId(lane))
     }
 
+    /// `acquire`, charged against `tenant`'s budget when one is
+    /// configured. With no caps set this is exactly `acquire` — the
+    /// single-tenant default path stays bit-identical.
+    pub fn acquire_for(&mut self, tenant: u32) -> Option<SlotId> {
+        let budget = self.budget_idx(tenant);
+        if let Some(i) = budget {
+            let b = &self.tenant_budgets[i];
+            if b.pinned + self.reserve_pages > b.cap {
+                return None;
+            }
+        }
+        let slot = self.acquire()?;
+        if let Some(i) = budget {
+            self.tenant_budgets[i].pinned += self.reserve_pages;
+            self.lane_tenant[slot.0] = Some(tenant);
+        }
+        Some(slot)
+    }
+
     /// Release a session's lane + pinned reservation (retire or
     /// preemption).
     pub fn release(&mut self, slot: SlotId) -> Result<()> {
@@ -529,6 +616,12 @@ impl KvPageManager {
         );
         self.free_lanes.push(slot.0);
         self.pinned -= self.reserve_pages;
+        if let Some(tenant) = self.lane_tenant[slot.0].take() {
+            if let Some(i) = self.budget_idx(tenant) {
+                let b = &mut self.tenant_budgets[i];
+                b.pinned = b.pinned.saturating_sub(self.reserve_pages);
+            }
+        }
         Ok(())
     }
 
@@ -716,5 +809,37 @@ mod tests {
         assert_eq!(pages_for(1, 16), 1);
         assert_eq!(pages_for(16, 16), 1);
         assert_eq!(pages_for(17, 16), 2);
+    }
+
+    #[test]
+    fn tenant_caps_gate_admission_and_release_refunds() {
+        let mut m = KvPageManager::new(4, 16, 8, None);
+        // one reservation's worth of budget for tenant 1
+        m.set_tenant_cap(1, 8);
+        assert!(m.tenant_can_admit(0), "uncapped tenant always passes");
+        assert!(m.tenant_can_admit(1));
+        let a = m.acquire_for(1).expect("first admit fits the cap");
+        assert_eq!(m.tenant_pinned_pages(1), 8);
+        assert!(!m.tenant_can_admit(1), "cap exhausted");
+        assert!(m.acquire_for(1).is_none(), "second admit rejected");
+        // the cap is per-tenant, not global: tenant 0 still admits
+        let b = m.acquire_for(0).expect("uncapped tenant unaffected");
+        assert_eq!(m.tenant_pinned_pages(0), 0, "uncapped usage untracked");
+        m.release(a).unwrap();
+        assert_eq!(m.tenant_pinned_pages(1), 0, "release refunds the cap");
+        assert!(m.tenant_can_admit(1));
+        m.release(b).unwrap();
+        assert_eq!(m.pinned_pages(), 0);
+    }
+
+    #[test]
+    fn acquire_for_without_caps_matches_acquire() {
+        let mut plain = KvPageManager::new(3, 16, 8, Some(16));
+        let mut multi = KvPageManager::new(3, 16, 8, Some(16));
+        for tenant in 0..4u32 {
+            assert_eq!(plain.acquire(), multi.acquire_for(tenant));
+        }
+        assert_eq!(plain.pinned_pages(), multi.pinned_pages());
+        assert_eq!(plain.available(), multi.available());
     }
 }

@@ -83,6 +83,14 @@ pub struct ServeMetrics {
     pub migrated_tokens: u64,
     /// Completions that finished past their SLO deadline.
     pub deadline_misses: u64,
+    /// Sessions force-exited under saturation (DESIGN.md §3.11) —
+    /// nearest-to-exit first, by `ExitPolicy::stability`. They still
+    /// complete (with `ExitReason::Shed`), so they are also counted in
+    /// `completed`.
+    pub shed_exits: u64,
+    /// Queued requests dropped because their SLO deadline passed before
+    /// admission (overload control). Never counted in `completed`.
+    pub rejected: u64,
     pub latency_ms: Summary,
     pub queue_ms: Summary,
     pub exit_reasons: BTreeMap<String, usize>,
@@ -114,6 +122,8 @@ impl ServeMetrics {
             migrations_in: 0,
             migrated_tokens: 0,
             deadline_misses: 0,
+            shed_exits: 0,
+            rejected: 0,
             latency_ms: Summary::new(),
             queue_ms: Summary::new(),
             exit_reasons: BTreeMap::new(),
@@ -183,6 +193,18 @@ impl ServeMetrics {
         self.migrated_tokens += tokens as u64;
     }
 
+    /// A session was force-exited to free KV pages under saturation.
+    pub fn record_shed(&mut self) {
+        self.shed_exits += 1;
+    }
+
+    /// A queued request was dropped: its SLO deadline passed before it
+    /// could be admitted.
+    pub fn record_rejection(&mut self) {
+        self.mark_start();
+        self.rejected += 1;
+    }
+
     /// Append a slot-occupancy sample if occupancy changed.
     pub fn sample_slots(&mut self, in_use: usize) {
         if self.slot_timeline.last().map(|&(_, u)| u) == Some(in_use) {
@@ -209,6 +231,26 @@ impl ServeMetrics {
 
     pub fn tokens_per_s(&self) -> f64 {
         self.reasoning_tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    /// Completions that landed inside their SLO deadline.
+    pub fn within_slo(&self) -> usize {
+        self.completed - (self.deadline_misses as usize).min(self.completed)
+    }
+
+    /// Useful throughput under saturation: within-SLO completions per
+    /// second. Equals `requests_per_s` when no SLO is configured
+    /// (deadline_misses stays 0).
+    pub fn goodput_rps(&self) -> f64 {
+        self.within_slo() as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    /// Fraction of demand served inside its SLO: within-SLO completions
+    /// over everything that asked (completions + rejected arrivals).
+    /// 1.0 when nothing was rejected and nothing missed its deadline.
+    pub fn slo_attainment(&self) -> f64 {
+        let asked = self.completed + self.rejected as usize;
+        self.within_slo() as f64 / asked.max(1) as f64
     }
 
     /// Mean slot occupancy over the timeline (time-weighted), for
@@ -260,6 +302,10 @@ impl MetricsReport for ServeMetrics {
             ("migrations_in", Json::num(self.migrations_in as f64)),
             ("migrated_tokens", Json::num(self.migrated_tokens as f64)),
             ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("shed_exits", Json::num(self.shed_exits as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("goodput_rps", Json::num(self.goodput_rps())),
+            ("slo_attainment", Json::num(self.slo_attainment())),
             ("elapsed_s", Json::num(self.elapsed_s())),
             ("latency_ms", summary_json(&self.latency_ms)),
             ("queue_ms", summary_json(&self.queue_ms)),
@@ -309,6 +355,15 @@ impl MetricsReport for ServeMetrics {
             s += &format!(
                 "migration          out {}  in {} ({} tok handed off)\n",
                 self.migrations_out, self.migrations_in, self.migrated_tokens
+            );
+        }
+        if self.shed_exits + self.rejected > 0 {
+            s += &format!(
+                "overload           shed {}  rejected {}   goodput {:.2} req/s   SLO attainment {:.3}\n",
+                self.shed_exits,
+                self.rejected,
+                self.goodput_rps(),
+                self.slo_attainment()
             );
         }
         s += "exit reasons       ";
@@ -515,6 +570,10 @@ pub struct ClusterMetrics {
     pub resumes: u64,
     pub kv_spills: u64,
     pub deadline_misses: u64,
+    /// Saturation load-sheds summed across replicas (DESIGN.md §3.11).
+    pub shed_exits: u64,
+    /// SLO-expired queue rejections summed across replicas.
+    pub rejected: u64,
     /// Seconds from the first cluster arrival to the snapshot.
     pub elapsed_s: f64,
     /// Per-replica [`ServeMetrics`] snapshots, by replica id.
@@ -526,10 +585,21 @@ impl ClusterMetrics {
         self.correct as f64 / self.completed.max(1) as f64
     }
 
-    /// Completed requests per second over the cluster window — the
-    /// goodput the N=1/2/4 scaling bench reports.
+    /// Within-SLO completions per second over the cluster window — the
+    /// goodput the N=1/2/4 scaling bench reports. Without an SLO
+    /// (`deadline_misses == 0`) this is plain completed-per-second, so
+    /// the pre-saturation bench numbers are unchanged.
     pub fn goodput_rps(&self) -> f64 {
-        self.completed as f64 / self.elapsed_s.max(1e-9)
+        let within = self.completed - (self.deadline_misses as usize).min(self.completed);
+        within as f64 / self.elapsed_s.max(1e-9)
+    }
+
+    /// Cluster-wide SLO attainment (within-SLO completions over
+    /// completions + rejections).
+    pub fn slo_attainment(&self) -> f64 {
+        let within = self.completed - (self.deadline_misses as usize).min(self.completed);
+        let asked = self.completed + self.rejected as usize;
+        within as f64 / asked.max(1) as f64
     }
 }
 
@@ -550,8 +620,11 @@ impl MetricsReport for ClusterMetrics {
             ("resumes", Json::num(self.resumes as f64)),
             ("kv_spills", Json::num(self.kv_spills as f64)),
             ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("shed_exits", Json::num(self.shed_exits as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
             ("elapsed_s", Json::num(self.elapsed_s)),
             ("goodput_rps", Json::num(self.goodput_rps())),
+            ("slo_attainment", Json::num(self.slo_attainment())),
             ("per_replica", Json::arr(self.per_replica.clone())),
         ])
     }
@@ -576,6 +649,14 @@ impl MetricsReport for ClusterMetrics {
             "scheduler          preemptions {}  resumes {}  spills {}  deadline misses {}\n",
             self.preemptions, self.resumes, self.kv_spills, self.deadline_misses
         );
+        if self.shed_exits + self.rejected > 0 {
+            s += &format!(
+                "overload           shed {}  rejected {}   SLO attainment {:.3}\n",
+                self.shed_exits,
+                self.rejected,
+                self.slo_attainment()
+            );
+        }
         s += &format!(
             "tokens             reasoning {}   elapsed {:.2}s\n",
             self.reasoning_tokens, self.elapsed_s
@@ -693,6 +774,41 @@ mod tests {
     }
 
     #[test]
+    fn overload_counters_goodput_and_slo_attainment() {
+        let clock = Clock::virt();
+        let mut m = ServeMetrics::new(clock.clone());
+        m.mark_start();
+        clock.advance(2.0);
+        // 3 within SLO, 1 missed, 1 shed (also completes), 2 rejected
+        for _ in 0..3 {
+            m.record_completion(true, 10, 2, 0, 50.0, 1.0, false, ExitReason::Stable);
+        }
+        m.record_completion(true, 10, 2, 0, 900.0, 700.0, true, ExitReason::Stable);
+        m.record_shed();
+        m.record_completion(false, 4, 1, 0, 20.0, 0.5, false, ExitReason::Shed);
+        m.record_rejection();
+        m.record_rejection();
+        assert_eq!(m.completed, 5);
+        assert_eq!(m.shed_exits, 1);
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.within_slo(), 4);
+        assert!((m.goodput_rps() - 2.0).abs() < 1e-9);
+        // 4 within SLO of 5 completed + 2 rejected = 7 asked
+        assert!((m.slo_attainment() - 4.0 / 7.0).abs() < 1e-12);
+        assert_eq!(m.exit_reasons["Shed"], 1);
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"shed_exits\""));
+        assert!(json.contains("\"rejected\""));
+        assert!(json.contains("\"goodput_rps\""));
+        assert!(json.contains("\"slo_attainment\""));
+        assert!(m.report().contains("overload"));
+        // the overload line only appears once saturation counters move
+        let quiet = ServeMetrics::default();
+        assert!(!quiet.report().contains("overload"));
+        assert!((quiet.slo_attainment() - 0.0).abs() < 1e-12, "no demand yet");
+    }
+
+    #[test]
     fn migration_counters_round_trip() {
         let mut m = ServeMetrics::default();
         m.record_migration_out();
@@ -725,6 +841,8 @@ mod tests {
                 resumes: 1,
                 kv_spills: 0,
                 deadline_misses: 0,
+                shed_exits: 0,
+                rejected: 0,
                 elapsed_s: 2.0,
                 per_replica: vec![
                     r0.to_json(),

@@ -8,10 +8,11 @@
 //!    scheduler: one fused `decode_batch` per scheduling tick,
 //!    probes/rollouts out-of-band, sequential fallback,
 //!    preempt/resume-by-re-prefill under contention (DESIGN.md §3.4)
-//!  * `workload`    — open-loop Poisson workload driver (deterministic
-//!    under a virtual clock), generic over [`OpenLoopTarget`] so it
-//!    paces the white-box batcher and the black-box stream batcher
-//!    alike
+//!  * `workload`    — open-loop workload driver over the
+//!    [`workload::ArrivalProcess`] zoo (Poisson / bursty MMPP / diurnal
+//!    / trace replay; deterministic under a virtual clock), generic
+//!    over [`OpenLoopTarget`] so it paces the white-box batcher and the
+//!    black-box stream batcher alike
 //!  * `batch_cache` — slot-major cache store with page-granular dirty
 //!    upload accounting
 //!  * `kv`          — paged KV subsystem: refcounted page allocator,
@@ -36,8 +37,8 @@ pub mod workload;
 
 pub use batch_cache::BatchCacheStore;
 pub use batcher::{
-    eat_policy_factory, zoo_policy_factory, Batcher, Migration, PolicyFactory, SuspendedSession,
-    DEFAULT_TICK_DT,
+    eat_policy_factory, pick_shed_victims, zoo_policy_factory, Batcher, Migration, PolicyFactory,
+    SuspendedSession, DEFAULT_TICK_DT,
 };
 pub use cluster::{Cluster, ClusterConfig, RoutePolicy};
 pub use engine::{
@@ -46,5 +47,10 @@ pub use engine::{
 };
 pub use kv::{KvPageManager, PageAllocator, PageId, PagePool, PageTable, DEFAULT_PAGE_SIZE};
 pub use metrics::{summary_json, BlackboxMetrics, ClusterMetrics, MetricsReport, ServeMetrics};
-pub use soak::{run_soak, session_demand, SoakConfig, SoakMode, SoakReport};
-pub use workload::{poisson_arrivals, run_open_loop, OpenLoopTarget, PoissonStream};
+pub use soak::{
+    capacity_per_s, run_soak, session_correct, session_demand, SoakConfig, SoakMode, SoakReport,
+};
+pub use workload::{
+    build_arrivals, collect_arrivals, poisson_arrivals, run_open_loop, run_open_loop_stream,
+    ArrivalProcess, BurstStream, DiurnalStream, OpenLoopTarget, PoissonStream, TraceStream,
+};

@@ -1,5 +1,6 @@
-//! Open-loop Poisson workload driver (DESIGN.md §3.4): submits requests
-//! as their arrival times pass, interleaved with scheduler ticks.
+//! Open-loop workload driver and the arrival-process zoo (DESIGN.md
+//! §3.4, §3.11): submits requests as their arrival times pass,
+//! interleaved with scheduler ticks.
 //!
 //! Under a wall clock this paces a live load test (arrivals fire in real
 //! time, the driver naps while idle). Under a virtual clock the driver
@@ -7,6 +8,14 @@
 //! tick, jumping straight to the next *event* when the target idles —
 //! so the entire serve run (arrival pattern, admission order, preemption
 //! decisions, latency percentiles) is a pure function of the seed.
+//!
+//! Arrival patterns come from [`ArrivalProcess`] implementations —
+//! Poisson, bursty (MMPP on/off), diurnal (sinusoid-thinned), and trace
+//! replay — every one an O(1)-state stream that yields timestamps one at
+//! a time, so the soak paces a million arrivals without materializing
+//! them. The seeded variants are pure functions of `(rate, seed)`;
+//! [`PoissonStream`] through the trait is pinned bit-identical to the
+//! pre-trait stream.
 //!
 //! The driver is generic over [`OpenLoopTarget`], so it paces both the
 //! white-box [`Batcher`] and the black-box
@@ -17,14 +26,23 @@
 //! `min(next request arrival, next chunk delivery)` instead of burning
 //! empty ticks.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::batcher::{Batcher, DEFAULT_TICK_DT};
 use crate::blackbox::BlackboxBatcher;
 use crate::datasets::Question;
+use crate::util::cli::ArrivalSpec;
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 use crate::util::wheel::EventWheel;
+
+/// A streaming arrival process: each call yields the next arrival
+/// timestamp (seconds), non-decreasing across calls. Implementations
+/// keep O(1)+O(trace) state and — apart from trace replay, which is a
+/// pure function of its file — are pure functions of `(rate, seed)`.
+pub trait ArrivalProcess {
+    fn next_arrival(&mut self) -> f64;
+}
 
 /// Streaming Poisson arrival process: yields the same cumulative-sum
 /// sequence as [`poisson_arrivals`] one timestamp at a time, in O(1)
@@ -53,6 +71,206 @@ impl PoissonStream {
     }
 }
 
+impl ArrivalProcess for PoissonStream {
+    fn next_arrival(&mut self) -> f64 {
+        PoissonStream::next_arrival(self)
+    }
+}
+
+/// On-state rate multiplier of the bursty (MMPP) process.
+const BURST_HIGH: f64 = 2.5;
+/// Off-state rate multiplier of the bursty (MMPP) process.
+const BURST_LOW: f64 = 0.5;
+/// Mean dwell in the on (burst) state, seconds.
+const BURST_ON_MEAN_S: f64 = 2.0;
+/// Mean dwell in the off (quiet) state, seconds.
+const BURST_OFF_MEAN_S: f64 = 6.0;
+
+/// Bursty arrivals: a two-state Markov-modulated Poisson process. The
+/// rate alternates between `BURST_HIGH`x (on) and `BURST_LOW`x (off)
+/// the base rate, with exponentially distributed dwell times; the duty
+/// cycle (2s on / 6s off) makes the long-run mean rate equal the base
+/// rate, so `--arrivals burst` stresses queueing without changing
+/// offered load. Exactness note: the exponential clock is memoryless,
+/// so redrawing the inter-arrival gap at each state flip simulates the
+/// MMPP exactly.
+pub struct BurstStream {
+    gaps: Rng,
+    dwell: Rng,
+    rate_per_s: f64,
+    t: f64,
+    on: bool,
+    phase_end: f64,
+}
+
+impl BurstStream {
+    pub fn new(rate_per_s: f64, seed: u64) -> BurstStream {
+        let mut dwell = Rng::new(seed ^ 0xB5257);
+        let phase_end = dwell.exponential(1.0 / BURST_OFF_MEAN_S);
+        BurstStream {
+            gaps: Rng::new(seed ^ 0xA221),
+            dwell,
+            rate_per_s,
+            t: 0.0,
+            on: false,
+            phase_end,
+        }
+    }
+}
+
+impl ArrivalProcess for BurstStream {
+    fn next_arrival(&mut self) -> f64 {
+        loop {
+            let rate = self.rate_per_s * if self.on { BURST_HIGH } else { BURST_LOW };
+            let gap = self.gaps.exponential(rate);
+            if self.t + gap <= self.phase_end {
+                self.t += gap;
+                return self.t;
+            }
+            // No arrival before the state flips: restart the memoryless
+            // exponential clock at the boundary under the new rate.
+            self.t = self.phase_end;
+            self.on = !self.on;
+            let mean = if self.on { BURST_ON_MEAN_S } else { BURST_OFF_MEAN_S };
+            self.phase_end = self.t + self.dwell.exponential(1.0 / mean);
+        }
+    }
+}
+
+/// One synthetic "day", seconds — short enough that soak-length runs see
+/// several peaks and troughs.
+const DIURNAL_PERIOD_S: f64 = 120.0;
+
+/// Diurnal arrivals: a sinusoid-modulated Poisson process via thinning.
+/// Candidates are drawn at the 2x peak rate and accepted with
+/// probability `(1 + sin(2πt/P))/2`, giving instantaneous rate
+/// `rate · (1 + sin(2πt/P))` — mean rate equal to the base rate, peaks
+/// at 2x, troughs near zero.
+pub struct DiurnalStream {
+    rng: Rng,
+    rate_per_s: f64,
+    t: f64,
+}
+
+impl DiurnalStream {
+    pub fn new(rate_per_s: f64, seed: u64) -> DiurnalStream {
+        DiurnalStream { rng: Rng::new(seed ^ 0xD1042), rate_per_s, t: 0.0 }
+    }
+}
+
+impl ArrivalProcess for DiurnalStream {
+    fn next_arrival(&mut self) -> f64 {
+        loop {
+            self.t += self.rng.exponential(2.0 * self.rate_per_s);
+            let phase = self.t / DIURNAL_PERIOD_S * std::f64::consts::TAU;
+            let accept = (1.0 + phase.sin()) / 2.0;
+            if self.rng.f64() < accept {
+                return self.t;
+            }
+        }
+    }
+}
+
+/// Trace replay: arrivals at recorded timestamps, cycled with a growing
+/// offset when the trace is shorter than the run. When `rate_per_s > 0`
+/// the timestamps are rescaled so the trace's mean rate matches it
+/// (burstiness *shape* preserved, offered load controllable); at
+/// `rate_per_s <= 0` the trace replays verbatim.
+pub struct TraceStream {
+    times: Vec<f64>,
+    idx: usize,
+    offset: f64,
+    span: f64,
+}
+
+impl TraceStream {
+    pub fn new(mut times: Vec<f64>, rate_per_s: f64) -> Result<TraceStream> {
+        anyhow::ensure!(!times.is_empty(), "arrival trace is empty");
+        for w in times.windows(2) {
+            anyhow::ensure!(
+                w[0].is_finite() && w[1] >= w[0],
+                "arrival trace must be finite and non-decreasing"
+            );
+        }
+        anyhow::ensure!(
+            times[0].is_finite() && times[0] >= 0.0,
+            "arrival trace must start at a non-negative time"
+        );
+        let last = *times.last().expect("non-empty");
+        if rate_per_s > 0.0 && last > 0.0 {
+            let native = times.len() as f64 / last;
+            let scale = native / rate_per_s;
+            for t in &mut times {
+                *t *= scale;
+            }
+        }
+        let last = *times.last().expect("non-empty");
+        // Wrap the cycle with one mean inter-arrival gap so the replayed
+        // stream stays strictly ordered across the seam.
+        let span = if last > 0.0 { last + last / times.len() as f64 } else { 1.0 };
+        Ok(TraceStream { times, idx: 0, offset: 0.0, span })
+    }
+
+    /// Load a trace from a file of timestamps: either a JSON array of
+    /// numbers or whitespace/comma-separated floats — both reduce to
+    /// "every numeric token in the file, in order".
+    pub fn from_file(path: &str, rate_per_s: f64) -> Result<TraceStream> {
+        let raw = std::fs::read_to_string(path)
+            .with_context(|| format!("reading arrival trace {path}"))?;
+        let times: Vec<f64> = raw
+            .split(|c: char| c.is_whitespace() || matches!(c, ',' | '[' | ']'))
+            .filter(|tok| !tok.is_empty())
+            .map(|tok| {
+                tok.parse::<f64>()
+                    .with_context(|| format!("bad timestamp {tok:?} in trace {path}"))
+            })
+            .collect::<Result<_>>()?;
+        TraceStream::new(times, rate_per_s)
+            .with_context(|| format!("invalid arrival trace {path}"))
+    }
+}
+
+impl ArrivalProcess for TraceStream {
+    fn next_arrival(&mut self) -> f64 {
+        if self.idx == self.times.len() {
+            self.idx = 0;
+            self.offset += self.span;
+        }
+        let t = self.offset + self.times[self.idx];
+        self.idx += 1;
+        t
+    }
+}
+
+/// Build the arrival process a parsed [`ArrivalSpec`] names, at the
+/// given offered rate and seed. The single place the `--arrivals` flag
+/// becomes a stream — serve (single/cluster/blackbox), soak, and the
+/// benches all route through here.
+pub fn build_arrivals(
+    spec: &ArrivalSpec,
+    rate_per_s: f64,
+    seed: u64,
+) -> Result<Box<dyn ArrivalProcess>> {
+    Ok(match spec {
+        ArrivalSpec::Poisson => Box::new(PoissonStream::new(rate_per_s, seed)),
+        ArrivalSpec::Burst => Box::new(BurstStream::new(rate_per_s, seed)),
+        ArrivalSpec::Diurnal => Box::new(DiurnalStream::new(rate_per_s, seed)),
+        ArrivalSpec::Trace(path) => Box::new(TraceStream::from_file(path, rate_per_s)?),
+    })
+}
+
+/// Materialize the first `n` arrivals of a spec'd process — the batch
+/// shape the pre-wheel soak driver core and offline analyses want.
+pub fn collect_arrivals(
+    spec: &ArrivalSpec,
+    n: usize,
+    rate_per_s: f64,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    let mut process = build_arrivals(spec, rate_per_s, seed)?;
+    Ok((0..n).map(|_| process.next_arrival()).collect())
+}
+
 /// Seeded Poisson arrival times (seconds) for `n` requests at
 /// `rate_per_s`: cumulative sums of exponential inter-arrival gaps.
 pub fn poisson_arrivals(n: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
@@ -65,6 +283,12 @@ pub fn poisson_arrivals(n: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
 pub trait OpenLoopTarget {
     fn clock(&self) -> &Clock;
     fn submit(&mut self, question: Question);
+    /// Submit on behalf of a tenant (multi-tenant admission, DESIGN.md
+    /// §3.11). Targets without tenancy ignore the id.
+    fn submit_tenant(&mut self, question: Question, tenant: u32) {
+        let _ = tenant;
+        self.submit(question);
+    }
     /// Anything left to do (queued or in flight).
     fn has_work(&self) -> bool;
     /// Earliest *future* event the target is parked on when a tick right
@@ -83,6 +307,10 @@ impl OpenLoopTarget for Batcher<'_> {
 
     fn submit(&mut self, question: Question) {
         Batcher::submit(self, question)
+    }
+
+    fn submit_tenant(&mut self, question: Question, tenant: u32) {
+        Batcher::submit_tenant(self, question, tenant)
     }
 
     fn has_work(&self) -> bool {
@@ -116,33 +344,86 @@ impl OpenLoopTarget for BlackboxBatcher<'_> {
     }
 }
 
+/// A slice viewed as an [`ArrivalProcess`] — lets the batch-shaped
+/// [`run_open_loop`] share one driver core with the streaming entry
+/// point.
+struct SliceProcess<'a> {
+    arrivals: &'a [f64],
+    i: usize,
+}
+
+impl ArrivalProcess for SliceProcess<'_> {
+    fn next_arrival(&mut self) -> f64 {
+        let t = self.arrivals[self.i];
+        self.i += 1;
+        t
+    }
+}
+
 /// Drive `target` through an open-loop arrival process until everything
 /// submitted has completed. Questions are taken round-robin from
 /// `questions`; `arrivals` must be non-decreasing (as produced by
 /// [`poisson_arrivals`]).
-///
-/// Arrivals live on the event wheel (DESIGN.md §3.10): each loop
-/// iteration pops the due ones — `(time, seq)` order over a
-/// non-decreasing input reproduces the old slice scan exactly — and the
-/// wheel's peeked head doubles as the idle-jump target, so a long gap
-/// between arrivals costs one jump, not a bucket crawl.
 pub fn run_open_loop<T: OpenLoopTarget>(
     target: &mut T,
     questions: &[Question],
     arrivals: &[f64],
     tick_dt: f64,
 ) -> Result<()> {
+    let mut process = SliceProcess { arrivals, i: 0 };
+    run_open_loop_stream(target, questions, &mut process, arrivals.len(), tick_dt, 1)
+}
+
+/// Drive `target` through a *streaming* [`ArrivalProcess`] for `n`
+/// arrivals, assigning tenants round-robin (`seq % tenants`; pass 1 for
+/// the single-tenant workloads).
+///
+/// Arrivals live on the event wheel (DESIGN.md §3.10), scheduled one at
+/// a time: popping arrival `i` schedules arrival `i+1`, which is sound
+/// because the process is non-decreasing — the next arrival can never
+/// sort before the one just popped. Keys are `(time, lane 0, seq)`,
+/// identical to the batch path, so the wheel's total order makes the
+/// streamed and materialized drivers pop the same event sequence. The
+/// wheel's peeked head doubles as the idle-jump target, so a long gap
+/// between arrivals costs one jump, not a bucket crawl.
+pub fn run_open_loop_stream<T: OpenLoopTarget>(
+    target: &mut T,
+    questions: &[Question],
+    process: &mut dyn ArrivalProcess,
+    n: usize,
+    tick_dt: f64,
+    tenants: u32,
+) -> Result<()> {
     anyhow::ensure!(!questions.is_empty(), "workload needs at least one question");
+    anyhow::ensure!(tenants > 0, "tenant count must be positive");
     let clock = target.clock().clone();
     let mut wheel: EventWheel<usize> = EventWheel::new(DEFAULT_TICK_DT);
-    for (i, &t) in arrivals.iter().enumerate() {
-        wheel.schedule_at(t, 0, i as u64, i);
-    }
+    let mut scheduled = 0usize;
+    let mut last_t = 0.0f64;
+    let mut schedule_next =
+        |wheel: &mut EventWheel<usize>, scheduled: &mut usize, last_t: &mut f64| -> Result<()> {
+            if *scheduled < n {
+                let t = process.next_arrival();
+                anyhow::ensure!(
+                    t.is_finite() && t >= *last_t,
+                    "arrival process must yield finite non-decreasing times (got {t} after {last_t})"
+                );
+                *last_t = t;
+                wheel.schedule_at(t, 0, *scheduled as u64, *scheduled);
+                *scheduled += 1;
+            }
+            Ok(())
+        };
+    schedule_next(&mut wheel, &mut scheduled, &mut last_t)?;
     loop {
         let now = clock.now();
         while wheel.peek_time().is_some_and(|t| t <= now) {
             let (_, i) = wheel.pop().expect("peeked arrival exists");
-            target.submit(questions[i % questions.len()].clone());
+            target.submit_tenant(
+                questions[i % questions.len()].clone(),
+                (i % tenants as usize) as u32,
+            );
+            schedule_next(&mut wheel, &mut scheduled, &mut last_t)?;
         }
         if !target.has_work() {
             let Some(next_t) = wheel.peek_time() else {
@@ -213,5 +494,98 @@ mod tests {
         for (i, &t) in batch.iter().enumerate() {
             assert_eq!(stream.next_arrival().to_bits(), t.to_bits(), "arrival {i}");
         }
+    }
+
+    #[test]
+    fn poisson_through_the_trait_is_the_legacy_stream() {
+        // The ArrivalSpec::Poisson path must stay bit-identical to the
+        // pre-trait PoissonStream — this is what keeps every default
+        // serve/soak run byte-identical across the refactor.
+        let batch = poisson_arrivals(512, 12.5, 41);
+        let mut process = build_arrivals(&ArrivalSpec::Poisson, 12.5, 41).unwrap();
+        for (i, &t) in batch.iter().enumerate() {
+            assert_eq!(process.next_arrival().to_bits(), t.to_bits(), "arrival {i}");
+        }
+    }
+
+    #[test]
+    fn burst_and_diurnal_are_deterministic_and_non_decreasing() {
+        for spec in [ArrivalSpec::Burst, ArrivalSpec::Diurnal] {
+            let a = collect_arrivals(&spec, 2000, 40.0, 9).unwrap();
+            let b = collect_arrivals(&spec, 2000, 40.0, 9).unwrap();
+            assert_eq!(a, b, "{spec:?} is not a pure function of (rate, seed)");
+            let c = collect_arrivals(&spec, 2000, 40.0, 10).unwrap();
+            assert_ne!(a, c, "{spec:?} ignores its seed");
+            assert!(a[0] > 0.0);
+            for w in a.windows(2) {
+                assert!(w[1] >= w[0], "{spec:?} went backwards: {} -> {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn burst_and_diurnal_mean_rates_track_the_base_rate() {
+        // Both processes modulate *shape*, not offered load: long-run
+        // mean rate stays within ~15% of the base rate.
+        for spec in [ArrivalSpec::Burst, ArrivalSpec::Diurnal] {
+            let a = collect_arrivals(&spec, 40_000, 50.0, 3).unwrap();
+            let rate = a.len() as f64 / a.last().unwrap();
+            assert!(
+                (rate - 50.0).abs() < 7.5,
+                "{spec:?} drifted the offered load: {rate}/s"
+            );
+        }
+    }
+
+    #[test]
+    fn burst_is_actually_burstier_than_poisson() {
+        // Squared coefficient of variation of inter-arrival gaps: 1 for
+        // Poisson, >1 for the on/off MMPP.
+        let cv2 = |a: &[f64]| {
+            let gaps: Vec<f64> = a.windows(2).map(|w| w[1] - w[0]).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let burst = collect_arrivals(&ArrivalSpec::Burst, 20_000, 50.0, 5).unwrap();
+        let pois = poisson_arrivals(20_000, 50.0, 5);
+        assert!(
+            cv2(&burst) > cv2(&pois) * 1.5,
+            "burst CV² {} vs poisson {}",
+            cv2(&burst),
+            cv2(&pois)
+        );
+    }
+
+    #[test]
+    fn trace_replay_cycles_with_a_growing_offset() {
+        let mut tr = TraceStream::new(vec![0.5, 1.0, 2.0], 0.0).unwrap();
+        let got: Vec<f64> = (0..7).map(|_| tr.next_arrival()).collect();
+        // span = 2.0 + 2.0/3
+        let span = 2.0 + 2.0 / 3.0;
+        let want = [0.5, 1.0, 2.0, span + 0.5, span + 1.0, span + 2.0, 2.0 * span + 0.5];
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-12, "{got:?} vs {want:?}");
+        }
+        for w in got.windows(2) {
+            assert!(w[1] > w[0], "trace replay must keep increasing across the seam");
+        }
+    }
+
+    #[test]
+    fn trace_rescales_to_the_requested_rate() {
+        // Native rate 3 arrivals / 2s = 1.5/s; ask for 15/s -> 10x faster.
+        let mut tr = TraceStream::new(vec![0.5, 1.0, 2.0], 15.0).unwrap();
+        assert!((tr.next_arrival() - 0.05).abs() < 1e-12);
+        assert!((tr.next_arrival() - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_rejects_garbage() {
+        assert!(TraceStream::new(vec![], 0.0).is_err());
+        assert!(TraceStream::new(vec![1.0, 0.5], 0.0).is_err());
+        assert!(TraceStream::new(vec![-1.0, 0.5], 0.0).is_err());
+        assert!(TraceStream::new(vec![f64::NAN], 0.0).is_err());
     }
 }

@@ -63,6 +63,10 @@ pub enum ExitReason {
     /// Progress stalled (§6 extension): EAT stuck high or V-hat decaying
     /// too slowly to ever reach delta — give up instead of burning budget.
     Stalled,
+    /// Load-shed under saturation (DESIGN.md §3.11): the coordinator
+    /// force-exited this session — nearest-to-exit first, by
+    /// `ExitPolicy::stability` — to free KV pages for waiting arrivals.
+    Shed,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

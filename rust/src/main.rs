@@ -19,9 +19,9 @@ use eat_serve::blackbox::{
     BlackboxBatcher, BlackboxConfig, LatencyModel, ProxyCostModel, CHUNK_MONITOR_ALPHA,
     CHUNK_MONITOR_DELTA,
 };
-use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::config::{OverloadPolicy, SchedMode, ServeConfig};
 use eat_serve::coordinator::{
-    poisson_arrivals, run_open_loop, run_soak, zoo_policy_factory, Batcher, Cluster,
+    build_arrivals, run_open_loop_stream, run_soak, zoo_policy_factory, Batcher, Cluster,
     ClusterConfig, MetricsReport, MonitorModel, PolicyFactory, RoutePolicy, SoakConfig,
     SoakMode, DEFAULT_TICK_DT,
 };
@@ -31,8 +31,8 @@ use eat_serve::eval::{run_zoo, zoo_report_json, TraceGen, TraceSet, ZooConfig};
 use eat_serve::exit::EatPolicy;
 use eat_serve::runtime::{Backend, Runtime};
 use eat_serve::util::cli::{
-    render_flags, Args, ServeArgs, ServeMode, SERVE_BLACKBOX_FLAGS, SERVE_CLUSTER_FLAGS,
-    SERVE_ENGINE_FLAGS, SERVE_SHARED_FLAGS, SOAK_FLAGS,
+    render_flags, Args, ArrivalSpec, ServeArgs, ServeMode, SERVE_BLACKBOX_FLAGS,
+    SERVE_CLUSTER_FLAGS, SERVE_ENGINE_FLAGS, SERVE_SHARED_FLAGS, SOAK_FLAGS,
 };
 use eat_serve::util::clock::Clock;
 use eat_serve::util::stats::DEFAULT_SUMMARY_CAP;
@@ -86,7 +86,8 @@ FLAG DEFAULTS
   --artifacts artifacts   --traces-dir results/traces   --out-dir results
   --alpha 0.2  --delta 1e-3  --budget 96  (blackbox: --alpha 0.8
   --delta 5e-2)
-  (--rate R > 0 drives open-loop Poisson arrivals; with --virtual the
+  (--rate R > 0 drives open-loop arrivals shaped by --arrivals
+   poisson|burst|diurnal|trace:PATH; with --virtual the
    run is simulated on a virtual clock and fully seed-deterministic.
    --kv-store mono keeps the monolithic full-sequence store — the
    equivalence oracle: same seed, byte-identical metrics JSON)
@@ -149,6 +150,7 @@ fn sched_from_args(args: &Args, cfg: &mut ServeConfig) -> Result<()> {
         other => anyhow::bail!("unknown --sched `{other}` (fifo|eat)"),
     };
     cfg.sched.deadline_s = args.f64_or("deadline", cfg.sched.deadline_s);
+    cfg.sched.overload = OverloadPolicy::from_flag(args.str_or("shed", "none"))?;
     Ok(())
 }
 
@@ -247,8 +249,15 @@ fn cmd_serve_blackbox(args: &Args, serve: &ServeArgs) -> Result<()> {
     let mut batcher = BlackboxBatcher::with_clock(&rt, cfg, bb, slots, clock);
     batcher.force_sequential = serve.sequential;
     if serve.rate > 0.0 {
-        let arrivals = poisson_arrivals(serve.requests, serve.rate, seed);
-        run_open_loop(&mut batcher, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
+        let mut process = build_arrivals(&serve.arrivals, serve.rate, seed)?;
+        run_open_loop_stream(
+            &mut batcher,
+            &ds.questions,
+            process.as_mut(),
+            serve.requests,
+            DEFAULT_TICK_DT,
+            1,
+        )?;
     } else {
         for q in ds.questions.iter().take(serve.requests) {
             batcher.submit(q.clone());
@@ -314,10 +323,18 @@ fn cmd_serve_single(args: &Args, serve: &ServeArgs) -> Result<()> {
     let mut batcher = Batcher::with_clock(&rt, cfg, monitor, slots, factory, clock);
     batcher.force_sequential = serve.sequential;
     if serve.rate > 0.0 {
-        // open-loop Poisson arrivals at `rate` req/s (deterministic
-        // under --virtual: the whole run is a pure function of the seed)
-        let arrivals = poisson_arrivals(serve.requests, serve.rate, seed);
-        run_open_loop(&mut batcher, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
+        // open-loop arrivals from the --arrivals process at `rate`
+        // req/s (deterministic under --virtual: the whole run is a
+        // pure function of the seed), fanned over --tenants round-robin
+        let mut process = build_arrivals(&serve.arrivals, serve.rate, seed)?;
+        run_open_loop_stream(
+            &mut batcher,
+            &ds.questions,
+            process.as_mut(),
+            serve.requests,
+            DEFAULT_TICK_DT,
+            serve.tenants,
+        )?;
     } else {
         for q in ds.questions.iter().take(serve.requests) {
             batcher.submit(q.clone());
@@ -404,8 +421,15 @@ fn cmd_serve_cluster(args: &Args, serve: &ServeArgs) -> Result<()> {
     let mut cluster = Cluster::with_clock(&rt, cfg, monitor, cluster_cfg, factories, clock);
     cluster.set_force_sequential(serve.sequential);
     if serve.rate > 0.0 {
-        let arrivals = poisson_arrivals(serve.requests, serve.rate, seed);
-        run_open_loop(&mut cluster, &ds.questions, &arrivals, DEFAULT_TICK_DT)?;
+        let mut process = build_arrivals(&serve.arrivals, serve.rate, seed)?;
+        run_open_loop_stream(
+            &mut cluster,
+            &ds.questions,
+            process.as_mut(),
+            serve.requests,
+            DEFAULT_TICK_DT,
+            serve.tenants,
+        )?;
     } else {
         for q in ds.questions.iter().take(serve.requests) {
             cluster.submit(q.clone());
@@ -692,6 +716,10 @@ fn cmd_soak(args: &Args) -> Result<()> {
     let cfg = SoakConfig {
         sessions: args.u64_or("sessions", 100_000),
         rate_per_s: args.f64_or("rate", 500.0),
+        arrivals: ArrivalSpec::from_args(args)?,
+        overload: args.f64_opt("overload"),
+        slo_s: args.f64_or("slo", f64::INFINITY),
+        shed: OverloadPolicy::from_flag(args.str_or("shed", "none"))?,
         slots: args.usize_or("slots", 256),
         seed: args.u64_or("seed", 0),
         summary_cap: args.usize_or("summary-cap", DEFAULT_SUMMARY_CAP),

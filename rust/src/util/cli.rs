@@ -82,6 +82,13 @@ impl Args {
         self.parse_or(key, default)
     }
 
+    pub fn f64_opt(&self, key: &str) -> Option<f64> {
+        self.flags.get(key).map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse `{v}`"))
+        })
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.parse_or(key, default)
     }
@@ -108,6 +115,49 @@ impl Args {
                 .collect(),
             None => default.to_vec(),
         }
+    }
+}
+
+/// Which arrival process an open-loop driver paces (DESIGN.md §3.11).
+/// Parsed from the shared `--arrivals` flag; the stream itself is built
+/// by `coordinator::workload::build_arrivals` from `(spec, rate, seed)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArrivalSpec {
+    /// Memoryless arrivals at `--rate` (the default; the legacy `--rate`
+    /// spelling alone means exactly this, unchanged).
+    Poisson,
+    /// Two-state MMPP: on/off bursts around the same mean rate.
+    Burst,
+    /// Sinusoid-modulated thinning: peaks at 2x, troughs near zero.
+    Diurnal,
+    /// Replay recorded timestamps from a file, cycled and rescaled to
+    /// `--rate` when one is given.
+    Trace(String),
+}
+
+impl ArrivalSpec {
+    /// Parse an `--arrivals` value: `poisson|burst|diurnal|trace:PATH`.
+    pub fn parse(s: &str) -> Result<ArrivalSpec> {
+        if let Some(path) = s.strip_prefix("trace:") {
+            anyhow::ensure!(!path.is_empty(), "--arrivals trace: needs a file path");
+            return Ok(ArrivalSpec::Trace(path.to_string()));
+        }
+        match s {
+            "poisson" => Ok(ArrivalSpec::Poisson),
+            "burst" => Ok(ArrivalSpec::Burst),
+            "diurnal" => Ok(ArrivalSpec::Diurnal),
+            other => anyhow::bail!(
+                "unknown --arrivals `{other}` (poisson|burst|diurnal|trace:PATH)"
+            ),
+        }
+    }
+
+    /// The shared `--arrivals` parse used by `serve single|cluster|
+    /// blackbox` and `repro soak`. Absent flag = Poisson, so every
+    /// legacy `--rate R` invocation parses to exactly what it always
+    /// meant.
+    pub fn from_args(args: &Args) -> Result<ArrivalSpec> {
+        ArrivalSpec::parse(args.str_or("arrivals", "poisson"))
     }
 }
 
@@ -154,8 +204,13 @@ pub struct ServeArgs {
     pub dataset: String,
     pub requests: usize,
     pub slots: usize,
-    /// Open-loop Poisson arrival rate (req/s); 0 = submit all upfront.
+    /// Open-loop arrival rate (req/s); 0 = submit all upfront.
     pub rate: f64,
+    /// Arrival process shape (`--arrivals`, default Poisson).
+    pub arrivals: ArrivalSpec,
+    /// Tenant count for multi-tenant admission; arrivals are assigned
+    /// round-robin. 1 (the default) is the single-tenant legacy path.
+    pub tenants: u32,
     pub virtual_clock: bool,
     pub sequential: bool,
     pub metrics_json: Option<String>,
@@ -177,12 +232,16 @@ impl ServeArgs {
             ServeMode::Blackbox => ("synth-aime", 8),
             ServeMode::Single | ServeMode::Cluster => ("synth-math500-small", 16),
         };
+        let tenants = args.usize_or("tenants", 1);
+        anyhow::ensure!(tenants >= 1, "--tenants must be at least 1");
         Ok(ServeArgs {
             mode,
             dataset: args.str_or("dataset", dataset_default).to_string(),
             requests: args.usize_or("requests", requests_default),
             slots: args.usize_or("slots", 4),
             rate: args.f64_or("rate", 0.0),
+            arrivals: ArrivalSpec::from_args(args)?,
+            tenants: tenants as u32,
             virtual_clock: args.has("virtual"),
             sequential: args.has("sequential"),
             metrics_json: args.str_opt("metrics-json").map(str::to_string),
@@ -206,7 +265,8 @@ pub const SERVE_SHARED_FLAGS: &[FlagSpec] = &[
     FlagSpec { flag: "--dataset D", help: "workload dataset (mode-specific default)" },
     FlagSpec { flag: "--requests N", help: "requests to serve (default 16; blackbox 8)" },
     FlagSpec { flag: "--slots S", help: "KV lanes per engine (default 4)" },
-    FlagSpec { flag: "--rate R", help: "open-loop Poisson req/s; 0 = submit all upfront" },
+    FlagSpec { flag: "--rate R", help: "open-loop arrival req/s; 0 = submit all upfront" },
+    FlagSpec { flag: "--arrivals A", help: "arrival process: poisson|burst|diurnal|trace:PATH (default poisson)" },
     FlagSpec { flag: "--virtual", help: "virtual clock: the run is a pure function of --seed" },
     FlagSpec { flag: "--sequential", help: "disable fused batch decode (A/B determinism checks)" },
     FlagSpec { flag: "--metrics-json FILE", help: "write the metrics snapshot as JSON" },
@@ -222,6 +282,8 @@ pub const SERVE_ENGINE_FLAGS: &[FlagSpec] = &[
     FlagSpec { flag: "--kv-store paged|mono", help: "KV store (default paged)" },
     FlagSpec { flag: "--page-size P", help: "tokens per KV page (default 16)" },
     FlagSpec { flag: "--kv-pages N", help: "device/host page budget (default slots*reserve)" },
+    FlagSpec { flag: "--tenants N", help: "tenants sharing the engine, DRR-fair (default 1)" },
+    FlagSpec { flag: "--shed none|reject|eat", help: "overload control: reject at SLO, or EAT-shed nearest-to-exit (default none)" },
 ];
 
 /// `serve cluster` extras.
@@ -244,7 +306,11 @@ pub const SERVE_BLACKBOX_FLAGS: &[FlagSpec] = &[
 /// time; `--virtual` is accepted for symmetry with `serve`.
 pub const SOAK_FLAGS: &[FlagSpec] = &[
     FlagSpec { flag: "--sessions N", help: "sessions to push through (default 100000)" },
-    FlagSpec { flag: "--rate R", help: "Poisson arrival rate, sessions/s (default 500)" },
+    FlagSpec { flag: "--rate R", help: "arrival rate, sessions/s (default 500)" },
+    FlagSpec { flag: "--arrivals A", help: "arrival process: poisson|burst|diurnal|trace:PATH (default poisson)" },
+    FlagSpec { flag: "--overload F", help: "override --rate to F x estimated service capacity" },
+    FlagSpec { flag: "--slo S", help: "per-session SLO seconds for goodput/shed accounting" },
+    FlagSpec { flag: "--shed none|reject|eat", help: "overload control under full residency (default none)" },
     FlagSpec { flag: "--slots S", help: "concurrent resident sessions (default 256)" },
     FlagSpec { flag: "--seed K", help: "demand + arrival seed (default 0)" },
     FlagSpec { flag: "--mem-mb M", help: "hard accounted-memory ceiling; breach fails the run" },
@@ -374,6 +440,132 @@ mod tests {
         assert!(s.contains("--migrate"));
         for spec in SERVE_SHARED_FLAGS {
             assert!(render_flags("", SERVE_SHARED_FLAGS).contains(spec.flag));
+        }
+    }
+
+    #[test]
+    fn arrival_spec_parses_the_zoo() {
+        assert_eq!(ArrivalSpec::parse("poisson").unwrap(), ArrivalSpec::Poisson);
+        assert_eq!(ArrivalSpec::parse("burst").unwrap(), ArrivalSpec::Burst);
+        assert_eq!(ArrivalSpec::parse("diurnal").unwrap(), ArrivalSpec::Diurnal);
+        assert_eq!(
+            ArrivalSpec::parse("trace:/tmp/a.json").unwrap(),
+            ArrivalSpec::Trace("/tmp/a.json".to_string())
+        );
+        assert!(ArrivalSpec::parse("trace:").is_err());
+        assert!(ArrivalSpec::parse("selfsimilar").is_err());
+    }
+
+    #[test]
+    fn legacy_rate_spelling_still_means_poisson() {
+        // The pre-zoo CLI contract, pinned: `--rate R` with no
+        // `--arrivals` parses to Poisson at R, byte-for-byte the same
+        // ServeArgs as before the ArrivalSpec refactor.
+        let a = ServeArgs::parse(&mk(&["serve", "--rate", "50", "--virtual"])).unwrap();
+        assert_eq!(a.rate, 50.0);
+        assert_eq!(a.arrivals, ArrivalSpec::Poisson);
+        assert_eq!(a.tenants, 1);
+
+        let b = ServeArgs::parse(&mk(&[
+            "serve", "cluster", "--rate", "50", "--arrivals", "burst", "--tenants", "8",
+        ]))
+        .unwrap();
+        assert_eq!(b.arrivals, ArrivalSpec::Burst);
+        assert_eq!(b.tenants, 8);
+        assert!(ServeArgs::parse(&mk(&["serve", "--tenants", "0"])).is_err());
+        assert!(ServeArgs::parse(&mk(&["serve", "--arrivals", "bogus"])).is_err());
+    }
+
+    /// First token of a spec's spelling: `--rate R` -> `--rate`.
+    fn flag_name(spec: &FlagSpec) -> &str {
+        spec.flag.split_whitespace().next().unwrap()
+    }
+
+    #[test]
+    fn flag_tables_cover_every_parsed_flag_and_never_collide() {
+        // The usage text in main.rs is rendered straight from these
+        // tables, so "tables cover the parser" == "usage covers the
+        // parser": any flag a subcommand reads must appear in its
+        // tables, or the generated help has drifted.
+        let serve_single: Vec<&FlagSpec> = SERVE_SHARED_FLAGS
+            .iter()
+            .chain(SERVE_ENGINE_FLAGS)
+            .collect();
+        let serve_cluster: Vec<&FlagSpec> = serve_single
+            .iter()
+            .copied()
+            .chain(SERVE_CLUSTER_FLAGS)
+            .collect();
+        let serve_blackbox: Vec<&FlagSpec> = SERVE_SHARED_FLAGS
+            .iter()
+            .chain(SERVE_BLACKBOX_FLAGS)
+            .collect();
+
+        // Flags each parser actually reads (ServeArgs::parse + the
+        // model-config reads in main.rs).
+        let single_reads = [
+            "--dataset", "--requests", "--slots", "--rate", "--arrivals", "--virtual",
+            "--sequential", "--metrics-json", "--seed", "--policy", "--sched", "--deadline",
+            "--proxy", "--kv-store", "--page-size", "--kv-pages", "--tenants", "--shed",
+        ];
+        let cluster_reads = [
+            "--replicas", "--route", "--migrate", "--replica-metrics-json",
+        ];
+        let blackbox_reads = [
+            "--dataset", "--requests", "--slots", "--rate", "--arrivals", "--virtual",
+            "--sequential", "--metrics-json", "--seed", "--chunk", "--base-ms", "--tok-ms",
+            "--jitter",
+        ];
+        let soak_reads = [
+            "--sessions", "--rate", "--arrivals", "--overload", "--slo", "--shed", "--slots",
+            "--seed", "--mem-mb", "--summary-cap", "--driver", "--metrics-json", "--virtual",
+        ];
+
+        let covers = |table: &[&FlagSpec], reads: &[&str], cmd: &str| {
+            for want in reads {
+                assert!(
+                    table.iter().any(|s| flag_name(s) == *want),
+                    "{cmd} parses {want} but its flag tables (and so its usage text) omit it"
+                );
+            }
+        };
+        covers(&serve_single, &single_reads, "serve single");
+        covers(&serve_cluster, &single_reads, "serve cluster");
+        covers(&serve_cluster, &cluster_reads, "serve cluster");
+        covers(&serve_blackbox, &blackbox_reads, "serve blackbox");
+        let soak: Vec<&FlagSpec> = SOAK_FLAGS.iter().collect();
+        covers(&soak, &soak_reads, "soak");
+
+        // and no combined table documents the same flag twice
+        for (table, cmd) in [
+            (&serve_cluster, "serve cluster"),
+            (&serve_blackbox, "serve blackbox"),
+            (&soak, "soak"),
+        ] {
+            let mut names: Vec<&str> = table.iter().map(|s| flag_name(s)).collect();
+            names.sort_unstable();
+            let before = names.len();
+            names.dedup();
+            assert_eq!(before, names.len(), "{cmd} documents a flag twice");
+        }
+    }
+
+    #[test]
+    fn rendered_usage_carries_every_flag_and_its_help() {
+        // main.rs builds its usage text by rendering these tables, so
+        // this pins the other half of the sync: rendering drops nothing
+        for table in [
+            SERVE_SHARED_FLAGS,
+            SERVE_ENGINE_FLAGS,
+            SERVE_CLUSTER_FLAGS,
+            SERVE_BLACKBOX_FLAGS,
+            SOAK_FLAGS,
+        ] {
+            let rendered = render_flags("  ", table);
+            for spec in table {
+                assert!(rendered.contains(spec.flag), "usage lost {}", spec.flag);
+                assert!(rendered.contains(spec.help), "usage lost help for {}", spec.flag);
+            }
         }
     }
 }

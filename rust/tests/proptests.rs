@@ -10,8 +10,8 @@ use common::{eat_factory, key};
 use eat_serve::config::{SchedMode, ServeConfig};
 use eat_serve::coordinator::kv::SlotId;
 use eat_serve::coordinator::{
-    eat_policy_factory, poisson_arrivals, run_open_loop, Batcher, KvPageManager, MonitorModel,
-    PageAllocator, PageId,
+    collect_arrivals, eat_policy_factory, pick_shed_victims, poisson_arrivals, run_open_loop,
+    Batcher, KvPageManager, MonitorModel, PageAllocator, PageId, PoissonStream,
 };
 use eat_serve::datasets::Dataset;
 use eat_serve::exit::{
@@ -22,6 +22,7 @@ use eat_serve::exit::{
 use eat_serve::eval::{replay, replay_scanned, Signal};
 use eat_serve::monitor::{EmaVar, LinePoint, Trace};
 use eat_serve::runtime::Runtime;
+use eat_serve::util::cli::ArrivalSpec;
 use eat_serve::util::clock::Clock;
 use eat_serve::util::json;
 use eat_serve::util::rng::Rng;
@@ -1269,6 +1270,216 @@ fn prop_dataset_answers_consistent() {
             for &t in &q.prompt {
                 assert!(t < vocab.size);
             }
+        }
+    }
+}
+
+/// Differential check for the arrival-process zoo (DESIGN.md §3.11):
+/// routing Poisson through the `ArrivalSpec` → `ArrivalProcess` trait
+/// must reproduce the legacy `PoissonStream` arrival-for-arrival, bit
+/// for bit, across random (rate, seed) — the guarantee that let the
+/// serve/soak entry points switch to `build_arrivals` without moving a
+/// single default-path byte.
+#[test]
+fn prop_arrival_zoo_poisson_matches_legacy_stream() {
+    for case in 0..CASES {
+        let seed = case ^ 0xA2217;
+        let mut rng = Rng::new(seed);
+        let rate = 0.5 + rng.f64() * 500.0;
+        let n = rng.range(1, 120) as usize;
+        let via_spec = collect_arrivals(&ArrivalSpec::Poisson, n, rate, seed).unwrap();
+        let mut legacy = PoissonStream::new(rate, seed);
+        for (i, t) in via_spec.iter().enumerate() {
+            assert_eq!(
+                t.to_bits(),
+                legacy.next_arrival().to_bits(),
+                "case {case}: arrival {i} drifted from PoissonStream"
+            );
+        }
+        // and the batch helper the pre-zoo callers used
+        let batch = poisson_arrivals(n, rate, seed);
+        for (i, (a, b)) in via_spec.iter().zip(&batch).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "case {case}: arrival {i} drifted from poisson_arrivals"
+            );
+        }
+    }
+}
+
+/// The burst (MMPP) and diurnal streams are pure functions of
+/// (rate, seed): a double run is byte-identical, times never go
+/// backwards, and consuming the stream through event wheels of wildly
+/// different geometry pops in exactly the same order — arrival shape
+/// is independent of the scheduler's bucket layout.
+#[test]
+fn prop_burst_and_diurnal_replay_exactly_across_wheel_geometry() {
+    use eat_serve::util::wheel::{EventKey, EventWheel};
+
+    for case in 0..CASES {
+        let seed = case ^ 0xB0057;
+        let mut rng = Rng::new(seed);
+        let rate = 1.0 + rng.f64() * 200.0;
+        let n = rng.range(8, 96) as usize;
+        for spec in [ArrivalSpec::Burst, ArrivalSpec::Diurnal] {
+            let a = collect_arrivals(&spec, n, rate, seed).unwrap();
+            let b = collect_arrivals(&spec, n, rate, seed).unwrap();
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "case {case} {spec:?}: replay drift at arrival {i}"
+                );
+            }
+            for w in a.windows(2) {
+                assert!(
+                    w[1] >= w[0] && w[0] >= 0.0,
+                    "case {case} {spec:?}: arrival time went backwards"
+                );
+            }
+            let mut orders: Vec<Vec<u64>> = Vec::new();
+            for (width, nbuckets) in [(0.01, 8usize), (0.25, 64), (2.0, 512)] {
+                let mut wheel: EventWheel<u64> = EventWheel::with_geometry(width, nbuckets);
+                for (i, &t) in a.iter().enumerate() {
+                    wheel.schedule(EventKey::new(t, 0, i as u64), i as u64);
+                }
+                let mut order = Vec::with_capacity(n);
+                while let Some((_, v)) = wheel.pop() {
+                    order.push(v);
+                }
+                assert_eq!(order.len(), n, "case {case} {spec:?}: wheel lost arrivals");
+                orders.push(order);
+            }
+            assert_eq!(orders[0], orders[1], "case {case} {spec:?}: geometry changed order");
+            assert_eq!(orders[0], orders[2], "case {case} {spec:?}: geometry changed order");
+        }
+    }
+}
+
+/// Shed-victim selection (DESIGN.md §3.11): `pick_shed_victims` must
+/// return exactly the qualifying candidates — measured stability at or
+/// above the floor, not mid-elicitation — each at most once, ordered
+/// by descending stability with ties broken by ascending submission
+/// seq (oldest first). Seqs are unique by construction, matching the
+/// batcher's monotone submission counter.
+#[test]
+fn prop_shed_victim_order_is_stability_desc_then_seq() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x51ED5);
+        let n = rng.range(0, 40) as usize;
+        let min_stability = rng.f64() * 0.8;
+        let candidates: Vec<(Option<f64>, u64, bool)> = (0..n)
+            .map(|i| {
+                // coarse stability grid so descending-order ties are common
+                let stability = if rng.chance(0.8) {
+                    Some(rng.below(6) as f64 * 0.2)
+                } else {
+                    None
+                };
+                (stability, rng.below(4) * 64 + i as u64, rng.chance(0.2))
+            })
+            .collect();
+        let picks = pick_shed_victims(&candidates, min_stability);
+        let mut picked = vec![false; n];
+        for &i in &picks {
+            assert!(!picked[i], "case {case}: index {i} shed twice");
+            picked[i] = true;
+        }
+        for (i, &(stability, _, eliciting)) in candidates.iter().enumerate() {
+            let qualifies = !eliciting && stability.is_some_and(|s| s >= min_stability);
+            assert_eq!(
+                picked[i], qualifies,
+                "case {case}: index {i} qualification mismatch"
+            );
+        }
+        for w in picks.windows(2) {
+            let (sa, qa, _) = candidates[w[0]];
+            let (sb, qb, _) = candidates[w[1]];
+            let (sa, sb) = (sa.unwrap(), sb.unwrap());
+            assert!(
+                sa > sb || (sa == sb && qa < qb),
+                "case {case}: order violated between indices {} and {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+/// Per-tenant page budgets never leak and never overrun: across random
+/// cap assignments and random `acquire_for`/`release` interleavings,
+/// the per-tenant ledger tracks held lanes exactly, capped tenants stay
+/// at or under their cap, uncapped tenants are never charged, every
+/// refusal is explained by a cap or an exhausted pool, and releasing
+/// everything returns every ledger — global and per-tenant — to zero.
+#[test]
+fn prop_tenant_caps_never_leak_or_overrun() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x7E4A7);
+        let lanes = rng.range(1, 24) as usize;
+        let reserve = rng.range(1, 5) as usize;
+        let mut kv = KvPageManager::new(lanes, 16, reserve, None);
+        let tenants = rng.range(1, 6) as u32;
+        // cap a random subset; the rest stay uncapped (global gates only)
+        let mut caps: Vec<Option<usize>> = vec![None; tenants as usize];
+        for t in 0..tenants {
+            if rng.chance(0.7) {
+                let pages = rng.range(0, (lanes * reserve) as u64) as usize;
+                kv.set_tenant_cap(t, pages);
+                // set_tenant_cap clamps up to one worst-case reservation
+                caps[t as usize] = Some(pages.max(reserve));
+            }
+        }
+        let mut held: Vec<(SlotId, u32)> = Vec::new();
+        for _ in 0..rng.range(50, 250) {
+            if held.is_empty() || rng.chance(0.55) {
+                let t = rng.below(tenants as u64) as u32;
+                let can = kv.tenant_can_admit(t);
+                match kv.acquire_for(t) {
+                    Some(slot) => {
+                        assert!(can, "case {case}: tenant {t} admitted past its cap");
+                        held.push((slot, t));
+                    }
+                    None => assert!(
+                        !can || kv.available() == 0,
+                        "case {case}: tenant {t} refused with headroom"
+                    ),
+                }
+            } else {
+                let i = rng.below(held.len() as u64) as usize;
+                let (slot, _) = held.swap_remove(i);
+                kv.release(slot).unwrap();
+            }
+            assert_eq!(
+                kv.pinned_pages(),
+                held.len() * reserve,
+                "case {case}: global ledger drift"
+            );
+            for t in 0..tenants {
+                let mine = held.iter().filter(|&&(_, ht)| ht == t).count() * reserve;
+                let tracked = kv.tenant_pinned_pages(t);
+                match caps[t as usize] {
+                    Some(cap) => {
+                        assert_eq!(tracked, mine, "case {case}: tenant {t} ledger drift");
+                        assert!(tracked <= cap, "case {case}: tenant {t} over its cap");
+                    }
+                    None => {
+                        assert_eq!(tracked, 0, "case {case}: uncapped tenant {t} charged")
+                    }
+                }
+            }
+        }
+        for (slot, _) in held.drain(..) {
+            kv.release(slot).unwrap();
+        }
+        assert_eq!(kv.pinned_pages(), 0, "case {case}: pages leaked");
+        for t in 0..tenants {
+            assert_eq!(
+                kv.tenant_pinned_pages(t),
+                0,
+                "case {case}: tenant {t} ledger leaked"
+            );
         }
     }
 }

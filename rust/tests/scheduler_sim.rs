@@ -17,10 +17,10 @@
 mod common;
 
 use common::{eat_factory, key};
-use eat_serve::config::{SchedMode, ServeConfig};
+use eat_serve::config::{OverloadPolicy, SchedMode, ServeConfig};
 use eat_serve::coordinator::{
-    poisson_arrivals, run_open_loop, Batcher, MetricsReport, MonitorModel, RequestResult,
-    DEFAULT_TICK_DT,
+    pick_shed_victims, poisson_arrivals, run_open_loop, Batcher, MetricsReport, MonitorModel,
+    RequestResult, ServeMetrics, DEFAULT_TICK_DT,
 };
 use eat_serve::datasets::{chainsum::Kind, Dataset, Question};
 use eat_serve::runtime::{Backend, Runtime};
@@ -448,4 +448,91 @@ fn steady_state_ticks_do_not_allocate() {
     let c = rt.main.counters();
     assert!(c.sched_ticks.get() > 0, "no ticks recorded");
     assert_eq!(c.sched_allocs.get(), 0, "tick scratch reallocated");
+}
+
+/// Shed-victim ordering on a hand-built candidate set (the proptest in
+/// `proptests.rs` quantifies the same contract over random inputs):
+/// descending stability, ties broken oldest-submission-first, skipping
+/// no-signal and already-draining sessions and anything below the
+/// stability floor.
+#[test]
+fn shed_victim_selection_fixed_example() {
+    // (ExitPolicy::stability, submission seq, eliciting)
+    let candidates = [
+        (Some(0.9), 5, false), // 0: stable, newer of the 0.9 pair
+        (Some(0.3), 1, false), // 1: below the floor — not near an exit
+        (None, 2, false),      // 2: no signal yet — never shed
+        (Some(0.9), 3, false), // 3: stable, older → outranks index 0
+        (Some(0.7), 4, true),  // 4: mid-elicitation — already draining
+        (Some(0.7), 0, false), // 5: qualifies, lowest stability last
+    ];
+    assert_eq!(pick_shed_victims(&candidates, 0.5), vec![3, 0, 5]);
+    assert_eq!(pick_shed_victims(&candidates, 0.95), Vec::<usize>::new());
+}
+
+/// One saturated open-loop run — a burst of arrivals far over what two
+/// slots can drain — under the given overload policy. Returns the final
+/// metrics JSON and the counters the overload assertions inspect.
+fn run_overload(policy: OverloadPolicy, deadline_s: f64, seed: u64) -> (String, ServeMetrics) {
+    let n = 24;
+    let rt = Runtime::reference();
+    let mut cfg = ServeConfig::default();
+    cfg.seed = seed;
+    cfg.sched.mode = SchedMode::EatAware;
+    cfg.sched.overload = policy;
+    cfg.sched.deadline_s = deadline_s;
+    let ds = Dataset::synth_gpqa(&rt.vocab, n, seed);
+    let mut b = Batcher::with_clock(
+        &rt,
+        cfg.clone(),
+        MonitorModel::SelfModel,
+        2,
+        eat_factory(&cfg),
+        Clock::virt(),
+    );
+    let arrivals = poisson_arrivals(n, 400.0, seed);
+    run_open_loop(&mut b, &ds.questions, &arrivals, DEFAULT_TICK_DT).unwrap();
+    assert_eq!(b.pending(), 0);
+    assert_eq!(b.active_count(), 0);
+    assert_eq!(b.suspended_count(), 0);
+    (b.metrics.to_json().to_string(), b.metrics)
+}
+
+#[test]
+fn eat_shed_fires_under_page_pressure_without_spills() {
+    // infinite SLO isolates the shedding path: nothing is rejected, so
+    // every arrival must complete — some of them early via forced exit
+    let (json, m) = run_overload(OverloadPolicy::EatShed, f64::INFINITY, 7);
+    assert!(m.shed_exits > 0, "saturated run never shed a session");
+    assert_eq!(m.rejected, 0, "infinite deadline cannot reject");
+    assert_eq!(m.completed, 24, "shed sessions still complete (early)");
+    assert_eq!(m.kv_spills, 0, "shedding must free lanes without spilling");
+    assert_eq!(
+        m.exit_reasons.get("Shed").copied().unwrap_or(0) as u64,
+        m.shed_exits,
+        "every shed must surface as ExitReason::Shed"
+    );
+    assert!(json.contains("\"shed_exits\""), "metrics JSON lost the shed counter");
+    // overload runs stay a pure function of the seed
+    let (json_b, _) = run_overload(OverloadPolicy::EatShed, f64::INFINITY, 7);
+    assert_eq!(json, json_b, "EAT-shed run is not deterministic");
+}
+
+#[test]
+fn reject_only_drops_expired_arrivals_and_accounts_every_request() {
+    // a deadline far tighter than the backlog can meet: late arrivals
+    // are rejected at the queue head, never admitted, and the
+    // completed/rejected split still accounts for every submission
+    let (json, m) = run_overload(OverloadPolicy::RejectOnly, 0.5, 7);
+    assert!(m.rejected > 0, "tight deadline under saturation never rejected");
+    assert_eq!(m.shed_exits, 0, "reject-only must not shed residents");
+    assert_eq!(
+        m.completed + m.rejected as usize,
+        24,
+        "a request was neither completed nor rejected"
+    );
+    assert!(m.slo_attainment() < 1.0, "rejections must dent SLO attainment");
+    assert!(json.contains("\"rejected\""), "metrics JSON lost the reject counter");
+    let (json_b, _) = run_overload(OverloadPolicy::RejectOnly, 0.5, 7);
+    assert_eq!(json, json_b, "reject-only run is not deterministic");
 }

@@ -123,16 +123,22 @@ fn memory_ceiling_fails_a_breaching_run() {
 fn report_json_shape_is_stable() {
     let j = run_soak(&base(), SoakMode::Events).unwrap().to_json();
     for key in [
+        "accuracy",
         "arrivals",
         "bytes_per_session",
         "completed",
+        "correct",
         "elapsed_virtual_s",
+        "goodput_per_s",
         "latency_ms",
         "mode",
         "occupancy_mean",
         "occupancy_peak",
         "peak_bytes",
         "peak_waiting",
+        "rejected",
+        "shed",
+        "slo_attainment",
         "stalled",
         "total_tokens",
         "wait_ms",
